@@ -1,0 +1,14 @@
+//! `cargo bench` wrapper regenerating the paper's fig3.
+//! Scale via `ASSISE_BENCH_SCALE` (default 0.2 to keep bench runs quick;
+//! use `assise bench fig3 --scale 1` for the full run).
+fn main() {
+    let scale = std::env::var("ASSISE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2);
+    let wall = std::time::Instant::now();
+    for t in assise::bench::run("fig3", assise::bench::Scale(scale)).expect("known experiment") {
+        t.print();
+    }
+    eprintln!("[fig3_throughput] wall-clock: {:.1}s at scale {scale}", wall.elapsed().as_secs_f64());
+}

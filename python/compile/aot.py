@@ -1,0 +1,92 @@
+"""AOT: lower the L2 jax graphs to HLO *text* for the rust PJRT runtime.
+
+HLO text — NOT ``.serialize()`` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's bundled xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); never at request time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ARTIFACTS = {
+    "checksum": (model.digest_verify, model.checksum_spec),
+    "partition": (model.sort_partition, model.partition_spec),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="legacy single-output path; writes checksum HLO there and the "
+        "rest next to it",
+    )
+    args = ap.parse_args()
+
+    if args.out_dir:
+        out_dir = args.out_dir
+    elif args.out:
+        out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    else:
+        out_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, spec_fn) in ARTIFACTS.items():
+        spec = spec_fn()
+        lowered = jax.jit(fn).lower(*spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "path": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(s.shape), "dtype": s.dtype.name} for s in spec
+            ],
+            "chars": len(text),
+        }
+        print(f"wrote {len(text):>8} chars -> {path}")
+
+    # Legacy single-file alias so stale Makefile targets still see a file.
+    if args.out:
+        with open(os.path.abspath(args.out), "w") as f:
+            f.write(open(os.path.join(out_dir, "checksum.hlo.txt")).read())
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest -> {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""L1 Pallas kernel: block integrity checksums for the SharedFS digest path.
+
+Assise's SharedFS "checks log integrity" when digesting a LibFS update log
+(paper §3.3, §A.1) and "checks permissions and data integrity upon
+eviction" (§3.2).  The hot-spot is a batched per-block checksum over the
+log payload.  We compute a Fletcher-style pair per 4 KB block:
+
+    s1 = sum(w_i)            mod P
+    s2 = sum((i+1) * w_i)    mod P        (position-weighted)
+
+over the block's 32-bit words, with P = 2**31 - 1 (Mersenne prime).  The
+position weighting makes the checksum order-sensitive, which is what the
+digest needs: a replica whose RDMA-delivered log bytes were reordered or
+torn must not validate.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel tiles the
+(num_blocks, words) payload into VMEM blocks of (BLOCK_TILE, words) and
+reduces along the word axis on the VPU — the word axis is a multiple of
+128 lanes, the block axis is the sublane axis.  interpret=True is
+mandatory here: the CPU PJRT plugin cannot execute Mosaic custom-calls.
+
+All arithmetic is done in float64-free integer space: jnp.int64 is not
+enabled by default, so we accumulate in two int32 lanes using a
+split-accumulate (values are masked to 16-bit halves) that is exactly
+representable and matches ref.checksum_ref bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Mersenne prime 2^31 - 1: lets us reduce "x mod P" with shifts/adds and
+# keeps every intermediate inside uint32 when accumulated carefully.
+MOD = (1 << 31) - 1
+
+# Tile of blocks processed per pallas grid step.  Chosen so a tile of
+# (BLOCK_TILE, 1024) uint32 = 32 KB stays far under VMEM (~16 MB) even with
+# double buffering; on real TPU this would leave room to scale words up.
+BLOCK_TILE = 8
+
+
+def _mod_p(x: jnp.ndarray) -> jnp.ndarray:
+    """x mod (2^31-1) for non-negative x < 2^62, in uint32-pair-free form.
+
+    Operates on uint32 values interpreted as < 2^32: fold the top bit(s)
+    down twice ((x >> 31) + (x & P) < 2^32 always, and a second fold lands
+    in [0, P]).
+    """
+    x = (x >> 31) + (x & MOD)
+    x = (x >> 31) + (x & MOD)
+    # x may equal P exactly; canonicalize.
+    return jnp.where(x == MOD, 0, x)
+
+
+def _checksum_tile(words: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Fletcher pair for a (tile, W) uint32 payload; returns (tile, 2).
+
+    Accumulation strategy: process the word axis in a fori_loop of
+    lane-sized chunks, keeping running (s1, s2) in uint32 reduced mod P at
+    every step so nothing overflows.  Each step adds one word column group:
+    uint32 word w is first reduced mod P (w < 2^32 so one fold), then
+    s1 += w; s2 += (i+1)*w.  The product (i+1)*w can reach 2^62, so it is
+    split into 16-bit halves: (i+1)*w = hi*2^16 + lo with hi, lo < 2^47 —
+    still too big for uint32, so instead we reduce w mod P first
+    (w < 2^31) and multiply by the weight already reduced mod P using a
+    16-bit schoolbook split, all in uint64-free uint32 ops.
+    """
+    w = words.astype(jnp.uint32)
+    wmod = _mod_p(w)  # < 2^31
+    # weight column vector already in [0, P)
+    k = weights.astype(jnp.uint32)
+
+    # 16-bit split multiply: a*b mod P with a,b < 2^31.
+    # a = a1*2^16 + a0;  a*b = a1*b*2^16 + a0*b.
+    # a1 < 2^15, b < 2^31 -> a1*b < 2^46: still overflows u32.
+    # So split b too: b = b1*2^16 + b0.
+    #   a*b = (a1*b1)*2^32 + (a1*b0 + a0*b1)*2^16 + a0*b0
+    # mod P, 2^32 ≡ 2 and 2^16 stays 2^16 (< P).  Each partial product is
+    # < 2^31 (15/16-bit × 16-bit), safe in u32; reduce as we accumulate.
+    a = wmod
+    b = k
+    a1, a0 = a >> 16, a & 0xFFFF
+    b1, b0 = b >> 16, b & 0xFFFF
+    p_hh = _mod_p(a1 * b1 * jnp.uint32(2))          # *2^32 ≡ *2
+    mid = a1 * b0 + a0 * b1                          # < 2^32, fold
+    mid = _mod_p(mid)
+    # mid * 2^16 mod P: split mid (< 2^31) into 15+16 bits again.
+    m1, m0 = mid >> 15, mid & 0x7FFF
+    # mid*2^16 = m1*2^31 + m0*2^16 ≡ m1 + m0*2^16 (2^31 ≡ 1 mod P)
+    p_mid = _mod_p(m1 + (m0 << 16))
+    p_ll = _mod_p(a0 * b0)
+    prod = _mod_p(p_hh + p_mid)
+    prod = _mod_p(prod + p_ll)
+
+    s1 = wmod
+    s2 = prod
+    # reduce along word axis with pairwise folds (tree stays < 2^32 because
+    # we _mod_p after every addition of two < P terms).
+    def tree_reduce(v):
+        n = v.shape[-1]
+        while n > 1:
+            half = n // 2
+            lo = v[..., :half]
+            hi = v[..., half : 2 * half]
+            v = _mod_p(lo + hi) if n % 2 == 0 else jnp.concatenate(
+                [_mod_p(lo + hi), v[..., 2 * half :]], axis=-1
+            )
+            n = v.shape[-1]
+        return v[..., 0]
+
+    return jnp.stack([tree_reduce(s1), tree_reduce(s2)], axis=-1)
+
+
+def _checksum_kernel(words_ref, weights_ref, out_ref):
+    words = words_ref[...]
+    weights = weights_ref[...]
+    out_ref[...] = _checksum_tile(words, weights).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def checksum_blocks(words: jnp.ndarray) -> jnp.ndarray:
+    """Pallas entry: words (num_blocks, W) int32/uint32 -> (num_blocks, 2) int32.
+
+    num_blocks must be a multiple of BLOCK_TILE (callers pad); W arbitrary
+    but ≥ 1 (128-multiples vectorize best on TPU).
+    """
+    nb, nw = words.shape
+    assert nb % BLOCK_TILE == 0, f"num_blocks {nb} not multiple of {BLOCK_TILE}"
+    weights = (jnp.arange(1, nw + 1, dtype=jnp.uint32) % MOD)[None, :].astype(
+        jnp.int32
+    )
+    grid = (nb // BLOCK_TILE,)
+    return pl.pallas_call(
+        _checksum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_TILE, nw), lambda i: (i, 0)),
+            pl.BlockSpec((1, nw), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_TILE, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 2), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(words.astype(jnp.int32), weights)

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: range-partition for the MinuteSort presort (paper §5.3).
+
+Tencent Sort step 1 range-partitions records by their 10-byte key prefix
+into per-destination buckets.  The hot-spot is: for a tile of keys, compute
+the destination bucket of every key and a histogram of bucket occupancy
+(the histogram drives how much space each destination temp file needs).
+
+Bucket function: uniform range split of the 32-bit key prefix into
+NUM_BUCKETS = 2**b equal ranges, i.e. bucket = key >> (32 - b).  MinuteSort
+Indy keys are uniform random, so equal ranges balance.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a GPU implementation would
+scatter-add into shared-memory histograms per threadblock.  Scatter is the
+wrong primitive on TPU; instead we build a one-hot matrix
+(TILE × NUM_BUCKETS) in f32 and reduce it with a matmul against a ones
+vector — the histogram becomes an MXU systolic reduction.  BlockSpec
+streams the key array HBM→VMEM in TILE-sized chunks and accumulates the
+histogram across grid steps in the output block (revisited at every step,
+standard Pallas accumulation pattern).
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NUM_BUCKETS = 256
+BUCKET_BITS = 8
+KEY_TILE = 2048
+
+
+def _partition_kernel(keys_ref, buckets_ref, hist_ref):
+    step = pl.program_id(0)
+    keys = keys_ref[...].astype(jnp.uint32)
+    b = (keys >> jnp.uint32(32 - BUCKET_BITS)).astype(jnp.int32)
+    buckets_ref[...] = b
+
+    # One-hot (TILE, NUM_BUCKETS) and reduce over the tile axis with a
+    # matmul: ones(1, TILE) @ onehot -> (1, NUM_BUCKETS).  f32 is exact for
+    # counts < 2^24, far above any tile count (TILE = 2048).
+    onehot = (b[:, None] == jnp.arange(NUM_BUCKETS, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(jnp.float32)
+    ones = jnp.ones((1, keys.shape[0]), dtype=jnp.float32)
+    counts = jnp.dot(ones, onehot, preferred_element_type=jnp.float32)
+
+    # Accumulate across grid steps: the hist block maps every step to the
+    # same (1, NUM_BUCKETS) window.
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += counts.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def partition_keys(keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """keys (N,) int32/uint32 -> (bucket_ids (N,) int32, hist (NUM_BUCKETS,) int32).
+
+    N must be a multiple of KEY_TILE (callers pad with key 0xFFFFFFFF and
+    subtract pad counts from the last bucket, or just pad with real work).
+    """
+    (n,) = keys.shape
+    assert n % KEY_TILE == 0, f"N {n} not multiple of {KEY_TILE}"
+    grid = (n // KEY_TILE,)
+    buckets, hist = pl.pallas_call(
+        _partition_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((KEY_TILE,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((KEY_TILE,), lambda i: (i,)),
+            pl.BlockSpec((1, NUM_BUCKETS), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((1, NUM_BUCKETS), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(keys.astype(jnp.int32))
+    return buckets, hist[0]

@@ -1,0 +1,59 @@
+"""Pure-jnp/numpy oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: pytest asserts the Pallas kernels
+(and, transitively, the AOT-exported HLO the rust runtime executes) match
+these definitions bit-for-bit.  Written in the most obvious way possible —
+python ints are unbounded, so the checksum oracle needs no overflow games.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MOD = (1 << 31) - 1
+NUM_BUCKETS = 256
+BUCKET_BITS = 8
+
+
+def checksum_ref(words: np.ndarray) -> np.ndarray:
+    """Fletcher pair per block over uint32 words; (nb, W) -> (nb, 2) int32.
+
+    s1 = sum(w_i mod P) mod P
+    s2 = sum((w_i mod P) * ((i+1) mod P)) mod P
+
+    Scalar python-int loop: unbounded ints, no overflow possible.
+    """
+    w = np.asarray(words).astype(np.uint64) & 0xFFFFFFFF
+    nb, nw = w.shape
+    out = np.zeros((nb, 2), dtype=np.int64)
+    for b in range(nb):
+        s1 = 0
+        s2 = 0
+        for i in range(nw):
+            wm = int(w[b, i]) % MOD
+            s1 = (s1 + wm) % MOD
+            s2 = (s2 + wm * ((i + 1) % MOD)) % MOD
+        out[b, 0] = s1
+        out[b, 1] = s2
+    return out.astype(np.int32)
+
+
+def checksum_ref_vec(words: np.ndarray) -> np.ndarray:
+    """Vectorized oracle (uint64 math, exact): used for larger sweeps.
+
+    Each product (w mod P) * (weight mod P) < 2^62 fits uint64 exactly.
+    """
+    w = (np.asarray(words).astype(np.uint64) & 0xFFFFFFFF) % MOD
+    nw = w.shape[1]
+    weights = np.arange(1, nw + 1, dtype=np.uint64) % MOD
+    s1 = w.sum(axis=1, dtype=np.uint64) % MOD  # nw * P < 2^64 for nw < 2^33
+    s2 = ((w * weights[None, :]) % MOD).sum(axis=1, dtype=np.uint64) % MOD
+    return np.stack([s1, s2], axis=-1).astype(np.int32)
+
+
+def partition_ref(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(N,) uint32 -> (bucket ids (N,) int32, histogram (256,) int32)."""
+    k = np.asarray(keys).astype(np.uint64) & 0xFFFFFFFF
+    b = (k >> np.uint64(32 - BUCKET_BITS)).astype(np.int32)
+    hist = np.bincount(b, minlength=NUM_BUCKETS).astype(np.int32)
+    return b, hist

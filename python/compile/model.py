@@ -1,0 +1,55 @@
+"""L2: the jax compute graphs the rust runtime executes, calling kernels.*.
+
+Assise is a storage-systems paper — the bulk of the contribution lives in
+the L3 rust coordinator — so L2 is deliberately thin (per the architecture
+notes): it defines the two data-plane computations Assise performs on bulk
+payload bytes, both of which call the L1 Pallas kernels:
+
+- ``digest_verify``: batched block-integrity checksums computed when a
+  SharedFS replica verifies a chain-replicated update log before digesting
+  it (paper §3.3 "Each replica checks log integrity", §3.2 "checking ...
+  data integrity upon eviction").
+
+- ``sort_partition``: the range-partition histogram + bucket assignment of
+  MinuteSort step 1 (paper §5.3, Tencent Sort) — one call per input chunk.
+
+Both are lowered ONCE by aot.py to HLO text; python never runs at request
+time.  Shapes are fixed at AOT time (PJRT executables are monomorphic);
+the rust side pads the final partial batch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.checksum import checksum_blocks
+from compile.kernels.partition import partition_keys
+
+# AOT shapes — keep in sync with rust/src/runtime/mod.rs.
+CHECKSUM_BLOCKS = 64     # blocks per executable call
+CHECKSUM_WORDS = 1024    # 32-bit words per block = 4 KB blocks
+PARTITION_KEYS = 65536   # keys per executable call
+
+
+def digest_verify(words: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """(CHECKSUM_BLOCKS, CHECKSUM_WORDS) int32 -> ((CHECKSUM_BLOCKS, 2) int32,).
+
+    Returned as a 1-tuple: aot.py lowers with return_tuple=True and the
+    rust side unwraps the tuple.
+    """
+    return (checksum_blocks(words),)
+
+
+def sort_partition(keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(PARTITION_KEYS,) int32 -> (bucket ids (N,) int32, hist (256,) int32)."""
+    buckets, hist = partition_keys(keys)
+    return buckets, hist
+
+
+def checksum_spec() -> tuple[jax.ShapeDtypeStruct, ...]:
+    return (jax.ShapeDtypeStruct((CHECKSUM_BLOCKS, CHECKSUM_WORDS), jnp.int32),)
+
+
+def partition_spec() -> tuple[jax.ShapeDtypeStruct, ...]:
+    return (jax.ShapeDtypeStruct((PARTITION_KEYS,), jnp.int32),)

@@ -1,0 +1,213 @@
+"""pytest: Pallas kernels vs pure-numpy oracles — the CORE correctness signal.
+
+Exact integer equality is asserted everywhere (the kernels are integer
+kernels; there is no tolerance to hide behind).  hypothesis sweeps shapes
+and value distributions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.checksum import BLOCK_TILE, MOD, checksum_blocks
+from compile.kernels.partition import KEY_TILE, NUM_BUCKETS, partition_keys
+
+
+def u32(rng, shape):
+    return rng.integers(0, 1 << 32, size=shape, dtype=np.uint64).astype(np.uint32)
+
+
+# ---------------------------------------------------------------- checksum
+
+class TestChecksum:
+    def test_zeros(self):
+        w = np.zeros((BLOCK_TILE, 128), dtype=np.uint32)
+        out = np.asarray(checksum_blocks(w))
+        assert (out == 0).all()
+
+    def test_ones(self):
+        nw = 128
+        w = np.ones((BLOCK_TILE, nw), dtype=np.uint32)
+        out = np.asarray(checksum_blocks(w))
+        exp = ref.checksum_ref(w)
+        np.testing.assert_array_equal(out, exp)
+        # closed form: s1 = nw, s2 = nw(nw+1)/2
+        assert out[0, 0] == nw
+        assert out[0, 1] == nw * (nw + 1) // 2
+
+    def test_max_values(self):
+        """All-0xFFFFFFFF words stress the mod-P folding."""
+        w = np.full((BLOCK_TILE, 256), 0xFFFFFFFF, dtype=np.uint32)
+        np.testing.assert_array_equal(
+            np.asarray(checksum_blocks(w)), ref.checksum_ref_vec(w)
+        )
+
+    def test_values_equal_p(self):
+        """Words == P must canonicalize to 0."""
+        w = np.full((BLOCK_TILE, 128), MOD, dtype=np.uint32)
+        out = np.asarray(checksum_blocks(w))
+        assert (out == 0).all()
+
+    def test_random_vs_scalar_oracle(self):
+        rng = np.random.default_rng(0)
+        w = u32(rng, (BLOCK_TILE, 64))
+        np.testing.assert_array_equal(
+            np.asarray(checksum_blocks(w)), ref.checksum_ref(w)
+        )
+
+    def test_order_sensitivity(self):
+        """Swapping two words must change s2 (the digest-integrity property)."""
+        rng = np.random.default_rng(1)
+        w = u32(rng, (BLOCK_TILE, 128))
+        a = np.asarray(checksum_blocks(w))
+        w2 = w.copy()
+        w2[:, [3, 77]] = w2[:, [77, 3]]
+        b = np.asarray(checksum_blocks(w2))
+        # only identical-word swaps would collide; rng makes that measure-0
+        assert (a[:, 1] != b[:, 1]).all()
+
+    def test_multi_tile_grid(self):
+        rng = np.random.default_rng(2)
+        w = u32(rng, (BLOCK_TILE * 7, 96))
+        np.testing.assert_array_equal(
+            np.asarray(checksum_blocks(w)), ref.checksum_ref_vec(w)
+        )
+
+    def test_4kb_block_shape(self):
+        """The production AOT shape: 64 blocks x 1024 words."""
+        rng = np.random.default_rng(3)
+        w = u32(rng, (64, 1024))
+        np.testing.assert_array_equal(
+            np.asarray(checksum_blocks(w)), ref.checksum_ref_vec(w)
+        )
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        tiles=st.integers(1, 4),
+        words=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, tiles, words, seed):
+        rng = np.random.default_rng(seed)
+        w = u32(rng, (BLOCK_TILE * tiles, words))
+        np.testing.assert_array_equal(
+            np.asarray(checksum_blocks(w)), ref.checksum_ref_vec(w)
+        )
+
+    @settings(deadline=None, max_examples=15)
+    @given(
+        data=st.lists(
+            st.integers(0, 2**32 - 1), min_size=8, max_size=64
+        ),
+    )
+    def test_hypothesis_adversarial_values(self, data):
+        """Adversarial word values (hypothesis shrinks toward boundaries)."""
+        nw = len(data)
+        w = np.tile(np.array(data, dtype=np.uint32), (BLOCK_TILE, 1))
+        np.testing.assert_array_equal(
+            np.asarray(checksum_blocks(w)), ref.checksum_ref_vec(w)
+        )
+
+    def test_rejects_unaligned_blocks(self):
+        w = np.zeros((BLOCK_TILE + 1, 8), dtype=np.uint32)
+        with pytest.raises(AssertionError):
+            checksum_blocks(w)
+
+    def test_int32_and_uint32_inputs_agree(self):
+        rng = np.random.default_rng(4)
+        w = u32(rng, (BLOCK_TILE, 32))
+        a = np.asarray(checksum_blocks(w))
+        b = np.asarray(checksum_blocks(w.view(np.int32)))
+        np.testing.assert_array_equal(a, b)
+
+
+# --------------------------------------------------------------- partition
+
+class TestPartition:
+    def test_uniform_keys(self):
+        rng = np.random.default_rng(0)
+        k = u32(rng, (KEY_TILE * 4,))
+        b, h = partition_keys(k)
+        eb, eh = ref.partition_ref(k)
+        np.testing.assert_array_equal(np.asarray(b), eb)
+        np.testing.assert_array_equal(np.asarray(h), eh)
+
+    def test_histogram_sums_to_n(self):
+        rng = np.random.default_rng(1)
+        k = u32(rng, (KEY_TILE * 8,))
+        _, h = partition_keys(k)
+        assert int(np.asarray(h).sum()) == KEY_TILE * 8
+
+    def test_all_zero_keys(self):
+        k = np.zeros((KEY_TILE,), dtype=np.uint32)
+        b, h = partition_keys(k)
+        assert (np.asarray(b) == 0).all()
+        assert int(np.asarray(h)[0]) == KEY_TILE
+        assert int(np.asarray(h)[1:].sum()) == 0
+
+    def test_all_max_keys(self):
+        k = np.full((KEY_TILE,), 0xFFFFFFFF, dtype=np.uint32)
+        b, h = partition_keys(k)
+        assert (np.asarray(b) == NUM_BUCKETS - 1).all()
+        assert int(np.asarray(h)[-1]) == KEY_TILE
+
+    def test_bucket_boundaries(self):
+        """Keys exactly at bucket-range boundaries."""
+        step = 1 << (32 - 8)
+        ks = []
+        for bkt in range(NUM_BUCKETS):
+            ks += [bkt * step, bkt * step + step - 1]
+        pad = KEY_TILE - (len(ks) % KEY_TILE)
+        k = np.array(ks + [0] * pad, dtype=np.uint32)
+        b, _ = partition_keys(k)
+        b = np.asarray(b)
+        for i, bkt in enumerate(range(NUM_BUCKETS)):
+            assert b[2 * i] == bkt
+            assert b[2 * i + 1] == bkt
+
+    def test_production_shape(self):
+        """The AOT shape: 65536 keys."""
+        rng = np.random.default_rng(2)
+        k = u32(rng, (65536,))
+        b, h = partition_keys(k)
+        eb, eh = ref.partition_ref(k)
+        np.testing.assert_array_equal(np.asarray(b), eb)
+        np.testing.assert_array_equal(np.asarray(h), eh)
+
+    @settings(deadline=None, max_examples=20)
+    @given(tiles=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, tiles, seed):
+        rng = np.random.default_rng(seed)
+        k = u32(rng, (KEY_TILE * tiles,))
+        b, h = partition_keys(k)
+        eb, eh = ref.partition_ref(k)
+        np.testing.assert_array_equal(np.asarray(b), eb)
+        np.testing.assert_array_equal(np.asarray(h), eh)
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        skew=st.sampled_from(["low", "high", "two-point"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_skewed_distributions(self, skew, seed):
+        """Non-uniform key distributions (Indy keys are uniform; be stricter)."""
+        rng = np.random.default_rng(seed)
+        n = KEY_TILE * 2
+        if skew == "low":
+            k = rng.integers(0, 1 << 16, size=n, dtype=np.uint64)
+        elif skew == "high":
+            k = rng.integers((1 << 32) - (1 << 16), 1 << 32, size=n, dtype=np.uint64)
+        else:
+            k = rng.choice(np.array([0, 0xFFFFFFFF], dtype=np.uint64), size=n)
+        k = k.astype(np.uint32)
+        b, h = partition_keys(k)
+        eb, eh = ref.partition_ref(k)
+        np.testing.assert_array_equal(np.asarray(b), eb)
+        np.testing.assert_array_equal(np.asarray(h), eh)
+
+    def test_rejects_unaligned(self):
+        with pytest.raises(AssertionError):
+            partition_keys(np.zeros((KEY_TILE + 3,), dtype=np.uint32))

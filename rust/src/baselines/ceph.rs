@@ -1,0 +1,630 @@
+//! Ceph-like baseline: disaggregated object storage (BlueStore-ish OSDs
+//! on NVM) with sharded metadata servers, primary-copy **parallel**
+//! replication (3×), kernel buffer-cache clients (paper §5.1).
+//!
+//! Architectural costs it pays (the comparison targets of Fig. 2–9):
+//! - metadata ops serialize through MDS journaling (the ~8k ops/s
+//!   ceiling of Fig. 8, modeled as a global journal service queue —
+//!   the paper found MDS sharding had "negligible impact");
+//! - fsync = flush dirty pages to the primary OSD, which fans out 2
+//!   parallel copies (3× sender bandwidth, Fig. 3);
+//! - BlueStore transaction commit on every OSD write;
+//! - volatile client caches: fail-over must rebuild them from OSDs
+//!   while recovery traffic contends for the same NICs (Fig. 7).
+
+use std::collections::HashMap;
+
+use crate::fs::{Cred, Fd, FileStore, FsError, Ino, Mode, NodeId, Payload, ProcId, Result, Stat, Tier};
+use crate::hw::nvm::NvmDevice;
+use crate::hw::params::HwParams;
+use crate::hw::rdma::Fabric;
+use crate::sim::api::DistFs;
+use crate::Nanos;
+
+use super::common::{ClientProc, PageCache, PAGE};
+
+pub struct CephLike {
+    p: HwParams,
+    nodes: usize,
+    pub replication: usize,
+    pub mds_count: usize,
+    /// logical cluster contents (placement decides which OSD pays costs)
+    store: FileStore,
+    osd_nvm: Vec<NvmDevice>,
+    alive: Vec<bool>,
+    fabric: Fabric,
+    caches: Vec<PageCache>,
+    procs: Vec<ClientProc>,
+    client_size: HashMap<(usize, Ino), u64>,
+    /// global MDS journal serialization (§5.5: the scalability ceiling)
+    mds_free_at: Nanos,
+    /// PG peering window after a failure: metadata ops stall until the
+    /// placement-group state machine re-converges (hundreds of ms even
+    /// for small clusters — size-independent protocol rounds)
+    pub peering_until: Nanos,
+    /// OSD rebuild window: reads/writes contend with recovery traffic
+    pub recovering_until: Nanos,
+}
+
+impl CephLike {
+    pub fn new(nodes: usize, cache_capacity: u64, p: HwParams) -> Self {
+        Self {
+            nodes,
+            replication: 3.min(nodes),
+            mds_count: 2.min(nodes),
+            store: FileStore::new(),
+            osd_nvm: (0..nodes).map(|i| NvmDevice::new(6 << 40, 23 + i as u64)).collect(),
+            alive: vec![true; nodes],
+            fabric: Fabric::new(nodes),
+            caches: (0..nodes).map(|_| PageCache::new(cache_capacity)).collect(),
+            procs: Vec::new(),
+            client_size: HashMap::new(),
+            mds_free_at: 0,
+            peering_until: 0,
+            recovering_until: 0,
+            p,
+        }
+    }
+
+    pub fn set_mds_count(&mut self, n: usize) {
+        self.mds_count = n.clamp(1, self.nodes);
+    }
+
+    fn live(&self, start: usize) -> usize {
+        let mut n = start % self.nodes;
+        for _ in 0..self.nodes {
+            if self.alive[n] {
+                return n;
+            }
+            n = (n + 1) % self.nodes;
+        }
+        start % self.nodes
+    }
+
+    /// CRUSH-ish placement: primary + (replication-1) successors.
+    fn osds_for(&self, ino: Ino, page: u64) -> Vec<NodeId> {
+        let h = ino
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((page / 1024).wrapping_mul(0x94D049BB133111EB));
+        let primary = self.live(h as usize % self.nodes);
+        let mut v = vec![primary];
+        let mut n = primary;
+        while v.len() < self.replication {
+            n = self.live(n + 1);
+            if v.contains(&n) {
+                break;
+            }
+            v.push(n);
+        }
+        v
+    }
+
+    fn mds_node(&self, path: &str) -> NodeId {
+        let h: u64 = crate::fs::path::dirname(path)
+            .bytes()
+            .fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
+        self.live(h as usize % self.mds_count)
+    }
+
+    /// Metadata RPC through the MDS journal queue.
+    fn meta_rpc(&mut self, pid: ProcId, path: &str) -> Nanos {
+        let node = self.procs[pid].node;
+        let mds = self.mds_node(path);
+        let now = self.procs[pid].clock.now;
+        // request to the MDS
+        let arrive = if node == mds {
+            now + 2 * self.p.rpc_overhead
+        } else {
+            self.fabric.rpc(now, node, mds, 128, 0, 0, &self.p)
+        };
+        // journal serialization (global — MDS journaling to OSDs is the
+        // cluster-wide bottleneck the paper measures); metadata ops also
+        // stall during PG peering after a failure
+        let start = arrive.max(self.mds_free_at).max(self.peering_until);
+        let done = start + self.p.ceph_mds_service;
+        self.mds_free_at = done;
+        // reply
+        let replied = if node == mds {
+            done + self.p.rpc_overhead
+        } else {
+            self.fabric.send(done, mds, node, 128, &self.p)
+        };
+        self.procs[pid].clock.advance_to(replied);
+        replied
+    }
+
+    /// Flush dirty pages of `ino`: primary-copy replication per page
+    /// group.
+    fn flush_dirty(&mut self, pid: ProcId, ino: Ino) -> Result<()> {
+        let node = self.procs[pid].node;
+        let pages = self.caches[node].dirty_pages_of(ino);
+        if pages.is_empty() {
+            return Ok(());
+        }
+        // group by primary OSD
+        let mut groups: HashMap<Vec<NodeId>, Vec<u64>> = HashMap::new();
+        for pg in pages {
+            groups.entry(self.osds_for(ino, pg)).or_default().push(pg);
+        }
+        let t0 = self.procs[pid].clock.now;
+        let mut done_max = t0;
+        for (osds, pgs) in groups {
+            let bytes = pgs.len() as u64 * PAGE;
+            let primary = osds[0];
+            // client -> primary
+            let mut t = if node == primary {
+                t0 + self.p.rpc_overhead
+            } else {
+                self.fabric.write(t0, node, primary, bytes, &self.p)
+            };
+            // BlueStore commit on the primary
+            t = self.osd_nvm[primary].write(t, bytes, &self.p) + self.p.ceph_osd_commit;
+            // parallel fan-out to replicas (consumes primary tx bandwidth)
+            let mut acks = t;
+            for &r in &osds[1..] {
+                let tr = self.fabric.write(t, primary, r, bytes, &self.p);
+                let tr = self.osd_nvm[r].write(tr, bytes, &self.p) + self.p.ceph_osd_commit;
+                let back = self.fabric.send(tr, r, primary, 64, &self.p);
+                acks = acks.max(back);
+            }
+            // primary ack to client
+            let fin = if node == primary {
+                acks + self.p.rpc_overhead
+            } else {
+                self.fabric.send(acks, primary, node, 64, &self.p)
+            };
+            done_max = done_max.max(fin);
+            // apply to the logical store
+            for pg in pgs {
+                let data = self.caches[node]
+                    .page_data(ino, pg)
+                    .cloned()
+                    .unwrap_or(Payload::zero(PAGE));
+                let known = self
+                    .client_size
+                    .get(&(node, ino))
+                    .copied()
+                    .or_else(|| self.store.stat_ino(ino).map(|s| s.size).ok())
+                    .unwrap_or(0);
+                let off = pg * PAGE;
+                let len = data.len().min(known.saturating_sub(off));
+                if len > 0 {
+                    self.store.write_at(ino, off, data.slice(0, len), Tier::Hot, fin)?;
+                }
+                self.caches[node].clean(ino, pg);
+            }
+        }
+        self.procs[pid].clock.advance_to(done_max);
+        Ok(())
+    }
+
+    fn write_back_victims(&mut self, pid: ProcId, victims: Vec<(Ino, u64, Payload)>) -> Result<()> {
+        // eviction write-back: same path as flush but without commit ack
+        // batching niceties — charge the transfers
+        let node = self.procs[pid].node;
+        for (ino, pg, data) in victims {
+            let osds = self.osds_for(ino, pg);
+            let primary = osds[0];
+            let mut t = self.procs[pid].clock.now;
+            if node != primary {
+                t = self.fabric.write(t, node, primary, PAGE, &self.p);
+            }
+            t = self.osd_nvm[primary].write(t, PAGE, &self.p);
+            for &r in &osds[1..] {
+                self.fabric.write(t, primary, r, PAGE, &self.p);
+            }
+            let off = pg * PAGE;
+            let known = self
+                .client_size
+                .get(&(node, ino))
+                .copied()
+                .or_else(|| self.store.stat_ino(ino).map(|s| s.size).ok())
+                .unwrap_or(off + data.len());
+            let len = data.len().min(known.saturating_sub(off));
+            if len > 0 {
+                self.store.write_at(ino, off, data.slice(0, len), Tier::Hot, t)?;
+            }
+            self.procs[pid].clock.advance_to(t);
+        }
+        Ok(())
+    }
+
+    fn begin(&mut self, pid: ProcId) -> Result<Nanos> {
+        if !self.procs[pid].alive || !self.alive[self.procs[pid].node] {
+            return Err(FsError::Crashed);
+        }
+        Ok(self.procs[pid].clock.now)
+    }
+
+    fn end(&mut self, pid: ProcId, t0: Nanos) {
+        self.procs[pid].last_latency = self.procs[pid].clock.now - t0;
+    }
+
+    // ---------------------------------------------------- failure (Fig 7)
+
+    /// Kill an OSD node: client caches there die; the cluster starts a
+    /// background rebuild that saturates survivor NICs until done.
+    /// Returns the failure-detection time.
+    pub fn kill_node(&mut self, node: NodeId, at: Nanos) -> Nanos {
+        self.alive[node] = false;
+        self.caches[node].crash();
+        for pr in &mut self.procs {
+            if pr.node == node {
+                pr.alive = false;
+            }
+        }
+        let detected = at + self.p.failure_timeout;
+        // 1. PG peering: the placement-group state machine re-converges;
+        //    protocol rounds dominate, mostly independent of data size
+        let dead_share = self.store.bytes_in_tier(Tier::Hot) / self.nodes as u64;
+        self.peering_until = detected
+            + 200_000_000u64.max((dead_share as f64 / self.p.rdma_bw) as Nanos);
+        // 2. eager rebuild: re-replicate the dead OSD's share among the
+        //    survivors (§5.4 "Ceph also rebuilds the local OSD ... eagerly
+        //    and in the background"); reads/writes contend until done
+        let survivors: Vec<NodeId> = (0..self.nodes).filter(|&n| self.alive[n]).collect();
+        let mut t = self.peering_until;
+        if survivors.len() >= 2 && dead_share > 0 {
+            let chunk = dead_share / survivors.len() as u64;
+            for w in survivors.windows(2) {
+                t = t.max(self.fabric.write(self.peering_until, w[0], w[1], 2 * chunk, &self.p));
+            }
+        }
+        self.recovering_until = t + 2 * self.p.ceph_osd_commit;
+        detected
+    }
+
+    /// Restart a client process on another node after fail-over: the
+    /// replacement starts with a cold kernel cache.
+    pub fn failover_process(&mut self, pid: ProcId, to: NodeId, at: Nanos) -> ProcId {
+        let new = self.spawn_process(to, 0);
+        self.procs[new].clock.now = at;
+        // unflushed dirty state of the dead client is lost: drop every
+        // client_size entry for the dead node (close-to-open gives no
+        // guarantees for unflushed data)
+        let dead = self.procs[pid].node;
+        self.client_size.retain(|(n, _), _| *n != dead);
+        new
+    }
+}
+
+impl DistFs for CephLike {
+    fn name(&self) -> &'static str {
+        "ceph"
+    }
+
+    fn params(&self) -> &HwParams {
+        &self.p
+    }
+
+    fn spawn_process(&mut self, node: usize, socket: usize) -> ProcId {
+        self.procs.push(ClientProc::new(node, socket));
+        self.procs.len() - 1
+    }
+
+    fn now(&self, pid: ProcId) -> Nanos {
+        self.procs[pid].clock.now
+    }
+
+    fn set_now(&mut self, pid: ProcId, t: Nanos) {
+        self.procs[pid].clock.now = t;
+    }
+
+    fn last_latency(&self, pid: ProcId) -> Nanos {
+        self.procs[pid].last_latency
+    }
+
+    fn create(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        let t = self.meta_rpc(pid, path);
+        let ino = self.store.create(path, Mode::DEFAULT_FILE, Cred::ROOT, t)?;
+        let node = self.procs[pid].node;
+        self.client_size.insert((node, ino), 0);
+        let fd = self.procs[pid].install_fd(path.to_string(), ino);
+        self.end(pid, t0);
+        Ok(fd)
+    }
+
+    fn open(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_read_lat);
+        self.meta_rpc(pid, path);
+        let st = self.store.stat(path)?;
+        let node = self.procs[pid].node;
+        self.client_size.insert((node, st.ino), st.size);
+        let fd = self.procs[pid].install_fd(path.to_string(), st.ino);
+        self.end(pid, t0);
+        Ok(fd)
+    }
+
+    fn close(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        self.flush_dirty(pid, ino)?;
+        self.procs[pid].remove_fd(fd);
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()> {
+        let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let len = data.len();
+        self.pwrite(pid, fd, cursor, data)?;
+        self.procs[pid].fd_mut(fd).unwrap().2 = cursor + len;
+        Ok(())
+    }
+
+    fn pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let node = self.procs[pid].node;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        let mut victims = Vec::new();
+        let mut pos = 0;
+        while pos < data.len() {
+            let abs = off + pos;
+            let pg = PageCache::page_of(abs);
+            let pg_off = abs % PAGE;
+            let take = (PAGE - pg_off).min(data.len() - pos);
+            if !self.caches[node].contains(ino, pg) {
+                victims.extend(self.caches[node].install(ino, pg, Payload::zero(PAGE), false));
+            }
+            self.caches[node].write_into(ino, pg, pg_off, &data.slice(pos, take));
+            pos += take;
+        }
+        let copy = (data.len() as f64 / self.p.dram_write_bw) as Nanos;
+        self.procs[pid].clock.tick(copy + self.p.dram_write_lat);
+        let end = off + data.len();
+        let e = self.client_size.entry((node, ino)).or_insert(0);
+        *e = (*e).max(end);
+        self.write_back_victims(pid, victims)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn read(&mut self, pid: ProcId, fd: Fd, len: u64) -> Result<Payload> {
+        let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let out = self.pread(pid, fd, cursor, len)?;
+        self.procs[pid].fd_mut(fd).unwrap().2 = cursor + out.len();
+        Ok(out)
+    }
+
+    fn pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64) -> Result<Payload> {
+        let t0 = self.begin(pid)?;
+        let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let node = self.procs[pid].node;
+        self.procs[pid].clock.tick(self.p.syscall_read_lat);
+
+        let srv_size = self.store.stat_ino(ino).map(|s| s.size).unwrap_or(0);
+        let known = self
+            .client_size
+            .get(&(node, ino))
+            .copied()
+            .unwrap_or(srv_size)
+            .max(srv_size);
+        let len = len.min(known.saturating_sub(off));
+        if len == 0 {
+            self.end(pid, t0);
+            return Ok(Payload::zero(0));
+        }
+
+        let missing = self.caches[node].missing_pages(ino, off, len);
+        if !missing.is_empty() {
+            // fetch from the primary OSD(s) with read-ahead
+            let ra_pages = self.p.client_readahead / PAGE;
+            let mut fetch = missing.clone();
+            let last = *missing.last().unwrap();
+            for pg in last + 1..last + 1 + ra_pages {
+                if pg * PAGE < srv_size && !self.caches[node].contains(ino, pg) {
+                    fetch.push(pg);
+                }
+            }
+            // group by primary
+            let mut groups: HashMap<NodeId, u64> = HashMap::new();
+            for &pg in &fetch {
+                *groups.entry(self.osds_for(ino, pg)[0]).or_default() += PAGE;
+            }
+            let now = self.procs[pid].clock.now;
+            let mut done_max = now;
+            for (osd, bytes) in groups {
+                let mut handler = self.p.ceph_osd_read_service
+                    + (bytes as f64 / self.p.nvm_read_bw) as Nanos;
+                // degraded mode: OSD reads contend with rebuild traffic
+                if now < self.recovering_until {
+                    handler += 2 * (bytes as f64 / self.p.rdma_bw) as Nanos
+                        + 2 * self.p.ceph_osd_read_service;
+                }
+                let done = if node == osd {
+                    now + 2 * self.p.rpc_overhead + handler
+                } else {
+                    self.fabric.rpc(now, node, osd, 128, bytes, handler, &self.p)
+                };
+                done_max = done_max.max(done);
+            }
+            self.procs[pid].clock.advance_to(done_max);
+            let mut victims = Vec::new();
+            for pg in fetch {
+                let (pdata, _) = self.store.read_at(ino, pg * PAGE, PAGE)?;
+                let mut page = pdata.materialize();
+                page.resize(PAGE as usize, 0);
+                victims.extend(self.caches[node].install(ino, pg, Payload::bytes(page), false));
+            }
+            self.write_back_victims(pid, victims)?;
+        } else {
+            let copy = (len as f64 / self.p.dram_read_bw) as Nanos;
+            self.procs[pid].clock.tick(self.p.dram_read_lat + copy);
+        }
+
+        let mut out = Vec::with_capacity(len as usize);
+        for pg in PageCache::pages(off, len) {
+            let pdata = self.caches[node]
+                .get(ino, pg)
+                .cloned()
+                .unwrap_or(Payload::zero(PAGE));
+            let b = pdata.materialize();
+            let pg_start = pg * PAGE;
+            let s = off.max(pg_start) - pg_start;
+            let e = ((off + len).min(pg_start + PAGE) - pg_start) as usize;
+            out.extend_from_slice(&b[s as usize..e]);
+        }
+        self.end(pid, t0);
+        Ok(Payload::bytes(out))
+    }
+
+    fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        self.flush_dirty(pid, ino)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn mkdir(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        let t = self.meta_rpc(pid, path);
+        self.store.mkdir(path, Mode::DEFAULT_DIR, Cred::ROOT, t)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn rename(&mut self, pid: ProcId, from: &str, to: &str) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        let t = self.meta_rpc(pid, from);
+        self.store.rename(from, to, t)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn unlink(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        let ino = self.store.resolve(path)?;
+        let node = self.procs[pid].node;
+        self.caches[node].invalidate_ino(ino);
+        let t = self.meta_rpc(pid, path);
+        self.store.unlink(path, t)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn stat(&mut self, pid: ProcId, path: &str) -> Result<Stat> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_read_lat);
+        self.meta_rpc(pid, path);
+        let st = self.store.stat(path);
+        self.end(pid, t0);
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ceph() -> CephLike {
+        CephLike::new(3, 3 << 30, HwParams::default())
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut c = ceph();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(b"hello ceph".to_vec())).unwrap();
+        let d = c.pread(pid, fd, 0, 10).unwrap();
+        assert_eq!(d.materialize(), b"hello ceph");
+    }
+
+    #[test]
+    fn fsync_slower_than_nfs_due_to_replication() {
+        let mut c = ceph();
+        let mut n = super::super::nfs::NfsLike::new(3, 3 << 30, HwParams::default());
+        let cp = c.spawn_process(0, 0);
+        let np = n.spawn_process(1, 0);
+        let cfd = c.create(cp, "/f").unwrap();
+        let nfd = n.create(np, "/f").unwrap();
+        c.write(cp, cfd, Payload::bytes(vec![1; 4096])).unwrap();
+        n.write(np, nfd, Payload::bytes(vec![1; 4096])).unwrap();
+        c.fsync(cp, cfd).unwrap();
+        n.fsync(np, nfd).unwrap();
+        assert!(
+            c.last_latency(cp) > n.last_latency(np),
+            "ceph {} !> nfs {}",
+            c.last_latency(cp),
+            n.last_latency(np)
+        );
+    }
+
+    #[test]
+    fn metadata_ops_serialize_at_mds() {
+        let mut c = ceph();
+        let p1 = c.spawn_process(0, 0);
+        let p2 = c.spawn_process(1, 0);
+        c.mkdir(p1, "/d1").unwrap();
+        // p2's op at the same virtual time queues behind p1's journal entry
+        c.set_now(p2, 0);
+        c.mkdir(p2, "/d2").unwrap();
+        let lat2 = c.last_latency(p2);
+        assert!(
+            lat2 >= 2 * c.p.ceph_mds_service,
+            "second op should queue: {lat2}"
+        );
+    }
+
+    #[test]
+    fn placement_spreads_and_replicates() {
+        let c = ceph();
+        let osds = c.osds_for(7, 0);
+        assert_eq!(osds.len(), 3);
+        let mut sorted = osds.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "replicas must be distinct");
+    }
+
+    #[test]
+    fn placement_skips_dead_osd() {
+        let mut c = ceph();
+        c.kill_node(1, 0);
+        for ino in 0..20 {
+            assert!(!c.osds_for(ino, 0).contains(&1));
+        }
+    }
+
+    #[test]
+    fn failover_loses_client_cache() {
+        let mut c = ceph();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(vec![7; 65536])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        // warm read
+        let _ = c.pread(pid, fd, 0, 65536).unwrap();
+        let warm = c.last_latency(pid);
+        let at = c.now(pid);
+        let detected = c.kill_node(0, at);
+        let np = c.failover_process(pid, 1, detected);
+        let fd2 = c.open(np, "/f").unwrap();
+        let _ = c.pread(np, fd2, 0, 65536).unwrap();
+        let cold = c.last_latency(np);
+        assert!(cold > warm, "cold {cold} !> warm {warm}");
+        // data intact after OSD failure (replication)
+        let d = c.pread(np, fd2, 0, 16).unwrap();
+        assert_eq!(d.materialize(), vec![7; 16]);
+    }
+
+    #[test]
+    fn recovery_window_set_after_failure() {
+        let mut c = ceph();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(vec![1u8; 1 << 20])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        let detected = c.kill_node(2, c.now(pid));
+        assert!(c.recovering_until > detected);
+    }
+}

@@ -1,0 +1,260 @@
+//! Shared client-side machinery for the disaggregated baselines: the
+//! kernel buffer cache (block-granular, volatile, write-back) and the
+//! per-process client state.
+//!
+//! This is the architecture Assise argues against (paper §1, Fig. 1a):
+//! clients cache file state in a *volatile* kernel page cache shared by
+//! all processes on a node, accessed via system calls, with 4 KB block
+//! IO amplification and server round trips on misses and fsyncs.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cache::Lru;
+use crate::util::FastMap;
+use crate::fs::{Fd, Ino, NodeId, Payload, SocketId};
+use crate::hw::clock::Clock;
+use crate::Nanos;
+
+pub const PAGE: u64 = 4096;
+
+/// A node's kernel buffer cache: page-granular, write-back, volatile.
+#[derive(Debug)]
+pub struct PageCache {
+    lru: Lru<(Ino, u64)>,
+    data: FastMap<(Ino, u64), Payload>,
+    dirty: HashSet<(Ino, u64)>,
+}
+
+impl PageCache {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            lru: Lru::new(capacity),
+            data: FastMap::default(),
+            dirty: HashSet::new(),
+        }
+    }
+
+    pub fn page_of(off: u64) -> u64 {
+        off / PAGE
+    }
+
+    /// Pages covering `[off, off+len)`.
+    pub fn pages(off: u64, len: u64) -> impl Iterator<Item = u64> {
+        let first = off / PAGE;
+        let last = if len == 0 { first } else { (off + len - 1) / PAGE };
+        first..=last
+    }
+
+    pub fn contains(&self, ino: Ino, page: u64) -> bool {
+        self.lru.contains(&(ino, page))
+    }
+
+    /// Which pages of the range miss in the cache?
+    pub fn missing_pages(&self, ino: Ino, off: u64, len: u64) -> Vec<u64> {
+        Self::pages(off, len)
+            .filter(|&pg| !self.lru.contains(&(ino, pg)))
+            .collect()
+    }
+
+    /// Install a page; returns dirty victims `(ino, page, data)` that the
+    /// caller must write back to the server before dropping.
+    pub fn install(
+        &mut self,
+        ino: Ino,
+        page: u64,
+        data: Payload,
+        dirty: bool,
+    ) -> Vec<(Ino, u64, Payload)> {
+        let victims = self.lru.insert((ino, page), PAGE);
+        self.data.insert((ino, page), data);
+        if dirty {
+            self.dirty.insert((ino, page));
+        }
+        let mut out = Vec::new();
+        for (k, _) in victims {
+            let d = self.data.remove(&k);
+            if self.dirty.remove(&k) {
+                if let Some(d) = d {
+                    out.push((k.0, k.1, d));
+                }
+            }
+        }
+        out
+    }
+
+    /// Overlay bytes onto a cached page (installing a zero page if
+    /// absent), marking it dirty.
+    pub fn write_into(&mut self, ino: Ino, page: u64, page_off: u64, bytes: &Payload) {
+        let key = (ino, page);
+        self.lru.touch(&key);
+        let cur = self.data.entry(key).or_insert_with(|| Payload::zero(PAGE));
+        let mut buf = cur.materialize();
+        if buf.len() < PAGE as usize {
+            buf.resize(PAGE as usize, 0);
+        }
+        let b = bytes.materialize();
+        buf[page_off as usize..page_off as usize + b.len()].copy_from_slice(&b);
+        *cur = Payload::bytes(buf);
+        self.dirty.insert(key);
+    }
+
+    pub fn get(&mut self, ino: Ino, page: u64) -> Option<&Payload> {
+        let key = (ino, page);
+        if self.lru.touch(&key) {
+            self.data.get(&key)
+        } else {
+            None
+        }
+    }
+
+    /// Dirty pages of one file, ascending (fsync flush set).
+    pub fn dirty_pages_of(&self, ino: Ino) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .dirty
+            .iter()
+            .filter(|(i, _)| *i == ino)
+            .map(|&(_, pg)| pg)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn page_data(&self, ino: Ino, page: u64) -> Option<&Payload> {
+        self.data.get(&(ino, page))
+    }
+
+    pub fn clean(&mut self, ino: Ino, page: u64) {
+        self.dirty.remove(&(ino, page));
+    }
+
+    pub fn invalidate_ino(&mut self, ino: Ino) {
+        self.lru.remove_matching(|k| k.0 == ino);
+        self.data.retain(|k, _| k.0 != ino);
+        self.dirty.retain(|k| k.0 != ino);
+    }
+
+    /// Node crash: the kernel cache is volatile.
+    pub fn crash(&mut self) {
+        self.lru.clear();
+        self.data.clear();
+        self.dirty.clear();
+    }
+
+    pub fn used(&self) -> u64 {
+        self.lru.used()
+    }
+
+    pub fn dirty_count(&self) -> usize {
+        self.dirty.len()
+    }
+}
+
+/// Client-side per-process state (fd table + clock + counters).
+#[derive(Debug)]
+pub struct ClientProc {
+    pub node: NodeId,
+    pub socket: SocketId,
+    pub clock: Clock,
+    pub alive: bool,
+    pub last_latency: Nanos,
+    fds: HashMap<Fd, (String, Ino, u64)>, // path, ino, cursor
+    next_fd: Fd,
+}
+
+impl ClientProc {
+    pub fn new(node: NodeId, socket: SocketId) -> Self {
+        Self {
+            node,
+            socket,
+            clock: Clock::new(),
+            alive: true,
+            last_latency: 0,
+            fds: HashMap::new(),
+            next_fd: 3,
+        }
+    }
+
+    pub fn install_fd(&mut self, path: String, ino: Ino) -> Fd {
+        let fd = self.next_fd;
+        self.next_fd += 1;
+        self.fds.insert(fd, (path, ino, 0));
+        fd
+    }
+
+    pub fn fd(&self, fd: Fd) -> Option<&(String, Ino, u64)> {
+        self.fds.get(&fd)
+    }
+
+    pub fn fd_mut(&mut self, fd: Fd) -> Option<&mut (String, Ino, u64)> {
+        self.fds.get_mut(&fd)
+    }
+
+    pub fn remove_fd(&mut self, fd: Fd) -> Option<(String, Ino, u64)> {
+        self.fds.remove(&fd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_iteration() {
+        let pages: Vec<u64> = PageCache::pages(100, 8200).collect();
+        assert_eq!(pages, vec![0, 1, 2]); // 100..8300 spans 3 pages
+    }
+
+    #[test]
+    fn install_and_get() {
+        let mut c = PageCache::new(1 << 20);
+        c.install(1, 0, Payload::bytes(vec![7; 4096]), false);
+        assert!(c.contains(1, 0));
+        assert_eq!(c.get(1, 0).unwrap().len(), 4096);
+        assert_eq!(c.missing_pages(1, 0, 8192), vec![1]);
+    }
+
+    #[test]
+    fn dirty_eviction_returns_victims() {
+        let mut c = PageCache::new(2 * PAGE);
+        c.install(1, 0, Payload::zero(PAGE), true);
+        c.install(1, 1, Payload::zero(PAGE), false);
+        let victims = c.install(1, 2, Payload::zero(PAGE), false);
+        // page 0 (dirty) evicted and returned for write-back
+        assert_eq!(victims.len(), 1);
+        assert_eq!(victims[0].1, 0);
+        assert!(!c.contains(1, 0));
+    }
+
+    #[test]
+    fn write_into_marks_dirty() {
+        let mut c = PageCache::new(1 << 20);
+        c.install(1, 0, Payload::zero(PAGE), false);
+        c.write_into(1, 0, 100, &Payload::bytes(b"xyz".to_vec()));
+        assert_eq!(c.dirty_pages_of(1), vec![0]);
+        let d = c.page_data(1, 0).unwrap().materialize();
+        assert_eq!(&d[100..103], b"xyz");
+        c.clean(1, 0);
+        assert!(c.dirty_pages_of(1).is_empty());
+    }
+
+    #[test]
+    fn crash_clears_everything() {
+        let mut c = PageCache::new(1 << 20);
+        c.install(1, 0, Payload::zero(PAGE), true);
+        c.crash();
+        assert!(!c.contains(1, 0));
+        assert_eq!(c.dirty_count(), 0);
+        assert_eq!(c.used(), 0);
+    }
+
+    #[test]
+    fn client_fd_table() {
+        let mut p = ClientProc::new(0, 0);
+        let fd = p.install_fd("/f".into(), 42);
+        assert_eq!(p.fd(fd).unwrap().1, 42);
+        p.fd_mut(fd).unwrap().2 = 100;
+        assert_eq!(p.fd(fd).unwrap().2, 100);
+        p.remove_fd(fd).unwrap();
+        assert!(p.fd(fd).is_none());
+    }
+}

@@ -1,0 +1,13 @@
+//! Baseline distributed file systems (paper §5 comparison points),
+//! implemented on the same simulated hardware as Assise so the
+//! comparisons isolate the architectural variable (NVM colocation +
+//! op-granular logging vs disaggregation + block caching).
+
+pub mod common;
+pub mod nfs;
+pub mod ceph;
+pub mod octopus;
+
+pub use ceph::CephLike;
+pub use nfs::NfsLike;
+pub use octopus::OctopusLike;

@@ -1,0 +1,474 @@
+//! NFS-like baseline: a single disaggregated server (EXT4-DAX on NVM,
+//! RDMA transport), kernel buffer-cache clients, close-to-open
+//! consistency, write-back with COMMIT-on-fsync (paper §5.1).
+//!
+//! What it gets wrong by design (the paper's §1 critique):
+//! - every op pays a syscall into the kernel client;
+//! - data moves at 4 KB page granularity (small-IO amplification);
+//! - fsync is a synchronous server round trip + server-side commit;
+//! - the client cache is volatile — lost on any crash;
+//! - no replication: a server failure loses the service entirely
+//!   (which is why NFS "gains an unfair performance advantage" and
+//!   Assise beating it anyway matters).
+
+use std::collections::HashMap;
+
+use crate::fs::{Cred, Fd, FileStore, FsError, Ino, Mode, Payload, ProcId, Result, Stat, Tier};
+use crate::hw::nvm::NvmDevice;
+use crate::hw::params::HwParams;
+use crate::hw::rdma::Fabric;
+use crate::sim::api::DistFs;
+use crate::Nanos;
+
+use super::common::{ClientProc, PageCache, PAGE};
+
+pub struct NfsLike {
+    p: HwParams,
+    nodes: usize,
+    pub server: usize,
+    store: FileStore,
+    server_nvm: NvmDevice,
+    fabric: Fabric,
+    caches: Vec<PageCache>,
+    procs: Vec<ClientProc>,
+    /// client-known file sizes (node, ino) — updated on open (GETATTR)
+    /// and local writes (close-to-open consistency: *not* kept coherent
+    /// with other clients until re-open)
+    client_size: HashMap<(usize, Ino), u64>,
+}
+
+impl NfsLike {
+    pub fn new(nodes: usize, cache_capacity: u64, p: HwParams) -> Self {
+        Self {
+            nodes,
+            server: 0,
+            store: FileStore::new(),
+            server_nvm: NvmDevice::new(6 << 40, 17),
+            fabric: Fabric::new(nodes),
+            caches: (0..nodes).map(|_| PageCache::new(cache_capacity)).collect(),
+            procs: Vec::new(),
+            client_size: HashMap::new(),
+            p,
+        }
+    }
+
+    /// Metadata RPC to the server: request + handler (nfsd + DAX write)
+    /// + reply. Clients colocated with the server still pay loopback RPC
+    /// (the paper runs apps on client machines only).
+    fn meta_rpc(&mut self, pid: ProcId, handler_extra: Nanos) -> Nanos {
+        let node = self.procs[pid].node;
+        let now = self.procs[pid].clock.now;
+        let handler = self.p.nfs_per_page_service + handler_extra;
+        let done = if node == self.server {
+            now + 2 * self.p.rpc_overhead + handler
+        } else {
+            self.fabric
+                .rpc(now, node, self.server, 128, 128, handler, &self.p)
+        };
+        self.procs[pid].clock.advance_to(done);
+        done
+    }
+
+    /// Flush dirty pages of `ino` from `node`'s cache to the server
+    /// (fsync / close / eviction write-back).
+    fn flush_dirty(&mut self, pid: ProcId, ino: Ino) -> Result<()> {
+        let node = self.procs[pid].node;
+        let pages = self.caches[node].dirty_pages_of(ino);
+        if pages.is_empty() {
+            return Ok(());
+        }
+        let mut t = self.procs[pid].clock.now;
+        // page-amplified transfer: every dirty page moves in full
+        let bytes = pages.len() as u64 * PAGE;
+        if node != self.server {
+            t = self.fabric.write(t, node, self.server, bytes, &self.p);
+        }
+        t = self.server_nvm.write(t, bytes, &self.p);
+        t += self.p.nfs_per_page_service * pages.len() as Nanos;
+        // apply contents to the server store
+        for pg in &pages {
+            let data = self.caches[node]
+                .page_data(ino, *pg)
+                .cloned()
+                .unwrap_or(Payload::zero(PAGE));
+            let size = self.store.stat_ino(ino).map(|s| s.size).unwrap_or(0);
+            let known = self.client_size.get(&(node, ino)).copied().unwrap_or(size);
+            let off = pg * PAGE;
+            let len = data.len().min(known.saturating_sub(off)).max(
+                // a dirty page always carries at least up to the client's
+                // known EOF within it
+                0,
+            );
+            if len > 0 {
+                self.store
+                    .write_at(ino, off, data.slice(0, len), Tier::Hot, t)?;
+            }
+            self.caches[node].clean(ino, *pg);
+        }
+        self.procs[pid].clock.advance_to(t);
+        Ok(())
+    }
+
+    fn write_back_victims(&mut self, pid: ProcId, victims: Vec<(Ino, u64, Payload)>) -> Result<()> {
+        if victims.is_empty() {
+            return Ok(());
+        }
+        let node = self.procs[pid].node;
+        let bytes = victims.len() as u64 * PAGE;
+        let mut t = self.procs[pid].clock.now;
+        if node != self.server {
+            t = self.fabric.write(t, node, self.server, bytes, &self.p);
+        }
+        t = self.server_nvm.write(t, bytes, &self.p);
+        for (ino, pg, data) in victims {
+            let off = pg * PAGE;
+            let known = self
+                .client_size
+                .get(&(node, ino))
+                .copied()
+                .or_else(|| self.store.stat_ino(ino).map(|s| s.size).ok())
+                .unwrap_or(off + data.len());
+            let len = data.len().min(known.saturating_sub(off));
+            if len > 0 {
+                self.store.write_at(ino, off, data.slice(0, len), Tier::Hot, t)?;
+            }
+        }
+        self.procs[pid].clock.advance_to(t);
+        Ok(())
+    }
+
+    fn begin(&mut self, pid: ProcId) -> Result<Nanos> {
+        if !self.procs[pid].alive {
+            return Err(FsError::Crashed);
+        }
+        Ok(self.procs[pid].clock.now)
+    }
+
+    fn end(&mut self, pid: ProcId, t0: Nanos) {
+        self.procs[pid].last_latency = self.procs[pid].clock.now - t0;
+    }
+}
+
+impl DistFs for NfsLike {
+    fn name(&self) -> &'static str {
+        "nfs"
+    }
+
+    fn params(&self) -> &HwParams {
+        &self.p
+    }
+
+    fn spawn_process(&mut self, node: usize, socket: usize) -> ProcId {
+        // paper: apps run on client machines; node 0 is the server —
+        // remap spawns onto clients 1..n when possible
+        let client = if self.nodes > 1 && node == self.server {
+            (node + 1) % self.nodes
+        } else {
+            node
+        };
+        self.procs.push(ClientProc::new(client, socket));
+        self.procs.len() - 1
+    }
+
+    fn now(&self, pid: ProcId) -> Nanos {
+        self.procs[pid].clock.now
+    }
+
+    fn set_now(&mut self, pid: ProcId, t: Nanos) {
+        self.procs[pid].clock.now = t;
+    }
+
+    fn last_latency(&self, pid: ProcId) -> Nanos {
+        self.procs[pid].last_latency
+    }
+
+    fn create(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        let t = self.meta_rpc(pid, self.p.nfs_server_commit / 4);
+        let ino = self.store.create(path, Mode::DEFAULT_FILE, Cred::ROOT, t)?;
+        let node = self.procs[pid].node;
+        self.client_size.insert((node, ino), 0);
+        let fd = self.procs[pid].install_fd(path.to_string(), ino);
+        self.end(pid, t0);
+        Ok(fd)
+    }
+
+    fn open(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_read_lat);
+        // close-to-open: GETATTR revalidation on every open
+        self.meta_rpc(pid, 0);
+        let st = self.store.stat(path)?;
+        let node = self.procs[pid].node;
+        self.client_size.insert((node, st.ino), st.size);
+        let fd = self.procs[pid].install_fd(path.to_string(), st.ino);
+        self.end(pid, t0);
+        Ok(fd)
+    }
+
+    fn close(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        // close-to-open: flush dirty data on close
+        self.flush_dirty(pid, ino)?;
+        self.procs[pid].remove_fd(fd);
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()> {
+        let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let len = data.len();
+        self.pwrite(pid, fd, cursor, data)?;
+        self.procs[pid].fd_mut(fd).unwrap().2 = cursor + len;
+        Ok(())
+    }
+
+    fn pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let node = self.procs[pid].node;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        // copy into the kernel buffer cache, page by page
+        let mut victims = Vec::new();
+        let mut pos = 0;
+        while pos < data.len() {
+            let abs = off + pos;
+            let pg = PageCache::page_of(abs);
+            let pg_off = abs % PAGE;
+            let take = (PAGE - pg_off).min(data.len() - pos);
+            if !self.caches[node].contains(ino, pg) {
+                victims.extend(self.caches[node].install(ino, pg, Payload::zero(PAGE), false));
+            }
+            self.caches[node].write_into(ino, pg, pg_off, &data.slice(pos, take));
+            pos += take;
+        }
+        // memory copy cost (the kernel copies user -> page cache)
+        let copy = (data.len() as f64 / self.p.dram_write_bw) as Nanos;
+        self.procs[pid].clock.tick(copy + self.p.dram_write_lat);
+        let end = off + data.len();
+        let e = self.client_size.entry((node, ino)).or_insert(0);
+        *e = (*e).max(end);
+        self.write_back_victims(pid, victims)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn read(&mut self, pid: ProcId, fd: Fd, len: u64) -> Result<Payload> {
+        let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let out = self.pread(pid, fd, cursor, len)?;
+        self.procs[pid].fd_mut(fd).unwrap().2 = cursor + out.len();
+        Ok(out)
+    }
+
+    fn pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64) -> Result<Payload> {
+        let t0 = self.begin(pid)?;
+        let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let node = self.procs[pid].node;
+        self.procs[pid].clock.tick(self.p.syscall_read_lat);
+
+        let srv_size = self.store.stat_ino(ino).map(|s| s.size).unwrap_or(0);
+        let known = self
+            .client_size
+            .get(&(node, ino))
+            .copied()
+            .unwrap_or(srv_size)
+            .max(srv_size);
+        let len = len.min(known.saturating_sub(off));
+        if len == 0 {
+            self.end(pid, t0);
+            return Ok(Payload::zero(0));
+        }
+
+        let missing = self.caches[node].missing_pages(ino, off, len);
+        if !missing.is_empty() {
+            // fetch from server with read-ahead
+            let ra_pages = self.p.client_readahead / PAGE;
+            let mut fetch = missing.clone();
+            let last = *missing.last().unwrap();
+            for pg in last + 1..last + 1 + ra_pages {
+                if pg * PAGE < srv_size && !self.caches[node].contains(ino, pg) {
+                    fetch.push(pg);
+                }
+            }
+            let bytes = fetch.len() as u64 * PAGE;
+            let now = self.procs[pid].clock.now;
+            let handler =
+                self.p.nfs_per_page_service * fetch.len() as Nanos + self.p.nvm_read_lat as Nanos;
+            let done = if node == self.server {
+                now + 2 * self.p.rpc_overhead + handler + (bytes as f64 / self.p.nvm_read_bw) as Nanos
+            } else {
+                self.fabric.rpc(now, node, self.server, 128, bytes, handler, &self.p)
+            };
+            self.procs[pid].clock.advance_to(done);
+            let mut victims = Vec::new();
+            for pg in fetch {
+                let (pdata, _) = self.store.read_at(ino, pg * PAGE, PAGE)?;
+                let mut page = pdata.materialize();
+                page.resize(PAGE as usize, 0);
+                victims.extend(self.caches[node].install(ino, pg, Payload::bytes(page), false));
+            }
+            self.write_back_victims(pid, victims)?;
+        } else {
+            // pure cache hit: DRAM copy out
+            let copy = (len as f64 / self.p.dram_read_bw) as Nanos;
+            self.procs[pid].clock.tick(self.p.dram_read_lat + copy);
+        }
+
+        // gather from the cache
+        let mut out = Vec::with_capacity(len as usize);
+        for pg in PageCache::pages(off, len) {
+            let pdata = self.caches[node]
+                .get(ino, pg)
+                .cloned()
+                .unwrap_or(Payload::zero(PAGE));
+            let b = pdata.materialize();
+            let pg_start = pg * PAGE;
+            let s = off.max(pg_start) - pg_start;
+            let e = ((off + len).min(pg_start + PAGE) - pg_start) as usize;
+            out.extend_from_slice(&b[s as usize..e]);
+        }
+        self.end(pid, t0);
+        Ok(Payload::bytes(out))
+    }
+
+    fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        self.flush_dirty(pid, ino)?;
+        // COMMIT: server-side journal/commit round trip
+        self.meta_rpc(pid, self.p.nfs_server_commit);
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn mkdir(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        let t = self.meta_rpc(pid, self.p.nfs_server_commit / 4);
+        self.store.mkdir(path, Mode::DEFAULT_DIR, Cred::ROOT, t)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn rename(&mut self, pid: ProcId, from: &str, to: &str) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        let t = self.meta_rpc(pid, self.p.nfs_server_commit / 4);
+        self.store.rename(from, to, t)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn unlink(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        let ino = self.store.resolve(path)?;
+        let node = self.procs[pid].node;
+        self.caches[node].invalidate_ino(ino);
+        let t = self.meta_rpc(pid, self.p.nfs_server_commit / 4);
+        self.store.unlink(path, t)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn stat(&mut self, pid: ProcId, path: &str) -> Result<Stat> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].clock.tick(self.p.syscall_read_lat);
+        self.meta_rpc(pid, 0);
+        let st = self.store.stat(path);
+        self.end(pid, t0);
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nfs() -> NfsLike {
+        NfsLike::new(2, 3 << 30, HwParams::default())
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut n = nfs();
+        let pid = n.spawn_process(1, 0);
+        let fd = n.create(pid, "/f").unwrap();
+        n.write(pid, fd, Payload::bytes(b"hello nfs".to_vec())).unwrap();
+        let d = n.pread(pid, fd, 0, 9).unwrap();
+        assert_eq!(d.materialize(), b"hello nfs");
+    }
+
+    #[test]
+    fn buffered_write_is_fast_fsync_is_slow() {
+        let mut n = nfs();
+        let pid = n.spawn_process(1, 0);
+        let fd = n.create(pid, "/f").unwrap();
+        n.write(pid, fd, Payload::bytes(vec![1; 128])).unwrap();
+        let wlat = n.last_latency(pid);
+        n.fsync(pid, fd).unwrap();
+        let flat = n.last_latency(pid);
+        assert!(wlat < 3_000, "buffered write {wlat}");
+        assert!(flat > 25_000, "fsync {flat}"); // commit + page flush
+    }
+
+    #[test]
+    fn small_write_amplifies_to_page() {
+        let mut n = nfs();
+        let pid = n.spawn_process(1, 0);
+        let fd = n.create(pid, "/f").unwrap();
+        n.write(pid, fd, Payload::bytes(vec![1; 128])).unwrap();
+        n.fsync(pid, fd).unwrap();
+        // server store received the write correctly despite amplification
+        let srv = n.store.stat("/f").unwrap();
+        assert_eq!(srv.size, 128);
+    }
+
+    #[test]
+    fn fsync_persists_to_server() {
+        let mut n = nfs();
+        let pid = n.spawn_process(1, 0);
+        let fd = n.create(pid, "/f").unwrap();
+        n.write(pid, fd, Payload::bytes(b"durable".to_vec())).unwrap();
+        n.fsync(pid, fd).unwrap();
+        let ino = n.store.resolve("/f").unwrap();
+        let (d, _) = n.store.read_at(ino, 0, 7).unwrap();
+        assert_eq!(d.materialize(), b"durable");
+    }
+
+    #[test]
+    fn close_to_open_consistency() {
+        let mut n = nfs();
+        let p1 = n.spawn_process(1, 0);
+        let p2 = n.spawn_process(1, 1); // can't be node 0 (server)
+        let fd = n.create(p1, "/shared").unwrap();
+        n.write(p1, fd, Payload::bytes(b"v1".to_vec())).unwrap();
+        n.close(p1, fd).unwrap(); // flush on close
+        let fd2 = n.open(p2, "/shared").unwrap();
+        let d = n.pread(p2, fd2, 0, 2).unwrap();
+        assert_eq!(d.materialize(), b"v1");
+    }
+
+    #[test]
+    fn cache_hit_read_is_fast() {
+        let mut n = nfs();
+        let pid = n.spawn_process(1, 0);
+        let fd = n.create(pid, "/f").unwrap();
+        n.write(pid, fd, Payload::bytes(vec![9; 4096])).unwrap();
+        n.fsync(pid, fd).unwrap();
+        let _ = n.pread(pid, fd, 0, 4096).unwrap(); // warm (dirty write path cached it)
+        let _ = n.pread(pid, fd, 0, 4096).unwrap();
+        let hit = n.last_latency(pid);
+        assert!(hit < 3_000, "cache hit {hit}");
+    }
+
+    #[test]
+    fn spawn_remaps_off_server_node() {
+        let mut n = nfs();
+        let pid = n.spawn_process(0, 0);
+        assert_ne!(n.procs[pid].node, n.server);
+    }
+}

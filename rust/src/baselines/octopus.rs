@@ -1,0 +1,303 @@
+//! Octopus-like baseline: an RDMA/NVM-native but still *disaggregated*
+//! design (paper §2.1, §5): files are hash-distributed over the nodes'
+//! NVM, accessed through FUSE in direct-IO mode with **no client cache**
+//! and **no replication**; fsync is a no-op (writes go through
+//! synchronously).
+//!
+//! Why it loses to Assise despite kernel-bypass RDMA (§5.2): every op
+//! pays the ~10 µs FUSE crossing, metadata and data are fetched
+//! *serially* from remote NVM, and small IO can't amortize either.
+
+use crate::fs::{Cred, Fd, FileStore, FsError, Mode, NodeId, Payload, ProcId, Result, Stat, Tier};
+use crate::hw::nvm::{NvmDevice, Pattern};
+use crate::hw::params::HwParams;
+use crate::hw::rdma::Fabric;
+use crate::sim::api::DistFs;
+use crate::Nanos;
+
+use super::common::ClientProc;
+
+pub struct OctopusLike {
+    p: HwParams,
+    nodes: usize,
+    /// logical contents; placement decides which node's NVM pays
+    store: FileStore,
+    nvm: Vec<NvmDevice>,
+    fabric: Fabric,
+    procs: Vec<ClientProc>,
+}
+
+impl OctopusLike {
+    pub fn new(nodes: usize, p: HwParams) -> Self {
+        Self {
+            nodes,
+            store: FileStore::new(),
+            nvm: (0..nodes).map(|i| NvmDevice::new(6 << 40, 41 + i as u64)).collect(),
+            fabric: Fabric::new(nodes),
+            procs: Vec::new(),
+            p,
+        }
+    }
+
+    /// DHT placement by path hash (Octopus "uses distributed hashing to
+    /// place files on nodes").
+    fn owner(&self, path: &str) -> NodeId {
+        let h: u64 = path
+            .bytes()
+            .fold(0xcbf29ce484222325u64, |a, b| (a ^ b as u64).wrapping_mul(0x100000001b3));
+        (h % self.nodes as u64) as usize
+    }
+
+    /// Metadata RPC to the owner (serial with any data op).
+    fn meta_rpc(&mut self, pid: ProcId, path: &str) -> Nanos {
+        let node = self.procs[pid].node;
+        let owner = self.owner(path);
+        let now = self.procs[pid].clock.now;
+        let handler = self.p.nvm_read_lat as Nanos + 500;
+        let done = if node == owner {
+            now + handler + self.p.rpc_overhead
+        } else {
+            self.fabric.rpc(now, node, owner, 128, 128, handler, &self.p)
+        };
+        self.procs[pid].clock.advance_to(done);
+        done
+    }
+
+    fn begin(&mut self, pid: ProcId) -> Result<Nanos> {
+        if !self.procs[pid].alive {
+            return Err(FsError::Crashed);
+        }
+        // every operation crosses FUSE (§5.2 "around 10µs")
+        let t0 = self.procs[pid].clock.now;
+        self.procs[pid].clock.tick(self.p.fuse_lat);
+        Ok(t0)
+    }
+
+    fn end(&mut self, pid: ProcId, t0: Nanos) {
+        self.procs[pid].last_latency = self.procs[pid].clock.now - t0;
+    }
+}
+
+impl DistFs for OctopusLike {
+    fn name(&self) -> &'static str {
+        "octopus"
+    }
+
+    fn params(&self) -> &HwParams {
+        &self.p
+    }
+
+    fn spawn_process(&mut self, node: usize, socket: usize) -> ProcId {
+        self.procs.push(ClientProc::new(node, socket));
+        self.procs.len() - 1
+    }
+
+    fn now(&self, pid: ProcId) -> Nanos {
+        self.procs[pid].clock.now
+    }
+
+    fn set_now(&mut self, pid: ProcId, t: Nanos) {
+        self.procs[pid].clock.now = t;
+    }
+
+    fn last_latency(&self, pid: ProcId) -> Nanos {
+        self.procs[pid].last_latency
+    }
+
+    fn create(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        let t0 = self.begin(pid)?;
+        let t = self.meta_rpc(pid, path);
+        let ino = self.store.create(path, Mode::DEFAULT_FILE, Cred::ROOT, t)?;
+        let fd = self.procs[pid].install_fd(path.to_string(), ino);
+        self.end(pid, t0);
+        Ok(fd)
+    }
+
+    fn open(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        let t0 = self.begin(pid)?;
+        self.meta_rpc(pid, path);
+        let st = self.store.stat(path)?;
+        let fd = self.procs[pid].install_fd(path.to_string(), st.ino);
+        self.end(pid, t0);
+        Ok(fd)
+    }
+
+    fn close(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        self.procs[pid].remove_fd(fd).ok_or(FsError::BadFd(fd))?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()> {
+        let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let len = data.len();
+        self.pwrite(pid, fd, cursor, data)?;
+        self.procs[pid].fd_mut(fd).unwrap().2 = cursor + len;
+        Ok(())
+    }
+
+    fn pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        let (path, ino, _) = self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?.clone();
+        let node = self.procs[pid].node;
+        let owner = self.owner(&path);
+        // metadata update (inode size/extent) — serial with the data op
+        self.meta_rpc(pid, &path);
+        // data to the owner's NVM: one-sided RDMA write (remote) or
+        // direct store (local)
+        let now = self.procs[pid].clock.now;
+        let t = if node == owner {
+            self.nvm[owner].write(now, data.len(), &self.p)
+        } else {
+            let arrived = self.fabric.write(now, node, owner, data.len(), &self.p);
+            self.nvm[owner].write(arrived, data.len(), &self.p)
+        };
+        self.store.write_at(ino, off, data, Tier::Hot, t)?;
+        self.procs[pid].clock.advance_to(t);
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn read(&mut self, pid: ProcId, fd: Fd, len: u64) -> Result<Payload> {
+        let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        let out = self.pread(pid, fd, cursor, len)?;
+        self.procs[pid].fd_mut(fd).unwrap().2 = cursor + out.len();
+        Ok(out)
+    }
+
+    fn pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64) -> Result<Payload> {
+        let t0 = self.begin(pid)?;
+        let (path, ino, _) = self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?.clone();
+        let node = self.procs[pid].node;
+        let owner = self.owner(&path);
+        // metadata first, then data — serial (§5.2 "has to fetch metadata
+        // and data (serially) from remote NVM")
+        self.meta_rpc(pid, &path);
+        let size = self.store.stat_ino(ino)?.size;
+        let len = len.min(size.saturating_sub(off));
+        if len == 0 {
+            self.end(pid, t0);
+            return Ok(Payload::zero(0));
+        }
+        let now = self.procs[pid].clock.now;
+        let t = if node == owner {
+            self.nvm[owner].read(now, len, Pattern::Seq, &self.p)
+        } else {
+            let served = self.nvm[owner].read(now, len, Pattern::Seq, &self.p);
+            self.fabric.read(served, node, owner, len, &self.p)
+        };
+        self.procs[pid].clock.advance_to(t);
+        let (data, _) = self.store.read_at(ino, off, len)?;
+        self.end(pid, t0);
+        Ok(data)
+    }
+
+    fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        // no-op: writes are synchronous (§5.2 "Octopus' fsync is a no-op")
+        let t0 = self.begin(pid)?;
+        let _ = self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn mkdir(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        let t = self.meta_rpc(pid, path);
+        self.store.mkdir(path, Mode::DEFAULT_DIR, Cred::ROOT, t)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn rename(&mut self, pid: ProcId, from: &str, to: &str) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        // rename touches two DHT owners
+        let t1 = self.meta_rpc(pid, from);
+        self.meta_rpc(pid, to);
+        let _ = t1;
+        let t = self.procs[pid].clock.now;
+        self.store.rename(from, to, t)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn unlink(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        let t0 = self.begin(pid)?;
+        let t = self.meta_rpc(pid, path);
+        self.store.unlink(path, t)?;
+        self.end(pid, t0);
+        Ok(())
+    }
+
+    fn stat(&mut self, pid: ProcId, path: &str) -> Result<Stat> {
+        let t0 = self.begin(pid)?;
+        self.meta_rpc(pid, path);
+        let st = self.store.stat(path);
+        self.end(pid, t0);
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn octo() -> OctopusLike {
+        OctopusLike::new(2, HwParams::default())
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut o = octo();
+        let pid = o.spawn_process(0, 0);
+        let fd = o.create(pid, "/f").unwrap();
+        o.write(pid, fd, Payload::bytes(b"octopus".to_vec())).unwrap();
+        let d = o.pread(pid, fd, 0, 7).unwrap();
+        assert_eq!(d.materialize(), b"octopus");
+    }
+
+    #[test]
+    fn every_op_pays_fuse() {
+        let mut o = octo();
+        let pid = o.spawn_process(0, 0);
+        let fd = o.create(pid, "/f").unwrap();
+        o.write(pid, fd, Payload::bytes(vec![1; 64])).unwrap();
+        assert!(o.last_latency(pid) >= o.p.fuse_lat);
+        let _ = o.pread(pid, fd, 0, 64).unwrap();
+        assert!(o.last_latency(pid) >= o.p.fuse_lat);
+    }
+
+    #[test]
+    fn fsync_is_noop_priced() {
+        let mut o = octo();
+        let pid = o.spawn_process(0, 0);
+        let fd = o.create(pid, "/f").unwrap();
+        o.write(pid, fd, Payload::bytes(vec![1; 1 << 20])).unwrap();
+        o.fsync(pid, fd).unwrap();
+        // only the FUSE crossing, no data movement
+        assert!(o.last_latency(pid) < o.p.fuse_lat + 2_000);
+    }
+
+    #[test]
+    fn reads_always_remote_ish() {
+        // no cache: repeated reads cost the same (no warming effect)
+        let mut o = octo();
+        let pid = o.spawn_process(0, 0);
+        let fd = o.create(pid, "/remote-file").unwrap();
+        o.write(pid, fd, Payload::bytes(vec![5; 4096])).unwrap();
+        let _ = o.pread(pid, fd, 0, 4096).unwrap();
+        let l1 = o.last_latency(pid);
+        let _ = o.pread(pid, fd, 0, 4096).unwrap();
+        let l2 = o.last_latency(pid);
+        let ratio = l1 as f64 / l2 as f64;
+        assert!((0.8..1.2).contains(&ratio), "no-cache reads vary: {l1} vs {l2}");
+    }
+
+    #[test]
+    fn dht_spreads_files() {
+        let o = octo();
+        let owners: std::collections::HashSet<NodeId> =
+            (0..32).map(|i| o.owner(&format!("/file{i}"))).collect();
+        assert_eq!(owners.len(), 2, "both nodes should own some files");
+    }
+}

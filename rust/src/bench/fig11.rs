@@ -1,0 +1,59 @@
+//! Fig. 11 (§B): write throughput vs update-log size, normalized to the
+//! largest log. Small logs digest more often (backpressure), but the
+//! paper finds only ~22% spread between 16 MB and 2 GB.
+
+use crate::fs::Payload;
+use crate::sim::{Cluster, ClusterConfig, DistFs};
+
+use super::{Scale, Table};
+
+pub fn run(scale: Scale) -> Table {
+    let mut t = Table::new(
+        "Fig 11: seq-write throughput vs log size (normalized to largest)",
+        &["log size", "GB/s", "normalized"],
+    );
+    let data = scale.bytes(64 << 20).max(16 << 20);
+    let io = 4096u64;
+    let sizes: Vec<u64> = vec![1 << 24, 1 << 25, 1 << 26, 1 << 27, 1 << 28];
+    let mut results = Vec::new();
+    for &ls in &sizes {
+        let mut c = Cluster::new(
+            ClusterConfig::default().nodes(2).log_capacity(ls),
+        );
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        let t0 = c.now(pid);
+        let mut off = 0;
+        while off < data {
+            c.pwrite(pid, fd, off, Payload::synthetic(1, io)).unwrap();
+            off += io;
+        }
+        c.fsync(pid, fd).unwrap();
+        let elapsed = c.now(pid) - t0;
+        results.push((ls, data as f64 / elapsed as f64));
+    }
+    let max = results.iter().map(|&(_, g)| g).fold(0.0, f64::max);
+    for (ls, g) in results {
+        t.row(vec![
+            crate::util::fmt_bytes(ls),
+            format!("{g:.2}"),
+            format!("{:.2}", g / max),
+        ]);
+    }
+    t.note("paper: throughput saturates with log size; only ~22% spread 16MB->2GB");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_logs_not_slower() {
+        let t = run(Scale(0.2));
+        let first: f64 = t.rows.first().unwrap()[2].parse().unwrap();
+        let last: f64 = t.rows.last().unwrap()[2].parse().unwrap();
+        assert!(last >= first, "largest log should normalize highest");
+        assert!(first > 0.5, "spread should be moderate, got {first}");
+    }
+}

@@ -1,0 +1,249 @@
+//! Fig. 2: average and p99 IO latencies across IO sizes (§5.2).
+//!
+//! 2a — synchronous sequential writes: `write` latency and `fsync`
+//! latency, per system (Assise 2-replica, Assise-3r, Ceph, NFS,
+//! Octopus). 2b — read latencies: cache hit, miss, and remote miss.
+
+use crate::baselines::{CephLike, NfsLike, OctopusLike};
+use crate::fs::Payload;
+use crate::metrics::Hist;
+use crate::sim::{Cluster, ClusterConfig, DistFs};
+
+use super::{us, Scale, Table};
+
+pub const IO_SIZES: &[u64] = &[128, 1024, 4096, 16 << 10, 64 << 10, 256 << 10, 1 << 20];
+
+fn systems(nodes: usize) -> Vec<Box<dyn DistFs>> {
+    vec![
+        Box::new(Cluster::new(ClusterConfig::default().nodes(nodes))),
+        Box::new(CephLike::new(nodes.max(3), 3 << 30, Default::default())),
+        Box::new(NfsLike::new(nodes, 3 << 30, Default::default())),
+        Box::new(OctopusLike::new(nodes, Default::default())),
+    ]
+}
+
+/// Fig. 2a: sequential write + fsync latency.
+pub fn write_latency(scale: Scale) -> Table {
+    let mut t = Table::new(
+        "Fig 2a: seq write latency by IO size — avg write / avg fsync / p99 total (us)",
+        &["system", "io", "write", "fsync", "p99"],
+    );
+    let mut all: Vec<(String, Box<dyn DistFs>)> = Vec::new();
+    for s in systems(2) {
+        all.push((s.name().to_string(), s));
+    }
+    all.push((
+        "assise-3r".into(),
+        Box::new(Cluster::new(ClusterConfig::default().nodes(3).replication(3))),
+    ));
+
+    for (name, mut fs) in all {
+        for &io in IO_SIZES {
+            let ops = scale.ops((4 << 20) as usize / io.max(128) as usize).min(2000).max(16);
+            let pid = fs.spawn_process(0, 0);
+            let fd = fs.create(pid, &format!("/wl-{io}")).unwrap();
+            let mut hw = Hist::new();
+            let mut hf = Hist::new();
+            let mut ht = Hist::new();
+            for i in 0..ops {
+                fs.write(pid, fd, Payload::synthetic(i as u64, io)).unwrap();
+                let w = fs.last_latency(pid);
+                fs.fsync(pid, fd).unwrap();
+                let f = fs.last_latency(pid);
+                hw.record(w);
+                hf.record(f);
+                ht.record(w + f);
+            }
+            t.row(vec![
+                name.clone(),
+                crate::util::fmt_bytes(io),
+                us(hw.mean() as u64),
+                us(hf.mean() as u64),
+                us(ht.p99()),
+            ]);
+        }
+    }
+    t.note("paper: Assise ~order-of-magnitude lower small-write latency than NFS/Ceph; Assise-3r ~2.2x Assise");
+    t
+}
+
+/// Fig. 2b: read latency — HIT (process cache), MISS (local SharedFS),
+/// RMT (remote replica) for Assise; hit/miss for NFS/Ceph; Octopus
+/// always remote.
+pub fn read_latency(scale: Scale) -> Table {
+    let mut t = Table::new(
+        "Fig 2b: read latency by IO size — avg (us)",
+        &["case", "io", "avg", "p99"],
+    );
+    for &io in IO_SIZES {
+        let ops = scale.ops(256).min(512).max(8);
+        let file_size = io * ops as u64;
+
+        // ---------- Assise HIT / MISS / RMT
+        {
+            let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+            let pid = c.spawn_process(0, 0);
+            let fd = c.create(pid, "/f").unwrap();
+            let mut off = 0;
+            while off < file_size {
+                let chunk = (16 << 10).min(file_size - off); // many extents
+                c.write(pid, fd, Payload::synthetic(7, chunk)).unwrap();
+                off += chunk;
+            }
+            c.fsync(pid, fd).unwrap();
+
+            // HIT: the data is still in the private log (its in-memory
+            // index) — the paper's LibFS cache hit
+            let mut h_hit = Hist::new();
+            for i in 0..ops {
+                let o = (i as u64 * io) % file_size;
+                let _ = c.pread(pid, fd, o, io).unwrap();
+                h_hit.record(c.last_latency(pid));
+            }
+            // MISS: after digest the log view is dropped; reads consult
+            // the SharedFS extent tree (more extents => more lookups)
+            c.digest_log(pid).unwrap();
+            let mut h_miss = Hist::new();
+            for i in 0..ops {
+                let o = (i as u64 * io) % file_size;
+                let _ = c.pread(pid, fd, o, io).unwrap();
+                h_miss.record(c.last_latency(pid));
+            }
+            // RMT: a fresh process on a node OUTSIDE the chain
+            let mut c2 = Cluster::new(ClusterConfig::default().nodes(3).replication(2));
+            let wpid = c2.spawn_process(0, 0);
+            let wfd = c2.create(wpid, "/f").unwrap();
+            let mut off = 0;
+            while off < file_size {
+                let chunk = (1 << 20).min(file_size - off);
+                c2.write(wpid, wfd, Payload::synthetic(7, chunk)).unwrap();
+                off += chunk;
+            }
+            c2.fsync(wpid, wfd).unwrap();
+            c2.digest_log(wpid).unwrap();
+            let rpid = c2.spawn_process(2, 0); // node 2 not a replica
+            c2.set_now(rpid, c2.now(wpid));
+            let rfd = c2.open(rpid, "/f").unwrap();
+            let mut h_rmt = Hist::new();
+            for i in 0..ops {
+                let o = (i as u64 * io) % file_size;
+                let _ = c2.pread(rpid, rfd, o, io).unwrap();
+                h_rmt.record(c2.last_latency(rpid));
+            }
+            for (case, h) in [("assise-HIT", &mut h_hit), ("assise-MISS", &mut h_miss), ("assise-RMT", &mut h_rmt)] {
+                t.row(vec![
+                    case.into(),
+                    crate::util::fmt_bytes(io),
+                    us(h.mean() as u64),
+                    us(h.p99()),
+                ]);
+            }
+        }
+
+        // ---------- NFS / Ceph hit + miss
+        for (mk, name) in [(0, "nfs"), (1, "ceph")] {
+            let mut fs: Box<dyn DistFs> = if mk == 0 {
+                Box::new(NfsLike::new(3, 3 << 30, Default::default()))
+            } else {
+                Box::new(CephLike::new(3, 3 << 30, Default::default()))
+            };
+            let pid = fs.spawn_process(1, 0);
+            let fd = fs.create(pid, "/f").unwrap();
+            // a file big enough that strided cold reads defeat read-ahead
+            // (the paper reads a cold 1 GB file)
+            let file_size = file_size.max(8 << 20);
+            let mut off = 0;
+            while off < file_size {
+                let chunk = (1 << 20).min(file_size - off);
+                fs.write(pid, fd, Payload::synthetic(7, chunk)).unwrap();
+                off += chunk;
+            }
+            fs.fsync(pid, fd).unwrap();
+            // miss: fresh process on ANOTHER NODE (the kernel buffer
+            // cache is per node — a same-node process would hit the
+            // writer's pages); stride past the client read-ahead so every
+            // read is a real server round trip (the paper reads a cold
+            // 1 GB file)
+            let p2 = fs.spawn_process(2, 0);
+            fs.set_now(p2, fs.now(pid));
+            let fd2 = fs.open(p2, "/f").unwrap();
+            let stride = (fs.params().client_readahead + io).max(io);
+            let mut h_miss = Hist::new();
+            let mut h_hit = Hist::new();
+            for i in 0..ops {
+                let o = (i as u64 * stride) % file_size;
+                let _ = fs.pread(p2, fd2, o, io).unwrap();
+                h_miss.record(fs.last_latency(p2));
+            }
+            for i in 0..ops {
+                let o = (i as u64 * stride) % file_size;
+                let _ = fs.pread(p2, fd2, o, io).unwrap();
+                h_hit.record(fs.last_latency(p2));
+            }
+            t.row(vec![
+                format!("{name}-HIT"),
+                crate::util::fmt_bytes(io),
+                us(h_hit.mean() as u64),
+                us(h_hit.p99()),
+            ]);
+            t.row(vec![
+                format!("{name}-MISS"),
+                crate::util::fmt_bytes(io),
+                us(h_miss.mean() as u64),
+                us(h_miss.p99()),
+            ]);
+        }
+
+        // ---------- Octopus (always remote)
+        {
+            let mut o = OctopusLike::new(2, Default::default());
+            let pid = o.spawn_process(0, 0);
+            let fd = o.create(pid, "/remote-f").unwrap();
+            let mut off = 0;
+            while off < file_size {
+                let chunk = (1 << 20).min(file_size - off);
+                o.write(pid, fd, Payload::synthetic(7, chunk)).unwrap();
+                off += chunk;
+            }
+            let mut h = Hist::new();
+            for i in 0..ops {
+                let off = (i as u64 * io) % file_size;
+                let _ = o.pread(pid, fd, off, io).unwrap();
+                h.record(o.last_latency(pid));
+            }
+            t.row(vec![
+                "octopus-RMT".into(),
+                crate::util::fmt_bytes(io),
+                us(h.mean() as u64),
+                us(h.p99()),
+            ]);
+        }
+    }
+    t.note("paper: HIT < MISS < RMT << disaggregated miss; Octopus ~2 orders worse than cache hits");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2a_shape_holds() {
+        let t = write_latency(Scale(0.05));
+        // find avg fsync latency for 128B rows
+        let find = |name: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == name && r[1] == "128B")
+                .map(|r| r[2].parse::<f64>().unwrap() + r[3].parse::<f64>().unwrap())
+                .unwrap()
+        };
+        let assise = find("assise");
+        let nfs = find("nfs");
+        let ceph = find("ceph");
+        let a3 = find("assise-3r");
+        assert!(nfs > 3.0 * assise, "nfs {nfs} !>> assise {assise}");
+        assert!(ceph > nfs, "ceph {ceph} !> nfs {nfs}");
+        assert!(a3 > assise && a3 < 4.0 * assise, "3r {a3} vs {assise}");
+    }
+}

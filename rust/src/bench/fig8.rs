@@ -1,0 +1,123 @@
+//! Fig. 8: scalability of sharded atomic 4 KB file operations (§5.5.1).
+//!
+//! Processes create, write (4 KB), and rename files in private
+//! directories; replication off. Series: Ceph (disaggregated MDS),
+//! Orion-emu (Assise restricted to a single lease manager),
+//! Assise-server, Assise-numa, Assise (per-process delegation).
+
+use crate::baselines::CephLike;
+use crate::coherence::ManagerPolicy;
+use crate::fs::Payload;
+use crate::sim::{Cluster, ClusterConfig, DistFs};
+
+use super::{kops, Scale, Table};
+
+const NODES: usize = 3;
+
+fn one_op(fs: &mut dyn DistFs, pid: usize, dir: &str, i: usize) {
+    let tmp = format!("{dir}/t{i}");
+    let fin = format!("{dir}/f{i}");
+    let fd = fs.create(pid, &tmp).unwrap();
+    fs.write(pid, fd, Payload::synthetic(i as u64, 4096)).unwrap();
+    fs.close(pid, fd).unwrap();
+    fs.rename(pid, &tmp, &fin).unwrap();
+}
+
+fn run_assise(policy: ManagerPolicy, procs: usize, files_per_proc: usize) -> (u64, u64) {
+    let mut c = Cluster::new(
+        ClusterConfig::default()
+            .nodes(NODES)
+            .replication(1) // paper: replication off
+            .policy(policy),
+    );
+    let pids: Vec<_> = (0..procs)
+        .map(|i| c.spawn_process(i % NODES, (i / NODES) % 2))
+        .collect();
+    // private directory per process
+    for &pid in &pids {
+        c.mkdir(pid, &format!("/shard-{pid}")).unwrap();
+    }
+    let start: Vec<u64> = pids.iter().map(|&p| c.now(p)).collect();
+    for i in 0..files_per_proc {
+        for &pid in &pids {
+            one_op(&mut c, pid, &format!("/shard-{pid}"), i);
+        }
+    }
+    let elapsed = pids
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| c.now(p) - start[i])
+        .max()
+        .unwrap();
+    // each loop iteration = 1 atomic op set (create+write+rename)
+    ((procs * files_per_proc) as u64, elapsed)
+}
+
+fn run_ceph(procs: usize, files_per_proc: usize) -> (u64, u64) {
+    let mut c = CephLike::new(NODES, 3 << 30, Default::default());
+    c.set_mds_count(3);
+    let pids: Vec<_> = (0..procs).map(|i| c.spawn_process(i % NODES, 0)).collect();
+    for &pid in &pids {
+        c.mkdir(pid, &format!("/shard-{pid}")).unwrap();
+    }
+    let start: Vec<u64> = pids.iter().map(|&p| c.now(p)).collect();
+    for i in 0..files_per_proc {
+        for &pid in &pids {
+            one_op(&mut c, pid, &format!("/shard-{pid}"), i);
+        }
+    }
+    let elapsed = pids
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| c.now(p) - start[i])
+        .max()
+        .unwrap();
+    ((procs * files_per_proc) as u64, elapsed)
+}
+
+pub fn run(scale: Scale) -> Table {
+    let files = scale.ops(200).min(2_000);
+    let mut t = Table::new(
+        "Fig 8: sharded atomic 4KB file ops (kops/s) vs process count",
+        &["system", "p=1", "p=6", "p=12", "p=24", "p=48"],
+    );
+    let proc_counts = [1usize, 6, 12, 24, 48];
+    let series: Vec<(&str, Option<ManagerPolicy>)> = vec![
+        ("ceph", None),
+        ("orion-emu", Some(ManagerPolicy::SingleManager)),
+        ("assise-server", Some(ManagerPolicy::PerServer)),
+        ("assise-numa", Some(ManagerPolicy::PerSocket)),
+        ("assise", Some(ManagerPolicy::PerProcess)),
+    ];
+    for (name, policy) in series {
+        let mut row = vec![name.to_string()];
+        for &procs in &proc_counts {
+            let (ops, elapsed) = match policy {
+                Some(pol) => run_assise(pol, procs, files),
+                None => run_ceph(procs, files.min(200)),
+            };
+            row.push(kops(ops, elapsed));
+        }
+        t.row(row);
+    }
+    t.note("paper: Ceph plateaus ~8k ops/s; Orion-emu 8x Ceph; Assise scales linearly, 69x Orion / 554x Ceph at scale");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_policy_ordering_at_scale() {
+        let t = run(Scale(0.1));
+        let last = |name: &str| -> f64 {
+            let r = t.rows.iter().find(|r| r[0] == name).unwrap();
+            r[r.len() - 1].parse().unwrap()
+        };
+        assert!(last("assise") > last("assise-numa") * 0.8);
+        assert!(last("assise-numa") >= last("assise-server") * 0.5);
+        assert!(last("assise-server") > last("orion-emu"));
+        assert!(last("orion-emu") > last("ceph"));
+    }
+}

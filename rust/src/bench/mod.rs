@@ -1,0 +1,208 @@
+//! Benchmark harnesses: one per table/figure of the paper's evaluation
+//! (§5). Each harness builds the systems on identical simulated
+//! hardware, replays the paper's workload (scaled by `Scale`), and
+//! prints the same rows/series the paper reports.
+//!
+//! Run via `assise bench <exp>` or the criterion-less `benches/*.rs`
+//! wrappers (`cargo bench`).
+
+pub mod table1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig11;
+pub mod table3;
+
+use crate::Nanos;
+
+/// Scale factor for experiment sizes: 1.0 reproduces the paper's row
+/// *structure* at full per-op fidelity but reduced data volumes (the
+/// virtual-time model makes latency/throughput shapes volume-invariant
+/// once past cache-transition points; EXPERIMENTS.md records the scaled
+/// parameters per run).
+#[derive(Debug, Clone, Copy)]
+pub struct Scale(pub f64);
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale(1.0)
+    }
+}
+
+impl Scale {
+    pub fn ops(&self, base: usize) -> usize {
+        ((base as f64 * self.0) as usize).max(8)
+    }
+
+    pub fn bytes(&self, base: u64) -> u64 {
+        ((base as f64 * self.0) as u64).max(4096)
+    }
+}
+
+/// A printable result table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i >= widths.len() {
+                    widths.push(c.len());
+                } else {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths.get(i).copied().unwrap_or(c.len())))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+pub fn us(ns: Nanos) -> String {
+    format!("{:.1}", ns as f64 / 1e3)
+}
+
+pub fn ms(ns: Nanos) -> String {
+    format!("{:.1}", ns as f64 / 1e6)
+}
+
+pub fn gbps(bytes: u64, ns: Nanos) -> String {
+    if ns == 0 {
+        return "inf".into();
+    }
+    format!("{:.2}", bytes as f64 / ns as f64)
+}
+
+pub fn kops(count: u64, ns: Nanos) -> String {
+    if ns == 0 {
+        return "inf".into();
+    }
+    format!("{:.1}", count as f64 * 1e9 / ns as f64 / 1e3)
+}
+
+/// Drive multiple simulated processes in **virtual-time order**: always
+/// step the process with the smallest clock. Device queues serve in call
+/// order, so issuing ops out of time order would let late-clock processes
+/// jump ahead of earlier ones (starvation artifacts). `f(fs, pid, k)`
+/// runs op `k` for `pid`; `ops_per_proc` ops run per process.
+pub fn drive<F>(fs: &mut dyn crate::sim::DistFs, pids: &[usize], ops_per_proc: usize, mut f: F)
+where
+    F: FnMut(&mut dyn crate::sim::DistFs, usize, usize),
+{
+    let mut done = vec![0usize; pids.len()];
+    let total = ops_per_proc * pids.len();
+    for _ in 0..total {
+        let mut best = usize::MAX;
+        let mut best_t = u64::MAX;
+        for (i, &pid) in pids.iter().enumerate() {
+            if done[i] < ops_per_proc {
+                let t = fs.now(pid);
+                if t < best_t {
+                    best_t = t;
+                    best = i;
+                }
+            }
+        }
+        f(fs, pids[best], done[best]);
+        done[best] += 1;
+    }
+}
+
+/// All experiment names, for the CLI.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "fig2a", "fig2b", "fig3", "fig4", "fig5", "fig6", "fig7",
+    "fig8", "fig9", "fig11", "table3",
+];
+
+/// Run one experiment by name.
+pub fn run(name: &str, scale: Scale) -> Option<Vec<Table>> {
+    Some(match name {
+        "table1" => vec![table1::run()],
+        "fig2a" => vec![fig2::write_latency(scale)],
+        "fig2b" => vec![fig2::read_latency(scale)],
+        "fig3" => vec![fig3::run(scale)],
+        "fig4" => vec![fig4::run(scale)],
+        "fig5" => vec![fig5::run(scale)],
+        "fig6" => vec![fig6::run(scale)],
+        "fig7" => fig7::run(scale),
+        "fig8" => vec![fig8::run(scale)],
+        "fig9" => vec![fig9::run(scale)],
+        "fig11" => vec![fig11::run(scale)],
+        "table3" => vec![table3::run(scale)],
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("test", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.note("hello");
+        let r = t.render();
+        assert!(r.contains("test") && r.contains("bb") && r.contains("hello"));
+    }
+
+    #[test]
+    fn unit_helpers() {
+        assert_eq!(us(1500), "1.5");
+        assert_eq!(ms(2_500_000), "2.5");
+        assert_eq!(gbps(3_800, 1_000), "3.80");
+        assert_eq!(kops(8_000, 1_000_000_000), "8.0");
+    }
+}

@@ -1,0 +1,104 @@
+//! Table 3: Tencent Sort (MinuteSort Indy) duration breakdown (§5.3).
+//!
+//! Distributed sort of 100 B records over 4 machines; Assise vs
+//! per-machine NFS mounts, at two parallelism levels, plus the DAX
+//! (direct NVM load/store) sort-phase comparison.
+
+use crate::baselines::NfsLike;
+use crate::runtime::PartitionExec;
+use crate::sim::{Cluster, ClusterConfig, DistFs};
+use crate::workloads::sort::{gen_records, SortJob, KEY, RECORD};
+
+use super::{Scale, Table};
+
+const NODES: usize = 4;
+
+pub fn run(scale: Scale) -> Table {
+    let mut t = Table::new(
+        "Table 3: Tencent Sort breakdown (virtual-time seconds, scaled run)",
+        &["system", "procs", "partition", "sort", "total", "records"],
+    );
+    let partition_exec = PartitionExec::load().ok();
+    let use_kernel = partition_exec.is_some();
+    let records = scale.ops(2_000).min(20_000);
+
+    for procs in [8usize, 16] {
+        // ---- Assise: one global FS, temp/output colocated
+        {
+            let mut c = Cluster::new(
+                ClusterConfig::default().nodes(NODES).replication(1),
+            );
+            let workers: Vec<_> = (0..procs).map(|w| c.spawn_process(w % NODES, 0)).collect();
+            let job = SortJob { workers, records_per_worker: records, use_kernel };
+            let (timing, count) = job.run(&mut c, partition_exec.as_ref()).unwrap();
+            t.row(vec![
+                "assise".into(),
+                format!("{procs}"),
+                format!("{:.3}", timing.partition_ns as f64 / 1e9),
+                format!("{:.3}", timing.sort_ns as f64 / 1e9),
+                format!("{:.3}", timing.total_ns() as f64 / 1e9),
+                format!("{count}"),
+            ]);
+        }
+        // ---- NFS
+        {
+            let mut n = NfsLike::new(NODES, 3 << 30, Default::default());
+            let workers: Vec<_> = (0..procs).map(|w| n.spawn_process(w % NODES, 0)).collect();
+            let job = SortJob { workers, records_per_worker: records, use_kernel: false };
+            let (timing, count) = job.run(&mut n, None).unwrap();
+            t.row(vec![
+                "nfs".into(),
+                format!("{procs}"),
+                format!("{:.3}", timing.partition_ns as f64 / 1e9),
+                format!("{:.3}", timing.sort_ns as f64 / 1e9),
+                format!("{:.3}", timing.total_ns() as f64 / 1e9),
+                format!("{count}"),
+            ]);
+        }
+    }
+
+    // ---- DAX: sort phase only, direct loads/stores (no FS)
+    {
+        let n = records * 16;
+        let data = gen_records(77, n);
+        let mut recs: Vec<&[u8]> = data.chunks(RECORD).collect();
+        let wall0 = std::time::Instant::now();
+        recs.sort_by_key(|r| {
+            let mut k = [0u8; KEY];
+            k.copy_from_slice(&r[..KEY]);
+            k
+        });
+        let wall = wall0.elapsed().as_nanos();
+        t.row(vec![
+            "dax (in-memory sort, wall-clock)".into(),
+            "1".into(),
+            "-".into(),
+            format!("{:.3}", wall as f64 / 1e9),
+            "-".into(),
+            format!("{n}"),
+        ]);
+    }
+
+    t.note("paper: Assise 2.2x faster than NFS end-to-end; POSIX sort within 3% of hand-tuned DAX");
+    t.note(format!("L1 partition kernel (PJRT): {}", if use_kernel { "ENABLED" } else { "unavailable (run `make artifacts`)" }));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assise_sorts_faster_than_nfs() {
+        let t = run(Scale(0.2));
+        let total = |sys: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == sys && r[1] == "8")
+                .unwrap()[4]
+                .parse()
+                .unwrap()
+        };
+        assert!(total("assise") < total("nfs"), "assise !< nfs");
+    }
+}

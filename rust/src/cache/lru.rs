@@ -1,0 +1,191 @@
+//! Byte-budgeted LRU index with O(log n) touch/evict.
+//!
+//! Used by the LibFS DRAM read cache and by SharedFS hot-area migration.
+//! Victims are returned to the caller (which owns the actual data and the
+//! device-capacity accounting).
+
+use std::collections::BTreeMap;
+use std::hash::Hash;
+
+use crate::util::FastMap;
+
+#[derive(Debug, Clone)]
+pub struct Lru<K: Eq + Hash + Clone> {
+    entries: FastMap<K, (u64, u64)>, // key -> (stamp, bytes)
+    order: BTreeMap<u64, K>,         // stamp -> key
+    stamp: u64,
+    used: u64,
+    capacity: u64,
+}
+
+impl<K: Eq + Hash + Clone> Lru<K> {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            entries: FastMap::default(),
+            order: BTreeMap::new(),
+            stamp: 0,
+            used: 0,
+            capacity,
+        }
+    }
+
+    fn next_stamp(&mut self) -> u64 {
+        self.stamp += 1;
+        self.stamp
+    }
+
+    /// Insert or refresh `key` at `bytes`. Returns victims evicted to fit
+    /// the budget (oldest first). The inserted key itself is never a
+    /// victim unless it alone exceeds capacity.
+    pub fn insert(&mut self, key: K, bytes: u64) -> Vec<(K, u64)> {
+        self.remove(&key);
+        let s = self.next_stamp();
+        self.entries.insert(key.clone(), (s, bytes));
+        self.order.insert(s, key.clone());
+        self.used += bytes;
+        let mut victims = Vec::new();
+        while self.used > self.capacity && self.entries.len() > 1 {
+            let (&oldest, _) = self.order.iter().next().unwrap();
+            let vk = self.order.remove(&oldest).unwrap();
+            if vk == key {
+                // shouldn't happen (len > 1 guard + fresh stamp), but be safe
+                self.order.insert(oldest, vk);
+                break;
+            }
+            let (_, vb) = self.entries.remove(&vk).unwrap();
+            self.used -= vb;
+            victims.push((vk, vb));
+        }
+        victims
+    }
+
+    /// Refresh recency; true if present.
+    pub fn touch(&mut self, key: &K) -> bool {
+        if let Some((old, bytes)) = self.entries.get(key).copied() {
+            self.order.remove(&old);
+            let s = self.next_stamp();
+            self.order.insert(s, key.clone());
+            self.entries.insert(key.clone(), (s, bytes));
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn remove(&mut self, key: &K) -> Option<u64> {
+        if let Some((s, b)) = self.entries.remove(key) {
+            self.order.remove(&s);
+            self.used -= b;
+            Some(b)
+        } else {
+            None
+        }
+    }
+
+    /// Remove every key matching `pred` (invalidation).
+    pub fn remove_matching(&mut self, mut pred: impl FnMut(&K) -> bool) -> u64 {
+        let keys: Vec<K> = self.entries.keys().filter(|k| pred(k)).cloned().collect();
+        let mut freed = 0;
+        for k in keys {
+            freed += self.remove(&k).unwrap_or(0);
+        }
+        freed
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.order.clear();
+        self.used = 0;
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Peek the LRU victim without evicting.
+    pub fn oldest(&self) -> Option<&K> {
+        self.order.values().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_oldest_when_over_budget() {
+        let mut l = Lru::new(100);
+        assert!(l.insert("a", 40).is_empty());
+        assert!(l.insert("b", 40).is_empty());
+        let v = l.insert("c", 40); // over budget -> evict a
+        assert_eq!(v, vec![("a", 40)]);
+        assert!(l.contains(&"b") && l.contains(&"c"));
+        assert_eq!(l.used(), 80);
+    }
+
+    #[test]
+    fn touch_protects_from_eviction() {
+        let mut l = Lru::new(100);
+        l.insert("a", 40);
+        l.insert("b", 40);
+        l.touch(&"a"); // now b is oldest
+        let v = l.insert("c", 40);
+        assert_eq!(v, vec![("b", 40)]);
+    }
+
+    #[test]
+    fn reinsert_updates_size() {
+        let mut l = Lru::new(100);
+        l.insert("a", 40);
+        l.insert("a", 10);
+        assert_eq!(l.used(), 10);
+        assert_eq!(l.len(), 1);
+    }
+
+    #[test]
+    fn oversize_single_entry_stays() {
+        let mut l = Lru::new(10);
+        let v = l.insert("big", 100);
+        assert!(v.is_empty());
+        assert!(l.contains(&"big"));
+    }
+
+    #[test]
+    fn remove_matching_invalidates() {
+        let mut l = Lru::new(1000);
+        l.insert((1, 0), 10);
+        l.insert((1, 1), 10);
+        l.insert((2, 0), 10);
+        let freed = l.remove_matching(|k| k.0 == 1);
+        assert_eq!(freed, 20);
+        assert_eq!(l.len(), 1);
+    }
+
+    #[test]
+    fn multi_evict_until_fit() {
+        let mut l = Lru::new(100);
+        for i in 0..10 {
+            l.insert(i, 10);
+        }
+        let v = l.insert(100, 95);
+        assert_eq!(v.len(), 10); // all old entries evicted to fit the 95
+        assert_eq!(l.used(), 95);
+        assert_eq!(l.len(), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! Caching structures: a byte-budgeted LRU index and the LibFS
+//! process-private DRAM read cache (paper §3.2: "NVM stores updates,
+//! while DRAM is used to cache read-only state").
+
+pub mod lru;
+pub mod read_cache;
+
+pub use lru::Lru;
+pub use read_cache::ReadCache;

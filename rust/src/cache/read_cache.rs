@@ -1,0 +1,160 @@
+//! The LibFS process-private DRAM read cache (paper §3.2, §A.2).
+//!
+//! Caches 4 KB blocks of data read from *non-local-NVM* sources (remote
+//! NVM, SSD; local-NVM reads are not cached — "DRAM caching does not
+//! provide benefit", §A.2). Volatile: lost on process crash, rebuilt on
+//! demand (the paper measures the minimal impact of this in §5.4).
+
+use crate::cache::lru::Lru;
+use crate::fs::{Ino, Payload};
+use crate::util::FastMap;
+
+pub const BLOCK: u64 = 4096;
+
+#[derive(Debug, Clone)]
+pub struct ReadCache {
+    index: Lru<(Ino, u64)>,
+    data: FastMap<(Ino, u64), Payload>,
+}
+
+impl ReadCache {
+    pub fn new(capacity: u64) -> Self {
+        Self { index: Lru::new(capacity), data: FastMap::default() }
+    }
+
+    fn block_of(off: u64) -> u64 {
+        off / BLOCK
+    }
+
+    /// Is the whole byte range `[off, off+len)` cached?
+    pub fn covers(&self, ino: Ino, off: u64, len: u64) -> bool {
+        if len == 0 {
+            return true;
+        }
+        let first = Self::block_of(off);
+        let last = Self::block_of(off + len - 1);
+        (first..=last).all(|b| self.index.contains(&(ino, b)))
+    }
+
+    /// Refresh recency for a hit and return the gathered bytes.
+    pub fn get(&mut self, ino: Ino, off: u64, len: u64) -> Option<Payload> {
+        if !self.covers(ino, off, len) {
+            return None;
+        }
+        let first = Self::block_of(off);
+        let last = Self::block_of(off + len.max(1) - 1);
+        let mut parts = Vec::new();
+        for b in first..=last {
+            self.index.touch(&(ino, b));
+            let blk = self.data.get(&(ino, b))?;
+            let blk_start = b * BLOCK;
+            let s = off.max(blk_start) - blk_start;
+            let e = (off + len).min(blk_start + blk.len()).saturating_sub(blk_start);
+            if e <= s {
+                return None; // range extends past cached bytes
+            }
+            parts.push(blk.slice(s, e - s));
+        }
+        let out = Payload::concat(&parts);
+        if out.len() == len {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Install blocks covering `[off, off+len)` from `data` (whose offset
+    /// 0 corresponds to file offset `block-aligned(off)`). `data` must be
+    /// block-aligned at the start; the final block may be short.
+    pub fn insert(&mut self, ino: Ino, aligned_off: u64, data: Payload) {
+        debug_assert_eq!(aligned_off % BLOCK, 0);
+        let mut pos = 0;
+        while pos < data.len() {
+            let take = BLOCK.min(data.len() - pos);
+            let b = (aligned_off + pos) / BLOCK;
+            let victims = self.index.insert((ino, b), take);
+            self.data.insert((ino, b), data.slice(pos, take));
+            for (vk, _) in victims {
+                self.data.remove(&vk);
+            }
+            pos += take;
+        }
+    }
+
+    /// Invalidate all blocks of `ino` (lease release / remote write, §3.2
+    /// "LibFS caches ... are invalidated when files or directories are
+    /// closed and whenever contents are evicted").
+    pub fn invalidate_ino(&mut self, ino: Ino) {
+        self.index.remove_matching(|k| k.0 == ino);
+        self.data.retain(|k, _| k.0 != ino);
+    }
+
+    /// Process crash: DRAM cache is gone.
+    pub fn clear(&mut self) {
+        self.index.clear();
+        self.data.clear();
+    }
+
+    pub fn used(&self) -> u64 {
+        self.index.used()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_then_get() {
+        let mut c = ReadCache::new(1 << 20);
+        c.insert(1, 0, Payload::bytes(vec![7u8; 8192]));
+        let p = c.get(1, 100, 200).unwrap();
+        assert_eq!(p.materialize(), vec![7u8; 200]);
+    }
+
+    #[test]
+    fn cross_block_get() {
+        let mut c = ReadCache::new(1 << 20);
+        let data: Vec<u8> = (0..8192u64).map(|i| (i % 251) as u8).collect();
+        c.insert(1, 0, Payload::bytes(data.clone()));
+        let p = c.get(1, 4000, 500).unwrap();
+        assert_eq!(p.materialize(), &data[4000..4500]);
+    }
+
+    #[test]
+    fn miss_when_partially_cached() {
+        let mut c = ReadCache::new(1 << 20);
+        c.insert(1, 0, Payload::bytes(vec![1u8; 4096])); // block 0 only
+        assert!(c.get(1, 0, 4096).is_some());
+        assert!(c.get(1, 0, 5000).is_none()); // block 1 missing
+    }
+
+    #[test]
+    fn eviction_under_budget() {
+        let mut c = ReadCache::new(8192); // 2 blocks
+        c.insert(1, 0, Payload::bytes(vec![1u8; 4096]));
+        c.insert(1, 4096, Payload::bytes(vec![2u8; 4096]));
+        c.insert(1, 8192, Payload::bytes(vec![3u8; 4096])); // evicts block 0
+        assert!(c.get(1, 0, 10).is_none());
+        assert!(c.get(1, 8192, 10).is_some());
+        assert!(c.used() <= 8192);
+    }
+
+    #[test]
+    fn invalidate_ino_drops_only_that_file() {
+        let mut c = ReadCache::new(1 << 20);
+        c.insert(1, 0, Payload::bytes(vec![1u8; 4096]));
+        c.insert(2, 0, Payload::bytes(vec![2u8; 4096]));
+        c.invalidate_ino(1);
+        assert!(c.get(1, 0, 10).is_none());
+        assert!(c.get(2, 0, 10).is_some());
+    }
+
+    #[test]
+    fn short_final_block() {
+        let mut c = ReadCache::new(1 << 20);
+        c.insert(1, 0, Payload::bytes(vec![9u8; 100]));
+        assert_eq!(c.get(1, 0, 100).unwrap().len(), 100);
+        assert!(c.get(1, 0, 200).is_none()); // beyond cached bytes
+    }
+}

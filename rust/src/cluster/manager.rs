@@ -1,0 +1,312 @@
+//! Membership, failure detection, epochs, and the subtree→chain map.
+
+use std::collections::HashMap;
+
+use crate::coherence::EpochTracker;
+use crate::fs::path::is_subtree_of;
+use crate::fs::{NodeId, SocketId};
+use crate::hw::params::HwParams;
+use crate::hw::Nanos;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Alive and serving.
+    Up,
+    /// Declared failed at the contained detection time.
+    Down { detected_at: Nanos },
+}
+
+/// The replicated cluster manager.
+#[derive(Debug, Clone)]
+pub struct ClusterManager {
+    nodes: Vec<NodeState>,
+    /// recovery epochs (§3.4)
+    pub epochs: EpochTracker,
+    /// node -> epoch current when it went down (for bitmap collection)
+    pub down_epoch: HashMap<NodeId, u64>,
+    /// subtree -> ordered replication chain (cache replicas first, then
+    /// reserve replicas). Admin-configured (§3.1); the catch-all "/" maps
+    /// to the default chain.
+    chains: Vec<(String, Chain)>,
+    /// subtree -> current lease manager (SharedFS). Migrates every
+    /// `lease_manager_expiry` toward requesters (§3.3).
+    lease_managers: HashMap<String, (NodeId, SocketId, Nanos /* since */)>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Chain {
+    pub cache_replicas: Vec<NodeId>,
+    pub reserve_replicas: Vec<NodeId>,
+}
+
+impl ClusterManager {
+    pub fn new(nodes: usize, default_chain: Chain) -> Self {
+        Self {
+            nodes: vec![NodeState::Up; nodes],
+            epochs: EpochTracker::new(),
+            down_epoch: HashMap::new(),
+            chains: vec![("/".to_string(), default_chain)],
+            lease_managers: HashMap::new(),
+        }
+    }
+
+    // ------------------------------------------------------- membership
+
+    pub fn is_up(&self, node: NodeId) -> bool {
+        matches!(self.nodes[node], NodeState::Up)
+    }
+
+    pub fn state(&self, node: NodeId) -> NodeState {
+        self.nodes[node]
+    }
+
+    /// A node crashed at `t`. Detection happens one failure-timeout
+    /// later (heartbeat miss, §3.1/§5.4). Bumps the epoch. Returns the
+    /// detection time.
+    pub fn node_failed(&mut self, node: NodeId, t: Nanos, p: &HwParams) -> Nanos {
+        let detected = t + p.failure_timeout;
+        self.nodes[node] = NodeState::Down { detected_at: detected };
+        self.down_epoch.insert(node, self.epochs.current());
+        self.epochs.bump();
+        detected
+    }
+
+    /// A node rejoined at `t`. Bumps the epoch; returns the epoch the
+    /// node must collect bitmaps since.
+    pub fn node_recovered(&mut self, node: NodeId, _t: Nanos) -> u64 {
+        self.nodes[node] = NodeState::Up;
+        self.epochs.bump();
+        self.down_epoch.remove(&node).unwrap_or(0)
+    }
+
+    /// Nodes currently up.
+    pub fn up_nodes(&self) -> Vec<NodeId> {
+        (0..self.nodes.len()).filter(|&n| self.is_up(n)).collect()
+    }
+
+    // ------------------------------------------------------------ chains
+
+    /// Register a subtree chain (most-specific-match wins on lookup).
+    pub fn set_chain(&mut self, subtree: &str, chain: Chain) {
+        if let Some(e) = self.chains.iter_mut().find(|(s, _)| s == subtree) {
+            e.1 = chain;
+        } else {
+            self.chains.push((subtree.to_string(), chain));
+            // longest prefix first
+            self.chains.sort_by_key(|(s, _)| std::cmp::Reverse(s.len()));
+        }
+    }
+
+    /// The chain for `path` (most specific subtree match).
+    pub fn chain_for(&self, path: &str) -> &Chain {
+        self.chains
+            .iter()
+            .find(|(s, _)| is_subtree_of(path, s))
+            .map(|(_, c)| c)
+            .expect("catch-all chain exists")
+    }
+
+    /// Live cache replicas for `path`, in chain order. In a cascading
+    /// failure that downs every cache replica, the reserve replicas are
+    /// promoted (§3.5 "processes can fail-over to reserve replicas ...
+    /// After fail-over, reserve replicas become cache replicas").
+    pub fn live_chain_for(&self, path: &str) -> Vec<NodeId> {
+        let live: Vec<NodeId> = self
+            .chain_for(path)
+            .cache_replicas
+            .iter()
+            .copied()
+            .filter(|&n| self.is_up(n))
+            .collect();
+        if !live.is_empty() {
+            return live;
+        }
+        self.chain_for(path)
+            .reserve_replicas
+            .iter()
+            .copied()
+            .filter(|&n| self.is_up(n))
+            .collect()
+    }
+
+    /// Live reserve replicas for `path`.
+    pub fn live_reserves_for(&self, path: &str) -> Vec<NodeId> {
+        self.chain_for(path)
+            .reserve_replicas
+            .iter()
+            .copied()
+            .filter(|&n| self.is_up(n))
+            .collect()
+    }
+
+    // ----------------------------------------------------- lease manager
+
+    /// Current lease manager for `subtree`, if any.
+    pub fn lease_manager(&self, subtree: &str) -> Option<(NodeId, SocketId)> {
+        // most-specific registered manager whose subtree covers the path
+        self.lease_managers
+            .iter()
+            .filter(|(s, _)| is_subtree_of(subtree, s))
+            .max_by_key(|(s, _)| s.len())
+            .map(|(_, &(n, s, _))| (n, s))
+    }
+
+    /// Assign (or migrate) lease management of `subtree` to a SharedFS.
+    /// Migration is rate-limited: an existing manager keeps the role for
+    /// `lease_manager_expiry` (§3.3 "expires lease management every 5 s
+    /// ... preventing leases from changing managers too quickly").
+    /// A subtree covered by an *ancestor* manager inherits that manager
+    /// (hierarchical delegation — a claim never shadows an ancestor).
+    /// Returns the effective manager.
+    pub fn claim_lease_manager(
+        &mut self,
+        subtree: &str,
+        node: NodeId,
+        socket: SocketId,
+        now: Nanos,
+        p: &HwParams,
+    ) -> (NodeId, SocketId) {
+        match self.lease_managers.get(subtree) {
+            Some(&(n, s, since)) => {
+                if (n, s) == (node, socket) || !self.is_up(n) {
+                    self.lease_managers.insert(subtree.to_string(), (node, socket, now));
+                    (node, socket)
+                } else if now.saturating_sub(since) >= p.lease_manager_expiry {
+                    // migrate toward the requester
+                    self.lease_managers.insert(subtree.to_string(), (node, socket, now));
+                    (node, socket)
+                } else {
+                    (n, s)
+                }
+            }
+            None => {
+                // an ancestor manager covers us: inherit it (register the
+                // exact subtree so future migration is per-subtree)
+                if let Some((n, s)) = self.lease_manager(subtree) {
+                    if self.is_up(n) {
+                        let since = now; // inherit starts the migration window
+                        self.lease_managers.insert(subtree.to_string(), (n, s, since));
+                        return (n, s);
+                    }
+                }
+                self.lease_managers.insert(subtree.to_string(), (node, socket, now));
+                (node, socket)
+            }
+        }
+    }
+
+    /// Every registered manager whose subtree overlaps `unit` (ancestor,
+    /// descendant, or equal) — the set of tables a hierarchical conflict
+    /// check must consult.
+    pub fn managers_overlapping(&self, unit: &str) -> Vec<(String, NodeId, SocketId)> {
+        let mut v: Vec<(String, NodeId, SocketId)> = self
+            .lease_managers
+            .iter()
+            .filter(|(s, _)| is_subtree_of(unit, s) || is_subtree_of(s, unit))
+            .map(|(s, &(n, sk, _))| (s.clone(), n, sk))
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Force-assign (used by the Fig. 8 policy sweeps).
+    pub fn force_lease_manager(&mut self, subtree: &str, node: NodeId, socket: SocketId) {
+        self.lease_managers.insert(subtree.to_string(), (node, socket, 0));
+    }
+
+    /// Drop every lease-management role held by a failed node; a live
+    /// chain successor takes over (§3.4 "The replica's SharedFS takes
+    /// over lease management from the failed node").
+    pub fn fail_over_lease_management(&mut self, failed: NodeId, successor: (NodeId, SocketId)) {
+        for (_, v) in self.lease_managers.iter_mut() {
+            if v.0 == failed {
+                *v = (successor.0, successor.1, 0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> ClusterManager {
+        ClusterManager::new(
+            3,
+            Chain { cache_replicas: vec![0, 1], reserve_replicas: vec![2] },
+        )
+    }
+
+    #[test]
+    fn failure_detection_takes_timeout() {
+        let mut m = mgr();
+        let p = HwParams::default();
+        let detected = m.node_failed(1, 5_000, &p);
+        assert_eq!(detected, 5_000 + p.failure_timeout);
+        assert!(!m.is_up(1));
+        assert_eq!(m.up_nodes(), vec![0, 2]);
+    }
+
+    #[test]
+    fn epochs_bump_on_failure_and_recovery() {
+        let mut m = mgr();
+        let p = HwParams::default();
+        let e0 = m.epochs.current();
+        m.node_failed(1, 0, &p);
+        assert_eq!(m.epochs.current(), e0 + 1);
+        let since = m.node_recovered(1, 10);
+        assert_eq!(since, e0);
+        assert_eq!(m.epochs.current(), e0 + 2);
+        assert!(m.is_up(1));
+    }
+
+    #[test]
+    fn chain_lookup_most_specific() {
+        let mut m = mgr();
+        m.set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![] });
+        assert_eq!(m.chain_for("/maildir/u1").cache_replicas, vec![2, 0]);
+        assert_eq!(m.chain_for("/other").cache_replicas, vec![0, 1]);
+    }
+
+    #[test]
+    fn live_chain_excludes_down_nodes() {
+        let mut m = mgr();
+        let p = HwParams::default();
+        m.node_failed(0, 0, &p);
+        assert_eq!(m.live_chain_for("/x"), vec![1]);
+    }
+
+    #[test]
+    fn lease_manager_migration_rate_limited() {
+        let mut m = mgr();
+        let p = HwParams::default();
+        let a = m.claim_lease_manager("/d", 0, 0, 0, &p);
+        assert_eq!(a, (0, 0));
+        // immediate claim by another node is denied
+        let b = m.claim_lease_manager("/d", 1, 0, 1_000, &p);
+        assert_eq!(b, (0, 0));
+        // after the 5s expiry the role migrates
+        let c = m.claim_lease_manager("/d", 1, 0, p.lease_manager_expiry + 1_000, &p);
+        assert_eq!(c, (1, 0));
+    }
+
+    #[test]
+    fn lease_management_fails_over() {
+        let mut m = mgr();
+        let p = HwParams::default();
+        m.claim_lease_manager("/d", 0, 0, 0, &p);
+        m.node_failed(0, 0, &p);
+        m.fail_over_lease_management(0, (1, 0));
+        assert_eq!(m.lease_manager("/d"), Some((1, 0)));
+    }
+
+    #[test]
+    fn lease_manager_subtree_covers_descendants() {
+        let mut m = mgr();
+        let p = HwParams::default();
+        m.claim_lease_manager("/d", 0, 1, 0, &p);
+        assert_eq!(m.lease_manager("/d/sub/file"), Some((0, 1)));
+        assert_eq!(m.lease_manager("/other"), None);
+    }
+}

@@ -1,0 +1,12 @@
+//! Cluster manager — the ZooKeeper-analog (paper §3.1).
+//!
+//! Stores the cluster configuration (which nodes cache-replicate which
+//! subtrees, where lease managers live), runs heartbeat failure
+//! detection (1 s interval, 1 s timeout), and maintains the recovery
+//! epoch counter (§3.4). It is logically replicated on dedicated
+//! machines (the paper uses 2 extra testbed nodes); we model its
+//! state as always-available and charge RPC costs for consulting it.
+
+pub mod manager;
+
+pub use manager::{ClusterManager, NodeState};

@@ -1,0 +1,126 @@
+//! Epoch-based write tracking for node recovery (paper §3.4).
+//!
+//! "The cluster manager maintains an epoch number, which it increments on
+//! node failure and recovery. All SharedFS instances share a per-epoch
+//! bitmap in a sparse file indicating what inodes have been written
+//! during each epoch." A rejoining node collects the bitmaps for the
+//! epochs it missed and invalidates every inode written in them.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::fs::Ino;
+
+#[derive(Debug, Clone, Default)]
+pub struct EpochTracker {
+    current: u64,
+    /// epoch -> inodes written during that epoch
+    written: BTreeMap<u64, HashSet<Ino>>,
+}
+
+impl EpochTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn current(&self) -> u64 {
+        self.current
+    }
+
+    /// Bump the epoch (node failure or recovery event).
+    pub fn bump(&mut self) -> u64 {
+        self.current += 1;
+        self.current
+    }
+
+    /// Record that `ino` was written in the current epoch.
+    pub fn record_write(&mut self, ino: Ino) {
+        self.written.entry(self.current).or_default().insert(ino);
+    }
+
+    /// Inodes written in any epoch in `(since, current]` — what a node
+    /// that went down at epoch `since` must invalidate.
+    pub fn written_since(&self, since: u64) -> HashSet<Ino> {
+        self.written
+            .range(since + 1..)
+            .flat_map(|(_, s)| s.iter().copied())
+            .collect()
+    }
+
+    /// The per-epoch bitmap size in bytes (what recovery must transfer):
+    /// modeled as a sparse bitmap, 1 bit per inode plus extent headers.
+    pub fn bitmap_bytes(&self, since: u64) -> u64 {
+        let count = self.written_since(since).len() as u64;
+        64 + count.div_ceil(8) + count * 8 // header + bitmap + sparse index
+    }
+
+    /// Garbage-collect epochs `<= upto` ("bitmaps are deleted at the end
+    /// of an epoch when all nodes have recovered").
+    pub fn gc(&mut self, upto: u64) {
+        self.written.retain(|&e, _| e > upto);
+    }
+
+    pub fn epochs_tracked(&self) -> usize {
+        self.written.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_and_record() {
+        let mut t = EpochTracker::new();
+        t.record_write(1);
+        t.bump(); // epoch 1
+        t.record_write(2);
+        t.record_write(3);
+        t.bump(); // epoch 2
+        t.record_write(4);
+        // node down since epoch 0: sees inodes written in epochs 1..=2
+        let w = t.written_since(0);
+        assert_eq!(w, HashSet::from([2, 3, 4]));
+        // node down since epoch 1: only epoch 2 writes
+        assert_eq!(t.written_since(1), HashSet::from([4]));
+    }
+
+    #[test]
+    fn no_writes_no_invalidation() {
+        let mut t = EpochTracker::new();
+        t.bump();
+        assert!(t.written_since(0).is_empty());
+        assert!(t.written_since(5).is_empty());
+    }
+
+    #[test]
+    fn duplicate_writes_dedup() {
+        let mut t = EpochTracker::new();
+        t.bump();
+        t.record_write(7);
+        t.record_write(7);
+        assert_eq!(t.written_since(0).len(), 1);
+    }
+
+    #[test]
+    fn gc_drops_old_epochs() {
+        let mut t = EpochTracker::new();
+        t.bump();
+        t.record_write(1);
+        t.bump();
+        t.record_write(2);
+        t.gc(1);
+        assert_eq!(t.written_since(0), HashSet::from([2]));
+        assert_eq!(t.epochs_tracked(), 1);
+    }
+
+    #[test]
+    fn bitmap_bytes_scales_with_writes() {
+        let mut t = EpochTracker::new();
+        t.bump();
+        let empty = t.bitmap_bytes(0);
+        for i in 0..1000 {
+            t.record_write(i);
+        }
+        assert!(t.bitmap_bytes(0) > empty + 8 * 999);
+    }
+}

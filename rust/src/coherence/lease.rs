@@ -1,0 +1,351 @@
+//! Leases: fault-tolerant delegation of access rights (paper §3.3).
+//!
+//! Semantics implemented here (mechanism only; *where* the table lives
+//! and what a lookup costs is the delegation policy, decided by
+//! SharedFS/sim):
+//!
+//! - a lease covers a file or a whole **subtree** (`/a` covers `/a/b/c`);
+//! - multiple `Read` leases on overlapping paths may coexist;
+//! - a `Write` lease is exclusive against *any* other holder's lease on
+//!   an overlapping path (ancestor, descendant, or equal);
+//! - leases expire (`expires_at`) and may be revoked; revocation gives
+//!   the holder a grace period to finish in-flight IO and forces its
+//!   dirty state to be replicated before transfer (enforced by the
+//!   caller — see `sim::assise`).
+
+use crate::fs::path::is_subtree_of;
+use crate::fs::ProcId;
+use crate::hw::Nanos;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseMode {
+    Read,
+    Write,
+}
+
+/// Where lease managers live — the Fig. 8 sweep variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ManagerPolicy {
+    /// One global lease manager SharedFS (emulates Orion's central MDS).
+    SingleManager,
+    /// Lease management sharded per server; all sockets of a node share.
+    PerServer,
+    /// Sharded per socket (SharedFS instance).
+    PerSocket,
+    /// Fully delegated: LibFS holds leases locally (full Assise).
+    PerProcess,
+}
+
+#[derive(Debug, Clone)]
+pub struct Lease {
+    pub path: String,
+    pub mode: LeaseMode,
+    pub holder: ProcId,
+    pub expires_at: Nanos,
+}
+
+impl Lease {
+    pub fn valid_at(&self, now: Nanos) -> bool {
+        now < self.expires_at
+    }
+
+    pub fn overlaps(&self, path: &str) -> bool {
+        is_subtree_of(path, &self.path) || is_subtree_of(&self.path, path)
+    }
+
+    pub fn conflicts_with(&self, path: &str, mode: LeaseMode, holder: ProcId) -> bool {
+        if self.holder == holder {
+            return false; // same holder may upgrade/re-acquire
+        }
+        if !self.overlaps(path) {
+            return false;
+        }
+        mode == LeaseMode::Write || self.mode == LeaseMode::Write
+    }
+}
+
+/// Outcome of an acquire attempt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Acquire {
+    /// Granted immediately (no conflicting holder).
+    Granted,
+    /// Conflicting holders must first be revoked (returned for the
+    /// caller to run the revocation protocol against).
+    MustRevoke(Vec<ProcId>),
+}
+
+/// A lease table — the state of one lease manager.
+#[derive(Debug, Clone, Default)]
+pub struct LeaseTable {
+    leases: Vec<Lease>,
+    /// lease transfers logged (paper: "SharedFS logs and replicates each
+    /// lease transfer in NVM for crash consistency")
+    pub transfer_log: u64,
+}
+
+impl LeaseTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop expired leases as of `now`.
+    pub fn expire(&mut self, now: Nanos) {
+        self.leases.retain(|l| l.valid_at(now));
+    }
+
+    /// Try to acquire `(path, mode)` for `holder`.
+    pub fn acquire(
+        &mut self,
+        path: &str,
+        mode: LeaseMode,
+        holder: ProcId,
+        now: Nanos,
+        duration: Nanos,
+    ) -> Acquire {
+        self.expire(now);
+        let conflicts: Vec<ProcId> = self
+            .leases
+            .iter()
+            .filter(|l| l.conflicts_with(path, mode, holder))
+            .map(|l| l.holder)
+            .collect();
+        if !conflicts.is_empty() {
+            return Acquire::MustRevoke(conflicts);
+        }
+        // upgrade or insert
+        if let Some(l) = self
+            .leases
+            .iter_mut()
+            .find(|l| l.holder == holder && l.path == path)
+        {
+            if mode == LeaseMode::Write {
+                l.mode = LeaseMode::Write;
+            }
+            l.expires_at = now + duration;
+        } else {
+            self.leases.push(Lease {
+                path: path.to_string(),
+                mode,
+                holder,
+                expires_at: now + duration,
+            });
+            self.transfer_log += 1;
+        }
+        Acquire::Granted
+    }
+
+    /// Query conflicting holders without mutating (used for cross-manager
+    /// hierarchy checks before acquisition).
+    pub fn conflicting_holders(
+        &self,
+        path: &str,
+        mode: LeaseMode,
+        holder: ProcId,
+        now: Nanos,
+    ) -> Vec<ProcId> {
+        let mut v: Vec<ProcId> = self
+            .leases
+            .iter()
+            .filter(|l| l.valid_at(now) && l.conflicts_with(path, mode, holder))
+            .map(|l| l.holder)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Holders (≠ `holder`) of overlapping WRITE leases, regardless of
+    /// validity: an expired write lease may still guard an un-flushed
+    /// update log, and the paper requires dirty state to be clean and
+    /// replicated before any transfer — including transfer-by-expiry.
+    pub fn overlapping_write_holders(&self, path: &str, holder: ProcId) -> Vec<ProcId> {
+        let mut v: Vec<ProcId> = self
+            .leases
+            .iter()
+            .filter(|l| l.holder != holder && l.mode == LeaseMode::Write && l.overlaps(path))
+            .map(|l| l.holder)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Does `holder` currently hold a lease covering `path` with at least
+    /// `mode` rights?
+    pub fn holds(&self, path: &str, mode: LeaseMode, holder: ProcId, now: Nanos) -> bool {
+        self.leases.iter().any(|l| {
+            l.holder == holder
+                && l.valid_at(now)
+                && is_subtree_of(path, &l.path)
+                && (l.mode == LeaseMode::Write || mode == LeaseMode::Read)
+        })
+    }
+
+    /// Revoke every lease held by `holder` overlapping `path`; returns
+    /// revoked paths.
+    pub fn revoke(&mut self, path: &str, holder: ProcId) -> Vec<String> {
+        let mut out = Vec::new();
+        self.leases.retain(|l| {
+            if l.holder == holder && l.overlaps(path) {
+                out.push(l.path.clone());
+                false
+            } else {
+                true
+            }
+        });
+        if !out.is_empty() {
+            self.transfer_log += 1;
+        }
+        out
+    }
+
+    /// Revoke everything held by `holder` (process crash, §3.4).
+    pub fn revoke_all(&mut self, holder: ProcId) -> Vec<String> {
+        let mut out = Vec::new();
+        self.leases.retain(|l| {
+            if l.holder == holder {
+                out.push(l.path.clone());
+                false
+            } else {
+                true
+            }
+        });
+        out
+    }
+
+    pub fn leases_of(&self, holder: ProcId) -> Vec<&Lease> {
+        self.leases.iter().filter(|l| l.holder == holder).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.leases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leases.is_empty()
+    }
+
+    /// Invariant check used by the property tests: no two distinct
+    /// holders may have overlapping leases where either is Write.
+    pub fn check_exclusivity(&self, now: Nanos) -> bool {
+        for (i, a) in self.leases.iter().enumerate() {
+            if !a.valid_at(now) {
+                continue;
+            }
+            for b in &self.leases[i + 1..] {
+                if !b.valid_at(now) || a.holder == b.holder {
+                    continue;
+                }
+                if a.overlaps(&b.path)
+                    && (a.mode == LeaseMode::Write || b.mode == LeaseMode::Write)
+                {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: Nanos = 10_000_000_000;
+
+    #[test]
+    fn read_leases_share() {
+        let mut t = LeaseTable::new();
+        assert_eq!(t.acquire("/a", LeaseMode::Read, 1, 0, D), Acquire::Granted);
+        assert_eq!(t.acquire("/a", LeaseMode::Read, 2, 0, D), Acquire::Granted);
+        assert!(t.holds("/a", LeaseMode::Read, 1, 1));
+        assert!(t.check_exclusivity(1));
+    }
+
+    #[test]
+    fn write_lease_excludes() {
+        let mut t = LeaseTable::new();
+        t.acquire("/a", LeaseMode::Write, 1, 0, D);
+        assert_eq!(
+            t.acquire("/a", LeaseMode::Write, 2, 0, D),
+            Acquire::MustRevoke(vec![1])
+        );
+        assert_eq!(
+            t.acquire("/a", LeaseMode::Read, 2, 0, D),
+            Acquire::MustRevoke(vec![1])
+        );
+    }
+
+    #[test]
+    fn subtree_lease_covers_descendants() {
+        let mut t = LeaseTable::new();
+        t.acquire("/tmp/bwl-ssh", LeaseMode::Write, 1, 0, D);
+        assert!(t.holds("/tmp/bwl-ssh/key", LeaseMode::Write, 1, 1));
+        // another proc touching inside the subtree conflicts
+        assert_eq!(
+            t.acquire("/tmp/bwl-ssh/key", LeaseMode::Write, 2, 0, D),
+            Acquire::MustRevoke(vec![1])
+        );
+        // ancestor acquisition also conflicts
+        assert_eq!(
+            t.acquire("/tmp", LeaseMode::Write, 2, 0, D),
+            Acquire::MustRevoke(vec![1])
+        );
+        // sibling is fine
+        assert_eq!(t.acquire("/var", LeaseMode::Write, 2, 0, D), Acquire::Granted);
+    }
+
+    #[test]
+    fn expiry_frees_leases() {
+        let mut t = LeaseTable::new();
+        t.acquire("/a", LeaseMode::Write, 1, 0, 100);
+        assert!(!t.holds("/a", LeaseMode::Write, 1, 200));
+        assert_eq!(t.acquire("/a", LeaseMode::Write, 2, 200, D), Acquire::Granted);
+    }
+
+    #[test]
+    fn same_holder_upgrades() {
+        let mut t = LeaseTable::new();
+        t.acquire("/a", LeaseMode::Read, 1, 0, D);
+        assert_eq!(t.acquire("/a", LeaseMode::Write, 1, 0, D), Acquire::Granted);
+        assert!(t.holds("/a", LeaseMode::Write, 1, 1));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn read_holder_blocks_writer_only() {
+        let mut t = LeaseTable::new();
+        t.acquire("/a", LeaseMode::Read, 1, 0, D);
+        assert_eq!(
+            t.acquire("/a", LeaseMode::Write, 2, 0, D),
+            Acquire::MustRevoke(vec![1])
+        );
+    }
+
+    #[test]
+    fn revoke_then_grant() {
+        let mut t = LeaseTable::new();
+        t.acquire("/a", LeaseMode::Write, 1, 0, D);
+        let revoked = t.revoke("/a", 1);
+        assert_eq!(revoked, vec!["/a".to_string()]);
+        assert_eq!(t.acquire("/a", LeaseMode::Write, 2, 0, D), Acquire::Granted);
+        assert!(t.check_exclusivity(1));
+    }
+
+    #[test]
+    fn revoke_all_on_crash() {
+        let mut t = LeaseTable::new();
+        t.acquire("/a", LeaseMode::Write, 1, 0, D);
+        t.acquire("/b", LeaseMode::Read, 1, 0, D);
+        t.acquire("/c", LeaseMode::Read, 2, 0, D);
+        assert_eq!(t.revoke_all(1).len(), 2);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn write_holder_read_request_is_satisfied() {
+        let mut t = LeaseTable::new();
+        t.acquire("/a", LeaseMode::Write, 1, 0, D);
+        assert!(t.holds("/a/x", LeaseMode::Read, 1, 1));
+    }
+}

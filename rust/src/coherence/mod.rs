@@ -1,0 +1,19 @@
+//! CC-NVM — the crash-consistent cache-coherence layer (paper §3.3).
+//!
+//! Two mechanisms:
+//!
+//! - [`lease`]: reader/writer + subtree leases with expiry and
+//!   revocation-with-grace; the conflict rules that give linearizability
+//!   when file-system state is shared between processes. Leases are
+//!   *delegated hierarchically* (cluster manager → SharedFS → LibFS);
+//!   the placement policy ([`lease::ManagerPolicy`]) is the variable that
+//!   Fig. 8 sweeps (Orion-emu / per-server / per-socket / per-process).
+//! - [`epoch`]: per-epoch written-inode bitmaps that let a recovering
+//!   node invalidate exactly the state that changed during its downtime
+//!   (§3.4).
+
+pub mod lease;
+pub mod epoch;
+
+pub use epoch::EpochTracker;
+pub use lease::{Lease, LeaseMode, LeaseTable, ManagerPolicy};

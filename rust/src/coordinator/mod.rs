@@ -1,0 +1,16 @@
+//! The paper's L3 coordination contribution, by its prescribed name.
+//!
+//! The coordinator — request routing (read paths through the cache
+//! hierarchy), batching (update-log digests), leader/worker topology
+//! (chain replication with the cluster manager as leader), and state
+//! management (CC-NVM leases + epochs) — lives across
+//! [`crate::sim::assise`] (assembled cluster), [`crate::libfs`],
+//! [`crate::sharedfs`], [`crate::coherence`], [`crate::replication`],
+//! and [`crate::cluster`]. This module re-exports the assembled surface
+//! under the conventional name.
+
+pub use crate::cluster::ClusterManager;
+pub use crate::coherence::{EpochTracker, LeaseTable, ManagerPolicy};
+pub use crate::libfs::LibFs;
+pub use crate::sharedfs::SharedFs;
+pub use crate::sim::{Cluster, ClusterConfig, CrashMode, DistFs};

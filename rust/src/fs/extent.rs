@@ -1,0 +1,371 @@
+//! Per-file extent map: an interval map from file offset to payload run,
+//! with a storage-tier tag per extent.
+//!
+//! This is the structure behind both the SharedFS extent trees the paper
+//! describes (§A.2 "checks the node-local hot shared area via extent
+//! trees") and the baselines' server-side file representation. Writes
+//! overlay (split/trim overlapped extents); reads gather, exposing holes
+//! as zeros. Tier tags drive LRU migration hot → reserve → cold (§A.1).
+
+use std::collections::BTreeMap;
+
+use super::payload::Payload;
+
+/// Which layer of the storage hierarchy an extent currently lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tier {
+    /// Node-local NVM (SharedFS hot shared area).
+    Hot,
+    /// Reserve replica's NVM (third-level cache, §3.5).
+    Reserve,
+    /// SSD cold shared area.
+    Cold,
+}
+
+/// One extent: a run of bytes at a file offset.
+#[derive(Debug, Clone)]
+pub struct Extent {
+    pub data: Payload,
+    pub tier: Tier,
+    /// virtual time of last access, for LRU migration
+    pub last_access: u64,
+}
+
+impl Extent {
+    pub fn len(&self) -> u64 {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Interval map: start offset -> extent. Invariant: extents never overlap.
+#[derive(Debug, Clone, Default)]
+pub struct ExtentMap {
+    map: BTreeMap<u64, Extent>,
+}
+
+impl ExtentMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Overlay `data` at `off`, splitting/trimming any overlapped extents.
+    pub fn write(&mut self, off: u64, data: Payload, tier: Tier, now: u64) {
+        if data.is_empty() {
+            return;
+        }
+        let end = off + data.len();
+        // Find all extents intersecting [off, end): start from the extent
+        // at or before `off`.
+        let mut to_fix: Vec<u64> = Vec::new();
+        if let Some((&s, e)) = self.map.range(..=off).next_back() {
+            if s + e.len() > off {
+                to_fix.push(s);
+            }
+        }
+        for (&s, _) in self.map.range(off..end) {
+            if !to_fix.contains(&s) {
+                to_fix.push(s);
+            }
+        }
+        for s in to_fix {
+            let ext = self.map.remove(&s).expect("extent vanished");
+            let e_end = s + ext.len();
+            // left remainder
+            if s < off {
+                let keep = off - s;
+                self.map.insert(
+                    s,
+                    Extent {
+                        data: ext.data.slice(0, keep),
+                        tier: ext.tier,
+                        last_access: ext.last_access,
+                    },
+                );
+            }
+            // right remainder
+            if e_end > end {
+                let skip = end - s;
+                self.map.insert(
+                    end,
+                    Extent {
+                        data: ext.data.slice(skip, e_end - end),
+                        tier: ext.tier,
+                        last_access: ext.last_access,
+                    },
+                );
+            }
+        }
+        self.map.insert(off, Extent { data, tier, last_access: now });
+    }
+
+    /// Gather `[off, off+len)`; holes read as zeros. Returns the payload
+    /// and the number of distinct extents consulted (the extent-tree
+    /// lookup cost driver, §5.2 MISS case).
+    pub fn read(&self, off: u64, len: u64) -> (Payload, usize) {
+        if len == 0 {
+            return (Payload::zero(0), 0);
+        }
+        let end = off + len;
+        let mut parts: Vec<Payload> = Vec::new();
+        let mut cursor = off;
+        let mut extents = 0;
+        // single range scan: the extent possibly covering `off`, then
+        // every extent starting inside the window (no re-lookups)
+        let head = self
+            .map
+            .range(..=off)
+            .next_back()
+            .filter(|(&s, e)| s + e.len() > off)
+            .map(|(&s, e)| (s, e));
+        let head_key = head.map(|(s, _)| s);
+        let tail = self
+            .map
+            .range(off..end)
+            .filter(move |(&s, _)| Some(s) != head_key)
+            .map(|(&s, e)| (s, e));
+        for (s, e) in head.into_iter().chain(tail) {
+            let e_end = s + e.len();
+            if e_end <= cursor || s >= end {
+                continue;
+            }
+            if s > cursor {
+                parts.push(Payload::zero(s - cursor));
+                cursor = s;
+            }
+            let take_start = cursor - s;
+            let take_len = (e_end.min(end)) - cursor;
+            parts.push(e.data.slice(take_start, take_len));
+            cursor += take_len;
+            extents += 1;
+        }
+        if cursor < end {
+            parts.push(Payload::zero(end - cursor));
+        }
+        (Payload::concat(&parts), extents)
+    }
+
+    /// Which tiers the byte range `[off, off+len)` touches (holes ignored).
+    pub fn tiers_in(&self, off: u64, len: u64) -> Vec<(u64, u64, Tier)> {
+        let end = off + len;
+        let mut out = Vec::new();
+        let start_key = self
+            .map
+            .range(..=off)
+            .next_back()
+            .filter(|(&s, e)| s + e.len() > off)
+            .map(|(&s, _)| s);
+        let keys: Vec<u64> = start_key
+            .into_iter()
+            .chain(self.map.range(off..end).map(|(&s, _)| s).filter(move |&s| Some(s) != start_key))
+            .collect();
+        for s in keys {
+            let e = &self.map[&s];
+            let seg_start = s.max(off);
+            let seg_end = (s + e.len()).min(end);
+            if seg_end > seg_start {
+                out.push((seg_start, seg_end - seg_start, e.tier));
+            }
+        }
+        out
+    }
+
+    /// Change the tier of every extent fully inside `[off, off+len)`,
+    /// splitting boundary extents. Used by LRU migration.
+    pub fn retier(&mut self, off: u64, len: u64, tier: Tier, now: u64) {
+        let (data, _) = self.read(off, len);
+        // only retier actually-present bytes: walk present segments
+        let segs = self.tiers_in(off, len);
+        for (s, l, _) in segs {
+            let seg = data.slice(s - off, l);
+            self.write(s, seg, tier, now);
+        }
+    }
+
+    /// Truncate the file to `size` bytes.
+    pub fn truncate(&mut self, size: u64) {
+        let keys: Vec<u64> = self.map.range(size..).map(|(&s, _)| s).collect();
+        for k in keys {
+            self.map.remove(&k);
+        }
+        // trim a straddling extent
+        if let Some((&s, _)) = self.map.range(..size).next_back() {
+            let e = &self.map[&s];
+            if s + e.len() > size {
+                let keep = size - s;
+                let trimmed = Extent {
+                    data: e.data.slice(0, keep),
+                    tier: e.tier,
+                    last_access: e.last_access,
+                };
+                self.map.insert(s, trimmed);
+            }
+        }
+    }
+
+    /// Logical size implied by the extents (max end offset).
+    pub fn max_end(&self) -> u64 {
+        self.map
+            .iter()
+            .next_back()
+            .map(|(&s, e)| s + e.len())
+            .unwrap_or(0)
+    }
+
+    /// Total bytes stored per tier.
+    pub fn bytes_in_tier(&self, tier: Tier) -> u64 {
+        self.map.values().filter(|e| e.tier == tier).map(|e| e.len()).sum()
+    }
+
+    /// All extents, in offset order.
+    pub fn iter(&self) -> impl Iterator<Item = (&u64, &Extent)> {
+        self.map.iter()
+    }
+
+    /// Oldest access time among extents in `tier` (LRU victim scan).
+    pub fn oldest_access(&self, tier: Tier) -> Option<(u64, u64)> {
+        self.map
+            .iter()
+            .filter(|(_, e)| e.tier == tier)
+            .min_by_key(|(_, e)| e.last_access)
+            .map(|(&s, e)| (s, e.len()))
+    }
+
+    pub fn touch(&mut self, off: u64, len: u64, now: u64) {
+        let end = off + len;
+        for (_, e) in self.map.range_mut(..end) {
+            e.last_access = e.last_access.max(0);
+        }
+        // cheap: touch extents intersecting range
+        let keys: Vec<u64> = self
+            .tiers_in(off, len)
+            .iter()
+            .map(|&(s, _, _)| s)
+            .collect();
+        for k in keys {
+            // the segment start may be mid-extent; find owner
+            if let Some((&s, _)) = self.map.range(..=k).next_back() {
+                if let Some(e) = self.map.get_mut(&s) {
+                    e.last_access = now;
+                }
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn extent_count(&self) -> usize {
+        self.map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(s: &[u8]) -> Payload {
+        Payload::bytes(s.to_vec())
+    }
+
+    #[test]
+    fn write_then_read_back() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"hello"), Tier::Hot, 0);
+        let (p, n) = m.read(0, 5);
+        assert_eq!(p.materialize(), b"hello");
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn overlay_splits_old_extent() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"aaaaaaaaaa"), Tier::Hot, 0);
+        m.write(3, b(b"BBB"), Tier::Hot, 1);
+        let (p, n) = m.read(0, 10);
+        assert_eq!(p.materialize(), b"aaaBBBaaaa");
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn overlay_covers_multiple_extents() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"aa"), Tier::Hot, 0);
+        m.write(2, b(b"bb"), Tier::Hot, 0);
+        m.write(4, b(b"cc"), Tier::Hot, 0);
+        m.write(1, b(b"XXXX"), Tier::Hot, 1);
+        assert_eq!(m.read(0, 6).0.materialize(), b"aXXXXc");
+    }
+
+    #[test]
+    fn holes_read_as_zeros() {
+        let mut m = ExtentMap::new();
+        m.write(4, b(b"data"), Tier::Hot, 0);
+        let (p, _) = m.read(0, 10);
+        assert_eq!(p.materialize(), b"\0\0\0\0data\0\0");
+    }
+
+    #[test]
+    fn read_partial_extent() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"abcdefgh"), Tier::Hot, 0);
+        assert_eq!(m.read(2, 4).0.materialize(), b"cdef");
+    }
+
+    #[test]
+    fn truncate_trims_and_drops() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"abcdef"), Tier::Hot, 0);
+        m.write(10, b(b"xyz"), Tier::Hot, 0);
+        m.truncate(4);
+        assert_eq!(m.max_end(), 4);
+        assert_eq!(m.read(0, 6).0.materialize(), b"abcd\0\0");
+    }
+
+    #[test]
+    fn tier_accounting_and_retier() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"aaaa"), Tier::Hot, 0);
+        m.write(4, b(b"bbbb"), Tier::Cold, 0);
+        assert_eq!(m.bytes_in_tier(Tier::Hot), 4);
+        assert_eq!(m.bytes_in_tier(Tier::Cold), 4);
+        m.retier(0, 4, Tier::Cold, 1);
+        assert_eq!(m.bytes_in_tier(Tier::Hot), 0);
+        assert_eq!(m.bytes_in_tier(Tier::Cold), 8);
+        // contents unchanged
+        assert_eq!(m.read(0, 8).0.materialize(), b"aaaabbbb");
+    }
+
+    #[test]
+    fn tiers_in_reports_segments() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"aaaa"), Tier::Hot, 0);
+        m.write(4, b(b"bbbb"), Tier::Cold, 0);
+        let t = m.tiers_in(2, 4);
+        assert_eq!(t, vec![(2, 2, Tier::Hot), (4, 2, Tier::Cold)]);
+    }
+
+    #[test]
+    fn oldest_access_finds_lru_victim() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"aa"), Tier::Hot, 5);
+        m.write(2, b(b"bb"), Tier::Hot, 3);
+        m.write(4, b(b"cc"), Tier::Cold, 1);
+        assert_eq!(m.oldest_access(Tier::Hot), Some((2, 2)));
+    }
+
+    #[test]
+    fn synthetic_payload_large_file_no_materialization() {
+        let mut m = ExtentMap::new();
+        let gb = 1u64 << 30;
+        m.write(0, Payload::synthetic(1, gb), Tier::Hot, 0);
+        // reading a slice does not materialize the GB
+        let (p, _) = m.read(gb / 2, 16);
+        assert_eq!(p.len(), 16);
+        assert_eq!(p.materialize(), Payload::synthetic(1, gb).slice(gb / 2, 16).materialize());
+    }
+}

@@ -1,0 +1,22 @@
+//! File-system core: the data structures shared by Assise proper
+//! (LibFS/SharedFS) and by the baseline file systems.
+//!
+//! - [`types`]: ids, errors, credentials;
+//! - [`payload`]: file contents, real bytes or synthetic (seeded) streams
+//!   so 100+ GB experiments don't materialize 100 GB of host RAM;
+//! - [`path`]: normalized slash paths + subtree-prefix tests (leases);
+//! - [`extent`]: per-file interval map of extents with storage tiers;
+//! - [`store`]: an inode table + namespace + extents — the representation
+//!   of a SharedFS shared area (and of the baselines' server stores).
+
+pub mod types;
+pub mod payload;
+pub mod path;
+pub mod extent;
+pub mod store;
+
+pub use extent::{Extent, ExtentMap, Tier};
+pub use path::{basename, dirname, is_subtree_of, normalize};
+pub use payload::Payload;
+pub use store::{FileStore, Stat};
+pub use types::{Cred, Fd, FsError, Ino, Mode, NodeId, ProcId, Result, SocketId};

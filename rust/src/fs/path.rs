@@ -1,0 +1,105 @@
+//! Normalized slash-separated paths and subtree-prefix tests.
+//!
+//! Leases in CC-NVM are granted on files or *subtrees* (§3.3), so the
+//! lease machinery needs cheap, unambiguous "is `a` inside subtree `b`"
+//! tests — everything here canonicalizes to `/a/b/c` form (no trailing
+//! slash except root, no empty or dot segments).
+
+use super::types::{FsError, Result};
+
+/// Canonicalize a path: must be absolute; collapses `//`, handles `.`
+/// and rejects `..` (the FS has no notion of cwd and the lease-prefix
+/// logic must not be escapable).
+pub fn normalize(path: &str) -> Result<String> {
+    if !path.starts_with('/') {
+        return Err(FsError::InvalidArgument(format!("relative path: {path}")));
+    }
+    let mut parts: Vec<&str> = Vec::new();
+    for seg in path.split('/') {
+        match seg {
+            "" | "." => {}
+            ".." => {
+                return Err(FsError::InvalidArgument(format!("'..' in path: {path}")));
+            }
+            s => parts.push(s),
+        }
+    }
+    if parts.is_empty() {
+        Ok("/".to_string())
+    } else {
+        Ok(format!("/{}", parts.join("/")))
+    }
+}
+
+/// Parent directory of a normalized path ("/" for top-level entries).
+pub fn dirname(path: &str) -> String {
+    match path.rfind('/') {
+        Some(0) => "/".to_string(),
+        Some(i) => path[..i].to_string(),
+        None => "/".to_string(),
+    }
+}
+
+/// Final component of a normalized path ("" for root).
+pub fn basename(path: &str) -> &str {
+    match path.rfind('/') {
+        Some(i) => &path[i + 1..],
+        None => path,
+    }
+}
+
+/// Is `path` equal to or inside the subtree rooted at `root`?
+/// Both must be normalized.
+pub fn is_subtree_of(path: &str, root: &str) -> bool {
+    if root == "/" {
+        return true;
+    }
+    path == root || (path.starts_with(root) && path.as_bytes().get(root.len()) == Some(&b'/'))
+}
+
+/// Split a normalized path into components.
+pub fn components(path: &str) -> impl Iterator<Item = &str> {
+    path.split('/').filter(|s| !s.is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_collapses() {
+        assert_eq!(normalize("/a//b/./c/").unwrap(), "/a/b/c");
+        assert_eq!(normalize("/").unwrap(), "/");
+        assert_eq!(normalize("//").unwrap(), "/");
+    }
+
+    #[test]
+    fn normalize_rejects_relative_and_dotdot() {
+        assert!(normalize("a/b").is_err());
+        assert!(normalize("/a/../b").is_err());
+    }
+
+    #[test]
+    fn dirname_basename() {
+        assert_eq!(dirname("/a/b/c"), "/a/b");
+        assert_eq!(dirname("/a"), "/");
+        assert_eq!(basename("/a/b/c"), "c");
+        assert_eq!(basename("/"), "");
+    }
+
+    #[test]
+    fn subtree_tests() {
+        assert!(is_subtree_of("/a/b", "/a"));
+        assert!(is_subtree_of("/a", "/a"));
+        assert!(!is_subtree_of("/ab", "/a")); // no false prefix match
+        assert!(is_subtree_of("/anything", "/"));
+        assert!(!is_subtree_of("/a", "/a/b"));
+    }
+
+    #[test]
+    fn components_iter() {
+        let v: Vec<_> = components("/a/b/c").collect();
+        assert_eq!(v, vec!["a", "b", "c"]);
+        assert_eq!(components("/").count(), 0);
+    }
+}

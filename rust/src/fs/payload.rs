@@ -1,0 +1,236 @@
+//! File contents: real bytes or synthetic seeded streams.
+//!
+//! Correctness experiments (crash consistency, compliance tests, the sort
+//! example) need real bytes they can compare. Throughput experiments move
+//! 100+ GB of data; materializing that in host RAM is impossible, so
+//! `Payload::Synthetic` carries only `(seed, abs_off, len)` and generates
+//! any byte on demand — slices of a synthetic stream are consistent with
+//! the whole, so read-back verification still works.
+
+use std::sync::Arc;
+
+use crate::util::rng::synthetic_fill;
+
+/// A run of file bytes.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Real bytes (shared; cloning a payload is O(1)).
+    Bytes(Arc<Vec<u8>>),
+    /// Deterministic synthetic stream: byte `i` is
+    /// `synthetic_byte(seed, abs_off + i)`.
+    Synthetic { seed: u64, abs_off: u64, len: u64 },
+    /// A hole / explicit zeros.
+    Zero { len: u64 },
+}
+
+impl Payload {
+    pub fn bytes(v: Vec<u8>) -> Self {
+        Payload::Bytes(Arc::new(v))
+    }
+
+    pub fn synthetic(seed: u64, len: u64) -> Self {
+        Payload::Synthetic { seed, abs_off: 0, len }
+    }
+
+    pub fn zero(len: u64) -> Self {
+        Payload::Zero { len }
+    }
+
+    pub fn len(&self) -> u64 {
+        match self {
+            Payload::Bytes(b) => b.len() as u64,
+            Payload::Synthetic { len, .. } => *len,
+            Payload::Zero { len } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sub-range `[off, off+len)` of this payload, O(1) for synthetic and
+    /// zero payloads, O(len) copy for real bytes (an Arc-slice type would
+    /// avoid that; not worth it at sim scale).
+    pub fn slice(&self, off: u64, len: u64) -> Payload {
+        debug_assert!(off + len <= self.len(), "slice {off}+{len} > {}", self.len());
+        match self {
+            Payload::Bytes(b) => {
+                if off == 0 && len == b.len() as u64 {
+                    self.clone()
+                } else {
+                    Payload::bytes(b[off as usize..(off + len) as usize].to_vec())
+                }
+            }
+            Payload::Synthetic { seed, abs_off, .. } => Payload::Synthetic {
+                seed: *seed,
+                abs_off: abs_off + off,
+                len,
+            },
+            Payload::Zero { .. } => Payload::Zero { len },
+        }
+    }
+
+    /// Materialize into real bytes.
+    pub fn materialize(&self) -> Vec<u8> {
+        match self {
+            Payload::Bytes(b) => b.as_ref().clone(),
+            Payload::Synthetic { seed, abs_off, len } => {
+                let mut out = Vec::new();
+                synthetic_fill(*seed, *abs_off, &mut out, *len);
+                out
+            }
+            Payload::Zero { len } => vec![0; *len as usize],
+        }
+    }
+
+    /// Content equality (semantic, not representational).
+    pub fn content_eq(&self, other: &Payload) -> bool {
+        if self.len() != other.len() {
+            return false;
+        }
+        match (self, other) {
+            (Payload::Zero { .. }, Payload::Zero { .. }) => true,
+            (
+                Payload::Synthetic { seed: s1, abs_off: o1, .. },
+                Payload::Synthetic { seed: s2, abs_off: o2, .. },
+            ) if s1 == s2 && o1 == o2 => true,
+            _ => self.materialize() == other.materialize(),
+        }
+    }
+
+    /// Pack the payload into little-endian i32 words, zero-padded — the
+    /// input format of the AOT checksum kernel (4 KB blocks of 1024
+    /// words). Only used on digest-verify paths, which operate on modest
+    /// batch sizes.
+    pub fn to_words(&self) -> Vec<i32> {
+        let bytes = self.materialize();
+        bytes
+            .chunks(4)
+            .map(|c| {
+                let mut w = [0u8; 4];
+                w[..c.len()].copy_from_slice(c);
+                i32::from_le_bytes(w)
+            })
+            .collect()
+    }
+
+    /// Concatenate payloads (materializes unless all-zero / contiguous
+    /// synthetic).
+    pub fn concat(parts: &[Payload]) -> Payload {
+        if parts.len() == 1 {
+            return parts[0].clone();
+        }
+        // contiguous synthetic fast path
+        if let Some(Payload::Synthetic { seed, abs_off, .. }) = parts.first() {
+            let (seed, start) = (*seed, *abs_off);
+            let mut cursor = start;
+            let mut contiguous = true;
+            for p in parts {
+                match p {
+                    Payload::Synthetic { seed: s, abs_off: o, len } if *s == seed && *o == cursor => {
+                        cursor += len;
+                    }
+                    _ => {
+                        contiguous = false;
+                        break;
+                    }
+                }
+            }
+            if contiguous {
+                return Payload::Synthetic { seed, abs_off: start, len: cursor - start };
+            }
+        }
+        if parts.iter().all(|p| matches!(p, Payload::Zero { .. })) {
+            return Payload::Zero { len: parts.iter().map(|p| p.len()).sum() };
+        }
+        let mut out = Vec::with_capacity(parts.iter().map(|p| p.len()).sum::<u64>() as usize);
+        for p in parts {
+            out.extend_from_slice(&p.materialize());
+        }
+        Payload::bytes(out)
+    }
+}
+
+impl From<&[u8]> for Payload {
+    fn from(v: &[u8]) -> Self {
+        Payload::bytes(v.to_vec())
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(v: Vec<u8>) -> Self {
+        Payload::bytes(v)
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Self) -> bool {
+        self.content_eq(other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        let p = Payload::bytes(b"hello".to_vec());
+        assert_eq!(p.len(), 5);
+        assert_eq!(p.materialize(), b"hello");
+        assert_eq!(p.slice(1, 3).materialize(), b"ell");
+    }
+
+    #[test]
+    fn synthetic_slice_matches_whole() {
+        let p = Payload::synthetic(99, 100);
+        let whole = p.materialize();
+        let s = p.slice(30, 40);
+        assert_eq!(s.materialize(), &whole[30..70]);
+        // slice of slice
+        let ss = s.slice(5, 10);
+        assert_eq!(ss.materialize(), &whole[35..45]);
+    }
+
+    #[test]
+    fn zero_payload() {
+        let p = Payload::zero(8);
+        assert_eq!(p.materialize(), vec![0; 8]);
+        assert_eq!(p.slice(2, 3).materialize(), vec![0; 3]);
+    }
+
+    #[test]
+    fn content_eq_across_representations() {
+        let a = Payload::synthetic(5, 16);
+        let b = Payload::bytes(a.materialize());
+        assert_eq!(a, b);
+        assert_ne!(a, Payload::synthetic(6, 16));
+        assert_eq!(Payload::zero(4), Payload::bytes(vec![0; 4]));
+    }
+
+    #[test]
+    fn to_words_pads_final_chunk() {
+        let p = Payload::bytes(vec![1, 0, 0, 0, 2]);
+        assert_eq!(p.to_words(), vec![1, 2]);
+    }
+
+    #[test]
+    fn concat_contiguous_synthetic_is_o1() {
+        let p = Payload::synthetic(7, 100);
+        let a = p.slice(0, 40);
+        let b = p.slice(40, 60);
+        let c = Payload::concat(&[a, b]);
+        assert!(matches!(c, Payload::Synthetic { len: 100, .. }));
+        assert_eq!(c, p);
+    }
+
+    #[test]
+    fn concat_mixed_materializes_correctly() {
+        let c = Payload::concat(&[
+            Payload::bytes(b"ab".to_vec()),
+            Payload::zero(2),
+            Payload::bytes(b"cd".to_vec()),
+        ]);
+        assert_eq!(c.materialize(), b"ab\0\0cd");
+    }
+}

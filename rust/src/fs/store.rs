@@ -1,0 +1,620 @@
+//! `FileStore`: inode table + namespace + per-file extent maps.
+//!
+//! One `FileStore` is the *digested* file-system state held by a SharedFS
+//! instance (its hot/cold shared areas — tier tags on extents say which),
+//! and the baselines reuse it as their server-side store. Chain replicas
+//! converge because digests apply the same operation log to each store
+//! (checked by the chain-agreement property tests).
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use super::extent::{ExtentMap, Tier};
+use super::path::{basename, dirname, is_subtree_of, normalize};
+use super::payload::Payload;
+use super::types::{Cred, FsError, Ino, Mode, Result, ROOT_INO};
+
+/// Inode kinds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Kind {
+    File,
+    Dir,
+}
+
+#[derive(Debug, Clone)]
+pub struct Inode {
+    pub ino: Ino,
+    pub kind: Kind,
+    pub size: u64,
+    pub mode: Mode,
+    pub owner: Cred,
+    pub nlink: u32,
+    pub ctime: u64,
+    pub mtime: u64,
+    pub extents: ExtentMap,
+    /// directory entries (Kind::Dir only)
+    pub entries: BTreeMap<String, Ino>,
+}
+
+/// `stat(2)`-shaped metadata snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stat {
+    pub ino: Ino,
+    pub is_dir: bool,
+    pub size: u64,
+    pub mode: Mode,
+    pub owner: Cred,
+    pub nlink: u32,
+    pub ctime: u64,
+    pub mtime: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FileStore {
+    inodes: HashMap<Ino, Inode>,
+    next_ino: Ino,
+    /// reverse index: ino -> one canonical path (for invalidation)
+    // Maintained best-effort; renames update it.
+    paths: HashMap<Ino, String>,
+}
+
+impl Default for FileStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FileStore {
+    pub fn new() -> Self {
+        let mut inodes = HashMap::new();
+        inodes.insert(
+            ROOT_INO,
+            Inode {
+                ino: ROOT_INO,
+                kind: Kind::Dir,
+                size: 0,
+                mode: Mode::DEFAULT_DIR,
+                owner: Cred::ROOT,
+                nlink: 2,
+                ctime: 0,
+                mtime: 0,
+                extents: ExtentMap::new(),
+                entries: BTreeMap::new(),
+            },
+        );
+        let mut paths = HashMap::new();
+        paths.insert(ROOT_INO, "/".to_string());
+        Self { inodes, next_ino: 2, paths }
+    }
+
+    // ------------------------------------------------------- resolution
+
+    /// Resolve a normalized path to an inode number.
+    pub fn resolve(&self, path: &str) -> Result<Ino> {
+        let path = normalize(path)?;
+        let mut cur = ROOT_INO;
+        for seg in super::path::components(&path) {
+            let node = &self.inodes[&cur];
+            if node.kind != Kind::Dir {
+                return Err(FsError::NotADirectory(path.clone()));
+            }
+            cur = *node
+                .entries
+                .get(seg)
+                .ok_or_else(|| FsError::NotFound(path.clone()))?;
+        }
+        Ok(cur)
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.resolve(path).is_ok()
+    }
+
+    pub fn inode(&self, ino: Ino) -> Option<&Inode> {
+        self.inodes.get(&ino)
+    }
+
+    pub fn inode_mut(&mut self, ino: Ino) -> Option<&mut Inode> {
+        self.inodes.get_mut(&ino)
+    }
+
+    pub fn path_of(&self, ino: Ino) -> Option<&str> {
+        self.paths.get(&ino).map(|s| s.as_str())
+    }
+
+    // --------------------------------------------------- namespace ops
+
+    /// Create a file. Errors if it exists or the parent is missing.
+    pub fn create(&mut self, path: &str, mode: Mode, owner: Cred, now: u64) -> Result<Ino> {
+        let path = normalize(path)?;
+        if path == "/" {
+            return Err(FsError::AlreadyExists(path));
+        }
+        let parent = self.resolve(&dirname(&path))?;
+        let name = basename(&path).to_string();
+        let pnode = self.inodes.get_mut(&parent).unwrap();
+        if pnode.kind != Kind::Dir {
+            return Err(FsError::NotADirectory(dirname(&path)));
+        }
+        if pnode.entries.contains_key(&name) {
+            return Err(FsError::AlreadyExists(path));
+        }
+        let ino = self.next_ino;
+        self.next_ino += 1;
+        self.inodes.get_mut(&parent).unwrap().entries.insert(name, ino);
+        self.inodes.get_mut(&parent).unwrap().mtime = now;
+        self.inodes.insert(
+            ino,
+            Inode {
+                ino,
+                kind: Kind::File,
+                size: 0,
+                mode,
+                owner,
+                nlink: 1,
+                ctime: now,
+                mtime: now,
+                extents: ExtentMap::new(),
+                entries: BTreeMap::new(),
+            },
+        );
+        self.paths.insert(ino, path);
+        Ok(ino)
+    }
+
+    pub fn mkdir(&mut self, path: &str, mode: Mode, owner: Cred, now: u64) -> Result<Ino> {
+        let path = normalize(path)?;
+        if path == "/" {
+            return Err(FsError::AlreadyExists(path));
+        }
+        let parent = self.resolve(&dirname(&path))?;
+        let name = basename(&path).to_string();
+        {
+            let pnode = self.inodes.get(&parent).unwrap();
+            if pnode.kind != Kind::Dir {
+                return Err(FsError::NotADirectory(dirname(&path)));
+            }
+            if pnode.entries.contains_key(&name) {
+                return Err(FsError::AlreadyExists(path));
+            }
+        }
+        let ino = self.next_ino;
+        self.next_ino += 1;
+        self.inodes.get_mut(&parent).unwrap().entries.insert(name, ino);
+        self.inodes.get_mut(&parent).unwrap().mtime = now;
+        self.inodes.insert(
+            ino,
+            Inode {
+                ino,
+                kind: Kind::Dir,
+                size: 0,
+                mode,
+                owner,
+                nlink: 2,
+                ctime: now,
+                mtime: now,
+                extents: ExtentMap::new(),
+                entries: BTreeMap::new(),
+            },
+        );
+        self.paths.insert(ino, path);
+        Ok(ino)
+    }
+
+    /// `mkdir -p`: create every missing ancestor.
+    pub fn mkdir_p(&mut self, path: &str, mode: Mode, owner: Cred, now: u64) -> Result<Ino> {
+        let path = normalize(path)?;
+        let mut cur = String::new();
+        let mut ino = ROOT_INO;
+        for seg in super::path::components(&path) {
+            cur.push('/');
+            cur.push_str(seg);
+            ino = match self.resolve(&cur) {
+                Ok(i) => i,
+                Err(FsError::NotFound(_)) => self.mkdir(&cur, mode, owner, now)?,
+                Err(e) => return Err(e),
+            };
+        }
+        Ok(ino)
+    }
+
+    pub fn unlink(&mut self, path: &str, now: u64) -> Result<Ino> {
+        let path = normalize(path)?;
+        let ino = self.resolve(&path)?;
+        if self.inodes[&ino].kind == Kind::Dir {
+            return Err(FsError::IsADirectory(path));
+        }
+        let parent = self.resolve(&dirname(&path))?;
+        self.inodes
+            .get_mut(&parent)
+            .unwrap()
+            .entries
+            .remove(basename(&path));
+        self.inodes.get_mut(&parent).unwrap().mtime = now;
+        let node = self.inodes.get_mut(&ino).unwrap();
+        node.nlink -= 1;
+        if node.nlink == 0 {
+            self.inodes.remove(&ino);
+            self.paths.remove(&ino);
+        }
+        Ok(ino)
+    }
+
+    pub fn rmdir(&mut self, path: &str, now: u64) -> Result<()> {
+        let path = normalize(path)?;
+        let ino = self.resolve(&path)?;
+        let node = &self.inodes[&ino];
+        if node.kind != Kind::Dir {
+            return Err(FsError::NotADirectory(path));
+        }
+        if !node.entries.is_empty() {
+            return Err(FsError::NotEmpty(path));
+        }
+        let parent = self.resolve(&dirname(&path))?;
+        self.inodes
+            .get_mut(&parent)
+            .unwrap()
+            .entries
+            .remove(basename(&path));
+        self.inodes.get_mut(&parent).unwrap().mtime = now;
+        self.inodes.remove(&ino);
+        self.paths.remove(&ino);
+        Ok(())
+    }
+
+    /// POSIX rename: atomically replaces an existing destination file.
+    pub fn rename(&mut self, from: &str, to: &str, now: u64) -> Result<()> {
+        let from = normalize(from)?;
+        let to = normalize(to)?;
+        if from == to {
+            return Ok(());
+        }
+        if is_subtree_of(&to, &from) {
+            return Err(FsError::InvalidArgument(format!(
+                "rename {from} into own subtree {to}"
+            )));
+        }
+        let ino = self.resolve(&from)?;
+        let to_parent = self.resolve(&dirname(&to))?;
+        if self.inodes[&to_parent].kind != Kind::Dir {
+            return Err(FsError::NotADirectory(dirname(&to)));
+        }
+        // destination exists?
+        if let Ok(dst) = self.resolve(&to) {
+            let dnode = &self.inodes[&dst];
+            match (&self.inodes[&ino].kind, &dnode.kind) {
+                (Kind::File, Kind::File) => {
+                    self.unlink(&to, now)?;
+                }
+                (Kind::Dir, Kind::Dir) => {
+                    if !dnode.entries.is_empty() {
+                        return Err(FsError::NotEmpty(to));
+                    }
+                    self.rmdir(&to, now)?;
+                }
+                (Kind::File, Kind::Dir) => return Err(FsError::IsADirectory(to)),
+                (Kind::Dir, Kind::File) => return Err(FsError::NotADirectory(to)),
+            }
+        }
+        let from_parent = self.resolve(&dirname(&from))?;
+        self.inodes
+            .get_mut(&from_parent)
+            .unwrap()
+            .entries
+            .remove(basename(&from));
+        self.inodes.get_mut(&from_parent).unwrap().mtime = now;
+        let to_parent = self.resolve(&dirname(&to))?;
+        self.inodes
+            .get_mut(&to_parent)
+            .unwrap()
+            .entries
+            .insert(basename(&to).to_string(), ino);
+        self.inodes.get_mut(&to_parent).unwrap().mtime = now;
+        self.inodes.get_mut(&ino).unwrap().ctime = now;
+        // fix the path index for the moved subtree
+        let old_prefix = from.clone();
+        let moved: Vec<(Ino, String)> = self
+            .paths
+            .iter()
+            .filter(|(_, p)| is_subtree_of(p, &old_prefix))
+            .map(|(&i, p)| {
+                let suffix = &p[old_prefix.len()..];
+                (i, format!("{to}{suffix}"))
+            })
+            .collect();
+        for (i, p) in moved {
+            self.paths.insert(i, p);
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------- file IO
+
+    pub fn write_at(&mut self, ino: Ino, off: u64, data: Payload, tier: Tier, now: u64) -> Result<()> {
+        let node = self
+            .inodes
+            .get_mut(&ino)
+            .ok_or(FsError::NotFound(format!("ino {ino}")))?;
+        if node.kind != Kind::File {
+            return Err(FsError::IsADirectory(format!("ino {ino}")));
+        }
+        let end = off + data.len();
+        node.extents.write(off, data, tier, now);
+        node.size = node.size.max(end);
+        node.mtime = now;
+        Ok(())
+    }
+
+    pub fn read_at(&self, ino: Ino, off: u64, len: u64) -> Result<(Payload, usize)> {
+        let node = self
+            .inodes
+            .get(&ino)
+            .ok_or(FsError::NotFound(format!("ino {ino}")))?;
+        if node.kind != Kind::File {
+            return Err(FsError::IsADirectory(format!("ino {ino}")));
+        }
+        let avail = node.size.saturating_sub(off);
+        let len = len.min(avail);
+        Ok(node.extents.read(off, len))
+    }
+
+    pub fn truncate(&mut self, ino: Ino, size: u64, now: u64) -> Result<()> {
+        let node = self
+            .inodes
+            .get_mut(&ino)
+            .ok_or(FsError::NotFound(format!("ino {ino}")))?;
+        if size < node.size {
+            node.extents.truncate(size);
+        }
+        node.size = size;
+        node.mtime = now;
+        node.ctime = now;
+        Ok(())
+    }
+
+    pub fn stat_ino(&self, ino: Ino) -> Result<Stat> {
+        let n = self
+            .inodes
+            .get(&ino)
+            .ok_or(FsError::NotFound(format!("ino {ino}")))?;
+        Ok(Stat {
+            ino: n.ino,
+            is_dir: n.kind == Kind::Dir,
+            size: n.size,
+            mode: n.mode,
+            owner: n.owner,
+            nlink: n.nlink,
+            ctime: n.ctime,
+            mtime: n.mtime,
+        })
+    }
+
+    pub fn stat(&self, path: &str) -> Result<Stat> {
+        self.stat_ino(self.resolve(path)?)
+    }
+
+    pub fn readdir(&self, path: &str) -> Result<Vec<String>> {
+        let ino = self.resolve(path)?;
+        let n = &self.inodes[&ino];
+        if n.kind != Kind::Dir {
+            return Err(FsError::NotADirectory(path.to_string()));
+        }
+        Ok(n.entries.keys().cloned().collect())
+    }
+
+    // ------------------------------------------------------- accounting
+
+    pub fn bytes_in_tier(&self, tier: Tier) -> u64 {
+        self.inodes.values().map(|n| n.extents.bytes_in_tier(tier)).sum()
+    }
+
+    pub fn inode_count(&self) -> usize {
+        self.inodes.len()
+    }
+
+    /// Structural equality of two stores (used by chain-agreement tests):
+    /// same namespaces, same sizes, same *contents* — tier placement may
+    /// differ (each replica migrates independently).
+    pub fn content_eq(&self, other: &FileStore) -> bool {
+        if self.inodes.len() != other.inodes.len() {
+            return false;
+        }
+        // compare by path to be ino-allocation independent
+        let mut paths: Vec<&String> = self.paths.values().collect();
+        paths.sort();
+        for p in paths {
+            let (a, b) = match (self.resolve(p), other.resolve(p)) {
+                (Ok(a), Ok(b)) => (a, b),
+                _ => return false,
+            };
+            let (na, nb) = (&self.inodes[&a], &other.inodes[&b]);
+            if na.kind != nb.kind || na.size != nb.size {
+                return false;
+            }
+            if na.kind == Kind::File && na.size > 0 {
+                let (da, _) = na.extents.read(0, na.size);
+                let (db, _) = nb.extents.read(0, nb.size);
+                if !da.content_eq(&db) {
+                    return false;
+                }
+            }
+            if na.kind == Kind::Dir
+                && na.entries.keys().ne(nb.entries.keys())
+            {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Drop cached copies of an inode's data (epoch invalidation on node
+    /// recovery, §3.4: "invalidates every block from every file that has
+    /// been written since its crash"). Data must be refetched from a live
+    /// replica on next access; we model that by clearing the extents and
+    /// marking size from the authoritative store at refetch time.
+    pub fn invalidate_ino(&mut self, ino: Ino) {
+        if let Some(n) = self.inodes.get_mut(&ino) {
+            n.extents = ExtentMap::new();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> FileStore {
+        FileStore::new()
+    }
+
+    #[test]
+    fn create_resolve_stat() {
+        let mut s = store();
+        let ino = s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 1).unwrap();
+        assert_eq!(s.resolve("/f").unwrap(), ino);
+        let st = s.stat("/f").unwrap();
+        assert!(!st.is_dir);
+        assert_eq!(st.size, 0);
+        assert_eq!(st.ctime, 1);
+    }
+
+    #[test]
+    fn create_requires_parent() {
+        let mut s = store();
+        assert!(matches!(
+            s.create("/no/such/file", Mode::DEFAULT_FILE, Cred::ROOT, 0),
+            Err(FsError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn create_duplicate_fails() {
+        let mut s = store();
+        s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        assert!(matches!(
+            s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0),
+            Err(FsError::AlreadyExists(_))
+        ));
+    }
+
+    #[test]
+    fn mkdir_p_builds_chain() {
+        let mut s = store();
+        s.mkdir_p("/a/b/c", Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+        assert!(s.exists("/a"));
+        assert!(s.exists("/a/b"));
+        assert!(s.exists("/a/b/c"));
+        // idempotent
+        s.mkdir_p("/a/b/c", Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut s = store();
+        let ino = s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.write_at(ino, 0, Payload::bytes(b"hello world".to_vec()), Tier::Hot, 1)
+            .unwrap();
+        let (p, _) = s.read_at(ino, 0, 11).unwrap();
+        assert_eq!(p.materialize(), b"hello world");
+        assert_eq!(s.stat("/f").unwrap().size, 11);
+    }
+
+    #[test]
+    fn read_clamps_to_size() {
+        let mut s = store();
+        let ino = s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.write_at(ino, 0, Payload::bytes(b"abc".to_vec()), Tier::Hot, 0)
+            .unwrap();
+        let (p, _) = s.read_at(ino, 0, 100).unwrap();
+        assert_eq!(p.len(), 3);
+        let (p, _) = s.read_at(ino, 10, 5).unwrap();
+        assert_eq!(p.len(), 0);
+    }
+
+    #[test]
+    fn unlink_removes() {
+        let mut s = store();
+        s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.unlink("/f", 1).unwrap();
+        assert!(!s.exists("/f"));
+        assert!(matches!(s.unlink("/f", 2), Err(FsError::NotFound(_))));
+    }
+
+    #[test]
+    fn rmdir_requires_empty() {
+        let mut s = store();
+        s.mkdir("/d", Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+        s.create("/d/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        assert!(matches!(s.rmdir("/d", 1), Err(FsError::NotEmpty(_))));
+        s.unlink("/d/f", 1).unwrap();
+        s.rmdir("/d", 2).unwrap();
+        assert!(!s.exists("/d"));
+    }
+
+    #[test]
+    fn rename_file_replaces_destination() {
+        let mut s = store();
+        let src = s.create("/a", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.write_at(src, 0, Payload::bytes(b"src".to_vec()), Tier::Hot, 0)
+            .unwrap();
+        let dst = s.create("/b", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.write_at(dst, 0, Payload::bytes(b"dst".to_vec()), Tier::Hot, 0)
+            .unwrap();
+        s.rename("/a", "/b", 1).unwrap();
+        assert!(!s.exists("/a"));
+        let (p, _) = s.read_at(s.resolve("/b").unwrap(), 0, 3).unwrap();
+        assert_eq!(p.materialize(), b"src");
+    }
+
+    #[test]
+    fn rename_into_own_subtree_rejected() {
+        let mut s = store();
+        s.mkdir("/d", Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+        assert!(s.rename("/d", "/d/e", 1).is_err());
+    }
+
+    #[test]
+    fn rename_dir_updates_descendant_paths() {
+        let mut s = store();
+        s.mkdir("/d", Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+        let f = s.create("/d/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.rename("/d", "/e", 1).unwrap();
+        assert_eq!(s.resolve("/e/f").unwrap(), f);
+        assert_eq!(s.path_of(f), Some("/e/f"));
+    }
+
+    #[test]
+    fn truncate_shrinks_and_grows() {
+        let mut s = store();
+        let ino = s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.write_at(ino, 0, Payload::bytes(b"abcdef".to_vec()), Tier::Hot, 0)
+            .unwrap();
+        s.truncate(ino, 3, 1).unwrap();
+        assert_eq!(s.stat("/f").unwrap().size, 3);
+        s.truncate(ino, 10, 2).unwrap();
+        assert_eq!(s.stat("/f").unwrap().size, 10);
+        let (p, _) = s.read_at(ino, 0, 10).unwrap();
+        assert_eq!(p.materialize(), b"abc\0\0\0\0\0\0\0");
+    }
+
+    #[test]
+    fn content_eq_detects_divergence() {
+        let mut a = store();
+        let mut b = store();
+        let ia = a.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        let ib = b.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        a.write_at(ia, 0, Payload::bytes(b"x".to_vec()), Tier::Hot, 0).unwrap();
+        b.write_at(ib, 0, Payload::bytes(b"x".to_vec()), Tier::Cold, 0).unwrap();
+        assert!(a.content_eq(&b)); // tier may differ
+        b.write_at(ib, 0, Payload::bytes(b"y".to_vec()), Tier::Hot, 1).unwrap();
+        assert!(!a.content_eq(&b));
+    }
+
+    #[test]
+    fn readdir_sorted() {
+        let mut s = store();
+        s.create("/b", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.create("/a", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        assert_eq!(s.readdir("/").unwrap(), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Core identifier and error types.
+
+/// Inode number. 0 is reserved; 1 is the root directory.
+pub type Ino = u64;
+pub const ROOT_INO: Ino = 1;
+
+/// Per-process file descriptor.
+pub type Fd = u32;
+
+/// Simulated node (machine) id — indexes the cluster's node table.
+pub type NodeId = usize;
+
+/// Socket within a node (0 or 1 on the dual-socket testbed).
+pub type SocketId = usize;
+
+/// Simulated process id — indexes the cluster's process table.
+pub type ProcId = usize;
+
+/// UNIX-style credentials (paper §3.2: single administrative domain with
+/// UNIX ownership/permissions, enforced by SharedFS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cred {
+    pub uid: u32,
+    pub gid: u32,
+}
+
+impl Cred {
+    pub const ROOT: Cred = Cred { uid: 0, gid: 0 };
+
+    pub fn new(uid: u32, gid: u32) -> Self {
+        Self { uid, gid }
+    }
+}
+
+/// Permission bits, rwxrwxrwx.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mode(pub u16);
+
+impl Mode {
+    pub const DEFAULT_FILE: Mode = Mode(0o644);
+    pub const DEFAULT_DIR: Mode = Mode(0o755);
+
+    pub fn allows(&self, cred: Cred, owner: Cred, write: bool) -> bool {
+        if cred.uid == 0 {
+            return true;
+        }
+        let shift = if cred.uid == owner.uid {
+            6
+        } else if cred.gid == owner.gid {
+            3
+        } else {
+            0
+        };
+        let bits = (self.0 >> shift) & 0o7;
+        if write {
+            bits & 0o2 != 0
+        } else {
+            bits & 0o4 != 0
+        }
+    }
+}
+
+/// File-system errors, roughly errno-shaped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FsError {
+    NotFound(String),
+    AlreadyExists(String),
+    NotADirectory(String),
+    IsADirectory(String),
+    NotEmpty(String),
+    PermissionDenied(String),
+    BadFd(Fd),
+    NoSpace,
+    /// Lease could not be acquired (held exclusively elsewhere and
+    /// revocation did not complete in time).
+    LeaseConflict(String),
+    /// The process/node this op was issued on is dead.
+    Crashed,
+    /// Operation not supported by this file system (baseline gaps).
+    NotSupported(&'static str),
+    InvalidArgument(String),
+}
+
+impl std::fmt::Display for FsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsError::NotFound(p) => write!(f, "ENOENT: {p}"),
+            FsError::AlreadyExists(p) => write!(f, "EEXIST: {p}"),
+            FsError::NotADirectory(p) => write!(f, "ENOTDIR: {p}"),
+            FsError::IsADirectory(p) => write!(f, "EISDIR: {p}"),
+            FsError::NotEmpty(p) => write!(f, "ENOTEMPTY: {p}"),
+            FsError::PermissionDenied(p) => write!(f, "EACCES: {p}"),
+            FsError::BadFd(fd) => write!(f, "EBADF: {fd}"),
+            FsError::NoSpace => write!(f, "ENOSPC"),
+            FsError::LeaseConflict(p) => write!(f, "lease conflict: {p}"),
+            FsError::Crashed => write!(f, "process/node crashed"),
+            FsError::NotSupported(s) => write!(f, "ENOTSUP: {s}"),
+            FsError::InvalidArgument(s) => write!(f, "EINVAL: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for FsError {}
+
+pub type Result<T> = std::result::Result<T, FsError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_owner_group_other() {
+        let owner = Cred::new(10, 20);
+        let m = Mode(0o640);
+        assert!(m.allows(Cred::new(10, 99), owner, true)); // owner rw
+        assert!(m.allows(Cred::new(11, 20), owner, false)); // group r
+        assert!(!m.allows(Cred::new(11, 20), owner, true)); // group !w
+        assert!(!m.allows(Cred::new(11, 21), owner, false)); // other !r
+        assert!(m.allows(Cred::ROOT, owner, true)); // root always
+    }
+}

@@ -1,0 +1,20 @@
+//! Simulated hardware substrate.
+//!
+//! The paper's testbed (dual-socket Cascade Lake + Optane DC PMM + NVMe
+//! SSD + 40 GbE RDMA) is not available, so per the reproduction rule we
+//! model it: every device is a **timing model** (latency + bandwidth
+//! queue, Table 1 of the paper) plus the minimal *semantics* Assise's
+//! logic depends on — persistence domains for NVM (unflushed data is lost
+//! on crash), in-order delivery for RDMA, block granularity for SSD.
+//!
+//! All time is virtual ([`clock::Nanos`]); experiments are deterministic.
+
+pub mod clock;
+pub mod params;
+pub mod nvm;
+pub mod ssd;
+pub mod rdma;
+pub mod numa;
+
+pub use clock::{BwQueue, Nanos};
+pub use params::HwParams;

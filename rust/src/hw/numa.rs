@@ -1,0 +1,81 @@
+//! Cross-socket (NUMA) access model.
+//!
+//! Paper §3.2/§5.2: direct stores to NVM on another socket are throttled
+//! by hardware cache coherence (Table 1's NVM-NUMA row: 7.4 GB/s write),
+//! and Assise sidesteps this with the I/OAT DMA engine when digesting
+//! from a LibFS log on one socket to a shared area on the other
+//! (+44% cross-socket write throughput, Fig. 3 "Assise-dma").
+
+use super::clock::{BwQueue, Nanos};
+use super::params::HwParams;
+
+/// How a cross-socket transfer is performed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XSocketMode {
+    /// Non-temporal processor stores — pays hw cache-coherence overhead.
+    Stores,
+    /// I/OAT DMA engine — bypasses cache coherence (§3.2).
+    Dma,
+}
+
+/// The socket interconnect (UPI) of one dual-socket node.
+#[derive(Debug, Clone, Default)]
+pub struct Interconnect {
+    pub queue: BwQueue,
+}
+
+impl Interconnect {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cross-socket write completion time.
+    pub fn write(
+        &mut self,
+        now: Nanos,
+        bytes: u64,
+        mode: XSocketMode,
+        p: &HwParams,
+    ) -> Nanos {
+        let bw = match mode {
+            XSocketMode::Stores => p.numa_write_bw,
+            XSocketMode::Dma => p.numa_dma_write_bw,
+        };
+        self.queue.access(now, bytes, p.numa_lat, bw)
+    }
+
+    /// Cross-socket read completion time.
+    pub fn read(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        self.queue.access(now, bytes, p.numa_lat, p.numa_read_bw)
+    }
+
+    pub fn reboot(&mut self) {
+        self.queue.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dma_beats_stores_by_44_percent() {
+        let p = HwParams::default();
+        let big = 1 << 30;
+        let mut a = Interconnect::new();
+        let mut b = Interconnect::new();
+        let t_stores = a.write(0, big, XSocketMode::Stores, &p) as f64;
+        let t_dma = b.write(0, big, XSocketMode::Dma, &p) as f64;
+        let speedup = t_stores / t_dma;
+        assert!((1.40..1.48).contains(&speedup), "speedup={speedup}");
+    }
+
+    #[test]
+    fn numa_slower_than_local_nvm() {
+        let p = HwParams::default();
+        let mut ic = Interconnect::new();
+        let t = ic.write(0, 4096, XSocketMode::Stores, &p);
+        // local NVM: 94ns + 4096/11.2 ≈ 460ns; NUMA: 230 + 4096/7.4 ≈ 780ns
+        assert!(t > 700);
+    }
+}

@@ -1,0 +1,250 @@
+//! NVM (Optane DC PMM, App-Direct) device model.
+//!
+//! What Assise's logic needs from the PMM and what this model provides:
+//!
+//! 1. **Timing** — Table 1 latency/bandwidth plus the Optane write-tail
+//!    distribution (§5.2) and the 256 B internal-buffer miss penalty for
+//!    random reads.
+//! 2. **Capacity accounting** — update-log sizing (§B) and shared-area
+//!    occupancy decide digest/eviction pressure.
+//! 3. **A persistence domain** — a write is durable only once flushed
+//!    (CLWB+SFENCE-equivalent). Durability itself is tracked at the
+//!    *log-entry / digest-transaction* level by [`crate::oplog`] (that is
+//!    the altitude at which the paper defines crash consistency); the
+//!    device charges the flush cost.
+
+use super::clock::{BwQueue, Nanos};
+use super::params::HwParams;
+use crate::util::SplitMix64;
+
+/// Access pattern hint for the timing model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    Seq,
+    Rand,
+}
+
+/// One PMM device (one socket's interleaved DIMM set).
+#[derive(Debug, Clone)]
+pub struct NvmDevice {
+    /// shared-area traffic (digest writes, area reads)
+    pub queue: BwQueue,
+    /// log-region traffic (update-log appends, digest log reads,
+    /// replicated-log landings). The PMM's six interleaved DIMMs serve
+    /// the reserved log region and the shared areas concurrently; one
+    /// merged queue would make 300 ns log appends wait behind streaming
+    /// digests, which the hardware does not do.
+    pub log_queue: BwQueue,
+    capacity: u64,
+    used: u64,
+    tail_rng: SplitMix64,
+    /// write-tail events observed (for reporting)
+    pub tail_events: u64,
+}
+
+impl NvmDevice {
+    pub fn new(capacity: u64, seed: u64) -> Self {
+        Self {
+            queue: BwQueue::new(),
+            log_queue: BwQueue::new(),
+            capacity,
+            used: 0,
+            tail_rng: SplitMix64::new(seed),
+            tail_events: 0,
+        }
+    }
+
+    /// Persistent store of `bytes` issued at `now`; returns completion
+    /// (durability) time. Includes the CLWB+SFENCE flush and samples the
+    /// Optane tail distribution.
+    pub fn write(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        let mut lat = p.nvm_write_lat;
+        if self.tail_rng.f64() < p.nvm_tail_prob {
+            lat = (lat as f64 * p.nvm_tail_mult) as Nanos;
+            self.tail_events += 1;
+        }
+        self.queue.access(now, bytes, lat, p.nvm_write_bw)
+    }
+
+    /// Load of `bytes` issued at `now`. Random accesses below the PMM
+    /// 256 B buffer granularity pay the buffer-miss penalty.
+    pub fn read(&mut self, now: Nanos, bytes: u64, pat: Pattern, p: &HwParams) -> Nanos {
+        let mut lat = p.nvm_read_lat;
+        if pat == Pattern::Rand {
+            lat += p.nvm_buffer_miss_lat;
+        }
+        self.queue.access(now, bytes, lat, p.nvm_read_bw)
+    }
+
+    // ------------------------------------------------------ capacity
+
+    pub fn alloc(&mut self, bytes: u64) -> bool {
+        if self.used + bytes > self.capacity {
+            return false;
+        }
+        self.used += bytes;
+        true
+    }
+
+    pub fn free(&mut self, bytes: u64) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn available(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// Log-region persistent store (update-log append / replicated-log
+    /// landing): same media timing, separate queue.
+    pub fn write_log(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        let mut lat = p.nvm_write_lat;
+        if self.tail_rng.f64() < p.nvm_tail_prob {
+            lat = (lat as f64 * p.nvm_tail_mult) as Nanos;
+            self.tail_events += 1;
+        }
+        self.log_queue.access(now, bytes, lat, p.nvm_write_bw)
+    }
+
+    /// Log-region read (digest source scan).
+    pub fn read_log(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        self.log_queue.access(now, bytes, p.nvm_read_lat, p.nvm_read_bw)
+    }
+
+    /// Reboot: timing queue resets; *contents survive* (this is the whole
+    /// point of NVM) so capacity accounting is untouched.
+    pub fn reboot(&mut self) {
+        self.queue.reset();
+        self.log_queue.reset();
+    }
+}
+
+/// DRAM device: volatile, faster, no tails. Contents are *lost* on crash,
+/// which the owning structures model by dropping their state.
+#[derive(Debug, Clone)]
+pub struct DramDevice {
+    pub queue: BwQueue,
+    capacity: u64,
+    used: u64,
+}
+
+impl DramDevice {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            queue: BwQueue::new(),
+            capacity,
+            used: 0,
+        }
+    }
+
+    pub fn write(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        self.queue.access(now, bytes, p.dram_write_lat, p.dram_write_bw)
+    }
+
+    pub fn read(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        self.queue.access(now, bytes, p.dram_read_lat, p.dram_read_bw)
+    }
+
+    pub fn alloc(&mut self, bytes: u64) -> bool {
+        if self.used + bytes > self.capacity {
+            return false;
+        }
+        self.used += bytes;
+        true
+    }
+
+    pub fn free(&mut self, bytes: u64) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Crash/reboot: DRAM loses everything.
+    pub fn crash(&mut self) {
+        self.queue.reset();
+        self.used = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> HwParams {
+        HwParams::default()
+    }
+
+    #[test]
+    fn nvm_write_faster_than_ssd_slower_than_dram() {
+        let p = p();
+        let mut nvm = NvmDevice::new(1 << 30, 1);
+        let mut dram = DramDevice::new(1 << 30);
+        // sample many ops to integrate over the tail distribution
+        let mut nvm_t = 0;
+        let mut dram_t = 0;
+        for i in 0..1000u64 {
+            nvm_t = nvm.write(i * 10_000, 256, &p);
+            dram_t = dram.write(i * 10_000, 256, &p);
+        }
+        let nvm_lat = nvm_t - 999 * 10_000;
+        let dram_lat = dram_t - 999 * 10_000;
+        assert!(dram_lat < nvm_lat);
+        assert!(nvm_lat < p.ssd_lat);
+    }
+
+    #[test]
+    fn nvm_tail_events_fire_at_configured_rate() {
+        let p = p();
+        let mut nvm = NvmDevice::new(1 << 30, 42);
+        for i in 0..100_000u64 {
+            nvm.write(i * 100_000, 64, &p);
+        }
+        // 1% ± generous slop
+        assert!((500..2_000).contains(&nvm.tail_events), "{}", nvm.tail_events);
+    }
+
+    #[test]
+    fn random_reads_slower_than_sequential() {
+        let p = p();
+        let mut nvm = NvmDevice::new(1 << 30, 1);
+        let seq = nvm.read(0, 256, Pattern::Seq, &p);
+        let rnd = nvm.read(1_000_000, 256, Pattern::Rand, &p) - 1_000_000;
+        assert!(rnd > seq);
+    }
+
+    #[test]
+    fn capacity_accounting() {
+        let mut nvm = NvmDevice::new(1000, 1);
+        assert!(nvm.alloc(600));
+        assert!(!nvm.alloc(600));
+        nvm.free(300);
+        assert!(nvm.alloc(600));
+        assert_eq!(nvm.used(), 900);
+        assert_eq!(nvm.available(), 100);
+    }
+
+    #[test]
+    fn nvm_survives_reboot_dram_does_not() {
+        let mut nvm = NvmDevice::new(1000, 1);
+        let mut dram = DramDevice::new(1000);
+        nvm.alloc(500);
+        dram.alloc(500);
+        nvm.reboot();
+        dram.crash();
+        assert_eq!(nvm.used(), 500); // persistent
+        assert_eq!(dram.used(), 0); // volatile
+    }
+}

@@ -1,0 +1,83 @@
+//! NVMe SSD model — the cold-storage tier (paper §A.1: cold shared areas
+//! live on SSD, locally attached or via NVMe-oF).
+//!
+//! Semantics the cold path depends on: 4 KB block granularity (sub-block
+//! IO amplifies), 10 µs access latency, ~2 GB/s bandwidth. Contents are
+//! durable (no persistence domain games at SSD level — writes are
+//! acknowledged after the device completes them).
+
+use super::clock::{BwQueue, Nanos};
+use super::params::HwParams;
+
+#[derive(Debug, Clone)]
+pub struct SsdDevice {
+    pub queue: BwQueue,
+    capacity: u64,
+    used: u64,
+}
+
+impl SsdDevice {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            queue: BwQueue::new(),
+            capacity,
+            used: 0,
+        }
+    }
+
+    /// Block-amplified write; completion time.
+    pub fn write(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        let amped = p.ssd_amplify(bytes);
+        self.queue.access(now, amped, p.ssd_lat, p.ssd_write_bw)
+    }
+
+    /// Block-amplified read; completion time.
+    pub fn read(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        let amped = p.ssd_amplify(bytes);
+        self.queue.access(now, amped, p.ssd_lat, p.ssd_read_bw)
+    }
+
+    pub fn alloc(&mut self, bytes: u64) -> bool {
+        if self.used + bytes > self.capacity {
+            return false;
+        }
+        self.used += bytes;
+        true
+    }
+
+    pub fn free(&mut self, bytes: u64) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn reboot(&mut self) {
+        self.queue.reset(); // contents persist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_io_amplified_to_block() {
+        let p = HwParams::default();
+        let mut a = SsdDevice::new(1 << 30);
+        let mut b = SsdDevice::new(1 << 30);
+        let t_small = a.write(0, 128, &p);
+        let t_block = b.write(0, 4096, &p);
+        assert_eq!(t_small, t_block, "128B write must cost a full 4KB block");
+    }
+
+    #[test]
+    fn ssd_slower_than_nvm() {
+        let p = HwParams::default();
+        let mut ssd = SsdDevice::new(1 << 30);
+        let t = ssd.read(0, 4096, &p);
+        // 10us latency + ~1.7us service ≫ NVM's sub-us
+        assert!(t > 10_000);
+    }
+}

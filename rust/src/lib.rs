@@ -1,0 +1,66 @@
+//! # Assise — NVM-colocated distributed file system (paper reproduction)
+//!
+//! Reproduction of *"Assise: Performance and Availability via NVM
+//! Colocation in a Distributed File System"*. The crate implements the
+//! full system described by the paper — the LibFS/SharedFS split, the
+//! CC-NVM crash-consistent cache-coherence layer (leases + epochs), chain
+//! replication with pessimistic/optimistic crash-consistency modes,
+//! reserve replicas, a ZooKeeper-like cluster manager with heartbeat
+//! failure detection — together with every substrate it depends on:
+//!
+//! - a deterministic **virtual-time hardware model** ([`hw`]) of the
+//!   paper's testbed (Optane DC PMM, DRAM, NVMe SSD, RDMA NIC, NUMA
+//!   interconnect) parameterized by the paper's own Table 1 measurements;
+//! - the **baseline file systems** the paper compares against
+//!   ([`baselines`]): a Ceph-like disaggregated OSD/MDS design, an
+//!   NFS-like client/server design, and an Octopus-like FUSE/DHT design —
+//!   all built on the *same* hardware model so the comparison isolates
+//!   the architectural variable (colocation + op-granular logging);
+//! - the paper's **workloads** ([`workloads`]): an LSM-style KV store
+//!   (LevelDB stand-in), mail delivery (Postfix/Enron), Filebench's
+//!   Varmail/Fileserver profiles, and the Tencent-sort external sort;
+//! - a **benchmark harness** ([`bench`]) that regenerates every figure
+//!   and table of the paper's evaluation (§5).
+//!
+//! The data-plane compute Assise performs on bulk payload bytes — log
+//! integrity checksums on the digest path and the MinuteSort range
+//! partition — is AOT-compiled from JAX/Pallas to HLO at build time and
+//! executed from Rust through PJRT ([`runtime`]); Python never runs on
+//! the request path.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't inherit the xla_extension rpath;
+//! # // examples/quickstart.rs runs this same flow for real.
+//! use assise::sim::{Cluster, ClusterConfig, DistFs};
+//!
+//! // A 2-node cluster, pessimistic (fsync = synchronous replication).
+//! let mut cluster = Cluster::new(ClusterConfig::default().nodes(2));
+//! let pid = cluster.spawn_process(0, 0); // node 0, socket 0
+//! let fd = cluster.create(pid, "/tmp/hello").unwrap();
+//! cluster.write(pid, fd, b"hello world".as_slice().into()).unwrap();
+//! cluster.fsync(pid, fd).unwrap(); // chain-replicated to node 1
+//! let data = cluster.pread(pid, fd, 0, 11).unwrap();
+//! assert_eq!(data.materialize(), b"hello world");
+//! ```
+
+pub mod hw;
+pub mod util;
+pub mod fs;
+pub mod oplog;
+pub mod cache;
+pub mod coherence;
+pub mod replication;
+pub mod cluster;
+pub mod coordinator;
+pub mod libfs;
+pub mod sharedfs;
+pub mod sim;
+pub mod baselines;
+pub mod runtime;
+pub mod workloads;
+pub mod metrics;
+pub mod bench;
+
+pub use hw::clock::Nanos;

@@ -1,0 +1,340 @@
+//! LibFS — the process-local library file system (paper §3, Fig. 1b).
+//!
+//! Each application process links a LibFS: POSIX calls are **function
+//! calls** (kernel bypass), writes append to a process-private update
+//! log in NVM, and reads are served from (in order) the log's in-memory
+//! index, the private DRAM read cache, the local SharedFS cache, a
+//! reserve replica, and cold storage. This module holds the per-process
+//! state; the cross-process/cross-node paths (replication, digestion,
+//! lease RPCs) are orchestrated by [`crate::sim::assise`] which owns the
+//! devices and fabric.
+
+use std::collections::HashMap;
+
+use crate::cache::ReadCache;
+use crate::coherence::LeaseTable;
+use crate::fs::{Fd, FileStore, FsError, NodeId, Result, SocketId};
+use crate::hw::clock::Clock;
+use crate::oplog::{LogOp, UpdateLog};
+use crate::Nanos;
+
+/// An open file description.
+#[derive(Debug, Clone)]
+pub struct OpenFile {
+    pub path: String,
+    pub offset: u64,
+}
+
+/// Per-process LibFS state.
+#[derive(Debug)]
+pub struct LibFs {
+    pub id: usize,
+    pub node: NodeId,
+    pub socket: SocketId,
+    pub clock: Clock,
+    pub alive: bool,
+    /// credentials of the owning process (§3.2: UNIX ownership enforced
+    /// by SharedFS on lease grant/eviction)
+    pub cred: crate::fs::Cred,
+
+    /// process-private update log (NVM)
+    pub log: UpdateLog,
+    /// in-memory index materializing the log's effects ("log hashtable" +
+    /// extent view, §A.2) — answers reads of this process's own writes
+    pub log_view: FileStore,
+    /// process-private DRAM read cache
+    pub read_cache: ReadCache,
+    /// leases delegated to this LibFS (PerProcess policy)
+    pub leases: LeaseTable,
+    /// paths this process has unlinked / renamed-away whose deletion has
+    /// not yet been digested into the shared areas — the shared store
+    /// still shows them, so existence checks must consult this set
+    pub tombstones: std::collections::HashSet<String>,
+    /// in-flight background digests, FIFO: (log seq covered, completes at).
+    /// Depth > 1 lets digestion pipeline behind the application (§A.1).
+    pub pending_digest: std::collections::VecDeque<(u64, Nanos)>,
+
+    fds: HashMap<Fd, OpenFile>,
+    next_fd: Fd,
+
+    /// latency of the last completed operation
+    pub last_latency: Nanos,
+    /// cumulative counters
+    pub ops: u64,
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+}
+
+impl LibFs {
+    pub fn new(
+        id: usize,
+        node: NodeId,
+        socket: SocketId,
+        log_capacity: u64,
+        read_cache_capacity: u64,
+    ) -> Self {
+        Self {
+            id,
+            node,
+            socket,
+            clock: Clock::new(),
+            alive: true,
+            cred: crate::fs::Cred::ROOT,
+            log: UpdateLog::new(log_capacity),
+            log_view: FileStore::new(),
+            read_cache: ReadCache::new(read_cache_capacity),
+            leases: LeaseTable::new(),
+            tombstones: std::collections::HashSet::new(),
+            pending_digest: std::collections::VecDeque::new(),
+            fds: HashMap::new(),
+            next_fd: 3,
+            last_latency: 0,
+            ops: 0,
+            bytes_written: 0,
+            bytes_read: 0,
+        }
+    }
+
+    // ------------------------------------------------------------- fds
+
+    pub fn install_fd(&mut self, path: String) -> Fd {
+        let fd = self.next_fd;
+        self.next_fd += 1;
+        self.fds.insert(fd, OpenFile { path, offset: 0 });
+        fd
+    }
+
+    pub fn fd(&self, fd: Fd) -> Result<&OpenFile> {
+        self.fds.get(&fd).ok_or(FsError::BadFd(fd))
+    }
+
+    pub fn fd_mut(&mut self, fd: Fd) -> Result<&mut OpenFile> {
+        self.fds.get_mut(&fd).ok_or(FsError::BadFd(fd))
+    }
+
+    pub fn remove_fd(&mut self, fd: Fd) -> Result<OpenFile> {
+        self.fds.remove(&fd).ok_or(FsError::BadFd(fd))
+    }
+
+    pub fn open_paths(&self) -> impl Iterator<Item = &str> {
+        self.fds.values().map(|o| o.path.as_str())
+    }
+
+    // ------------------------------------------------------------- log
+
+    /// Append an op to the update log and mirror it into the in-memory
+    /// view. Returns (seq, bytes appended).
+    pub fn log_append(&mut self, op: LogOp, now: Nanos) -> (u64, u64) {
+        let (seq, bytes) = self.log.append(op.clone());
+        // the view is a process-local overlay: ancestors created by OTHER
+        // processes (already digested to SharedFS) may be absent — shadow
+        // them so the op applies
+        let shadow = |view: &mut FileStore, path: &str| {
+            let parent = crate::fs::path::dirname(path);
+            if parent != "/" && !view.exists(&parent) {
+                let _ = view.mkdir_p(
+                    &parent,
+                    crate::fs::Mode::DEFAULT_DIR,
+                    crate::fs::Cred::ROOT,
+                    now,
+                );
+            }
+        };
+        match &op {
+            LogOp::Create { path, .. } | LogOp::Mkdir { path, .. } => {
+                shadow(&mut self.log_view, path);
+                self.tombstones.remove(path);
+            }
+            LogOp::Write { path, .. } | LogOp::Truncate { path, .. } => {
+                shadow(&mut self.log_view, path);
+                // a write to a file created by ANOTHER process (it lives
+                // in the shared store, not this view): shadow the file so
+                // the op lands in the view and our own reads see it
+                if !self.log_view.exists(path) {
+                    let _ = self.log_view.create(
+                        path,
+                        crate::fs::Mode::DEFAULT_FILE,
+                        crate::fs::Cred::ROOT,
+                        now,
+                    );
+                }
+                self.tombstones.remove(path);
+            }
+            LogOp::Rename { from, to } => {
+                shadow(&mut self.log_view, to);
+                // a rename of a file not in the view (digested already):
+                // shadow the source so the view rename applies
+                if !self.log_view.exists(from) {
+                    shadow(&mut self.log_view, from);
+                    let _ = self.log_view.create(
+                        from,
+                        crate::fs::Mode::DEFAULT_FILE,
+                        crate::fs::Cred::ROOT,
+                        now,
+                    );
+                }
+                self.tombstones.insert(from.clone());
+                self.tombstones.remove(to);
+            }
+            LogOp::Unlink { path } => {
+                self.tombstones.insert(path.clone());
+            }
+        }
+        // mirror into the in-memory view (ops are absolute-state)
+        let _ = crate::oplog::apply_entries(
+            &mut self.log_view,
+            &[crate::oplog::LogEntry { seq, op }],
+            seq - 1,
+            crate::fs::Tier::Hot,
+            now,
+        );
+        (seq, bytes)
+    }
+
+    /// Process crash: volatile state (DRAM read cache, in-memory view,
+    /// fd table) is lost; the NVM log survives. `log_view` is rebuilt on
+    /// recovery by replaying the surviving log.
+    pub fn crash_volatile(&mut self) {
+        self.alive = false;
+        self.read_cache.clear();
+        self.log_view = FileStore::new();
+        self.fds.clear();
+        self.leases = LeaseTable::new();
+        // tombstones are derived from the (persistent) log: rebuilt in
+        // rebuild_view
+        self.tombstones.clear();
+    }
+
+    /// Rebuild the in-memory log view from the live log entries
+    /// (process restart after crash; §3.4 LibFS recovery).
+    pub fn rebuild_view(&mut self, now: Nanos) {
+        let entries: Vec<_> = self.log.all().cloned().collect();
+        let mut view = FileStore::new();
+        let _ = crate::oplog::apply_entries(&mut view, &entries, 0, crate::fs::Tier::Hot, now);
+        self.log_view = view;
+        for e in &entries {
+            match &e.op {
+                crate::oplog::LogOp::Unlink { path } => {
+                    self.tombstones.insert(path.clone());
+                }
+                crate::oplog::LogOp::Rename { from, to } => {
+                    self.tombstones.insert(from.clone());
+                    self.tombstones.remove(to);
+                }
+                op => {
+                    self.tombstones.remove(op.path());
+                }
+            }
+        }
+        self.alive = true;
+    }
+
+    /// Drop log-view and read-cache state for a path subtree (lease
+    /// release invalidation, §3.2). The caller must have digested the
+    /// log first.
+    pub fn invalidate_subtree(&mut self, subtree: &str) {
+        // collect inos in view under subtree, drop from read cache
+        let inos: Vec<u64> = self
+            .log_view_paths()
+            .into_iter()
+            .filter(|(_, p)| crate::fs::path::is_subtree_of(p, subtree))
+            .map(|(i, _)| i)
+            .collect();
+        for ino in inos {
+            self.read_cache.invalidate_ino(ino);
+            self.log_view.invalidate_ino(ino);
+        }
+    }
+
+    fn log_view_paths(&self) -> Vec<(u64, String)> {
+        // walk the view's path index
+        let mut out = Vec::new();
+        let mut stack = vec!["/".to_string()];
+        while let Some(dir) = stack.pop() {
+            if let Ok(names) = self.log_view.readdir(&dir) {
+                for n in names {
+                    let p = if dir == "/" { format!("/{n}") } else { format!("{dir}/{n}") };
+                    if let Ok(st) = self.log_view.stat(&p) {
+                        out.push((st.ino, p.clone()));
+                        if st.is_dir {
+                            stack.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fs::{Cred, Mode, Payload};
+
+    fn libfs() -> LibFs {
+        LibFs::new(0, 0, 0, 1 << 20, 1 << 20)
+    }
+
+    fn create(path: &str) -> LogOp {
+        LogOp::Create { path: path.into(), mode: Mode::DEFAULT_FILE, owner: Cred::ROOT }
+    }
+
+    #[test]
+    fn fd_lifecycle() {
+        let mut l = libfs();
+        let fd = l.install_fd("/f".into());
+        assert_eq!(l.fd(fd).unwrap().path, "/f");
+        l.fd_mut(fd).unwrap().offset = 10;
+        assert_eq!(l.fd(fd).unwrap().offset, 10);
+        l.remove_fd(fd).unwrap();
+        assert!(matches!(l.fd(fd), Err(FsError::BadFd(_))));
+    }
+
+    #[test]
+    fn log_append_updates_view() {
+        let mut l = libfs();
+        l.log_append(create("/f"), 0);
+        l.log_append(
+            LogOp::Write { path: "/f".into(), off: 0, data: Payload::bytes(b"abc".to_vec()) },
+            1,
+        );
+        let ino = l.log_view.resolve("/f").unwrap();
+        assert_eq!(l.log_view.read_at(ino, 0, 3).unwrap().0.materialize(), b"abc");
+        assert_eq!(l.log.tail_seq(), 2);
+    }
+
+    #[test]
+    fn crash_loses_volatile_keeps_log() {
+        let mut l = libfs();
+        l.log_append(create("/f"), 0);
+        l.log_append(
+            LogOp::Write { path: "/f".into(), off: 0, data: Payload::bytes(b"xyz".to_vec()) },
+            1,
+        );
+        l.crash_volatile();
+        assert!(!l.alive);
+        assert!(!l.log_view.exists("/f")); // view gone
+        assert_eq!(l.log.tail_seq(), 2); // NVM log intact
+        l.rebuild_view(2);
+        assert!(l.alive);
+        let ino = l.log_view.resolve("/f").unwrap();
+        assert_eq!(l.log_view.read_at(ino, 0, 3).unwrap().0.materialize(), b"xyz");
+    }
+
+    #[test]
+    fn invalidate_subtree_clears_view_extents() {
+        let mut l = libfs();
+        l.log_append(create("/d_file"), 0);
+        l.log_append(
+            LogOp::Write { path: "/d_file".into(), off: 0, data: Payload::bytes(vec![1; 8]) },
+            1,
+        );
+        l.invalidate_subtree("/d_file");
+        let ino = l.log_view.resolve("/d_file").unwrap();
+        // extents cleared (data must be refetched from SharedFS)
+        let (p, n) = l.log_view.read_at(ino, 0, 8).unwrap();
+        assert_eq!(n, 0);
+        assert_eq!(p.materialize(), vec![0; 8]); // hole
+    }
+}

@@ -1,0 +1,168 @@
+//! Assise CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! - `bench <exp|all> [--scale F]` — regenerate a paper table/figure
+//!   (see `assise list`);
+//! - `list` — list experiments;
+//! - `selfcheck` — load the AOT PJRT artifacts and validate the L1
+//!   kernels against the in-crate oracles (end-to-end three-layer
+//!   smoke test);
+//! - `demo` — tiny end-to-end cluster walkthrough.
+
+use assise::bench::{self, Scale};
+use assise::fs::Payload;
+use assise::sim::{Cluster, ClusterConfig, DistFs};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: assise <command>\n\
+         \n\
+         commands:\n\
+           bench <exp|all> [--scale F] [--out FILE]   regenerate paper results\n\
+           list                                       list experiments\n\
+           selfcheck                                  validate AOT kernels (PJRT)\n\
+           demo                                       2-node write/replicate/failover demo"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("list") => {
+            for e in bench::EXPERIMENTS {
+                println!("{e}");
+            }
+        }
+        Some("bench") => {
+            let exp = args.get(1).cloned().unwrap_or_else(|| usage());
+            let mut scale = Scale::default();
+            let mut out: Option<String> = None;
+            let mut i = 2;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--scale" => {
+                        scale = Scale(args.get(i + 1).and_then(|s| s.parse().ok()).unwrap_or(1.0));
+                        i += 2;
+                    }
+                    "--out" => {
+                        out = args.get(i + 1).cloned();
+                        i += 2;
+                    }
+                    other => {
+                        eprintln!("unknown flag {other}");
+                        usage();
+                    }
+                }
+            }
+            let names: Vec<&str> = if exp == "all" {
+                bench::EXPERIMENTS.to_vec()
+            } else {
+                vec![exp.as_str()]
+            };
+            let mut rendered = String::new();
+            for name in names {
+                match bench::run(name, scale) {
+                    Some(tables) => {
+                        for t in tables {
+                            t.print();
+                            rendered.push_str(&t.render());
+                        }
+                    }
+                    None => {
+                        eprintln!("unknown experiment '{name}' (try `assise list`)");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            if let Some(path) = out {
+                std::fs::write(&path, rendered).expect("write --out file");
+                eprintln!("wrote {path}");
+            }
+        }
+        Some("selfcheck") => selfcheck(),
+        Some("demo") => demo(),
+        _ => usage(),
+    }
+}
+
+/// End-to-end three-layer check: load the AOT HLO artifacts through
+/// PJRT and compare kernel outputs against the pure-Rust oracles.
+fn selfcheck() {
+    use assise::runtime::{
+        checksum_ref, partition_ref, ChecksumExec, PartitionExec, CHECKSUM_WORDS,
+    };
+    use assise::util::SplitMix64;
+
+    println!("artifacts dir: {}", assise::runtime::artifacts_dir().display());
+    let mut failures = 0;
+
+    match ChecksumExec::load() {
+        Ok(exec) => {
+            let mut rng = SplitMix64::new(1);
+            let blocks: Vec<Vec<i32>> = (0..8)
+                .map(|_| (0..CHECKSUM_WORDS).map(|_| rng.next_u32() as i32).collect())
+                .collect();
+            let got = exec.checksum_batch(&blocks).expect("execute");
+            let ok = got
+                .iter()
+                .zip(&blocks)
+                .all(|(&(s1, s2), b)| (s1, s2) == checksum_ref(b));
+            println!("checksum kernel (PJRT) vs oracle: {}", if ok { "OK" } else { "MISMATCH" });
+            if !ok {
+                failures += 1;
+            }
+        }
+        Err(e) => {
+            println!("checksum kernel: FAILED TO LOAD ({e}) — run `make artifacts`");
+            failures += 1;
+        }
+    }
+
+    match PartitionExec::load() {
+        Ok(exec) => {
+            let mut rng = SplitMix64::new(2);
+            let keys: Vec<u32> = (0..10_000).map(|_| rng.next_u32()).collect();
+            let (ids, hist) = exec.partition(&keys).expect("execute");
+            let (eids, ehist) = partition_ref(&keys);
+            let ok = ids == eids && hist == ehist;
+            println!("partition kernel (PJRT) vs oracle: {}", if ok { "OK" } else { "MISMATCH" });
+            if !ok {
+                failures += 1;
+            }
+        }
+        Err(e) => {
+            println!("partition kernel: FAILED TO LOAD ({e}) — run `make artifacts`");
+            failures += 1;
+        }
+    }
+
+    std::process::exit(if failures == 0 { 0 } else { 1 });
+}
+
+/// Small 2-node demo: write, replicate, digest, fail over, read back.
+fn demo() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+    let pid = c.spawn_process(0, 0);
+    let fd = c.create(pid, "/demo").unwrap();
+    c.write(pid, fd, Payload::bytes(b"colocated NVM!".to_vec())).unwrap();
+    println!("write latency: {} ns (process-local NVM log)", c.last_latency(pid));
+    c.fsync(pid, fd).unwrap();
+    println!("fsync latency: {} ns (chain-replicated to node 1)", c.last_latency(pid));
+    c.digest_log(pid).unwrap();
+
+    let t = c.now(pid);
+    c.kill_node(0, t);
+    let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
+    println!(
+        "node 0 killed at t={} ms; detected {} ms later; fail-over work took {} us",
+        t / 1_000_000,
+        (report.detected_at - report.failed_at) / 1_000_000,
+        (report.first_op_at - report.detected_at) / 1_000,
+    );
+    let fd2 = c.open(np, "/demo").unwrap();
+    let data = c.pread(np, fd2, 0, 14).unwrap();
+    println!("read back on backup: {:?}", String::from_utf8_lossy(&data.materialize()));
+    assert_eq!(data.materialize(), b"colocated NVM!");
+    println!("demo OK");
+}

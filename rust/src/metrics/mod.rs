@@ -1,0 +1,206 @@
+//! Latency histograms and throughput accounting for the harnesses.
+
+use crate::Nanos;
+
+/// A simple exact-sample histogram (experiments collect ≤ a few million
+/// samples; exact percentiles beat HDR quantization at this scale).
+#[derive(Debug, Clone, Default)]
+pub struct Hist {
+    samples: Vec<Nanos>,
+    sorted: bool,
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: Nanos) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|&v| v as f64).sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&mut self, p: f64) -> Nanos {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        self.ensure_sorted();
+        let idx = ((self.samples.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn p50(&mut self) -> Nanos {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> Nanos {
+        self.percentile(99.0)
+    }
+
+    pub fn max(&mut self) -> Nanos {
+        self.ensure_sorted();
+        *self.samples.last().unwrap_or(&0)
+    }
+
+    pub fn min(&mut self) -> Nanos {
+        self.ensure_sorted();
+        *self.samples.first().unwrap_or(&0)
+    }
+
+    /// CDF points: (latency, cumulative fraction) at `steps` quantiles.
+    pub fn cdf(&mut self, steps: usize) -> Vec<(Nanos, f64)> {
+        self.ensure_sorted();
+        (1..=steps)
+            .map(|i| {
+                let f = i as f64 / steps as f64;
+                let idx = ((self.samples.len() as f64 - 1.0) * f).round() as usize;
+                (self.samples[idx], f)
+            })
+            .collect()
+    }
+}
+
+/// Throughput helper: ops (or bytes) over a virtual-time window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Throughput {
+    pub count: u64,
+    pub window_ns: Nanos,
+}
+
+impl Throughput {
+    pub fn per_sec(&self) -> f64 {
+        if self.window_ns == 0 {
+            return 0.0;
+        }
+        self.count as f64 * 1e9 / self.window_ns as f64
+    }
+
+    pub fn gb_per_sec(&self) -> f64 {
+        self.per_sec() / (1u64 << 30) as f64
+    }
+
+    pub fn mb_per_sec(&self) -> f64 {
+        self.per_sec() / (1u64 << 20) as f64
+    }
+}
+
+/// A time series of (virtual time, latency) points — Fig. 7's raw data.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(Nanos, Nanos)>,
+}
+
+impl TimeSeries {
+    pub fn record(&mut self, t: Nanos, v: Nanos) {
+        self.points.push((t, v));
+    }
+
+    /// Average latency over buckets of `bucket_ns`.
+    pub fn bucketed(&self, bucket_ns: Nanos) -> Vec<(Nanos, f64)> {
+        if self.points.is_empty() {
+            return vec![];
+        }
+        let mut out = Vec::new();
+        let start = self.points[0].0;
+        let mut cur = start;
+        let mut sum = 0u128;
+        let mut n = 0u64;
+        for &(t, v) in &self.points {
+            while t >= cur + bucket_ns {
+                if n > 0 {
+                    out.push((cur, sum as f64 / n as f64));
+                }
+                sum = 0;
+                n = 0;
+                cur += bucket_ns;
+            }
+            sum += v as u128;
+            n += 1;
+        }
+        if n > 0 {
+            out.push((cur, sum as f64 / n as f64));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut h = Hist::new();
+        for i in 1..=100 {
+            h.record(i);
+        }
+        let p50 = h.p50();
+        assert!(p50 == 50 || p50 == 51, "p50={p50}");
+        assert_eq!(h.p99(), 99);
+        assert_eq!(h.percentile(100.0), 100);
+        assert_eq!(h.min(), 1);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Throughput { count: 1 << 30, window_ns: 1_000_000_000 };
+        assert!((t.gb_per_sec() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut h = Hist::new();
+        for i in 0..1000 {
+            h.record(i * 3);
+        }
+        let cdf = h.cdf(10);
+        assert_eq!(cdf.len(), 10);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 < w[1].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeseries_buckets() {
+        let mut ts = TimeSeries::default();
+        for i in 0..100u64 {
+            ts.record(i * 10, 100 + i);
+        }
+        let b = ts.bucketed(250);
+        assert!(b.len() >= 3);
+        // later buckets have higher average latency
+        assert!(b.last().unwrap().1 > b[0].1);
+    }
+
+    #[test]
+    fn empty_hist_safe() {
+        let mut h = Hist::new();
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

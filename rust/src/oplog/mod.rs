@@ -1,0 +1,27 @@
+//! The operational update log — the heart of Assise's write path and of
+//! CC-NVM's crash-consistency story (paper §3.2, §3.3, §A.1).
+//!
+//! Every POSIX update is recorded **at operation granularity** (no block
+//! amplification) in a process-private log in NVM. The log is:
+//!
+//! - the unit of *local persistence* (a write is durable once its log
+//!   entry is flushed — Assise persists at write time);
+//! - the unit of *replication* (chain replication ships log entries, in
+//!   order, via one-sided RDMA — [`crate::replication`]);
+//! - the unit of *digest/eviction* (when the log fills, its contents are
+//!   applied to the SharedFS shared areas on every replica and the log is
+//!   reclaimed — [`digest`]);
+//! - the unit of *recovery* (replaying a prefix of the log yields prefix
+//!   crash-consistency; digest replay is idempotent).
+
+pub mod op;
+pub mod update_log;
+pub mod coalesce;
+pub mod digest;
+pub mod resize;
+
+pub use coalesce::coalesce;
+pub use digest::{apply_entries, DigestStats};
+pub use op::{LogEntry, LogOp, ENTRY_HEADER_BYTES};
+pub use resize::{ResizeOutcome, ResizePolicy, Vote};
+pub use update_log::UpdateLog;

@@ -1,0 +1,110 @@
+//! Dynamic update-log resizing (paper §B.2).
+//!
+//! "SharedFS can resize logs upon eviction/digestion ... SharedFS uses a
+//! two-phase commit protocol to enforce identical log size across cache
+//! replicas." Phase 1 (PREPARE) asks every replica to reserve the new
+//! size — any replica may deny (e.g. out of NVM); phase 2 COMMITs (all
+//! accepted) or ABORTs. Growth is multiplicative up to a threshold and
+//! additive beyond it (the NOVA-style policy the paper cites).
+
+use crate::Nanos;
+
+/// Growth policy: double below the knee, fixed increments above it.
+#[derive(Debug, Clone)]
+pub struct ResizePolicy {
+    /// multiplicative growth below this size
+    pub knee: u64,
+    /// additive increment above the knee
+    pub increment: u64,
+    /// hard bounds
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for ResizePolicy {
+    fn default() -> Self {
+        Self {
+            knee: 256 << 20,
+            increment: 128 << 20,
+            min: 16 << 20,
+            max: 2 << 30,
+        }
+    }
+}
+
+impl ResizePolicy {
+    /// Next size when the log at `current` is under pressure.
+    pub fn grow(&self, current: u64) -> u64 {
+        let next = if current < self.knee {
+            current.saturating_mul(2)
+        } else {
+            current.saturating_add(self.increment)
+        };
+        next.clamp(self.min, self.max)
+    }
+
+    /// Next size when the log is persistently underused.
+    pub fn shrink(&self, current: u64) -> u64 {
+        (current / 2).clamp(self.min, self.max)
+    }
+}
+
+/// One replica's vote in the two-phase protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vote {
+    /// space reserved, ready to commit
+    Accept,
+    /// insufficient NVM (or other local constraint)
+    Deny,
+}
+
+/// Outcome of a resize round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResizeOutcome {
+    Committed { new_size: u64, completed_at: Nanos },
+    Aborted { denier: usize, completed_at: Nanos },
+}
+
+/// Pure 2PC state machine over votes (the sim supplies transport costs
+/// and reservation checks; this keeps the protocol testable in
+/// isolation).
+pub fn decide(votes: &[Vote], new_size: u64, completed_at: Nanos) -> ResizeOutcome {
+    match votes.iter().position(|&v| v == Vote::Deny) {
+        Some(denier) => ResizeOutcome::Aborted { denier, completed_at },
+        None => ResizeOutcome::Committed { new_size, completed_at },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn growth_doubles_then_increments() {
+        let p = ResizePolicy::default();
+        assert_eq!(p.grow(32 << 20), 64 << 20);
+        assert_eq!(p.grow(128 << 20), 256 << 20);
+        // at/above the knee: additive
+        assert_eq!(p.grow(256 << 20), (256 << 20) + (128 << 20));
+        assert_eq!(p.grow(2 << 30), 2 << 30); // clamped at max
+    }
+
+    #[test]
+    fn shrink_clamps_at_min() {
+        let p = ResizePolicy::default();
+        assert_eq!(p.shrink(64 << 20), 32 << 20);
+        assert_eq!(p.shrink(16 << 20), 16 << 20);
+    }
+
+    #[test]
+    fn unanimous_accept_commits() {
+        let o = decide(&[Vote::Accept, Vote::Accept, Vote::Accept], 1 << 30, 42);
+        assert_eq!(o, ResizeOutcome::Committed { new_size: 1 << 30, completed_at: 42 });
+    }
+
+    #[test]
+    fn single_deny_aborts() {
+        let o = decide(&[Vote::Accept, Vote::Deny, Vote::Accept], 1 << 30, 42);
+        assert_eq!(o, ResizeOutcome::Aborted { denier: 1, completed_at: 42 });
+    }
+}

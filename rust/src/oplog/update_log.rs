@@ -1,0 +1,241 @@
+//! The process-private update log (paper §3.2 "the write cache is an
+//! *update log*, rather than a block cache"; sizing study in §B).
+//!
+//! Watermarks (all sequence numbers, 1-based, inclusive):
+//!
+//! ```text
+//!                      digested_upto   replicated_upto    tail (next_seq-1)
+//!  reclaimed entries ↓ |               |                  |
+//!  ───────────────────┴───────────────┴──────────────────┘
+//!                       still in NVM — may be re-digested   not yet on
+//!                       on recovery (idempotent)            the chain
+//! ```
+//!
+//! Local persistence is immediate: Assise persists each entry at write
+//! time (store + CLWB). What distinguishes pessimistic from optimistic
+//! mode is when `replicated_upto` advances (fsync vs dsync/digest) — see
+//! [`crate::replication`].
+
+use std::collections::VecDeque;
+
+use super::op::{LogEntry, LogOp};
+
+#[derive(Debug, Clone)]
+pub struct UpdateLog {
+    entries: VecDeque<LogEntry>,
+    /// seq of entries.front() (entries below have been reclaimed)
+    head_seq: u64,
+    next_seq: u64,
+    /// highest seq acked by the full replication chain
+    pub replicated_upto: u64,
+    /// highest seq applied to the shared areas (digested)
+    pub digested_upto: u64,
+    /// NVM budget for this log (§B: default 1 GB)
+    capacity: u64,
+    used: u64,
+}
+
+impl UpdateLog {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            entries: VecDeque::new(),
+            head_seq: 1,
+            next_seq: 1,
+            replicated_upto: 0,
+            digested_upto: 0,
+            capacity,
+            used: 0,
+        }
+    }
+
+    /// Append an op; returns the entry's (seq, bytes).
+    pub fn append(&mut self, op: LogOp) -> (u64, u64) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let e = LogEntry { seq, op };
+        let bytes = e.bytes();
+        self.used += bytes;
+        self.entries.push_back(e);
+        (seq, bytes)
+    }
+
+    pub fn tail_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    /// Entries in `(from_seq, to_seq]` (exclusive/inclusive).
+    pub fn range(&self, from_seq: u64, to_seq: u64) -> impl Iterator<Item = &LogEntry> {
+        self.entries
+            .iter()
+            .filter(move |e| e.seq > from_seq && e.seq <= to_seq)
+    }
+
+    /// Entries not yet replicated.
+    pub fn unreplicated(&self) -> impl Iterator<Item = &LogEntry> {
+        let from = self.replicated_upto;
+        self.entries.iter().filter(move |e| e.seq > from)
+    }
+
+    pub fn unreplicated_bytes(&self) -> u64 {
+        self.unreplicated().map(|e| e.bytes()).sum()
+    }
+
+    /// Entries replicated but not yet digested.
+    pub fn undigested(&self) -> impl Iterator<Item = &LogEntry> {
+        let from = self.digested_upto;
+        let to = self.replicated_upto;
+        self.entries.iter().filter(move |e| e.seq > from && e.seq <= to)
+    }
+
+    pub fn mark_replicated(&mut self, upto: u64) {
+        self.replicated_upto = self.replicated_upto.max(upto.min(self.tail_seq()));
+    }
+
+    pub fn mark_digested(&mut self, upto: u64) {
+        self.digested_upto = self.digested_upto.max(upto.min(self.tail_seq()));
+        debug_assert!(self.digested_upto <= self.replicated_upto.max(self.digested_upto));
+    }
+
+    /// Reclaim NVM for entries `<= upto` (only valid once digested).
+    pub fn reclaim(&mut self, upto: u64) {
+        let upto = upto.min(self.digested_upto);
+        while let Some(front) = self.entries.front() {
+            if front.seq > upto {
+                break;
+            }
+            self.used -= front.bytes();
+            self.head_seq = front.seq + 1;
+            self.entries.pop_front();
+        }
+    }
+
+    /// Simulate a **node fail-over**: survivors only have the replicated
+    /// prefix. Returns the entries that were lost (for reporting).
+    pub fn truncate_to_replicated(&mut self) -> Vec<LogEntry> {
+        let keep = self.replicated_upto;
+        let mut lost = Vec::new();
+        while let Some(back) = self.entries.back() {
+            if back.seq <= keep {
+                break;
+            }
+            let e = self.entries.pop_back().unwrap();
+            self.used -= e.bytes();
+            lost.push(e);
+        }
+        self.next_seq = keep + 1;
+        lost.reverse();
+        lost
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn set_capacity(&mut self, cap: u64) {
+        self.capacity = cap;
+    }
+
+    /// Should a digest be triggered? (§A.1 "fills beyond a threshold";
+    /// Strata uses ~30%, we expose it.)
+    pub fn over_threshold(&self, frac: f64) -> bool {
+        self.used as f64 >= self.capacity as f64 * frac
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// All live entries (digest-on-recovery path).
+    pub fn all(&self) -> impl Iterator<Item = &LogEntry> {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fs::Payload;
+
+    fn w(path: &str, len: u64) -> LogOp {
+        LogOp::Write { path: path.into(), off: 0, data: Payload::zero(len) }
+    }
+
+    #[test]
+    fn append_sequences() {
+        let mut l = UpdateLog::new(1 << 20);
+        let (s1, _) = l.append(w("/a", 10));
+        let (s2, _) = l.append(w("/a", 10));
+        assert_eq!((s1, s2), (1, 2));
+        assert_eq!(l.tail_seq(), 2);
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn watermarks_and_ranges() {
+        let mut l = UpdateLog::new(1 << 20);
+        for _ in 0..5 {
+            l.append(w("/a", 100));
+        }
+        l.mark_replicated(3);
+        assert_eq!(l.unreplicated().count(), 2);
+        l.mark_digested(2);
+        assert_eq!(l.undigested().count(), 1); // seq 3
+        assert_eq!(l.range(1, 4).count(), 3); // 2,3,4
+    }
+
+    #[test]
+    fn reclaim_frees_only_digested() {
+        let mut l = UpdateLog::new(1 << 20);
+        for _ in 0..4 {
+            l.append(w("/a", 100));
+        }
+        let used0 = l.used();
+        l.mark_replicated(4);
+        l.mark_digested(2);
+        l.reclaim(4); // clamped to digested_upto=2
+        assert_eq!(l.len(), 2);
+        assert!(l.used() < used0);
+    }
+
+    #[test]
+    fn failover_truncates_to_replicated_prefix() {
+        let mut l = UpdateLog::new(1 << 20);
+        for _ in 0..5 {
+            l.append(w("/a", 10));
+        }
+        l.mark_replicated(3);
+        let lost = l.truncate_to_replicated();
+        assert_eq!(lost.len(), 2);
+        assert_eq!(lost[0].seq, 4);
+        assert_eq!(l.tail_seq(), 3);
+        // new appends continue the sequence
+        let (s, _) = l.append(w("/a", 10));
+        assert_eq!(s, 4);
+    }
+
+    #[test]
+    fn threshold_trips_at_fraction() {
+        let mut l = UpdateLog::new(10_000);
+        assert!(!l.over_threshold(0.3));
+        while !l.over_threshold(0.3) {
+            l.append(w("/a", 500));
+        }
+        assert!(l.used() >= 3_000);
+    }
+
+    #[test]
+    fn mark_replicated_clamps_to_tail() {
+        let mut l = UpdateLog::new(1 << 20);
+        l.append(w("/a", 1));
+        l.mark_replicated(99);
+        assert_eq!(l.replicated_upto, 1);
+    }
+}

@@ -1,0 +1,60 @@
+//! Replication layer: chain replication of update logs (paper §3.2 W2,
+//! §4.1) and reserve replicas (§3.5).
+//!
+//! The *mechanics* live close to the devices in
+//! [`crate::sim::assise::Cluster::replicate_log`] (one-sided RDMA writes
+//! hop-by-hop down the chain, ack returning along it) and
+//! [`crate::sim::assise::Cluster::digest_log`] (parallel digests). This
+//! module holds the pieces that are independent of the simulation state:
+//! chain-shape math used by the harnesses and tests.
+
+use crate::fs::NodeId;
+
+/// Expected chain-replication latency multiplier relative to a single
+/// hop: `k` replicas need `k-1` sequential forwards plus the ack path.
+/// (Fig. 2a: Assise-3r ≈ 2.2× Assise.)
+pub fn chain_hop_factor(replicas: usize) -> f64 {
+    if replicas <= 1 {
+        0.0
+    } else {
+        (replicas - 1) as f64
+    }
+}
+
+/// Parallel fan-out bandwidth multiplier (Ceph-style primary-copy):
+/// the primary transmits `k-1` full copies (Fig. 3's 3× network use).
+pub fn fanout_bandwidth_factor(replicas: usize) -> u64 {
+    replicas.saturating_sub(1) as u64
+}
+
+/// Split a chain into (cache replicas, reserve replicas) given the
+/// configured counts — mirrors `ClusterManager::set_chain` defaults.
+pub fn split_chain(nodes: &[NodeId], cache: usize) -> (Vec<NodeId>, Vec<NodeId>) {
+    let c = cache.min(nodes.len());
+    (nodes[..c].to_vec(), nodes[c..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hop_factor() {
+        assert_eq!(chain_hop_factor(1), 0.0);
+        assert_eq!(chain_hop_factor(2), 1.0);
+        assert_eq!(chain_hop_factor(3), 2.0);
+    }
+
+    #[test]
+    fn fanout_factor() {
+        assert_eq!(fanout_bandwidth_factor(3), 2);
+        assert_eq!(fanout_bandwidth_factor(1), 0);
+    }
+
+    #[test]
+    fn chain_split() {
+        let (c, r) = split_chain(&[0, 1, 2, 3], 2);
+        assert_eq!(c, vec![0, 1]);
+        assert_eq!(r, vec![2, 3]);
+    }
+}

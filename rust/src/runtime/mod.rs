@@ -1,0 +1,278 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them
+//! from the Rust hot path. Python never runs at request time.
+//!
+//! Interchange format is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax >= 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+//!
+//! Two executables, shapes fixed at AOT time (monomorphic PJRT):
+//!
+//! - `checksum.hlo.txt`: `(64, 1024) i32 -> (64, 2) i32` — Fletcher-pair
+//!   block checksums, used by SharedFS digest-integrity verification;
+//! - `partition.hlo.txt`: `(65536,) i32 -> ((65536,) i32, (256,) i32)` —
+//!   MinuteSort range partition (bucket ids + histogram).
+//!
+//! Rust pads the final partial batch; padding is subtracted where it
+//! matters (partition histograms).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::fs::Payload;
+
+pub const CHECKSUM_BLOCKS: usize = 64;
+pub const CHECKSUM_WORDS: usize = 1024;
+pub const PARTITION_KEYS: usize = 65536;
+pub const NUM_BUCKETS: usize = 256;
+
+/// Locate the artifacts directory: `$ASSISE_ARTIFACTS`, else
+/// `<crate root>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("ASSISE_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("loading HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+/// The digest-integrity checksum executable.
+pub struct ChecksumExec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for ChecksumExec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("ChecksumExec")
+    }
+}
+
+impl ChecksumExec {
+    pub fn load() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = load_exe(&client, &artifacts_dir().join("checksum.hlo.txt"))?;
+        Ok(Self { exe })
+    }
+
+    /// Checksum a batch of up to [`CHECKSUM_BLOCKS`] blocks of
+    /// [`CHECKSUM_WORDS`] words (zero-padded). Returns `(s1, s2)` per
+    /// block.
+    pub fn checksum_batch(&self, blocks: &[Vec<i32>]) -> Result<Vec<(i32, i32)>> {
+        assert!(blocks.len() <= CHECKSUM_BLOCKS);
+        let mut flat = vec![0i32; CHECKSUM_BLOCKS * CHECKSUM_WORDS];
+        for (b, words) in blocks.iter().enumerate() {
+            assert!(words.len() <= CHECKSUM_WORDS, "block too large");
+            flat[b * CHECKSUM_WORDS..b * CHECKSUM_WORDS + words.len()].copy_from_slice(words);
+        }
+        let input = xla::Literal::vec1(&flat)
+            .reshape(&[CHECKSUM_BLOCKS as i64, CHECKSUM_WORDS as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // model returns a 1-tuple
+        let v = out.to_vec::<i32>()?;
+        Ok((0..blocks.len()).map(|b| (v[2 * b], v[2 * b + 1])).collect())
+    }
+
+    /// Checksum arbitrary payloads (split into 4 KB blocks) and return
+    /// the Fletcher pairs. Used by the digest path as its integrity
+    /// check.
+    pub fn verify_payloads(&self, payloads: &[&Payload]) -> Result<Vec<(i32, i32)>> {
+        let mut blocks: Vec<Vec<i32>> = Vec::new();
+        for p in payloads {
+            let words = p.to_words();
+            if words.is_empty() {
+                blocks.push(Vec::new());
+                continue;
+            }
+            for chunk in words.chunks(CHECKSUM_WORDS) {
+                blocks.push(chunk.to_vec());
+            }
+        }
+        let mut out = Vec::with_capacity(blocks.len());
+        for batch in blocks.chunks(CHECKSUM_BLOCKS) {
+            out.extend(self.checksum_batch(batch)?);
+        }
+        Ok(out)
+    }
+}
+
+/// The MinuteSort range-partition executable.
+pub struct PartitionExec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for PartitionExec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("PartitionExec")
+    }
+}
+
+impl PartitionExec {
+    pub fn load() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = load_exe(&client, &artifacts_dir().join("partition.hlo.txt"))?;
+        Ok(Self { exe })
+    }
+
+    /// Partition up to [`PARTITION_KEYS`] keys. Padding keys
+    /// (key = u32::MAX) are subtracted from the final bucket and the id
+    /// vector is truncated to `keys.len()`.
+    pub fn partition(&self, keys: &[u32]) -> Result<(Vec<u32>, Vec<u32>)> {
+        assert!(keys.len() <= PARTITION_KEYS);
+        let pad = PARTITION_KEYS - keys.len();
+        let mut flat: Vec<i32> = keys.iter().map(|&k| k as i32).collect();
+        flat.resize(PARTITION_KEYS, u32::MAX as i32);
+        let input = xla::Literal::vec1(&flat).reshape(&[PARTITION_KEYS as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        let (buckets_lit, hist_lit) = result.to_tuple2()?;
+        let ids: Vec<i32> = buckets_lit.to_vec()?;
+        let mut hist: Vec<i32> = hist_lit.to_vec()?;
+        hist[NUM_BUCKETS - 1] -= pad as i32;
+        Ok((
+            ids[..keys.len()].iter().map(|&b| b as u32).collect(),
+            hist.into_iter().map(|h| h as u32).collect(),
+        ))
+    }
+
+    /// Partition an arbitrary number of keys by chunking.
+    pub fn partition_all(&self, keys: &[u32]) -> Result<(Vec<u32>, Vec<u32>)> {
+        let mut ids = Vec::with_capacity(keys.len());
+        let mut hist = vec![0u32; NUM_BUCKETS];
+        for chunk in keys.chunks(PARTITION_KEYS) {
+            let (i, h) = self.partition(chunk)?;
+            ids.extend(i);
+            for (acc, v) in hist.iter_mut().zip(h) {
+                *acc += v;
+            }
+        }
+        Ok((ids, hist))
+    }
+}
+
+/// Reference checksum in pure Rust (the same Fletcher pair as
+/// `kernels/ref.py`) — used by tests to validate the AOT executable end
+/// to end.
+pub fn checksum_ref(words: &[i32]) -> (i32, i32) {
+    const MOD: u64 = (1 << 31) - 1;
+    let mut s1: u64 = 0;
+    let mut s2: u64 = 0;
+    for (i, &w) in words.iter().enumerate() {
+        let wm = (w as u32 as u64) % MOD;
+        s1 = (s1 + wm) % MOD;
+        s2 = (s2 + wm * ((i as u64 + 1) % MOD)) % MOD;
+    }
+    (s1 as i32, s2 as i32)
+}
+
+/// Reference partition in pure Rust.
+pub fn partition_ref(keys: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let mut hist = vec![0u32; NUM_BUCKETS];
+    let ids: Vec<u32> = keys
+        .iter()
+        .map(|&k| {
+            let b = k >> (32 - 8);
+            hist[b as usize] += 1;
+            b
+        })
+        .collect();
+    (ids, hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("checksum.hlo.txt").exists()
+    }
+
+    #[test]
+    fn checksum_exec_matches_ref() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let exec = ChecksumExec::load().expect("load checksum exe");
+        let mut rng = SplitMix64::new(1);
+        let blocks: Vec<Vec<i32>> = (0..10)
+            .map(|_| (0..CHECKSUM_WORDS).map(|_| rng.next_u32() as i32).collect())
+            .collect();
+        let got = exec.checksum_batch(&blocks).unwrap();
+        for (b, &(s1, s2)) in got.iter().enumerate() {
+            let (e1, e2) = checksum_ref(&blocks[b]);
+            assert_eq!((s1, s2), (e1, e2), "block {b}");
+        }
+    }
+
+    #[test]
+    fn checksum_short_block_padded() {
+        if !have_artifacts() {
+            return;
+        }
+        let exec = ChecksumExec::load().unwrap();
+        let block = vec![5i32; 10];
+        let got = exec.checksum_batch(&[block.clone()]).unwrap();
+        let mut padded = block;
+        padded.resize(CHECKSUM_WORDS, 0);
+        assert_eq!(got[0], checksum_ref(&padded));
+    }
+
+    #[test]
+    fn partition_exec_matches_ref() {
+        if !have_artifacts() {
+            return;
+        }
+        let exec = PartitionExec::load().expect("load partition exe");
+        let mut rng = SplitMix64::new(2);
+        let keys: Vec<u32> = (0..PARTITION_KEYS).map(|_| rng.next_u32()).collect();
+        let (ids, hist) = exec.partition(&keys).unwrap();
+        let (eids, ehist) = partition_ref(&keys);
+        assert_eq!(ids, eids);
+        assert_eq!(hist, ehist);
+        assert_eq!(hist.iter().sum::<u32>() as usize, keys.len());
+    }
+
+    #[test]
+    fn partition_partial_batch_pads_correctly() {
+        if !have_artifacts() {
+            return;
+        }
+        let exec = PartitionExec::load().unwrap();
+        let keys: Vec<u32> = vec![0, 1 << 24, u32::MAX, 12345];
+        let (ids, hist) = exec.partition(&keys).unwrap();
+        let (eids, ehist) = partition_ref(&keys);
+        assert_eq!(ids, eids);
+        assert_eq!(hist, ehist);
+    }
+
+    #[test]
+    fn verify_payloads_blocks_payloads() {
+        if !have_artifacts() {
+            return;
+        }
+        let exec = ChecksumExec::load().unwrap();
+        let p1 = Payload::bytes(vec![1u8; 8192]); // 2 blocks
+        let p2 = Payload::bytes(vec![2u8; 100]); // partial block
+        let sums = exec.verify_payloads(&[&p1, &p2]).unwrap();
+        assert_eq!(sums.len(), 3);
+    }
+
+    #[test]
+    fn rust_ref_matches_python_oracle_values() {
+        let words = vec![1i32, 2, 3, 4];
+        let (s1, s2) = checksum_ref(&words);
+        assert_eq!(s1, 10);
+        assert_eq!(s2, 1 + 4 + 9 + 16);
+    }
+}

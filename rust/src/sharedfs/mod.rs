@@ -1,0 +1,263 @@
+//! SharedFS — the per-socket daemon (paper §3, Fig. 1b).
+//!
+//! A SharedFS instance owns the socket's shared areas (the digested
+//! second-level cache in NVM plus the cold area on SSD — tier tags in
+//! its [`FileStore`]), acts as a lease manager for subtrees delegated to
+//! it, enforces permissions/integrity on digest, and tracks per-process
+//! digest watermarks so digest replay after a crash is idempotent.
+//! The cross-node orchestration (chains, RPCs) lives in
+//! [`crate::sim::assise`].
+
+use std::collections::{HashMap, HashSet};
+
+use crate::coherence::LeaseTable;
+use crate::fs::{FileStore, Ino, NodeId, Result, SocketId, Tier};
+use crate::oplog::{apply_entries, DigestStats, LogEntry};
+
+/// Per-socket SharedFS daemon state.
+#[derive(Debug, Clone)]
+pub struct SharedFs {
+    pub node: NodeId,
+    pub socket: SocketId,
+    /// digested file-system state: Hot extents in this socket's NVM,
+    /// Cold extents on the node's SSD, Reserve on reserve replicas' NVM.
+    pub store: FileStore,
+    /// lease table for subtrees this SharedFS manages
+    pub leases: LeaseTable,
+    /// per-process-log digest watermark (idempotent replay, §3.4)
+    pub applied_upto: HashMap<usize, u64>,
+    /// the SharedFS log of lease transfers & digests — replicated for
+    /// crash consistency (§3.3); we track its size for cost accounting
+    pub sfs_log_bytes: u64,
+    /// inodes invalidated by epoch recovery: reads must refetch from a
+    /// live replica before serving (§3.4)
+    pub stale: HashSet<Ino>,
+    /// NVM budget for the hot area (beyond it, LRU-migrate to cold)
+    pub hot_capacity: u64,
+    /// cumulative digest stats
+    pub digests: u64,
+    pub digested_bytes: u64,
+    /// the daemon handles one lease operation at a time: this is the
+    /// serialization point that separates per-server from per-socket
+    /// lease sharding in Fig. 8
+    pub lease_busy_until: u64,
+}
+
+impl SharedFs {
+    pub fn new(node: NodeId, socket: SocketId, hot_capacity: u64) -> Self {
+        Self {
+            node,
+            socket,
+            store: FileStore::new(),
+            leases: LeaseTable::new(),
+            applied_upto: HashMap::new(),
+            sfs_log_bytes: 0,
+            stale: HashSet::new(),
+            hot_capacity,
+            digests: 0,
+            digested_bytes: 0,
+            lease_busy_until: 0,
+        }
+    }
+
+    /// Digest `entries` from process `pid`'s log into the shared areas.
+    /// Idempotent: entries at or below the watermark are skipped.
+    /// Returns stats (bytes applied drive the NVM-write cost the caller
+    /// charges).
+    pub fn digest(
+        &mut self,
+        pid: usize,
+        entries: &[LogEntry],
+        now: u64,
+    ) -> Result<DigestStats> {
+        let upto = *self.applied_upto.get(&pid).unwrap_or(&0);
+        let (stats, new_upto) = apply_entries(&mut self.store, entries, upto, Tier::Hot, now)?;
+        self.applied_upto.insert(pid, new_upto);
+        self.digests += 1;
+        self.digested_bytes += stats.data_bytes;
+        self.sfs_log_bytes += 64; // digest record
+        // freshly digested data supersedes stale marks for those inodes
+        for e in entries {
+            if let Ok(ino) = self.store.resolve(e.op.path()) {
+                self.stale.remove(&ino);
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Bytes currently in the hot area beyond budget (must migrate).
+    pub fn hot_overflow(&self) -> u64 {
+        if self.hot_capacity == u64::MAX {
+            return 0; // uncapped: skip the full-store extent scan
+        }
+        self.store.bytes_in_tier(Tier::Hot).saturating_sub(self.hot_capacity)
+    }
+
+    /// LRU-migrate hot extents to `target` tier until under budget.
+    /// Returns (bytes migrated, migration segments) for cost accounting.
+    pub fn migrate_lru(&mut self, target: Tier, now: u64) -> (u64, usize) {
+        let mut migrated = 0;
+        let mut segments = 0;
+        while self.hot_overflow() > 0 {
+            // find the LRU hot extent across all files
+            let victim = {
+                let mut best: Option<(Ino, u64, u64, u64)> = None; // ino, off, len, age
+                for (ino, path) in self.all_paths() {
+                    let _ = path;
+                    if let Some(n) = self.store.inode(ino) {
+                        if let Some((off, len)) = n.extents.oldest_access(Tier::Hot) {
+                            let age = n
+                                .extents
+                                .iter()
+                                .find(|(&s, _)| s == off)
+                                .map(|(_, e)| e.last_access)
+                                .unwrap_or(0);
+                            if best.is_none() || age < best.unwrap().3 {
+                                best = Some((ino, off, len, age));
+                            }
+                        }
+                    }
+                }
+                best
+            };
+            match victim {
+                Some((ino, off, len, _)) => {
+                    if let Some(n) = self.store.inode_mut(ino) {
+                        n.extents.retier(off, len, target, now);
+                    }
+                    migrated += len;
+                    segments += 1;
+                }
+                None => break, // nothing hot left
+            }
+        }
+        (migrated, segments)
+    }
+
+    /// Epoch recovery: mark `inos` stale (must refetch before serving).
+    pub fn invalidate_inos(&mut self, inos: &HashSet<Ino>) {
+        for &ino in inos {
+            if self.store.inode(ino).is_some() {
+                self.store.invalidate_ino(ino);
+                self.stale.insert(ino);
+            }
+        }
+    }
+
+    pub fn is_stale(&self, ino: Ino) -> bool {
+        self.stale.contains(&ino)
+    }
+
+    /// Refetch completed: data for `ino` re-installed from a live replica.
+    pub fn mark_fresh(&mut self, ino: Ino) {
+        self.stale.remove(&ino);
+    }
+
+    fn all_paths(&self) -> Vec<(Ino, String)> {
+        let mut out = Vec::new();
+        let mut stack = vec!["/".to_string()];
+        while let Some(dir) = stack.pop() {
+            if let Ok(names) = self.store.readdir(&dir) {
+                for n in names {
+                    let p = if dir == "/" { format!("/{n}") } else { format!("{dir}/{n}") };
+                    if let Ok(st) = self.store.stat(&p) {
+                        out.push((st.ino, p.clone()));
+                        if st.is_dir {
+                            stack.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fs::{Cred, Mode, Payload};
+    use crate::oplog::LogOp;
+
+    fn entries() -> Vec<LogEntry> {
+        vec![
+            LogEntry {
+                seq: 1,
+                op: LogOp::Create {
+                    path: "/f".into(),
+                    mode: Mode::DEFAULT_FILE,
+                    owner: Cred::ROOT,
+                },
+            },
+            LogEntry {
+                seq: 2,
+                op: LogOp::Write {
+                    path: "/f".into(),
+                    off: 0,
+                    data: Payload::bytes(vec![9u8; 4096]),
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn digest_applies_and_is_idempotent() {
+        let mut s = SharedFs::new(0, 0, 1 << 30);
+        let st1 = s.digest(7, &entries(), 1).unwrap();
+        assert_eq!(st1.applied, 2);
+        let st2 = s.digest(7, &entries(), 2).unwrap();
+        assert_eq!(st2.applied, 0);
+        assert_eq!(st2.skipped, 2);
+        assert!(s.store.exists("/f"));
+    }
+
+    #[test]
+    fn per_process_watermarks_independent() {
+        let mut s = SharedFs::new(0, 0, 1 << 30);
+        s.digest(1, &entries(), 1).unwrap();
+        // a different process's log starts at seq 1 too
+        let other = vec![LogEntry {
+            seq: 1,
+            op: LogOp::Create {
+                path: "/g".into(),
+                mode: Mode::DEFAULT_FILE,
+                owner: Cred::ROOT,
+            },
+        }];
+        let st = s.digest(2, &other, 2).unwrap();
+        assert_eq!(st.applied, 1);
+        assert!(s.store.exists("/g"));
+    }
+
+    #[test]
+    fn hot_overflow_migrates_to_cold() {
+        let mut s = SharedFs::new(0, 0, 2048); // tiny hot budget
+        s.digest(1, &entries(), 1).unwrap(); // 4 KB hot
+        assert!(s.hot_overflow() > 0);
+        let (migrated, _) = s.migrate_lru(Tier::Cold, 2);
+        assert!(migrated >= 2048);
+        assert_eq!(s.hot_overflow(), 0);
+        // contents intact
+        let ino = s.store.resolve("/f").unwrap();
+        assert_eq!(
+            s.store.read_at(ino, 0, 4096).unwrap().0.materialize(),
+            vec![9u8; 4096]
+        );
+    }
+
+    #[test]
+    fn stale_marks_cleared_by_digest() {
+        let mut s = SharedFs::new(0, 0, 1 << 30);
+        s.digest(1, &entries(), 1).unwrap();
+        let ino = s.store.resolve("/f").unwrap();
+        s.invalidate_inos(&HashSet::from([ino]));
+        assert!(s.is_stale(ino));
+        // re-digest newer writes to the same file clears staleness
+        let more = vec![LogEntry {
+            seq: 3,
+            op: LogOp::Write { path: "/f".into(), off: 0, data: Payload::bytes(vec![1u8; 16]) },
+        }];
+        s.digest(1, &more, 3).unwrap();
+        assert!(!s.is_stale(ino));
+    }
+}

@@ -1,0 +1,65 @@
+//! The common distributed-file-system API.
+//!
+//! Every evaluated system — Assise ([`super::assise::Cluster`]) and the
+//! three baselines ([`crate::baselines`]) — implements `DistFs`, so the
+//! workload generators and figure harnesses drive all of them through
+//! identical op streams. POSIX-shaped on purpose: the paper's headline
+//! claim is that the *unmodified* POSIX API can be fast.
+
+use crate::fs::{Fd, Payload, ProcId, Result, Stat};
+use crate::hw::params::HwParams;
+use crate::hw::Nanos;
+
+pub trait DistFs {
+    /// System name for harness output.
+    fn name(&self) -> &'static str;
+
+    fn params(&self) -> &HwParams;
+
+    /// Spawn an application process on `node`/`socket`; returns its id.
+    fn spawn_process(&mut self, node: usize, socket: usize) -> ProcId;
+
+    /// Virtual time of `pid`'s clock.
+    fn now(&self, pid: ProcId) -> Nanos;
+
+    /// Force `pid`'s clock (lockstep multi-process drivers).
+    fn set_now(&mut self, pid: ProcId, t: Nanos);
+
+    /// Latency of `pid`'s last completed op.
+    fn last_latency(&self, pid: ProcId) -> Nanos;
+
+    // ------------------------------------------------------------ POSIX
+
+    fn create(&mut self, pid: ProcId, path: &str) -> Result<Fd>;
+    fn open(&mut self, pid: ProcId, path: &str) -> Result<Fd>;
+    fn close(&mut self, pid: ProcId, fd: Fd) -> Result<()>;
+
+    /// Append-at-cursor write.
+    fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()>;
+    /// Positional write (does not move the cursor).
+    fn pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload) -> Result<()>;
+
+    /// Read at cursor, advancing it.
+    fn read(&mut self, pid: ProcId, fd: Fd, len: u64) -> Result<Payload>;
+    /// Positional read.
+    fn pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64) -> Result<Payload>;
+
+    fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()>;
+
+    fn mkdir(&mut self, pid: ProcId, path: &str) -> Result<()>;
+
+    /// Truncate (or extend with zeros) a file to `size`.
+    fn truncate(&mut self, pid: ProcId, path: &str, size: u64) -> Result<()> {
+        let _ = (pid, path, size);
+        Err(crate::fs::FsError::NotSupported("truncate"))
+    }
+    fn rename(&mut self, pid: ProcId, from: &str, to: &str) -> Result<()>;
+    fn unlink(&mut self, pid: ProcId, path: &str) -> Result<()>;
+    fn stat(&mut self, pid: ProcId, path: &str) -> Result<Stat>;
+
+    /// Optimistic-mode persistence barrier (Assise only; baselines treat
+    /// it as fsync).
+    fn dsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        self.fsync(pid, fd)
+    }
+}

@@ -1,0 +1,1456 @@
+//! The Assise cluster: LibFS + SharedFS + CC-NVM + chain replication on
+//! the simulated testbed. This is the system under test for every
+//! "Assise" series in the paper's figures.
+//!
+//! Key paths (paper §3.2, §A):
+//!
+//! - **write**: lease → append to process-private NVM log (function
+//!   call, kernel bypass) — done. `fsync` (pessimistic) chain-replicates
+//!   the unreplicated log suffix via one-sided RDMA; `dsync`
+//!   (optimistic) does the same after coalescing.
+//! - **read**: log view → DRAM read cache → local SharedFS hot area
+//!   (NVM) → reserve replica (RDMA) → cold SSD, with block prefetch.
+//! - **digest**: when the log fills past the threshold, replicate then
+//!   apply to every chain replica's shared areas in parallel; verify
+//!   integrity (optionally with the AOT Pallas checksum kernel); then
+//!   LRU-migrate hot overflow to cold (reserve replicas keep a reserve
+//!   tier in NVM instead).
+
+
+use crate::cluster::manager::{Chain, ClusterManager};
+use crate::coherence::lease::{Acquire, LeaseMode};
+use crate::coherence::ManagerPolicy;
+use crate::fs::path::{dirname, is_subtree_of, normalize};
+use crate::fs::{Cred, Fd, FsError, Mode, NodeId, Payload, ProcId, Result, SocketId, Stat, Tier};
+use crate::hw::numa::{Interconnect, XSocketMode};
+use crate::hw::nvm::{DramDevice, NvmDevice, Pattern};
+use crate::hw::params::HwParams;
+use crate::hw::rdma::Fabric;
+use crate::hw::ssd::SsdDevice;
+use crate::libfs::LibFs;
+use crate::oplog::{coalesce, LogEntry, LogOp};
+use crate::sharedfs::SharedFs;
+use crate::sim::api::DistFs;
+use crate::sim::{ClusterConfig, CrashMode};
+use crate::Nanos;
+
+/// One socket: NVM device + SharedFS daemon.
+#[derive(Debug)]
+pub struct SocketUnit {
+    pub nvm: NvmDevice,
+    pub sharedfs: SharedFs,
+}
+
+/// One machine.
+#[derive(Debug)]
+pub struct Node {
+    pub sockets: Vec<SocketUnit>,
+    pub dram: DramDevice,
+    pub ssd: SsdDevice,
+    pub interconnect: Interconnect,
+    pub alive: bool,
+}
+
+/// The simulated Assise deployment.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub mgr: ClusterManager,
+    pub fabric: Fabric,
+    pub nodes: Vec<Node>,
+    pub procs: Vec<LibFs>,
+    /// directory-subtree -> home socket for digested data (§5.2 Fig. 3
+    /// cross-socket experiment; default socket 0)
+    subtree_socket: Vec<(String, SocketId)>,
+    /// optional digest-integrity verifier (AOT checksum kernel)
+    pub verifier: Option<crate::runtime::ChecksumExec>,
+    /// cumulative replication traffic (wire bytes)
+    pub replicated_bytes: u64,
+    /// bytes saved by optimistic coalescing
+    pub coalesce_saved_bytes: u64,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        let chain = Chain {
+            cache_replicas: (0..cfg.replication_factor.min(cfg.nodes)).collect(),
+            reserve_replicas: (cfg.replication_factor.min(cfg.nodes)
+                ..(cfg.replication_factor + cfg.reserve_replicas).min(cfg.nodes))
+                .collect(),
+        };
+        let mgr = ClusterManager::new(cfg.nodes, chain);
+        let fabric = Fabric::new(cfg.nodes);
+        let nodes = (0..cfg.nodes)
+            .map(|n| Node {
+                sockets: (0..cfg.sockets_per_node)
+                    .map(|s| SocketUnit {
+                        nvm: NvmDevice::new(cfg.nvm_per_socket, (n * 31 + s) as u64 + 1),
+                        sharedfs: SharedFs::new(n, s, cfg.hot_capacity),
+                    })
+                    .collect(),
+                dram: DramDevice::new(cfg.dram_per_node),
+                ssd: SsdDevice::new(cfg.ssd_per_node),
+                interconnect: Interconnect::new(),
+                alive: true,
+            })
+            .collect();
+        Self {
+            cfg,
+            mgr,
+            fabric,
+            nodes,
+            procs: Vec::new(),
+            subtree_socket: Vec::new(),
+            verifier: None,
+            replicated_bytes: 0,
+            coalesce_saved_bytes: 0,
+        }
+    }
+
+    pub fn p(&self) -> HwParams {
+        self.cfg.params.clone()
+    }
+
+    /// Set a process's credentials (tests exercise the §3.2 permission
+    /// checks through this).
+    pub fn set_cred(&mut self, pid: ProcId, cred: Cred) {
+        self.procs[pid].cred = cred;
+    }
+
+    /// Permission check against the authoritative metadata (§3.2:
+    /// "SharedFS ... checking permissions ... and enforcing permissions
+    /// on reads"). Root bypasses, like UNIX.
+    fn check_perm(&self, pid: ProcId, path: &str, write: bool) -> Result<()> {
+        let cred = self.procs[pid].cred;
+        if cred.uid == 0 {
+            return Ok(());
+        }
+        // authoritative stat: own view first, else nearest replica store
+        let st = if let Ok(st) = self.procs[pid].log_view.stat(path) {
+            st
+        } else if let Some(n) = self.store_node_for(pid, path) {
+            let sock = self.area_socket(path).min(self.nodes[n].sockets.len() - 1);
+            match self.nodes[n].sockets[sock].sharedfs.store.stat(path) {
+                Ok(st) => st,
+                Err(_) => return Ok(()), // brand-new file: creator owns it
+            }
+        } else {
+            return Ok(());
+        };
+        if st.mode.allows(cred, st.owner, write) {
+            Ok(())
+        } else {
+            Err(FsError::PermissionDenied(path.to_string()))
+        }
+    }
+
+    /// Pin a subtree's digested data to a socket (default 0).
+    pub fn set_subtree_socket(&mut self, subtree: &str, socket: SocketId) {
+        self.subtree_socket.push((subtree.to_string(), socket));
+        self.subtree_socket.sort_by_key(|(s, _)| std::cmp::Reverse(s.len()));
+    }
+
+    /// Pin a subtree to a specific replication chain (Postfix sharding).
+    pub fn set_subtree_chain(&mut self, subtree: &str, cache: Vec<NodeId>, reserve: Vec<NodeId>) {
+        self.mgr.set_chain(subtree, Chain { cache_replicas: cache, reserve_replicas: reserve });
+    }
+
+    fn area_socket(&self, path: &str) -> SocketId {
+        self.subtree_socket
+            .iter()
+            .find(|(s, _)| is_subtree_of(path, s))
+            .map(|&(_, sock)| sock)
+            .unwrap_or(0)
+    }
+
+    /// The lease unit for a path: its parent directory (directory-grain
+    /// leases, matching the paper's subtree leases at their common
+    /// granularity). Files directly under "/" lease the file itself so
+    /// root never becomes a global contention point.
+    fn lease_unit(path: &str) -> String {
+        let d = dirname(path);
+        if d == "/" || d.is_empty() {
+            path.to_string()
+        } else {
+            d
+        }
+    }
+
+    // ================================================== log resizing §B.2
+
+    /// Dynamically resize `pid`'s update log with the paper's two-phase
+    /// commit across the cache replicas (§B.2): PREPARE reserves the new
+    /// size on every replica (any may deny on NVM pressure), COMMIT
+    /// applies it, ABORT releases. Memory registration overlaps the next
+    /// digest, so the caller pays only the RPC round trips.
+    pub fn resize_log(&mut self, pid: ProcId, new_size: u64) -> crate::oplog::ResizeOutcome {
+        use crate::oplog::{resize, Vote};
+        let p = self.p();
+        let pnode = self.procs[pid].node;
+        let chain = self.mgr.live_chain_for("/");
+        let t0 = self.procs[pid].clock.now;
+        let old = self.procs[pid].log.capacity();
+
+        // phase 1: PREPARE — each replica reserves log space in its NVM
+        let mut votes = Vec::new();
+        let mut t_prepare = t0;
+        for &r in &chain {
+            let sock = 0usize;
+            let ok = self.nodes[r].sockets[sock].nvm.alloc(new_size.saturating_sub(old));
+            votes.push(if ok { Vote::Accept } else { Vote::Deny });
+            if r != pnode {
+                t_prepare = t_prepare.max(self.fabric.rpc(t0, pnode, r, 64, 64, p.rpc_overhead, &p));
+            }
+        }
+        // phase 2: COMMIT / ABORT
+        let mut t_commit = t_prepare;
+        for &r in &chain {
+            if r != pnode {
+                t_commit =
+                    t_commit.max(self.fabric.rpc(t_prepare, pnode, r, 64, 64, p.rpc_overhead, &p));
+            }
+        }
+        let outcome = resize::decide(&votes, new_size, t_commit);
+        match &outcome {
+            crate::oplog::ResizeOutcome::Committed { new_size, .. } => {
+                self.procs[pid].log.set_capacity(*new_size);
+            }
+            crate::oplog::ResizeOutcome::Aborted { .. } => {
+                // release phase-1 reservations on accepting replicas
+                for (i, &r) in chain.iter().enumerate() {
+                    if votes[i] == Vote::Accept {
+                        self.nodes[r].sockets[0].nvm.free(new_size.saturating_sub(old));
+                    }
+                }
+            }
+        }
+        self.procs[pid].clock.advance_to(t_commit);
+        outcome
+    }
+
+    // =================================================== lease protocol
+
+    /// Acquire a lease for `pid` on `path` with `mode`, charging the
+    /// delegation cost onto the proc clock (§3.3 hierarchical coherence).
+    fn acquire_lease(&mut self, pid: ProcId, path: &str, mode: LeaseMode) -> Result<()> {
+        let unit = Self::lease_unit(path);
+        self.acquire_lease_unit(pid, &unit, mode)
+    }
+
+    /// Acquire a lease on an explicit unit (subtree) — also used by mkdir
+    /// (which leases the new directory subtree itself).
+    fn acquire_lease_unit(&mut self, pid: ProcId, unit: &str, mode: LeaseMode) -> Result<()> {
+        let p = self.p();
+        let now = self.procs[pid].clock.now;
+        let (pnode, psock) = (self.procs[pid].node, self.procs[pid].socket);
+
+        // fast path: LibFS already holds a delegated lease (PerProcess)
+        if self.cfg.manager_policy == ManagerPolicy::PerProcess
+            && self.procs[pid].leases.holds(unit, mode, pid, now)
+        {
+            return Ok(());
+        }
+
+        // manager placement per policy
+        let (mnode, msock) = match self.cfg.manager_policy {
+            ManagerPolicy::SingleManager => (0, 0),
+            ManagerPolicy::PerServer => (pnode, 0),
+            ManagerPolicy::PerSocket => (pnode, psock),
+            ManagerPolicy::PerProcess => {
+                match self.mgr.lease_manager(unit) {
+                    Some((n, s)) if self.mgr.is_up(n) => {
+                        // migrate management toward us over time
+                        let m = self.mgr.claim_lease_manager(unit, pnode, psock, now, &p);
+                        let _ = (n, s);
+                        m
+                    }
+                    _ => {
+                        // no manager yet: cluster-manager RPC, then we become it
+                        self.charge_cluster_manager_rpc(pid);
+                        self.mgr.claim_lease_manager(unit, pnode, psock, now, &p)
+                    }
+                }
+            }
+        };
+
+        // cost to reach the manager
+        if (mnode, msock) == (pnode, psock) {
+            // syscall to the local SharedFS (§3.3 "via a system call")
+            self.procs[pid].clock.tick(p.syscall_write_lat);
+        } else if mnode == pnode {
+            // cross-socket SharedFS
+            self.procs[pid].clock.tick(p.syscall_write_lat + p.numa_lat);
+        } else {
+            // remote manager: RDMA RPC
+            let now = self.procs[pid].clock.now;
+            let done = self.fabric.rpc(now, pnode, mnode, 128, 128, p.syscall_write_lat, &p);
+            self.procs[pid].clock.advance_to(done);
+        }
+        // the manager daemon serializes lease operations (single process
+        // + lease-log append): the contention that separates the Fig. 8
+        // sharding levels
+        {
+            let sfs = &mut self.nodes[mnode].sockets[msock].sharedfs;
+            let arrive = self.procs[pid].clock.now;
+            let start = arrive.max(sfs.lease_busy_until);
+            let done = start + p.lease_service;
+            sfs.lease_busy_until = done;
+            self.procs[pid].clock.advance_to(done);
+        }
+
+        // hierarchical conflict check: every manager whose subtree
+        // overlaps the unit may hold conflicting leases (ancestor or
+        // descendant managers from earlier delegations)
+        let overlapping = match self.cfg.manager_policy {
+            ManagerPolicy::PerProcess => self.mgr.managers_overlapping(unit),
+            // fixed-placement policies keep all state in one table
+            _ => vec![(unit.to_string(), mnode, msock)],
+        };
+        for (_, onode, osock) in &overlapping {
+            let now = self.procs[pid].clock.now;
+            // valid conflicting holders AND holders of overlapping write
+            // leases that have *expired* — their update logs may still be
+            // dirty, and any lease transfer (revocation or expiry) must
+            // flush them first (§3.3)
+            let mut to_flush = self.nodes[*onode].sockets[*osock]
+                .sharedfs
+                .leases
+                .conflicting_holders(unit, mode, pid, now);
+            to_flush.extend(
+                self.nodes[*onode].sockets[*osock]
+                    .sharedfs
+                    .leases
+                    .overlapping_write_holders(unit, pid),
+            );
+            to_flush.sort_unstable();
+            to_flush.dedup();
+            for h in to_flush {
+                self.revoke_from_holder(pid, h, unit, *onode, *osock)?;
+            }
+        }
+
+        // run the acquire against the unit's manager table
+        let now = self.procs[pid].clock.now;
+        let dur = p.lease_timeout;
+        let attempt = self.nodes[mnode].sockets[msock]
+            .sharedfs
+            .leases
+            .acquire(unit, mode, pid, now, dur);
+        match attempt {
+            Acquire::Granted => {}
+            Acquire::MustRevoke(holders) => {
+                // revocation protocol: each holder replicates + digests
+                // its dirty state for the unit, then releases (§3.3)
+                let mut hs = holders;
+                hs.sort_unstable();
+                hs.dedup();
+                for h in hs {
+                    self.revoke_from_holder(pid, h, unit, mnode, msock)?;
+                }
+                let now = self.procs[pid].clock.now;
+                match self.nodes[mnode].sockets[msock]
+                    .sharedfs
+                    .leases
+                    .acquire(unit, mode, pid, now, dur)
+                {
+                    Acquire::Granted => {}
+                    Acquire::MustRevoke(_) => {
+                        return Err(FsError::LeaseConflict(unit.to_string()));
+                    }
+                }
+            }
+        }
+
+        // delegate to the LibFS cache (PerProcess)
+        if self.cfg.manager_policy == ManagerPolicy::PerProcess {
+            let now = self.procs[pid].clock.now;
+            self.procs[pid].leases.acquire(unit, mode, pid, now, dur);
+        }
+        Ok(())
+    }
+
+    /// Revoke `unit` from `holder` on behalf of `pid` (who pays the
+    /// wait): holder flushes its dirty state, caches invalidated.
+    fn revoke_from_holder(
+        &mut self,
+        pid: ProcId,
+        holder: ProcId,
+        unit: &str,
+        mnode: NodeId,
+        msock: SocketId,
+    ) -> Result<()> {
+        let p = self.p();
+        if holder < self.procs.len() && self.procs[holder].alive {
+            let hnode = self.procs[holder].node;
+            // revocation RPC to the holder (grace period: holder finishes
+            // its in-flight op — modeled by the RPC handler time)
+            let t0 = self.procs[pid].clock.now;
+            let notified = if hnode == mnode {
+                t0 + p.syscall_write_lat
+            } else {
+                self.fabric.rpc(t0, mnode, hnode, 128, 128, p.syscall_write_lat, &p)
+            };
+            // holder flushes: replicate + digest its log (dirty state for
+            // the unit must be clean & replicated before transfer)
+            self.procs[holder].clock.advance_to(notified);
+            self.replicate_log(holder)?;
+            self.digest_log(holder)?;
+            self.procs[holder].invalidate_subtree(unit);
+            self.procs[holder].leases.revoke(unit, holder);
+            let done = self.procs[holder].clock.now;
+            self.procs[pid].clock.advance_to(done);
+        }
+        self.nodes[mnode].sockets[msock].sharedfs.leases.revoke(unit, holder);
+        // lease transfer is logged + replicated in the SharedFS log
+        self.nodes[mnode].sockets[msock].sharedfs.sfs_log_bytes += 64;
+        Ok(())
+    }
+
+    fn charge_cluster_manager_rpc(&mut self, pid: ProcId) {
+        // the cluster manager runs on dedicated machines: charge one RPC
+        // round trip without contending application NICs
+        let p = self.p();
+        self.procs[pid]
+            .clock
+            .tick(2 * p.rdma_read_lat + 2 * p.rpc_overhead);
+    }
+
+    // ================================================ write / log paths
+
+    fn append_op(&mut self, pid: ProcId, op: LogOp) -> Result<()> {
+        let p = self.p();
+        let (node, socket) = (self.procs[pid].node, self.procs[pid].socket);
+        let now = self.procs[pid].clock.now;
+        let bytes = crate::oplog::ENTRY_HEADER_BYTES + op.payload_bytes();
+        // persistent append into the socket-local NVM log (store + CLWB)
+        let done = self.nodes[node].sockets[socket].nvm.write_log(now, bytes, &p);
+        self.procs[pid].clock.advance_to(done);
+        self.procs[pid].log_append(op, done);
+        self.procs[pid].bytes_written += bytes;
+
+        // background digest (§A.1): when the log fills beyond the
+        // threshold, replication + digestion start asynchronously — the
+        // application keeps running and only stalls if the log fills
+        // completely before the outstanding digest finishes
+        let now = self.procs[pid].clock.now;
+        while matches!(self.procs[pid].pending_digest.front(), Some(&(_, at)) if now >= at) {
+            self.finalize_digest(pid);
+        }
+        const MAX_PENDING: usize = 8;
+        // trigger on the UNREPLICATED portion: each background digest
+        // covers a threshold-sized batch (tiny batches would waste the
+        // fixed per-digest costs, giant ones would stall reclaim).
+        // Per-process jitter desynchronizes digest waves across processes
+        // (real deployments drift apart naturally; lockstep waves would
+        // leave the wire idle between bursts).
+        let jitter = 0.75 + 0.5 * ((pid.wrapping_mul(0x9E3779B9) >> 8) & 0xFF) as f64 / 255.0;
+        let batch = (self.procs[pid].log.capacity() as f64 * self.cfg.digest_threshold * jitter) as u64;
+        if self.procs[pid].pending_digest.len() < MAX_PENDING
+            && self.procs[pid].log.unreplicated_bytes() >= batch.max(1)
+        {
+            let t = self.procs[pid].clock.now;
+            let acked = self.replicate_log_at(pid, t)?;
+            let done = self.digest_log_at(pid, acked)?;
+            let tail = self.procs[pid].log.tail_seq();
+            self.procs[pid].pending_digest.push_back((tail, done));
+            // digest initiation is a syscall to SharedFS
+            self.procs[pid].clock.tick(p.syscall_write_lat);
+        }
+        // hard backpressure: the log is full — drain outstanding digests
+        // (and start follow-ups covering the entries appended meanwhile)
+        // until there is headroom again
+        let mut guard = 0;
+        while self.procs[pid].log.used() >= self.procs[pid].log.capacity() {
+            guard += 1;
+            if guard > 64 {
+                break; // log smaller than a single entry; don't spin
+            }
+            match self.procs[pid].pending_digest.front().copied() {
+                Some((_, at)) => {
+                    self.procs[pid].clock.advance_to(at);
+                    self.finalize_digest(pid);
+                }
+                None => {
+                    if self.procs[pid].log.tail_seq() == self.procs[pid].log.digested_upto {
+                        break; // everything digested; log is just small
+                    }
+                    let t = self.procs[pid].clock.now;
+                    let acked = self.replicate_log_at(pid, t)?;
+                    let done = self.digest_log_at(pid, acked)?;
+                    let tail = self.procs[pid].log.tail_seq();
+                    self.procs[pid].pending_digest.push_back((tail, done));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Chain-replicate the unreplicated log suffix of `pid` (§3.2 W2),
+    /// waiting for the chain ack (pessimistic fsync path).
+    pub fn replicate_log(&mut self, pid: ProcId) -> Result<()> {
+        let t0 = self.procs[pid].clock.now;
+        let done = self.replicate_log_at(pid, t0)?;
+        self.procs[pid].clock.advance_to(done);
+        Ok(())
+    }
+
+    /// Cursor-based replication: starts at `t`, returns the ack time
+    /// WITHOUT advancing the proc clock (async digest path charges the
+    /// devices but lets the application keep running, §A.1 — eviction
+    /// and replication happen in the background).
+    fn replicate_log_at(&mut self, pid: ProcId, t_start: Nanos) -> Result<Nanos> {
+        let p = self.p();
+        let pnode = self.procs[pid].node;
+        let tail = self.procs[pid].log.tail_seq();
+        let from = self.procs[pid].log.replicated_upto;
+        if from >= tail {
+            return Ok(t_start);
+        }
+        let entries: Vec<LogEntry> = self.procs[pid].log.unreplicated().cloned().collect();
+        if entries.is_empty() {
+            self.procs[pid].log.mark_replicated(tail);
+            return Ok(t_start);
+        }
+        // optimistic mode coalesces the batch before replication
+        let wire_entries = if self.cfg.mode == CrashMode::Optimistic {
+            let c = coalesce(&entries);
+            self.coalesce_saved_bytes += c.saved_bytes;
+            c.entries
+        } else {
+            entries.clone()
+        };
+        let wire_bytes: u64 = wire_entries.iter().map(|e| e.bytes()).sum();
+
+        // chain for the batch (keyed by the first entry's path)
+        let path = wire_entries
+            .first()
+            .map(|e| e.op.path().to_string())
+            .unwrap_or_else(|| "/".to_string());
+        let chain = self.mgr.live_chain_for(&path);
+        let reserves = self.mgr.live_reserves_for(&path);
+        let full_chain: Vec<NodeId> = chain
+            .iter()
+            .chain(reserves.iter())
+            .copied()
+            .filter(|&n| n != pnode)
+            .collect();
+
+        if full_chain.is_empty() || wire_bytes == 0 {
+            self.procs[pid].log.mark_replicated(tail);
+            return Ok(t_start);
+        }
+
+        // Chain replication LibFS -> r1 -> r2 -> ... (§3.2). Queue
+        // bookings for every pipeline stage are made at `t_start` (the
+        // batch streams through the stages; booking them serially at
+        // *future* cursor times would wrongly block other processes'
+        // present-time accesses on the shared devices), while the
+        // *fixed* per-hop latencies (RDMA persist + chain-forward RPC +
+        // ack path) accumulate serially — these are what make Assise-3r
+        // ≈ 2.2× Assise in Fig. 2a.
+        let mut queue_done = t_start;
+        let mut prev = pnode;
+        let mut fixed: Nanos = 0;
+        for &r in &full_chain {
+            // wire: sender tx + receiver rx occupy their queues
+            let tx_done = self.fabric.nics[prev].tx.access(t_start, wire_bytes, 0, p.rdma_bw);
+            let rx_done = self.fabric.nics[r].rx.access(t_start, wire_bytes, 0, p.rdma_bw);
+            // remote NVM append into the reserved replicated-log region
+            let rsock = self.area_socket(&path).min(self.nodes[r].sockets.len() - 1);
+            let nvm_done = self.nodes[r].sockets[rsock].nvm.write_log(t_start, wire_bytes, &p);
+            queue_done = queue_done.max(tx_done).max(rx_done).max(nvm_done);
+            fixed += p.rdma_write_lat + p.rpc_overhead; // persist + forward RPC
+            prev = r;
+        }
+        // ack travels back along the chain (small messages)
+        fixed += full_chain.len() as Nanos * (p.rdma_read_lat / 2);
+        let ack = queue_done + fixed;
+        self.replicated_bytes += wire_bytes * full_chain.len() as u64;
+        self.procs[pid].log.mark_replicated(tail);
+        Ok(ack)
+    }
+
+    /// Digest `pid`'s replicated-but-undigested entries on every chain
+    /// replica (parallel, §A.1), then reclaim the log. Synchronous
+    /// variant (lease revocation, recovery): the proc waits.
+    pub fn digest_log(&mut self, pid: ProcId) -> Result<()> {
+        let t0 = self.procs[pid].clock.now;
+        let done = self.digest_log_at(pid, t0)?;
+        self.procs[pid].clock.advance_to(done);
+        self.finalize_digest(pid);
+        Ok(())
+    }
+
+    /// Cursor-based digest: starts at `t_start`, returns completion time
+    /// without advancing the proc clock. Log watermarks are updated
+    /// immediately (the entries are in flight); reclaim happens in
+    /// `finalize_digest` once the proc's clock passes the completion.
+    fn digest_log_at(&mut self, pid: ProcId, t_start: Nanos) -> Result<Nanos> {
+        let p = self.p();
+        let pnode = self.procs[pid].node;
+        let psock = self.procs[pid].socket;
+        let upto = self.procs[pid].log.replicated_upto;
+        let entries: Vec<LogEntry> = self.procs[pid].log.undigested().cloned().collect();
+        if entries.is_empty() {
+            self.procs[pid].log.mark_digested(upto);
+            return Ok(t_start);
+        }
+        let data_bytes: u64 = entries.iter().map(|e| e.bytes()).sum();
+        let path = entries[0].op.path().to_string();
+        let area_sock = self.area_socket(&path);
+
+        // optional integrity verification with the AOT Pallas kernel
+        if self.cfg.verify_digests {
+            if let Some(v) = &self.verifier {
+                let payloads: Vec<&Payload> = entries
+                    .iter()
+                    .filter_map(|e| match &e.op {
+                        LogOp::Write { data, .. } => Some(data),
+                        _ => None,
+                    })
+                    .collect();
+                v.verify_payloads(&payloads)
+                    .map_err(|e| FsError::InvalidArgument(format!("digest verify: {e}")))?;
+            }
+        }
+
+        let chain = self.mgr.live_chain_for(&path);
+        let reserves = self.mgr.live_reserves_for(&path);
+        let t0 = t_start;
+        let mut done_max = t0;
+        for &r in chain.iter().chain(reserves.iter()) {
+            // digest initiation RPC latency (local = syscall); replicas
+            // digest in parallel. Queue bookings at t0 (see replicate).
+            let init_lat = if r == pnode {
+                p.syscall_write_lat
+            } else {
+                p.rdma_read_lat + 2 * p.rpc_overhead
+            };
+            let sock = area_sock.min(self.nodes[r].sockets.len() - 1);
+            // read the log region: the LOCAL node's log lives on the
+            // process's socket; remote replicas landed it in the area
+            // socket's reserved log region
+            let log_sock = if r == pnode { psock } else { sock };
+            let read_done = self.nodes[r].sockets[log_sock].nvm.read_log(t0, data_bytes, &p);
+            let write_done = if r == pnode && sock != psock {
+                // cross-socket digestion: LibFS log on psock, area on sock
+                let mode = if self.cfg.numa_dma { XSocketMode::Dma } else { XSocketMode::Stores };
+                self.nodes[r].interconnect.write(t0, data_bytes, mode, &p)
+            } else {
+                self.nodes[r].sockets[sock].nvm.write(t0, data_bytes, &p)
+            };
+            let done = read_done.max(write_done) + init_lat;
+            // apply to the replica's store
+            let sfs = &mut self.nodes[r].sockets[sock].sharedfs;
+            sfs.digest(pid, &entries, done)?;
+            done_max = done_max.max(done);
+        }
+
+        // epoch write tracking (for node-recovery invalidation)
+        for e in &entries {
+            let sock = area_sock.min(self.nodes[pnode].sockets.len() - 1);
+            if let Ok(ino) = self.nodes[pnode].sockets[sock].sharedfs.store.resolve(e.op.path()) {
+                self.mgr.epochs.record_write(ino);
+            }
+        }
+
+        self.procs[pid].log.mark_digested(upto);
+
+        // hot-area LRU migration on every replica (§A.1): cache replicas
+        // evict to cold SSD; reserve replicas keep a reserve tier in NVM
+        let mut end = done_max;
+        for &r in chain.iter() {
+            let sock = area_sock.min(self.nodes[r].sockets.len() - 1);
+            let (migrated, _) = self.nodes[r].sockets[sock].sharedfs.migrate_lru(Tier::Cold, done_max);
+            if migrated > 0 {
+                let done = self.nodes[r].ssd.write(done_max, migrated, &p);
+                // eviction is off the critical path for remote replicas;
+                // local eviction extends the digest (backpressure)
+                if r == pnode {
+                    end = end.max(done);
+                }
+            }
+        }
+        for &r in reserves.iter() {
+            let sock = area_sock.min(self.nodes[r].sockets.len() - 1);
+            self.nodes[r].sockets[sock].sharedfs.migrate_lru(Tier::Reserve, done_max);
+        }
+        Ok(end)
+    }
+
+    /// Reclaim the log after a completed digest and drop the duplicated
+    /// in-memory view (reads flow through the shared areas from now on).
+    fn finalize_digest(&mut self, pid: ProcId) {
+        let upto = self.procs[pid].log.digested_upto;
+        self.procs[pid].log.reclaim(upto);
+        if self.procs[pid].log.is_empty() {
+            self.procs[pid].tombstones.clear();
+            self.procs[pid].log_view = crate::fs::FileStore::new();
+        }
+        self.procs[pid].pending_digest.pop_front();
+    }
+
+    // ======================================================== read path
+
+    /// Gather a read for `pid` from the layered caches, charging each
+    /// layer's cost. Returns the payload.
+    fn read_gather(&mut self, pid: ProcId, path: &str, off: u64, len: u64) -> Result<Payload> {
+        let p = self.p();
+        let (pnode, psock) = (self.procs[pid].node, self.procs[pid].socket);
+        let area_sock = self.area_socket(path);
+
+        // authoritative size: log view first, then shared store
+        let view_stat = self.procs[pid].log_view.stat(path).ok();
+        let local_in_chain = self.mgr.live_chain_for(path).contains(&pnode);
+        let store_node = if local_in_chain {
+            pnode
+        } else {
+            *self
+                .mgr
+                .live_chain_for(path)
+                .first()
+                .ok_or_else(|| FsError::NotFound(path.to_string()))?
+        };
+        let store_stat = self.nodes[store_node].sockets
+            [area_sock.min(self.nodes[store_node].sockets.len() - 1)]
+        .sharedfs
+        .store
+        .stat(path)
+        .ok();
+
+        let size = match (view_stat.as_ref(), store_stat.as_ref()) {
+            (Some(v), Some(s)) => v.size.max(s.size),
+            (Some(v), None) => v.size,
+            (None, Some(s)) => s.size,
+            (None, None) => return Err(FsError::NotFound(path.to_string())),
+        };
+        let len = len.min(size.saturating_sub(off));
+        if len == 0 {
+            return Ok(Payload::zero(0));
+        }
+
+        // 1. process-private log view (own recent writes): serve the
+        // present segments, fill gaps below
+        let mut have_all_in_view = false;
+        if let Some(vst) = view_stat.as_ref() {
+            if let Some(vino) = self.procs[pid].log_view.resolve(path).ok() {
+                let covered: u64 = self.procs[pid]
+                    .log_view
+                    .inode(vino)
+                    .map(|n| n.extents.tiers_in(off, len).iter().map(|&(_, l, _)| l).sum())
+                    .unwrap_or(0);
+                if covered >= len && vst.size >= off + len {
+                    have_all_in_view = true;
+                }
+            }
+        }
+        if have_all_in_view {
+            let vino = self.procs[pid].log_view.resolve(path).unwrap();
+            let (data, extents) = self.procs[pid].log_view.read_at(vino, off, len)?;
+            // log lives in NVM; index in DRAM
+            let now = self.procs[pid].clock.now;
+            let done = self.nodes[pnode].sockets[psock].nvm.read(now, len, Pattern::Seq, &p);
+            self.procs[pid].clock.advance_to(done + extents as Nanos * 10);
+            self.procs[pid].bytes_read += len;
+            return Ok(data);
+        }
+
+        // base data from lower layers
+        let base = self.read_below_log(pid, path, off, len, store_node, area_sock)?;
+
+        // overlay any log-view segments on top
+        let out = if let Ok(vino) = self.procs[pid].log_view.resolve(path) {
+            let segs = self.procs[pid]
+                .log_view
+                .inode(vino)
+                .map(|n| n.extents.tiers_in(off, len))
+                .unwrap_or_default();
+            if segs.is_empty() {
+                base
+            } else {
+                let mut bytes = base.materialize();
+                bytes.resize(len as usize, 0);
+                for (s, l, _) in segs {
+                    let (seg, _) = self.procs[pid].log_view.read_at(vino, s, l)?;
+                    let sb = seg.materialize();
+                    let at = (s - off) as usize;
+                    bytes[at..at + sb.len()].copy_from_slice(&sb);
+                }
+                Payload::bytes(bytes)
+            }
+        } else {
+            base
+        };
+        self.procs[pid].bytes_read += len;
+        Ok(out)
+    }
+
+    /// Layers below the private log: DRAM read cache → SharedFS (local
+    /// or closest replica) → reserve → cold.
+    fn read_below_log(
+        &mut self,
+        pid: ProcId,
+        path: &str,
+        off: u64,
+        len: u64,
+        store_node: NodeId,
+        area_sock: SocketId,
+    ) -> Result<Payload> {
+        let p = self.p();
+        let (pnode, psock) = (self.procs[pid].node, self.procs[pid].socket);
+        let sock = area_sock.min(self.nodes[store_node].sockets.len() - 1);
+
+        let ino = match self.nodes[store_node].sockets[sock].sharedfs.store.resolve(path) {
+            Ok(i) => i,
+            Err(_) => return Ok(Payload::zero(len)), // data only in log (holes below)
+        };
+
+        // 2. private DRAM read cache
+        if let Some(hit) = self.procs[pid].read_cache.get(ino, off, len) {
+            let now = self.procs[pid].clock.now;
+            let done = self.nodes[pnode].dram.read(now, len, &p);
+            self.procs[pid].clock.advance_to(done);
+            return Ok(hit);
+        }
+
+        // stale after epoch recovery? refetch whole file from a live peer
+        if store_node == pnode
+            && self.nodes[pnode].sockets[sock].sharedfs.is_stale(ino)
+        {
+            self.refetch_stale(pid, path, ino, sock)?;
+        }
+
+        let (data, extents) = self.nodes[store_node].sockets[sock]
+            .sharedfs
+            .store
+            .read_at(ino, off, len)?;
+        let tiers = self.nodes[store_node].sockets[sock]
+            .sharedfs
+            .store
+            .inode(ino)
+            .map(|n| n.extents.tiers_in(off, len))
+            .unwrap_or_default();
+        let now = self.procs[pid].clock.now;
+
+        if store_node != pnode {
+            // 3'. remote replica read (Assise-RMT): RPC + RDMA reply
+            let done = self
+                .fabric
+                .rpc(now, pnode, store_node, 64, len.max(64), p.rpc_overhead, &p);
+            self.procs[pid].clock.advance_to(done);
+            // cache remotely-read data in DRAM (4 KB prefetch granularity)
+            self.install_read_cache(pid, ino, off, len, &data);
+            return Ok(data);
+        }
+
+        // 3. local SharedFS layers, charged per tier segment
+        let mut t_done = now;
+        let mut any_cold = false;
+        let mut any_reserve = false;
+        for &(_, seg_len, tier) in &tiers {
+            match tier {
+                Tier::Hot => {
+                    // local NVM read (+ extent tree lookups)
+                    let cross = sock != psock;
+                    let d = if cross {
+                        self.nodes[pnode].interconnect.read(t_done, seg_len, &p)
+                    } else {
+                        self.nodes[pnode].sockets[sock].nvm.read(t_done, seg_len, Pattern::Seq, &p)
+                    };
+                    t_done = d + p.extent_lookup_lat * extents as Nanos;
+                }
+                Tier::Reserve | Tier::Cold => {
+                    // reserve replica NVM via RDMA beats local SSD (§3.5);
+                    // they are checked in parallel (§3.2), take the winner
+                    let reserves = self.mgr.live_reserves_for(path);
+                    if let Some(&rr) = reserves.first() {
+                        let d = self.fabric.rpc(t_done, pnode, rr, 64, seg_len.max(64), p.rpc_overhead, &p);
+                        t_done = d;
+                        any_reserve = true;
+                    } else {
+                        let d = self.nodes[pnode].ssd.read(t_done, seg_len, &p);
+                        t_done = d;
+                        any_cold = true;
+                    }
+                }
+            }
+        }
+        self.procs[pid].clock.advance_to(t_done + p.extent_lookup_lat * extents as Nanos);
+
+        // cache non-local-NVM reads in DRAM (§A.2)
+        if any_cold || any_reserve {
+            self.install_read_cache(pid, ino, off, len, &data);
+        }
+        Ok(data)
+    }
+
+    fn install_read_cache(&mut self, pid: ProcId, ino: u64, off: u64, len: u64, data: &Payload) {
+        // block-align: cache the read range rounded to 4 KB blocks
+        let aligned = off - off % 4096;
+        let pad_front = off - aligned;
+        if pad_front == 0 {
+            self.procs[pid].read_cache.insert(ino, aligned, data.clone());
+        } else {
+            // only cache the aligned interior to keep the model simple
+            let skip = 4096 - pad_front;
+            if len > skip {
+                self.procs[pid]
+                    .read_cache
+                    .insert(ino, aligned + 4096, data.slice(skip, len - skip));
+            }
+        }
+    }
+
+    /// Refetch a stale inode's contents from a live chain replica after
+    /// epoch recovery (§3.4 primary-recovery path).
+    fn refetch_stale(&mut self, pid: ProcId, path: &str, ino: u64, sock: SocketId) -> Result<()> {
+        let p = self.p();
+        let pnode = self.procs[pid].node;
+        let peer = self
+            .mgr
+            .live_chain_for(path)
+            .into_iter()
+            .find(|&n| n != pnode)
+            .ok_or(FsError::NotFound(format!("no live replica for {path}")))?;
+        let psock = sock.min(self.nodes[peer].sockets.len() - 1);
+        let peer_ino = self.nodes[peer].sockets[psock].sharedfs.store.resolve(path)?;
+        let size = self.nodes[peer].sockets[psock].sharedfs.store.stat_ino(peer_ino)?.size;
+        let (data, _) = self.nodes[peer].sockets[psock]
+            .sharedfs
+            .store
+            .read_at(peer_ino, 0, size)?;
+        let now = self.procs[pid].clock.now;
+        let done = self.fabric.rpc(now, pnode, peer, 64, size.max(64), p.rpc_overhead, &p);
+        self.procs[pid].clock.advance_to(done);
+        // reinstall locally (future reads are local, §5.4)
+        self.nodes[pnode].sockets[sock]
+            .sharedfs
+            .store
+            .write_at(ino, 0, data, Tier::Hot, done)?;
+        self.nodes[pnode].sockets[sock].sharedfs.mark_fresh(ino);
+        Ok(())
+    }
+
+    // ===================================================== op wrappers
+
+    fn check_alive(&self, pid: ProcId) -> Result<()> {
+        if pid < self.procs.len() && self.procs[pid].alive && self.nodes[self.procs[pid].node].alive
+        {
+            Ok(())
+        } else {
+            Err(FsError::Crashed)
+        }
+    }
+
+    fn begin_op(&mut self, pid: ProcId) -> Result<Nanos> {
+        self.check_alive(pid)?;
+        let p = self.p();
+        self.procs[pid].clock.tick(p.libfs_op_lat);
+        Ok(self.procs[pid].clock.now - p.libfs_op_lat)
+    }
+
+    fn end_op(&mut self, pid: ProcId, t0: Nanos) {
+        let l = self.procs[pid].clock.now - t0;
+        self.procs[pid].last_latency = l;
+        self.procs[pid].ops += 1;
+    }
+
+    /// The node whose SharedFS store is authoritative-and-nearest for
+    /// `pid` reading `path`: the local node if it is a chain replica,
+    /// else the chain head.
+    fn store_node_for(&self, pid: ProcId, path: &str) -> Option<NodeId> {
+        let pnode = self.procs[pid].node;
+        let chain = self.mgr.live_chain_for(path);
+        if chain.contains(&pnode) {
+            Some(pnode)
+        } else {
+            chain.first().copied()
+        }
+    }
+
+    /// Resolve the current size of `path` as visible to `pid`.
+    fn visible_size(&self, pid: ProcId, path: &str) -> u64 {
+        let v = self.procs[pid].log_view.stat(path).map(|s| s.size).unwrap_or(0);
+        let s = self
+            .store_node_for(pid, path)
+            .and_then(|n| {
+                let sock = self.area_socket(path).min(self.nodes[n].sockets.len() - 1);
+                self.nodes[n].sockets[sock].sharedfs.store.stat(path).ok()
+            })
+            .map(|s| s.size)
+            .unwrap_or(0);
+        v.max(s)
+    }
+
+    /// Does the path exist anywhere visible to `pid`?
+    fn path_exists(&self, pid: ProcId, path: &str) -> bool {
+        if self.procs[pid].log_view.exists(path) {
+            return true;
+        }
+        // unlinked/renamed-away by this process but not yet digested: the
+        // shared store still shows it; the tombstone wins
+        if self.procs[pid].tombstones.contains(path) {
+            return false;
+        }
+        let chain = self.mgr.live_chain_for(path);
+        let sock = self.area_socket(path);
+        chain.iter().any(|&n| {
+            self.nodes[n].sockets[sock.min(self.nodes[n].sockets.len() - 1)]
+                .sharedfs
+                .store
+                .exists(path)
+        })
+    }
+}
+
+// ======================================================== DistFs impl
+
+impl DistFs for Cluster {
+    fn name(&self) -> &'static str {
+        "assise"
+    }
+
+    fn params(&self) -> &HwParams {
+        &self.cfg.params
+    }
+
+    fn spawn_process(&mut self, node: usize, socket: usize) -> ProcId {
+        let id = self.procs.len();
+        self.procs.push(LibFs::new(
+            id,
+            node,
+            socket.min(self.cfg.sockets_per_node - 1),
+            self.cfg.log_capacity,
+            self.cfg.read_cache_capacity,
+        ));
+        id
+    }
+
+    fn now(&self, pid: ProcId) -> Nanos {
+        self.procs[pid].clock.now
+    }
+
+    fn set_now(&mut self, pid: ProcId, t: Nanos) {
+        self.procs[pid].clock.now = t;
+    }
+
+    fn last_latency(&self, pid: ProcId) -> Nanos {
+        self.procs[pid].last_latency
+    }
+
+    fn create(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        let path = normalize(path)?;
+        let t0 = self.begin_op(pid)?;
+        self.acquire_lease(pid, &path, LeaseMode::Write)?;
+        let parent = dirname(&path);
+        if parent != "/" && !self.path_exists(pid, &parent) {
+            self.end_op(pid, t0);
+            return Err(FsError::NotFound(parent));
+        }
+        if self.path_exists(pid, &path) {
+            self.end_op(pid, t0);
+            return Err(FsError::AlreadyExists(path));
+        }
+        let owner = self.procs[pid].cred;
+        self.append_op(
+            pid,
+            LogOp::Create { path: path.clone(), mode: Mode::DEFAULT_FILE, owner },
+        )?;
+        let fd = self.procs[pid].install_fd(path);
+        self.end_op(pid, t0);
+        Ok(fd)
+    }
+
+    fn open(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        let path = normalize(path)?;
+        let t0 = self.begin_op(pid)?;
+        // data ops lease the file itself (§3.3: leases cover "a set of
+        // files and directories" — file-grain is the write-sharing
+        // granularity; namespace ops lease the parent directory)
+        self.acquire_lease_unit(pid, &path, LeaseMode::Read)?;
+        if !self.path_exists(pid, &path) {
+            self.end_op(pid, t0);
+            return Err(FsError::NotFound(path));
+        }
+        self.check_perm(pid, &path, false)?;
+        let fd = self.procs[pid].install_fd(path);
+        self.end_op(pid, t0);
+        Ok(fd)
+    }
+
+    fn close(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        let t0 = self.begin_op(pid)?;
+        self.procs[pid].remove_fd(fd)?;
+        self.end_op(pid, t0);
+        Ok(())
+    }
+
+    fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()> {
+        let (_path, off) = {
+            let of = self.procs[pid].fd(fd)?;
+            let path = of.path.clone();
+            let size = self.visible_size(pid, &path);
+            let off = of.offset.max(0).max(size.min(of.offset));
+            (path, off)
+        };
+        // append semantics: cursor write at current offset
+        let len = data.len();
+        self.pwrite(pid, fd, off, data)?;
+        self.procs[pid].fd_mut(fd)?.offset = off + len;
+        Ok(())
+    }
+
+    fn pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload) -> Result<()> {
+        let path = self.procs[pid].fd(fd)?.path.clone();
+        let t0 = self.begin_op(pid)?;
+        self.acquire_lease_unit(pid, &path, LeaseMode::Write)?;
+        self.check_perm(pid, &path, true)?;
+        self.append_op(pid, LogOp::Write { path, off, data })?;
+        self.end_op(pid, t0);
+        Ok(())
+    }
+
+    fn read(&mut self, pid: ProcId, fd: Fd, len: u64) -> Result<Payload> {
+        let off = self.procs[pid].fd(fd)?.offset;
+        let out = self.pread(pid, fd, off, len)?;
+        self.procs[pid].fd_mut(fd)?.offset = off + out.len();
+        Ok(out)
+    }
+
+    fn pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64) -> Result<Payload> {
+        let path = self.procs[pid].fd(fd)?.path.clone();
+        let t0 = self.begin_op(pid)?;
+        self.acquire_lease_unit(pid, &path, LeaseMode::Read)?;
+        let out = self.read_gather(pid, &path, off, len)?;
+        self.end_op(pid, t0);
+        Ok(out)
+    }
+
+    fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        let _ = self.procs[pid].fd(fd)?;
+        let t0 = self.begin_op(pid)?;
+        match self.cfg.mode {
+            CrashMode::Pessimistic => {
+                // wait for any in-flight replication (its ack covers a
+                // prefix), then replicate the residual
+                while let Some(&(_, at)) = self.procs[pid].pending_digest.front() {
+                    self.procs[pid].clock.advance_to(at);
+                    self.finalize_digest(pid);
+                }
+                self.replicate_log(pid)?;
+            }
+            CrashMode::Optimistic => {
+                // fsync is a no-op in optimistic mode (§A.1); ordering is
+                // still guaranteed by the log
+            }
+        }
+        self.end_op(pid, t0);
+        Ok(())
+    }
+
+    fn dsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        let _ = self.procs[pid].fd(fd)?;
+        let t0 = self.begin_op(pid)?;
+        while let Some(&(_, at)) = self.procs[pid].pending_digest.front() {
+            self.procs[pid].clock.advance_to(at);
+            self.finalize_digest(pid);
+        }
+        self.replicate_log(pid)?;
+        self.end_op(pid, t0);
+        Ok(())
+    }
+
+    fn mkdir(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        let path = normalize(path)?;
+        let t0 = self.begin_op(pid)?;
+        // a mkdir leases the new directory subtree itself (§3.3 subtree
+        // leases: the creator gets exclusive control of the new subtree)
+        self.acquire_lease_unit(pid, &path, LeaseMode::Write)?;
+        let parent = dirname(&path);
+        if parent != "/" && !self.path_exists(pid, &parent) {
+            self.end_op(pid, t0);
+            return Err(FsError::NotFound(parent));
+        }
+        if self.path_exists(pid, &path) {
+            self.end_op(pid, t0);
+            return Err(FsError::AlreadyExists(path));
+        }
+        self.append_op(
+            pid,
+            LogOp::Mkdir { path, mode: Mode::DEFAULT_DIR, owner: Cred::ROOT },
+        )?;
+        self.end_op(pid, t0);
+        Ok(())
+    }
+
+    fn truncate(&mut self, pid: ProcId, path: &str, size: u64) -> Result<()> {
+        let path = normalize(path)?;
+        let t0 = self.begin_op(pid)?;
+        self.acquire_lease_unit(pid, &path, LeaseMode::Write)?;
+        if !self.path_exists(pid, &path) {
+            self.end_op(pid, t0);
+            return Err(FsError::NotFound(path));
+        }
+        self.append_op(pid, LogOp::Truncate { path, size })?;
+        self.end_op(pid, t0);
+        Ok(())
+    }
+
+    fn rename(&mut self, pid: ProcId, from: &str, to: &str) -> Result<()> {
+        let from = normalize(from)?;
+        let to = normalize(to)?;
+        let t0 = self.begin_op(pid)?;
+        self.acquire_lease(pid, &from, LeaseMode::Write)?;
+        self.acquire_lease(pid, &to, LeaseMode::Write)?;
+        if !self.path_exists(pid, &from) {
+            self.end_op(pid, t0);
+            return Err(FsError::NotFound(from));
+        }
+        let to_parent = dirname(&to);
+        if to_parent != "/" && !self.path_exists(pid, &to_parent) {
+            self.end_op(pid, t0);
+            return Err(FsError::NotFound(to_parent));
+        }
+        self.append_op(pid, LogOp::Rename { from, to })?;
+        self.end_op(pid, t0);
+        Ok(())
+    }
+
+    fn unlink(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        let path = normalize(path)?;
+        let t0 = self.begin_op(pid)?;
+        self.acquire_lease(pid, &path, LeaseMode::Write)?;
+        if !self.path_exists(pid, &path) {
+            self.end_op(pid, t0);
+            return Err(FsError::NotFound(path));
+        }
+        self.append_op(pid, LogOp::Unlink { path })?;
+        self.end_op(pid, t0);
+        Ok(())
+    }
+
+    fn stat(&mut self, pid: ProcId, path: &str) -> Result<Stat> {
+        let path = normalize(path)?;
+        let t0 = self.begin_op(pid)?;
+        let st = if let Ok(st) = self.procs[pid].log_view.stat(&path) {
+            Ok(st)
+        } else if self.procs[pid].tombstones.contains(&path) {
+            Err(FsError::NotFound(path.clone()))
+        } else {
+            let pnode = self.procs[pid].node;
+            match self.store_node_for(pid, &path) {
+                Some(n) => {
+                    let sock = self.area_socket(&path).min(self.nodes[n].sockets.len() - 1);
+                    if n != pnode {
+                        // remote metadata lookup (RMT case)
+                        let p = self.p();
+                        let now = self.procs[pid].clock.now;
+                        let done = self.fabric.rpc(now, pnode, n, 64, 128, p.rpc_overhead, &p);
+                        self.procs[pid].clock.advance_to(done);
+                    }
+                    self.nodes[n].sockets[sock].sharedfs.store.stat(&path)
+                }
+                None => Err(FsError::NotFound(path.clone())),
+            }
+        };
+        self.end_op(pid, t0);
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_node() -> Cluster {
+        Cluster::new(ClusterConfig::default().nodes(2))
+    }
+
+    #[test]
+    fn create_write_read_roundtrip() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/hello").unwrap();
+        c.write(pid, fd, Payload::bytes(b"hello world".to_vec())).unwrap();
+        let data = c.pread(pid, fd, 0, 11).unwrap();
+        assert_eq!(data.materialize(), b"hello world");
+    }
+
+    #[test]
+    fn append_cursor_advances() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(b"aaa".to_vec())).unwrap();
+        c.write(pid, fd, Payload::bytes(b"bbb".to_vec())).unwrap();
+        let data = c.pread(pid, fd, 0, 6).unwrap();
+        assert_eq!(data.materialize(), b"aaabbb");
+    }
+
+    #[test]
+    fn fsync_replicates_to_backup() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(vec![7u8; 4096])).unwrap();
+        assert_eq!(c.procs[pid].log.replicated_upto, 0);
+        c.fsync(pid, fd).unwrap();
+        assert_eq!(c.procs[pid].log.replicated_upto, 2); // create + write
+        assert!(c.replicated_bytes > 4096);
+    }
+
+    #[test]
+    fn small_write_latency_is_sub_microsecond() {
+        // the headline: local NVM writes are ~100s of ns, not µs/ms
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(vec![1u8; 128])).unwrap();
+        let lat = c.last_latency(pid);
+        assert!(lat < 2_000, "128B write latency {lat}ns");
+    }
+
+    #[test]
+    fn fsync_latency_includes_rdma() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(vec![1u8; 128])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        let lat = c.last_latency(pid);
+        assert!(lat >= 8_000, "replicated fsync latency {lat}ns");
+        assert!(lat < 100_000, "fsync latency {lat}ns");
+    }
+
+    #[test]
+    fn digest_makes_data_readable_from_sharedfs() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(b"digestme".to_vec())).unwrap();
+        c.fsync(pid, fd).unwrap();
+        c.digest_log(pid).unwrap();
+        // both replicas have it
+        for n in 0..2 {
+            assert!(c.nodes[n].sockets[0].sharedfs.store.exists("/f"), "node {n}");
+        }
+        // read still correct after digest + log reclaim
+        let data = c.pread(pid, fd, 0, 8).unwrap();
+        assert_eq!(data.materialize(), b"digestme");
+    }
+
+    #[test]
+    fn chain_replicas_converge() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        for i in 0..10u8 {
+            c.pwrite(pid, fd, i as u64 * 100, Payload::bytes(vec![i; 100])).unwrap();
+        }
+        c.fsync(pid, fd).unwrap();
+        c.digest_log(pid).unwrap();
+        let a = &c.nodes[0].sockets[0].sharedfs.store;
+        let b = &c.nodes[1].sockets[0].sharedfs.store;
+        assert!(a.content_eq(b));
+    }
+
+    #[test]
+    fn lease_conflict_forces_revocation() {
+        let mut c = two_node();
+        let p1 = c.spawn_process(0, 0);
+        let p2 = c.spawn_process(1, 0);
+        c.mkdir(p1, "/shared").unwrap();
+        let fd = c.create(p1, "/shared/f").unwrap();
+        c.write(p1, fd, Payload::bytes(b"from p1".to_vec())).unwrap();
+        // p2 opening the same directory forces p1's lease revocation,
+        // which flushes p1's log so p2 sees the data
+        c.set_now(p2, c.now(p1));
+        let fd2 = c.open(p2, "/shared/f").unwrap();
+        let data = c.pread(p2, fd2, 0, 7).unwrap();
+        assert_eq!(data.materialize(), b"from p1");
+    }
+
+    #[test]
+    fn rename_visible_after_digest() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/a").unwrap();
+        c.write(pid, fd, Payload::bytes(b"data".to_vec())).unwrap();
+        c.rename(pid, "/a", "/b").unwrap();
+        c.fsync(pid, fd).unwrap();
+        c.digest_log(pid).unwrap();
+        assert!(c.nodes[1].sockets[0].sharedfs.store.exists("/b"));
+        assert!(!c.nodes[1].sockets[0].sharedfs.store.exists("/a"));
+    }
+
+    #[test]
+    fn no_replication_when_factor_one() {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(2).replication(1));
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(vec![1u8; 1024])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        assert_eq!(c.replicated_bytes, 0);
+        c.digest_log(pid).unwrap();
+        assert!(c.nodes[0].sockets[0].sharedfs.store.exists("/f"));
+        assert!(!c.nodes[1].sockets[0].sharedfs.store.exists("/f"));
+    }
+
+    #[test]
+    fn three_replica_fsync_costs_more() {
+        let mut c2 = Cluster::new(ClusterConfig::default().nodes(2).replication(2));
+        let mut c3 = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+        let lat = |c: &mut Cluster| {
+            let pid = c.spawn_process(0, 0);
+            let fd = c.create(pid, "/f").unwrap();
+            c.write(pid, fd, Payload::bytes(vec![1u8; 128])).unwrap();
+            c.fsync(pid, fd).unwrap();
+            c.last_latency(pid)
+        };
+        let l2 = lat(&mut c2);
+        let l3 = lat(&mut c3);
+        assert!(l3 > l2, "3r {l3} !> 2r {l2}");
+        let ratio = l3 as f64 / l2 as f64;
+        assert!(ratio > 1.5 && ratio < 3.5, "chain ratio {ratio}");
+    }
+
+    #[test]
+    fn optimistic_fsync_is_cheap() {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(2).mode(CrashMode::Optimistic));
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(vec![1u8; 4096])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        assert!(c.last_latency(pid) < 1_000);
+        assert_eq!(c.procs[pid].log.replicated_upto, 0);
+        // dsync forces it
+        c.dsync(pid, fd).unwrap();
+        assert_eq!(c.procs[pid].log.replicated_upto, 2);
+    }
+
+    #[test]
+    fn stat_sees_log_and_digested_state() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        c.write(pid, fd, Payload::bytes(vec![1u8; 100])).unwrap();
+        assert_eq!(c.stat(pid, "/f").unwrap().size, 100);
+        c.fsync(pid, fd).unwrap();
+        c.digest_log(pid).unwrap();
+        assert_eq!(c.stat(pid, "/f").unwrap().size, 100);
+    }
+
+    #[test]
+    fn open_nonexistent_fails() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        assert!(matches!(c.open(pid, "/nope"), Err(FsError::NotFound(_))));
+    }
+
+    #[test]
+    fn create_duplicate_fails() {
+        let mut c = two_node();
+        let pid = c.spawn_process(0, 0);
+        c.create(pid, "/f").unwrap();
+        assert!(matches!(c.create(pid, "/f"), Err(FsError::AlreadyExists(_))));
+    }
+}

@@ -1,0 +1,129 @@
+//! Cluster simulation: the Assise system assembled on the simulated
+//! hardware, plus the common file-system API ([`api::DistFs`]) that the
+//! baselines also implement, and failure injection ([`failure`]).
+
+pub mod api;
+pub mod assise;
+pub mod failure;
+
+pub use api::DistFs;
+pub use assise::{Cluster, Node, SocketUnit};
+
+use crate::coherence::ManagerPolicy;
+use crate::hw::params::HwParams;
+
+/// Crash-consistency mode (paper §3: mount option).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashMode {
+    /// fsync = immediate synchronous chain replication.
+    Pessimistic,
+    /// replication deferred to dsync/digest; batches coalesced.
+    Optimistic,
+}
+
+/// Cluster-wide configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub sockets_per_node: usize,
+    /// NVM capacity per socket (testbed: 6 TB/machine over 2 sockets).
+    pub nvm_per_socket: u64,
+    pub dram_per_node: u64,
+    pub ssd_per_node: u64,
+    /// LibFS private update log budget (§B default 1 GB).
+    pub log_capacity: u64,
+    /// LibFS private DRAM read cache (§5.1: 2 GB).
+    pub read_cache_capacity: u64,
+    /// SharedFS hot-area budget per socket (u64::MAX = all of NVM).
+    pub hot_capacity: u64,
+    pub mode: CrashMode,
+    /// number of cache replicas (1 = no replication).
+    pub replication_factor: usize,
+    /// number of reserve replicas appended to the chain (§3.5).
+    pub reserve_replicas: usize,
+    pub manager_policy: ManagerPolicy,
+    /// digest when the log fills beyond this fraction (§A.1).
+    pub digest_threshold: f64,
+    /// use the I/OAT DMA engine for cross-socket digestion (§3.2).
+    pub numa_dma: bool,
+    /// verify digest batches with the AOT checksum kernel (costs real
+    /// wall-clock; enabled in examples/tests, off in big sweeps).
+    pub verify_digests: bool,
+    pub params: HwParams,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 2,
+            sockets_per_node: 2,
+            nvm_per_socket: 3 << 40, // 3 TB/socket
+            dram_per_node: 384 << 30,
+            ssd_per_node: 375 << 30,
+            log_capacity: 1 << 30,
+            read_cache_capacity: 2 << 30,
+            hot_capacity: u64::MAX,
+            mode: CrashMode::Pessimistic,
+            replication_factor: 2,
+            reserve_replicas: 0,
+            manager_policy: ManagerPolicy::PerProcess,
+            digest_threshold: 0.30,
+            numa_dma: false,
+            verify_digests: false,
+            params: HwParams::default(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nodes = n;
+        self.replication_factor = self.replication_factor.min(n);
+        self
+    }
+
+    pub fn replication(mut self, r: usize) -> Self {
+        self.replication_factor = r;
+        self
+    }
+
+    pub fn reserves(mut self, r: usize) -> Self {
+        self.reserve_replicas = r;
+        self
+    }
+
+    pub fn mode(mut self, m: CrashMode) -> Self {
+        self.mode = m;
+        self
+    }
+
+    pub fn log_capacity(mut self, c: u64) -> Self {
+        self.log_capacity = c;
+        self
+    }
+
+    pub fn read_cache(mut self, c: u64) -> Self {
+        self.read_cache_capacity = c;
+        self
+    }
+
+    pub fn hot_capacity(mut self, c: u64) -> Self {
+        self.hot_capacity = c;
+        self
+    }
+
+    pub fn policy(mut self, p: ManagerPolicy) -> Self {
+        self.manager_policy = p;
+        self
+    }
+
+    pub fn dma(mut self, on: bool) -> Self {
+        self.numa_dma = on;
+        self
+    }
+
+    pub fn verify(mut self, on: bool) -> Self {
+        self.verify_digests = on;
+        self
+    }
+}

@@ -1,0 +1,187 @@
+//! Deterministic PRNG (SplitMix64) — no external dependency, reproducible
+//! experiments. Used for workload generation, synthetic payloads, and the
+//! NVM write-tail model.
+
+/// SplitMix64: tiny, fast, passes BigCrush for our purposes, and — unlike
+/// `rand` — guaranteed stable across builds so experiment output is
+/// byte-reproducible.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. Lemire's multiply-shift; slight modulo bias is
+    /// irrelevant for workload generation.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform float in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Fill `buf` with deterministic bytes.
+    pub fn fill(&mut self, buf: &mut [u8]) {
+        let mut chunks = buf.chunks_exact_mut(8);
+        for c in &mut chunks {
+            c.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let b = self.next_u64().to_le_bytes();
+            rem.copy_from_slice(&b[..rem.len()]);
+        }
+    }
+
+    /// Zipfian-ish rank sampler: returns a rank in `[0, n)` where low
+    /// ranks are favored, using the classic "s=~1" approximation via
+    /// inverse-power transform — adequate for skewed-read workloads
+    /// (LevelDB readhot uses "1% highly-accessed keys").
+    pub fn skewed(&mut self, n: u64, hot_fraction: f64, hot_prob: f64) -> u64 {
+        let hot_n = ((n as f64 * hot_fraction).ceil() as u64).max(1);
+        if self.f64() < hot_prob {
+            self.below(hot_n)
+        } else {
+            hot_n + self.below((n - hot_n).max(1))
+        }
+    }
+}
+
+/// Deterministic 8-byte word of a synthetic stream at word index
+/// `abs_off / 8` (one SplitMix64 scramble keyed by (seed, word index)).
+#[inline]
+pub fn synthetic_word(seed: u64, word_idx: u64) -> u64 {
+    let mut z = seed ^ word_idx.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic byte at an absolute offset of a synthetic stream: used by
+/// `Payload::Synthetic` so slices of a synthetic payload are consistent
+/// regardless of how they are split.
+#[inline]
+pub fn synthetic_byte(seed: u64, abs_off: u64) -> u8 {
+    synthetic_word(seed, abs_off >> 3).to_le_bytes()[(abs_off & 7) as usize]
+}
+
+/// Fill `out` with the synthetic stream bytes `[abs_off, abs_off+len)`:
+/// word-at-a-time (8× fewer scrambles than the per-byte path — this is
+/// the simulator's own hot loop, see EXPERIMENTS.md §Perf).
+pub fn synthetic_fill(seed: u64, abs_off: u64, out: &mut Vec<u8>, len: u64) {
+    out.reserve(len as usize);
+    let end = abs_off + len;
+    let mut pos = abs_off;
+    // leading partial word
+    while pos < end && pos & 7 != 0 {
+        out.push(synthetic_byte(seed, pos));
+        pos += 1;
+    }
+    // full words
+    while pos + 8 <= end {
+        out.extend_from_slice(&synthetic_word(seed, pos >> 3).to_le_bytes());
+        pos += 8;
+    }
+    // trailing partial word
+    while pos < end {
+        out.push(synthetic_byte(seed, pos));
+        pos += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn fill_deterministic_and_covers_tail() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(1);
+        let mut x = [0u8; 13];
+        let mut y = [0u8; 13];
+        a.fill(&mut x);
+        b.fill(&mut y);
+        assert_eq!(x, y);
+        assert!(x.iter().any(|&v| v != 0));
+    }
+
+    #[test]
+    fn synthetic_byte_slice_consistency() {
+        // byte at abs offset is independent of slicing
+        let s = 0xDEADBEEF;
+        let whole: Vec<u8> = (0..64).map(|i| synthetic_byte(s, i)).collect();
+        let part: Vec<u8> = (17..40).map(|i| synthetic_byte(s, i)).collect();
+        assert_eq!(&whole[17..40], &part[..]);
+    }
+
+    #[test]
+    fn skewed_prefers_hot_set() {
+        let mut r = SplitMix64::new(3);
+        let n = 1000u64;
+        let hits = (0..10_000)
+            .filter(|_| r.skewed(n, 0.01, 0.9) < 10)
+            .count();
+        assert!(hits > 8_500, "hot hits={hits}");
+    }
+
+    #[test]
+    fn distribution_roughly_uniform() {
+        let mut r = SplitMix64::new(11);
+        let mut buckets = [0u32; 16];
+        for _ in 0..16_000 {
+            buckets[r.below(16) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((700..1300).contains(&b), "bucket={b}");
+        }
+    }
+}

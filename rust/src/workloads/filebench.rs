@@ -1,0 +1,242 @@
+//! Filebench Varmail and Fileserver profiles (paper §5.3, Fig. 6).
+//!
+//! Varmail (mail-server emulation): 16 KB-average files, 1:1 read:write,
+//! write-ahead log with strict persistence (fsync after log and mailbox
+//! writes). Fileserver: 128 KB-average files, 2:1 write:read, relaxed
+//! consistency (no fsync). Both grow files via 16 KB appends.
+
+use crate::fs::{Payload, ProcId, Result};
+use crate::sim::api::DistFs;
+use crate::util::SplitMix64;
+use crate::Nanos;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    Varmail,
+    /// Varmail with a non-synchronous WAL (the Assise-Opt experiment:
+    /// prefix semantics let the temporary log write coalesce away).
+    VarmailOpt,
+    Fileserver,
+}
+
+#[derive(Debug, Clone)]
+pub struct FilebenchConfig {
+    pub profile: Profile,
+    pub dir: String,
+    pub nfiles: usize,
+    pub append_size: u64,
+    pub mean_file_size: u64,
+    pub ops: usize,
+    pub seed: u64,
+}
+
+impl FilebenchConfig {
+    pub fn varmail(ops: usize) -> Self {
+        Self {
+            profile: Profile::Varmail,
+            dir: "/varmail".into(),
+            nfiles: 1_000,
+            append_size: 16 << 10,
+            mean_file_size: 16 << 10,
+            ops,
+            seed: 42,
+        }
+    }
+
+    pub fn varmail_opt(ops: usize) -> Self {
+        Self { profile: Profile::VarmailOpt, ..Self::varmail(ops) }
+    }
+
+    pub fn fileserver(ops: usize) -> Self {
+        Self {
+            profile: Profile::Fileserver,
+            dir: "/fileserver".into(),
+            nfiles: 1_000,
+            append_size: 16 << 10,
+            mean_file_size: 128 << 10,
+            ops,
+            seed: 43,
+        }
+    }
+}
+
+/// Result: completed profile loop iterations and ops/s in virtual time.
+#[derive(Debug, Clone, Copy)]
+pub struct FilebenchResult {
+    pub iterations: u64,
+    pub fs_ops: u64,
+    pub elapsed: Nanos,
+}
+
+impl FilebenchResult {
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.elapsed == 0 {
+            return 0.0;
+        }
+        self.fs_ops as f64 * 1e9 / self.elapsed as f64
+    }
+}
+
+/// Run the profile loop on one process.
+pub fn run(fs: &mut dyn DistFs, pid: ProcId, cfg: &FilebenchConfig) -> Result<FilebenchResult> {
+    fs.mkdir(pid, &cfg.dir).ok();
+    let mut rng = SplitMix64::new(cfg.seed);
+    let t0 = fs.now(pid);
+    let mut fs_ops = 0u64;
+    let mut iterations = 0u64;
+    let mut created: Vec<String> = Vec::new();
+    let mut unique = 0u64;
+
+    while iterations < cfg.ops as u64 {
+        match cfg.profile {
+            Profile::Varmail | Profile::VarmailOpt => {
+                let sync_wal = cfg.profile == Profile::Varmail;
+                // deliver: WAL append, mailbox append, both fsync'd in
+                // strict mode; WAL is a short-lived file (delete after)
+                let wal = format!("{}/wal-{}-{}", cfg.dir, pid, unique);
+                let mbox = format!("{}/mbox-{}", cfg.dir, rng.below(cfg.nfiles as u64));
+                unique += 1;
+                let wfd = fs.create(pid, &wal)?;
+                fs.write(pid, wfd, Payload::synthetic(rng.next_u64(), cfg.append_size))?;
+                if sync_wal {
+                    fs.fsync(pid, wfd)?;
+                }
+                // VarmailOpt: the WAL is never synced — replication is
+                // deferred (digest/dsync batching), letting coalescing
+                // eliminate the whole WAL lifetime (§5.3 Assise-Opt)
+                fs_ops += 3;
+                let mfd = match fs.open(pid, &mbox) {
+                    Ok(fd) => fd,
+                    Err(_) => {
+                        created.push(mbox.clone());
+                        fs.create(pid, &mbox)?
+                    }
+                };
+                // append to the mailbox then persist: strict mode fsyncs
+                // every delivery; Assise-Opt keeps mailbox writes ordered
+                // (fsync is ordering-only in optimistic mode) and forces
+                // replication with dsync once per small batch — WAL
+                // lifetimes close inside the batch and coalesce away
+                let st = fs.stat(pid, &mbox)?;
+                fs.pwrite(pid, mfd, st.size, Payload::synthetic(rng.next_u64(), cfg.append_size))?;
+                fs.fsync(pid, mfd)?;
+                if !sync_wal && iterations % 4 == 3 {
+                    fs.dsync(pid, mfd)?;
+                }
+                fs_ops += 3;
+                // read the whole mailbox (mailbox read)
+                let st = fs.stat(pid, &mbox)?;
+                if st.size > 0 {
+                    fs.pread(pid, mfd, 0, st.size)?;
+                }
+                fs.close(pid, mfd)?;
+                fs_ops += 2;
+                // WAL removed after delivery — in optimistic mode the
+                // whole lifetime coalesces away before replication
+                fs.close(pid, wfd)?;
+                fs.unlink(pid, &wal)?;
+                fs_ops += 2;
+            }
+            Profile::Fileserver => {
+                // create + write whole file
+                let path = format!("{}/file-{}-{}", cfg.dir, pid, unique);
+                unique += 1;
+                let fd = fs.create(pid, &path)?;
+                let mut written = 0;
+                while written < cfg.mean_file_size {
+                    let chunk = cfg.append_size.min(cfg.mean_file_size - written);
+                    fs.write(pid, fd, Payload::synthetic(rng.next_u64(), chunk))?;
+                    written += chunk;
+                    fs_ops += 1;
+                }
+                fs.close(pid, fd)?;
+                created.push(path.clone());
+                // append to a random existing file
+                let target = &created[rng.below(created.len() as u64) as usize];
+                if let Ok(fd) = fs.open(pid, target) {
+                    let st = fs.stat(pid, target)?;
+                    fs.pwrite(pid, fd, st.size, Payload::synthetic(rng.next_u64(), cfg.append_size))?;
+                    fs.close(pid, fd)?;
+                    fs_ops += 2;
+                }
+                // read a whole random file (the 2:1 W:R mix)
+                let target = created[rng.below(created.len() as u64) as usize].clone();
+                if let Ok(fd) = fs.open(pid, &target) {
+                    let st = fs.stat(pid, &target)?;
+                    if st.size > 0 {
+                        fs.pread(pid, fd, 0, st.size)?;
+                    }
+                    fs.close(pid, fd)?;
+                    fs_ops += 2;
+                }
+                // delete oldest when over the working-set cap
+                if created.len() > cfg.nfiles {
+                    let victim = created.remove(0);
+                    fs.unlink(pid, &victim)?;
+                    fs_ops += 1;
+                }
+            }
+        }
+        iterations += 1;
+    }
+    Ok(FilebenchResult { iterations, fs_ops, elapsed: fs.now(pid) - t0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Cluster, ClusterConfig, CrashMode};
+
+    #[test]
+    fn varmail_runs_and_counts() {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+        let pid = c.spawn_process(0, 0);
+        let r = run(&mut c, pid, &FilebenchConfig::varmail(20)).unwrap();
+        assert_eq!(r.iterations, 20);
+        assert!(r.fs_ops >= 20 * 9);
+        assert!(r.ops_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn fileserver_runs() {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+        let pid = c.spawn_process(0, 0);
+        let r = run(&mut c, pid, &FilebenchConfig::fileserver(10)).unwrap();
+        assert_eq!(r.iterations, 10);
+        assert!(r.elapsed > 0);
+    }
+
+    #[test]
+    fn varmail_opt_coalesces_wal() {
+        // optimistic mode + non-sync WAL: the create/write/unlink WAL
+        // lifetime never hits the wire
+        let mut c = Cluster::new(
+            ClusterConfig::default().nodes(2).mode(CrashMode::Optimistic),
+        );
+        let pid = c.spawn_process(0, 0);
+        run(&mut c, pid, &FilebenchConfig::varmail_opt(20)).unwrap();
+        // force any tail replication, then check savings
+        c.replicate_log(pid).unwrap();
+        assert!(
+            c.coalesce_saved_bytes > 0,
+            "optimistic varmail must coalesce WAL bytes"
+        );
+    }
+
+    #[test]
+    fn varmail_opt_faster_than_strict_on_assise() {
+        let strict = {
+            let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+            let pid = c.spawn_process(0, 0);
+            run(&mut c, pid, &FilebenchConfig::varmail(30)).unwrap().ops_per_sec()
+        };
+        let opt = {
+            let mut c = Cluster::new(
+                ClusterConfig::default().nodes(2).mode(CrashMode::Optimistic),
+            );
+            let pid = c.spawn_process(0, 0);
+            run(&mut c, pid, &FilebenchConfig::varmail_opt(30)).unwrap().ops_per_sec()
+        };
+        assert!(opt > strict, "opt {opt} !> strict {strict}");
+    }
+}

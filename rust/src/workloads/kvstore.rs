@@ -1,0 +1,375 @@
+//! LevelDB-style LSM KV store over the `DistFs` API — the paper's
+//! LevelDB stand-in (§5.3 Fig. 4, §5.4 Fig. 7).
+//!
+//! Faithful to the cost structure that matters for the experiments:
+//! a DRAM memtable absorbing writes, a write-ahead log appended on every
+//! put (fsync'd only for sync-puts), memtable flushes into sorted
+//! fixed-record SSTs (the periodic latency spikes of Fig. 7), L0
+//! compaction that reads & rewrites SSTs (the post-fail-over stall), and
+//! an integrity check on unclean restart that touches the whole dataset
+//! (the dark-shaded recovery phase of Fig. 7).
+
+use std::collections::BTreeMap;
+
+use crate::fs::{Fd, Payload, ProcId, Result};
+use crate::sim::api::DistFs;
+use crate::Nanos;
+
+#[derive(Debug, Clone)]
+pub struct KvConfig {
+    pub dir: String,
+    pub key_size: usize,
+    pub value_size: usize,
+    /// memtable flush threshold (LevelDB default 4 MB)
+    pub memtable_bytes: u64,
+    /// compact when this many SSTs accumulate
+    pub compact_at: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        Self {
+            dir: "/leveldb".into(),
+            key_size: 16,
+            value_size: 1024,
+            memtable_bytes: 4 << 20,
+            compact_at: 8,
+        }
+    }
+}
+
+pub struct KvStore {
+    pub cfg: KvConfig,
+    pub pid: ProcId,
+    memtable: BTreeMap<u64, Payload>,
+    memtable_used: u64,
+    wal_fd: Fd,
+    wal_seq: u64,
+    /// SSTs: (file path, sorted keys) — key list doubles as the index
+    ssts: Vec<(String, Vec<u64>)>,
+    /// open table handles (LevelDB keeps SSTs open in its table cache)
+    sst_fds: std::collections::HashMap<String, Fd>,
+    next_sst: u64,
+    pub flushes: u64,
+    pub compactions: u64,
+}
+
+impl KvStore {
+    /// Record bytes on disk: key + value.
+    fn rec_len(&self) -> u64 {
+        (self.cfg.key_size + self.cfg.value_size) as u64
+    }
+
+    pub fn create(fs: &mut dyn DistFs, pid: ProcId, cfg: KvConfig) -> Result<Self> {
+        fs.mkdir(pid, &cfg.dir).ok();
+        let wal_path = format!("{}/WAL-0", cfg.dir);
+        let wal_fd = fs.create(pid, &wal_path)?;
+        Ok(Self {
+            cfg,
+            pid,
+            memtable: BTreeMap::new(),
+            memtable_used: 0,
+            wal_fd,
+            wal_seq: 0,
+            ssts: Vec::new(),
+            sst_fds: std::collections::HashMap::new(),
+            next_sst: 0,
+            flushes: 0,
+            compactions: 0,
+        })
+    }
+
+    /// Reopen an existing store after a crash/fail-over: replays an
+    /// integrity pass over every SST plus the WAL (LevelDB's "check its
+    /// dataset for integrity before executing further operations").
+    pub fn reopen(
+        fs: &mut dyn DistFs,
+        pid: ProcId,
+        cfg: KvConfig,
+        ssts: Vec<(String, Vec<u64>)>,
+        wal_seq: u64,
+    ) -> Result<Self> {
+        // integrity scan: read every SST fully
+        for (path, keys) in &ssts {
+            let fd = fs.open(pid, path)?;
+            let len = keys.len() as u64 * (cfg.key_size + cfg.value_size) as u64;
+            let mut off = 0;
+            while off < len {
+                let chunk = (1 << 20).min(len - off);
+                fs.pread(pid, fd, off, chunk)?;
+                off += chunk;
+            }
+            fs.close(pid, fd)?;
+        }
+        // replay WAL
+        let wal_path = format!("{}/WAL-{}", cfg.dir, wal_seq);
+        let wal_fd = match fs.open(pid, &wal_path) {
+            Ok(fd) => {
+                let st = fs.stat(pid, &wal_path)?;
+                if st.size > 0 {
+                    fs.pread(pid, wal_fd_dummy(fd), 0, st.size).ok();
+                }
+                fd
+            }
+            Err(_) => fs.create(pid, &wal_path)?,
+        };
+        let next_sst = ssts.len() as u64;
+        Ok(Self {
+            cfg,
+            pid,
+            memtable: BTreeMap::new(),
+            memtable_used: 0,
+            wal_fd,
+            wal_seq,
+            ssts,
+            sst_fds: std::collections::HashMap::new(),
+            next_sst,
+            flushes: 0,
+            compactions: 0,
+        })
+    }
+
+    /// Snapshot of SST metadata (for reopen-after-crash flows).
+    pub fn manifest(&self) -> (Vec<(String, Vec<u64>)>, u64) {
+        (self.ssts.clone(), self.wal_seq)
+    }
+
+    fn value_for(key: u64, len: usize) -> Payload {
+        Payload::synthetic(key ^ 0xA5A5_5A5A, len as u64)
+    }
+
+    pub fn put(&mut self, fs: &mut dyn DistFs, key: u64, sync: bool) -> Result<Nanos> {
+        let t0 = fs.now(self.pid);
+        // WAL append (key + value at op granularity)
+        let rec = Self::value_for(key, self.cfg.key_size + self.cfg.value_size);
+        fs.write(self.pid, self.wal_fd, rec)?;
+        if sync {
+            fs.fsync(self.pid, self.wal_fd)?;
+        }
+        self.memtable
+            .insert(key, Self::value_for(key, self.cfg.value_size));
+        self.memtable_used += self.rec_len();
+        if self.memtable_used >= self.cfg.memtable_bytes {
+            self.flush(fs)?;
+        }
+        Ok(fs.now(self.pid) - t0)
+    }
+
+    pub fn get(&mut self, fs: &mut dyn DistFs, key: u64) -> Result<(bool, Nanos)> {
+        let t0 = fs.now(self.pid);
+        if self.memtable.contains_key(&key) {
+            // memtable hit: in-process DRAM lookup, no FS op
+            return Ok((true, fs.now(self.pid) - t0));
+        }
+        // newest-to-oldest SST search (table-cache keeps handles open)
+        let rec_len = self.rec_len();
+        let mut hit: Option<(String, u64)> = None;
+        for (path, keys) in self.ssts.iter().rev() {
+            if let Ok(idx) = keys.binary_search(&key) {
+                hit = Some((path.clone(), idx as u64 * rec_len));
+                break;
+            }
+        }
+        if let Some((path, off)) = hit {
+            let fd = match self.sst_fds.get(&path) {
+                Some(&fd) => fd,
+                None => {
+                    let fd = fs.open(self.pid, &path)?;
+                    self.sst_fds.insert(path, fd);
+                    fd
+                }
+            };
+            fs.pread(self.pid, fd, off, rec_len)?;
+            return Ok((true, fs.now(self.pid) - t0));
+        }
+        Ok((false, fs.now(self.pid) - t0))
+    }
+
+    /// Flush the memtable into a new sorted SST (the Fig. 7 latency
+    /// bursts) and reset the WAL.
+    pub fn flush(&mut self, fs: &mut dyn DistFs) -> Result<()> {
+        if self.memtable.is_empty() {
+            return Ok(());
+        }
+        let path = format!("{}/sst-{:06}", self.cfg.dir, self.next_sst);
+        self.next_sst += 1;
+        let fd = fs.create(self.pid, &path)?;
+        let keys: Vec<u64> = self.memtable.keys().copied().collect();
+        // write in 1 MB batches (LevelDB writes sorted blocks)
+        let mut batch: Vec<Payload> = Vec::new();
+        let mut batch_bytes = 0;
+        for (&k, _) in self.memtable.iter() {
+            batch.push(Self::value_for(k, self.cfg.key_size + self.cfg.value_size));
+            batch_bytes += self.rec_len();
+            if batch_bytes >= (1 << 20) {
+                fs.write(self.pid, fd, Payload::concat(&batch))?;
+                batch.clear();
+                batch_bytes = 0;
+            }
+        }
+        if !batch.is_empty() {
+            fs.write(self.pid, fd, Payload::concat(&batch))?;
+        }
+        fs.fsync(self.pid, fd)?;
+        fs.close(self.pid, fd)?;
+        self.ssts.push((path, keys));
+        self.memtable.clear();
+        self.memtable_used = 0;
+        self.flushes += 1;
+
+        // reset WAL (old one's entries are now durable in the SST)
+        let old = format!("{}/WAL-{}", self.cfg.dir, self.wal_seq);
+        self.wal_seq += 1;
+        let new = format!("{}/WAL-{}", self.cfg.dir, self.wal_seq);
+        self.wal_fd = fs.create(self.pid, &new)?;
+        fs.unlink(self.pid, &old)?;
+
+        if self.ssts.len() >= self.cfg.compact_at {
+            self.compact(fs)?;
+        }
+        Ok(())
+    }
+
+    /// L0 compaction: read every SST, merge, rewrite as one (the
+    /// post-fail-over stall of Fig. 7).
+    pub fn compact(&mut self, fs: &mut dyn DistFs) -> Result<()> {
+        if self.ssts.len() < 2 {
+            return Ok(());
+        }
+        let mut all_keys: Vec<u64> = Vec::new();
+        for (path, keys) in &self.ssts {
+            // read the whole SST
+            let fd = fs.open(self.pid, path)?;
+            let len = keys.len() as u64 * self.rec_len();
+            let mut off = 0;
+            while off < len {
+                let chunk = (1 << 20).min(len - off);
+                fs.pread(self.pid, fd, off, chunk)?;
+                off += chunk;
+            }
+            fs.close(self.pid, fd)?;
+            all_keys.extend(keys);
+        }
+        all_keys.sort_unstable();
+        all_keys.dedup();
+        let path = format!("{}/sst-{:06}", self.cfg.dir, self.next_sst);
+        self.next_sst += 1;
+        let fd = fs.create(self.pid, &path)?;
+        let total = all_keys.len() as u64 * self.rec_len();
+        let mut off = 0;
+        while off < total {
+            let chunk = (1 << 20).min(total - off);
+            fs.write(self.pid, fd, Payload::synthetic(0xC0, chunk))?;
+            off += chunk;
+        }
+        fs.fsync(self.pid, fd)?;
+        fs.close(self.pid, fd)?;
+        for (p, _) in self.ssts.drain(..) {
+            if let Some(old_fd) = self.sst_fds.remove(&p) {
+                fs.close(self.pid, old_fd)?;
+            }
+            fs.unlink(self.pid, &p)?;
+        }
+        self.ssts.push((path, all_keys));
+        self.compactions += 1;
+        Ok(())
+    }
+
+    pub fn sst_count(&self) -> usize {
+        self.ssts.len()
+    }
+
+    pub fn dataset_bytes(&self) -> u64 {
+        self.ssts.iter().map(|(_, k)| k.len() as u64 * self.rec_len()).sum()
+    }
+}
+
+fn wal_fd_dummy(fd: Fd) -> Fd {
+    fd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Cluster, ClusterConfig};
+
+    fn fs() -> Cluster {
+        Cluster::new(ClusterConfig::default().nodes(2))
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut c = fs();
+        let pid = c.spawn_process(0, 0);
+        let mut kv = KvStore::create(&mut c, pid, KvConfig::default()).unwrap();
+        for k in 0..100 {
+            kv.put(&mut c, k, false).unwrap();
+        }
+        let (found, _) = kv.get(&mut c, 42).unwrap();
+        assert!(found);
+        let (found, _) = kv.get(&mut c, 10_000).unwrap();
+        assert!(!found);
+    }
+
+    #[test]
+    fn memtable_flush_creates_sst() {
+        let mut c = fs();
+        let pid = c.spawn_process(0, 0);
+        let cfg = KvConfig { memtable_bytes: 16 << 10, ..Default::default() };
+        let mut kv = KvStore::create(&mut c, pid, cfg).unwrap();
+        for k in 0..64 {
+            kv.put(&mut c, k, false).unwrap();
+        }
+        assert!(kv.flushes >= 1, "flushes={}", kv.flushes);
+        assert!(kv.sst_count() >= 1);
+        // key still found after flush (from SST now)
+        let (found, _) = kv.get(&mut c, 0).unwrap();
+        assert!(found);
+    }
+
+    #[test]
+    fn sync_puts_slower_than_async() {
+        let mut c = fs();
+        let pid = c.spawn_process(0, 0);
+        let mut kv = KvStore::create(&mut c, pid, KvConfig::default()).unwrap();
+        let l_async = kv.put(&mut c, 1, false).unwrap();
+        let l_sync = kv.put(&mut c, 2, true).unwrap();
+        assert!(l_sync > l_async * 2, "sync {l_sync} !>> async {l_async}");
+    }
+
+    #[test]
+    fn compaction_merges_ssts() {
+        let mut c = fs();
+        let pid = c.spawn_process(0, 0);
+        let cfg = KvConfig {
+            memtable_bytes: 8 << 10,
+            compact_at: 3,
+            ..Default::default()
+        };
+        let mut kv = KvStore::create(&mut c, pid, cfg).unwrap();
+        for k in 0..100 {
+            kv.put(&mut c, k, false).unwrap();
+        }
+        assert!(kv.compactions >= 1);
+        assert!(kv.sst_count() < 3);
+        let (found, _) = kv.get(&mut c, 5).unwrap();
+        assert!(found);
+    }
+
+    #[test]
+    fn reopen_scans_dataset() {
+        let mut c = fs();
+        let pid = c.spawn_process(0, 0);
+        let cfg = KvConfig { memtable_bytes: 16 << 10, ..Default::default() };
+        let mut kv = KvStore::create(&mut c, pid, cfg.clone()).unwrap();
+        for k in 0..64 {
+            kv.put(&mut c, k, false).unwrap();
+        }
+        kv.flush(&mut c).unwrap();
+        let (manifest, wal_seq) = kv.manifest();
+        let t_before = c.now(pid);
+        let kv2 = KvStore::reopen(&mut c, pid, cfg, manifest, wal_seq).unwrap();
+        assert!(c.now(pid) > t_before, "integrity scan must cost time");
+        assert!(kv2.sst_count() >= 1);
+    }
+}

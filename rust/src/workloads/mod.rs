@@ -1,0 +1,14 @@
+//! Workload generators for the paper's application benchmarks (§5.3):
+//! an LSM-style KV store (LevelDB stand-in), Filebench's Varmail and
+//! Fileserver profiles, Postfix-style mail delivery over an Enron-like
+//! corpus, and the Tencent-sort external sort. All drive `dyn DistFs`,
+//! so every system runs the identical op stream.
+
+pub mod kvstore;
+pub mod filebench;
+pub mod mail;
+pub mod sort;
+
+pub use kvstore::{KvConfig, KvStore};
+pub use mail::{EnronLike, MailSim};
+pub use sort::SortJob;

@@ -1,0 +1,155 @@
+//! Cross-system integration: the same workload driven through every
+//! `DistFs` implementation must produce identical *contents* (the
+//! baselines differ in cost, never in correctness), plus end-to-end
+//! three-layer checks through the PJRT runtime.
+
+use assise::baselines::{CephLike, NfsLike, OctopusLike};
+use assise::fs::Payload;
+use assise::sim::{Cluster, ClusterConfig, DistFs};
+use assise::util::SplitMix64;
+
+fn all_systems() -> Vec<Box<dyn DistFs>> {
+    vec![
+        Box::new(Cluster::new(ClusterConfig::default().nodes(3))),
+        Box::new(CephLike::new(3, 1 << 30, Default::default())),
+        Box::new(NfsLike::new(3, 1 << 30, Default::default())),
+        Box::new(OctopusLike::new(3, Default::default())),
+    ]
+}
+
+#[test]
+fn same_oplog_same_contents_everywhere() {
+    let mut outputs = Vec::new();
+    for mut fs in all_systems() {
+        let pid = fs.spawn_process(0, 0);
+        fs.mkdir(pid, "/w").unwrap();
+        let mut rng = SplitMix64::new(7);
+        let mut digest = Vec::new();
+        for i in 0..20u64 {
+            let path = format!("/w/f{}", i % 5);
+            let fd = match fs.open(pid, &path) {
+                Ok(fd) => fd,
+                Err(_) => fs.create(pid, &path).unwrap(),
+            };
+            let off = rng.below(1024);
+            let data = Payload::synthetic(i, 64 + rng.below(512));
+            fs.pwrite(pid, fd, off, data).unwrap();
+            fs.fsync(pid, fd).unwrap();
+            let st = fs.stat(pid, &path).unwrap();
+            let back = fs.pread(pid, fd, 0, st.size).unwrap().materialize();
+            digest.push((path.clone(), back));
+            fs.close(pid, fd).unwrap();
+        }
+        outputs.push((fs.name(), digest));
+    }
+    let (ref_name, ref_digest) = &outputs[0];
+    for (name, digest) in &outputs[1..] {
+        assert_eq!(digest, ref_digest, "{name} diverged from {ref_name}");
+    }
+}
+
+#[test]
+fn latency_ordering_small_sync_writes() {
+    // the paper's core latency claim, as an invariant:
+    // assise < octopus < nfs < ceph for small synchronous writes
+    let mut lat = std::collections::HashMap::new();
+    for mut fs in all_systems() {
+        let pid = fs.spawn_process(0, 0);
+        let fd = fs.create(pid, "/f").unwrap();
+        let mut total = 0u64;
+        for i in 0..50u64 {
+            fs.write(pid, fd, Payload::synthetic(i, 128)).unwrap();
+            total += fs.last_latency(pid);
+            fs.fsync(pid, fd).unwrap();
+            total += fs.last_latency(pid);
+        }
+        lat.insert(fs.name().to_string(), total / 50);
+    }
+    assert!(lat["assise"] < lat["octopus"], "{lat:?}");
+    assert!(lat["octopus"] < lat["nfs"], "{lat:?}");
+    assert!(lat["nfs"] < lat["ceph"], "{lat:?}");
+}
+
+#[test]
+fn three_layer_digest_verification_end_to_end() {
+    // L3 write path -> digest -> L1 checksum kernel through PJRT
+    if !assise::runtime::artifacts_dir().join("checksum.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = ClusterConfig::default().nodes(2);
+    cfg.verify_digests = true;
+    let mut c = Cluster::new(cfg);
+    c.verifier = Some(assise::runtime::ChecksumExec::load().unwrap());
+    let pid = c.spawn_process(0, 0);
+    let fd = c.create(pid, "/verified").unwrap();
+    for i in 0..8u64 {
+        c.write(pid, fd, Payload::synthetic(i, 4096)).unwrap();
+    }
+    c.fsync(pid, fd).unwrap();
+    c.digest_log(pid).unwrap(); // runs the checksum kernel on the batch
+    assert!(c.nodes[1].sockets[0].sharedfs.store.exists("/verified"));
+    let data = c.pread(pid, fd, 0, 8 * 4096).unwrap();
+    assert_eq!(data.len(), 8 * 4096);
+}
+
+#[test]
+fn sort_pipeline_kernel_vs_reference_same_output() {
+    if !assise::runtime::artifacts_dir().join("partition.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use assise::workloads::sort::SortJob;
+    let exec = assise::runtime::PartitionExec::load().unwrap();
+
+    let run = |use_kernel: bool| {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(2).replication(1));
+        let workers: Vec<_> = (0..4).map(|w| c.spawn_process(w % 2, 0)).collect();
+        let job = SortJob { workers, records_per_worker: 800, use_kernel };
+        job.run(&mut c, if use_kernel { Some(&exec) } else { None }).unwrap()
+    };
+    let (_, count_kernel) = run(true);
+    let (_, count_ref) = run(false);
+    assert_eq!(count_kernel, 3200);
+    assert_eq!(count_kernel, count_ref);
+}
+
+#[test]
+fn dynamic_log_resize_two_phase_commit() {
+    use assise::oplog::{ResizeOutcome, ResizePolicy};
+    let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+    let pid = c.spawn_process(0, 0);
+    let policy = ResizePolicy::default();
+    let old = c.procs[pid].log.capacity();
+    let grown = policy.grow(old);
+    match c.resize_log(pid, grown) {
+        ResizeOutcome::Committed { new_size, completed_at } => {
+            assert_eq!(new_size, grown);
+            assert!(completed_at > 0, "2PC must cost RPC round trips");
+            assert_eq!(c.procs[pid].log.capacity(), grown);
+        }
+        o => panic!("expected commit, got {o:?}"),
+    }
+    // writes keep flowing after the resize
+    let fd = c.create(pid, "/after-resize").unwrap();
+    c.write(pid, fd, Payload::bytes(vec![1u8; 4096])).unwrap();
+    c.fsync(pid, fd).unwrap();
+}
+
+#[test]
+fn log_resize_aborts_on_replica_nvm_pressure() {
+    use assise::oplog::ResizeOutcome;
+    let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+    let pid = c.spawn_process(0, 0);
+    // exhaust replica 1's NVM so its PREPARE vote denies
+    let avail = c.nodes[1].sockets[0].nvm.available();
+    assert!(c.nodes[1].sockets[0].nvm.alloc(avail));
+    let old = c.procs[pid].log.capacity();
+    match c.resize_log(pid, old * 2) {
+        ResizeOutcome::Aborted { denier, .. } => {
+            assert_eq!(denier, 1);
+            assert_eq!(c.procs[pid].log.capacity(), old, "abort keeps the old size");
+        }
+        o => panic!("expected abort, got {o:?}"),
+    }
+}

@@ -1,0 +1,257 @@
+//! Property tests over CC-NVM's invariants (DESIGN.md list), using an
+//! in-crate seeded harness (SplitMix64 op-sequence generators swept over
+//! many seeds — the offline build environment has no proptest crate; the
+//! adversarial coverage style is the same).
+
+use assise::coherence::lease::{Acquire, LeaseMode, LeaseTable};
+use assise::fs::{FileStore, Payload, Tier};
+use assise::oplog::{apply_entries, coalesce, LogEntry, LogOp};
+use assise::sim::{Cluster, ClusterConfig, CrashMode, DistFs};
+use assise::util::SplitMix64;
+
+const SEEDS: u64 = 40;
+
+// ------------------------------------------------------------ generators
+
+fn gen_ops(rng: &mut SplitMix64, n: usize) -> Vec<LogOp> {
+    use assise::fs::{Cred, Mode};
+    let mut live: Vec<String> = Vec::new();
+    let mut out = Vec::new();
+    let mut uniq = 0;
+    for _ in 0..n {
+        let pick = rng.below(100);
+        match pick {
+            0..=29 => {
+                let path = format!("/f{uniq}");
+                uniq += 1;
+                live.push(path.clone());
+                out.push(LogOp::Create { path, mode: Mode::DEFAULT_FILE, owner: Cred::ROOT });
+            }
+            30..=74 if !live.is_empty() => {
+                let path = live[rng.below(live.len() as u64) as usize].clone();
+                let off = rng.below(4096);
+                let len = 1 + rng.below(4096);
+                out.push(LogOp::Write { path, off, data: Payload::synthetic(rng.next_u64(), len) });
+            }
+            75..=84 if !live.is_empty() => {
+                let i = rng.below(live.len() as u64) as usize;
+                let from = live.remove(i);
+                let to = format!("/r{uniq}");
+                uniq += 1;
+                live.push(to.clone());
+                out.push(LogOp::Rename { from, to });
+            }
+            85..=92 if !live.is_empty() => {
+                let path = live[rng.below(live.len() as u64) as usize].clone();
+                let size = rng.below(2048);
+                out.push(LogOp::Truncate { path, size });
+            }
+            _ if !live.is_empty() => {
+                let i = rng.below(live.len() as u64) as usize;
+                let path = live.remove(i);
+                out.push(LogOp::Unlink { path });
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn entries(ops: Vec<LogOp>) -> Vec<LogEntry> {
+    ops.into_iter()
+        .enumerate()
+        .map(|(i, op)| LogEntry { seq: i as u64 + 1, op })
+        .collect()
+}
+
+// ------------------------------------------------------------ properties
+
+/// Digest replay from ANY crash point converges to the clean state.
+#[test]
+fn prop_digest_idempotent_from_any_crash_point() {
+    for seed in 0..SEEDS {
+        let mut rng = SplitMix64::new(seed);
+        let batch = entries(gen_ops(&mut rng, 30));
+        let mut clean = FileStore::new();
+        apply_entries(&mut clean, &batch, 0, Tier::Hot, 1).unwrap();
+
+        // crash after k entries, replay everything
+        for k in [0, 1, batch.len() / 2, batch.len().saturating_sub(1)] {
+            let mut crashed = FileStore::new();
+            apply_entries(&mut crashed, &batch[..k], 0, Tier::Hot, 1).unwrap();
+            apply_entries(&mut crashed, &batch, 0, Tier::Hot, 2).unwrap();
+            assert!(
+                crashed.content_eq(&clean),
+                "seed {seed} crash-at {k}: replay diverged"
+            );
+        }
+    }
+}
+
+/// Coalescing preserves the batch's final state.
+#[test]
+fn prop_coalesce_preserves_final_state() {
+    for seed in 0..SEEDS {
+        let mut rng = SplitMix64::new(1000 + seed);
+        let batch = entries(gen_ops(&mut rng, 40));
+        let mut full = FileStore::new();
+        apply_entries(&mut full, &batch, 0, Tier::Hot, 1).unwrap();
+
+        let c = coalesce(&batch);
+        let mut reduced = FileStore::new();
+        apply_entries(&mut reduced, &c.entries, 0, Tier::Hot, 1).unwrap();
+        assert!(
+            reduced.content_eq(&full),
+            "seed {seed}: coalesced batch diverged (saved {} bytes)",
+            c.saved_bytes
+        );
+    }
+}
+
+/// Lease tables never grant overlapping write access to two holders.
+#[test]
+fn prop_lease_exclusivity_under_random_ops() {
+    for seed in 0..SEEDS {
+        let mut rng = SplitMix64::new(2000 + seed);
+        let mut t = LeaseTable::new();
+        let paths = ["/a", "/a/b", "/a/b/c", "/d", "/d/e", "/f"];
+        for step in 0..200u64 {
+            let holder = rng.below(4) as usize;
+            let path = paths[rng.below(paths.len() as u64) as usize];
+            let mode = if rng.f64() < 0.5 { LeaseMode::Read } else { LeaseMode::Write };
+            let now = step * 1000;
+            match t.acquire(path, mode, holder, now, 50_000) {
+                Acquire::Granted => {}
+                Acquire::MustRevoke(hs) => {
+                    for h in hs {
+                        t.revoke(path, h);
+                    }
+                    assert_eq!(t.acquire(path, mode, holder, now, 50_000), Acquire::Granted);
+                }
+            }
+            assert!(t.check_exclusivity(now), "seed {seed} step {step}");
+        }
+    }
+}
+
+/// After every fsync+digest, all chain replicas hold identical state.
+#[test]
+fn prop_chain_agreement_after_digest() {
+    for seed in 0..12 {
+        let mut rng = SplitMix64::new(3000 + seed);
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+        let pid = c.spawn_process(0, 0);
+        c.mkdir(pid, "/w").unwrap();
+        let mut files: Vec<(String, u32)> = Vec::new();
+        for i in 0..rng.below(20) + 5 {
+            let path = format!("/w/f{i}");
+            let fd = c.create(pid, &path).unwrap();
+            let writes = 1 + rng.below(5);
+            for _ in 0..writes {
+                let off = rng.below(8192);
+                let len = 1 + rng.below(4096);
+                c.pwrite(pid, fd, off, Payload::synthetic(rng.next_u64(), len)).unwrap();
+            }
+            files.push((path, fd));
+        }
+        c.replicate_log(pid).unwrap();
+        c.digest_log(pid).unwrap();
+        let a = &c.nodes[0].sockets[0].sharedfs.store;
+        let b = &c.nodes[1].sockets[0].sharedfs.store;
+        let d = &c.nodes[2].sockets[0].sharedfs.store;
+        assert!(a.content_eq(b), "seed {seed}: replica 0 != 1");
+        assert!(b.content_eq(d), "seed {seed}: replica 1 != 2");
+    }
+}
+
+/// Whatever interleaving of writers, a reader through the API observes
+/// the latest fsync'd content (linearizability via leases).
+#[test]
+fn prop_reader_sees_latest_write() {
+    for seed in 0..12 {
+        let mut rng = SplitMix64::new(4000 + seed);
+        let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+        let writers = [c.spawn_process(0, 0), c.spawn_process(1, 0)];
+        let setup = writers[0];
+        c.mkdir(setup, "/s").unwrap();
+        let fd0 = c.create(setup, "/s/f").unwrap();
+        c.write(setup, fd0, Payload::bytes(vec![0xFF; 64])).unwrap();
+
+        let mut latest = vec![0xFFu8; 64];
+        for round in 0..10 {
+            let w = writers[rng.below(2) as usize];
+            // keep clocks loosely in sync so leases can transfer
+            let t = writers.iter().map(|&p| c.now(p)).max().unwrap();
+            c.set_now(w, t);
+            let fd = c.open(w, "/s/f").unwrap();
+            let val = vec![round as u8; 64];
+            c.pwrite(w, fd, 0, Payload::bytes(val.clone())).unwrap();
+            latest = val;
+            c.close(w, fd).unwrap();
+
+            let r = writers[rng.below(2) as usize];
+            let t = writers.iter().map(|&p| c.now(p)).max().unwrap();
+            c.set_now(r, t);
+            let fd = c.open(r, "/s/f").unwrap();
+            let got = c.pread(r, fd, 0, 64).unwrap().materialize();
+            assert_eq!(got, latest, "seed {seed} round {round}");
+            c.close(r, fd).unwrap();
+        }
+    }
+}
+
+/// Prefix property under random fsync/crash points: recovered state on
+/// the backup equals replaying exactly the fsync'd prefix.
+#[test]
+fn prop_failover_recovers_exact_prefix() {
+    for seed in 0..16 {
+        let mut rng = SplitMix64::new(5000 + seed);
+        let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        let total = 10 + rng.below(20);
+        let fsync_at = rng.below(total) + 1;
+        let mut fsynced_len = 0u64;
+        let mut len = 0u64;
+        for i in 0..total {
+            let chunk = 10 + rng.below(100);
+            c.pwrite(pid, fd, len, Payload::synthetic(i, chunk)).unwrap();
+            len += chunk;
+            if i + 1 == fsync_at {
+                c.fsync(pid, fd).unwrap();
+                fsynced_len = len;
+            }
+        }
+        let t = c.now(pid);
+        c.kill_node(0, t);
+        let (np, _) = c.failover_process(pid, 1, 0, t).unwrap();
+        let st = c.stat(np, "/f").unwrap();
+        assert_eq!(st.size, fsynced_len, "seed {seed}: backup size != fsync'd prefix");
+    }
+}
+
+/// Local process restart recovers *everything*, in both modes.
+#[test]
+fn prop_local_restart_total_recovery() {
+    for seed in 0..16 {
+        for mode in [CrashMode::Pessimistic, CrashMode::Optimistic] {
+            let mut rng = SplitMix64::new(6000 + seed);
+            let mut c = Cluster::new(ClusterConfig::default().nodes(2).mode(mode));
+            let pid = c.spawn_process(0, 0);
+            let fd = c.create(pid, "/f").unwrap();
+            let mut len = 0u64;
+            for i in 0..5 + rng.below(10) {
+                let chunk = 1 + rng.below(200);
+                c.pwrite(pid, fd, len, Payload::synthetic(i, chunk)).unwrap();
+                len += chunk;
+            }
+            let t = c.now(pid);
+            c.kill_process(pid);
+            c.restart_process(pid, t).unwrap();
+            let fd2 = c.open(pid, "/f").unwrap();
+            let st = c.stat(pid, "/f").unwrap();
+            assert_eq!(st.size, len, "seed {seed} mode {mode:?}");
+            let _ = c.pread(pid, fd2, 0, len).unwrap();
+        }
+    }
+}
