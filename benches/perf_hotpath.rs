@@ -1,0 +1,14 @@
+//! `cargo bench` wrapper for the hot-path microbenchmarks
+//! (`assise bench perf`). Scale via `ASSISE_BENCH_SCALE` (default 0.2);
+//! writes `BENCH_perf.json` (see PERF.md for the schema).
+fn main() {
+    let scale = std::env::var("ASSISE_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2);
+    let wall = std::time::Instant::now();
+    for t in assise::bench::run("perf", assise::bench::Scale(scale)).expect("known experiment") {
+        t.print();
+    }
+    eprintln!("[perf_hotpath] wall-clock: {:.1}s at scale {scale}", wall.elapsed().as_secs_f64());
+}

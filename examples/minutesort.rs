@@ -27,7 +27,10 @@ fn main() {
 
     let partition = match PartitionExec::load() {
         Ok(p) => {
-            println!("L1 partition kernel loaded via PJRT (artifacts/partition.hlo.txt)");
+            println!(
+                "L1 partition kernel loaded ({} backend)",
+                assise::runtime::backend_name()
+            );
             Some(p)
         }
         Err(e) => {

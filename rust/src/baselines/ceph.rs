@@ -446,9 +446,13 @@ impl DistFs for CephLike {
             let mut victims = Vec::new();
             for pg in fetch {
                 let (pdata, _) = self.store.read_at(ino, pg * PAGE, PAGE)?;
-                let mut page = pdata.materialize();
-                page.resize(PAGE as usize, 0);
-                victims.extend(self.caches[node].install(ino, pg, Payload::bytes(page), false));
+                // zero-pad a short tail page without materializing
+                let page = if pdata.len() < PAGE {
+                    Payload::concat(&[pdata, Payload::zero(PAGE - pdata.len())])
+                } else {
+                    pdata
+                };
+                victims.extend(self.caches[node].install(ino, pg, page, false));
             }
             self.write_back_victims(pid, victims)?;
         } else {
@@ -456,20 +460,20 @@ impl DistFs for CephLike {
             self.procs[pid].clock.tick(self.p.dram_read_lat + copy);
         }
 
-        let mut out = Vec::with_capacity(len as usize);
+        // gather from the cache — Arc-slice composition, no byte copies
+        let mut parts = Vec::new();
         for pg in PageCache::pages(off, len) {
             let pdata = self.caches[node]
                 .get(ino, pg)
                 .cloned()
                 .unwrap_or(Payload::zero(PAGE));
-            let b = pdata.materialize();
             let pg_start = pg * PAGE;
             let s = off.max(pg_start) - pg_start;
-            let e = ((off + len).min(pg_start + PAGE) - pg_start) as usize;
-            out.extend_from_slice(&b[s as usize..e]);
+            let e = (off + len).min(pg_start + PAGE) - pg_start;
+            parts.push(pdata.slice(s, e - s));
         }
         self.end(pid, t0);
-        Ok(Payload::bytes(out))
+        Ok(Payload::concat(&parts))
     }
 
     fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {

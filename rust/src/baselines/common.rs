@@ -83,18 +83,19 @@ impl PageCache {
     }
 
     /// Overlay bytes onto a cached page (installing a zero page if
-    /// absent), marking it dirty.
+    /// absent), marking it dirty. Zero-copy: the page becomes a slice
+    /// composition over the old page and the patch (`Payload::overlay`
+    /// self-compacts if a page accumulates many tiny patches).
     pub fn write_into(&mut self, ino: Ino, page: u64, page_off: u64, bytes: &Payload) {
         let key = (ino, page);
         self.lru.touch(&key);
         let cur = self.data.entry(key).or_insert_with(|| Payload::zero(PAGE));
-        let mut buf = cur.materialize();
-        if buf.len() < PAGE as usize {
-            buf.resize(PAGE as usize, 0);
-        }
-        let b = bytes.materialize();
-        buf[page_off as usize..page_off as usize + b.len()].copy_from_slice(&b);
-        *cur = Payload::bytes(buf);
+        let base = if cur.len() < PAGE {
+            Payload::concat(&[cur.clone(), Payload::zero(PAGE - cur.len())])
+        } else {
+            cur.clone()
+        };
+        *cur = base.overlay(page_off, bytes);
         self.dirty.insert(key);
     }
 

@@ -6,6 +6,7 @@
 //! Run via `assise bench <exp>` or the criterion-less `benches/*.rs`
 //! wrappers (`cargo bench`).
 
+pub mod perf;
 pub mod table1;
 pub mod fig2;
 pub mod fig3;
@@ -163,7 +164,7 @@ where
 /// All experiment names, for the CLI.
 pub const EXPERIMENTS: &[&str] = &[
     "table1", "fig2a", "fig2b", "fig3", "fig4", "fig5", "fig6", "fig7",
-    "fig8", "fig9", "fig11", "table3",
+    "fig8", "fig9", "fig11", "table3", "perf",
 ];
 
 /// Run one experiment by name.
@@ -181,6 +182,7 @@ pub fn run(name: &str, scale: Scale) -> Option<Vec<Table>> {
         "fig9" => vec![fig9::run(scale)],
         "fig11" => vec![fig11::run(scale)],
         "table3" => vec![table3::run(scale)],
+        "perf" => vec![perf::run(scale)],
         _ => return None,
     })
 }

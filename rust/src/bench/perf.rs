@@ -1,0 +1,351 @@
+//! `assise bench perf` — host-side microbenchmarks of the
+//! LibFS→oplog→SharedFS hot paths, and the harness-overhead baseline the
+//! repo's perf trajectory is tracked against.
+//!
+//! Unlike the fig*/table* experiments (which report *virtual-time*
+//! results from the hardware model), this harness measures **real
+//! wall-clock** spent in the simulator's own hot loops: payload
+//! slice/concat, extent-map overlay/gather, store write/read, indexed
+//! `resolve`, directory rename, log coalescing and digest replay — plus
+//! an end-to-end fig2a run at scale 0.2 (the acceptance metric for the
+//! zero-copy work). Each row also reports the payload bytes *copied*
+//! during the loop (via [`crate::fs::payload::stats`]): the zero-copy
+//! rows must stay at 0.
+//!
+//! Results are printed as a table and written as machine-readable JSON
+//! (`BENCH_perf.json`, schema documented in `PERF.md`) so runs can be
+//! diffed across commits.
+
+use std::time::Instant;
+
+use crate::fs::{payload::stats, Cred, ExtentMap, FileStore, Mode, Payload, Tier};
+use crate::oplog::{apply_entries, coalesce, LogEntry, LogOp};
+use crate::util::SplitMix64;
+
+use super::{Scale, Table};
+
+/// One measured hot loop.
+#[derive(Debug, Clone)]
+pub struct PerfRow {
+    pub name: String,
+    pub ops: u64,
+    pub total_ns: u128,
+    pub copied_bytes: u64,
+    pub materializations: u64,
+}
+
+impl PerfRow {
+    pub fn ns_per_op(&self) -> f64 {
+        if self.ops == 0 {
+            return 0.0;
+        }
+        self.total_ns as f64 / self.ops as f64
+    }
+}
+
+/// Time `f` over `ops` iterations, capturing the payload copy counters.
+fn bench<F: FnMut(u64)>(name: &str, ops: u64, mut f: F) -> PerfRow {
+    stats::reset();
+    let t0 = Instant::now();
+    for i in 0..ops {
+        f(i);
+    }
+    let total_ns = t0.elapsed().as_nanos();
+    PerfRow {
+        name: name.to_string(),
+        ops,
+        total_ns,
+        copied_bytes: stats::copied_bytes(),
+        materializations: stats::materializations(),
+    }
+}
+
+fn bench_payload_slice(ops: u64) -> PerfRow {
+    let buf = Payload::bytes(vec![0xA5u8; 1 << 20]);
+    let mut rng = SplitMix64::new(7);
+    bench("payload_slice_1mb", ops, |_| {
+        let off = rng.below((1 << 20) - 4096);
+        let s = buf.slice(off, 4096);
+        std::hint::black_box(s.len());
+    })
+}
+
+fn bench_payload_concat(ops: u64) -> PerfRow {
+    let buf = Payload::bytes(vec![0x5Au8; 1 << 20]);
+    // non-contiguous windows so concat builds a real 16-part chain
+    // (contiguous same-buffer slices would fuse back into one part)
+    let parts: Vec<Payload> = (0..16u64).map(|i| buf.slice((i * 8191) % ((1 << 20) - 4096), 4096)).collect();
+    bench("payload_concat_16x4k", ops, |_| {
+        let c = Payload::concat(&parts);
+        std::hint::black_box(c.len());
+    })
+}
+
+fn bench_extent_write(ops: u64) -> PerfRow {
+    let buf = Payload::bytes(vec![1u8; 1 << 20]);
+    let mut m = ExtentMap::new();
+    let mut rng = SplitMix64::new(11);
+    bench("extent_overlay_write_4k", ops, |i| {
+        let off = rng.below(1 << 22);
+        m.write(off, buf.slice(off % ((1 << 20) - 4096), 4096), Tier::Hot, i);
+    })
+}
+
+fn bench_extent_read(ops: u64) -> PerfRow {
+    let buf = Payload::bytes(vec![2u8; 1 << 20]);
+    let mut m = ExtentMap::new();
+    // fragment: 1024 extents of 4 KB
+    for i in 0..1024u64 {
+        m.write(i * 4096, buf.slice((i * 13) % ((1 << 20) - 4096), 4096), Tier::Hot, i);
+    }
+    let mut rng = SplitMix64::new(13);
+    bench("extent_read_gather_64k", ops, |_| {
+        let off = rng.below((1024 * 4096) - (64 << 10));
+        let (p, _) = m.read(off, 64 << 10);
+        std::hint::black_box(p.len());
+    })
+}
+
+fn bench_store_write(ops: u64) -> PerfRow {
+    let mut s = FileStore::new();
+    let ino = s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+    let buf = Payload::bytes(vec![3u8; 1 << 20]);
+    let mut rng = SplitMix64::new(17);
+    bench("store_write_at_4k", ops, |i| {
+        let off = rng.below(1 << 24);
+        s.write_at(ino, off, buf.slice(off % ((1 << 20) - 4096), 4096), Tier::Hot, i)
+            .unwrap();
+    })
+}
+
+fn bench_store_read(ops: u64) -> PerfRow {
+    let mut s = FileStore::new();
+    let ino = s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+    let buf = Payload::bytes(vec![4u8; 1 << 20]);
+    for i in 0..2048u64 {
+        s.write_at(ino, i * 4096, buf.slice((i * 7) % ((1 << 20) - 4096), 4096), Tier::Hot, i)
+            .unwrap();
+    }
+    let mut rng = SplitMix64::new(19);
+    bench("store_read_at_16k", ops, |_| {
+        let off = rng.below((2048 * 4096) - (16 << 10));
+        let (p, _) = s.read_at(ino, off, 16 << 10).unwrap();
+        std::hint::black_box(p.len());
+    })
+}
+
+fn bench_resolve(ops: u64) -> PerfRow {
+    let mut s = FileStore::new();
+    let mut paths = Vec::new();
+    for d in 0..32 {
+        s.mkdir_p(&format!("/a{d}/b/c"), Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+        for f in 0..32 {
+            let p = format!("/a{d}/b/c/f{f}");
+            s.create(&p, Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+            paths.push(p);
+        }
+    }
+    let mut rng = SplitMix64::new(23);
+    bench("resolve_hot_1024_files", ops, |_| {
+        let p = &paths[rng.below(paths.len() as u64) as usize];
+        std::hint::black_box(s.resolve(p).unwrap());
+    })
+}
+
+fn bench_rename_subtree(ops: u64) -> PerfRow {
+    let mut s = FileStore::new();
+    // a wide namespace (4096 unrelated files) plus the moved dir: the
+    // old implementation scanned every path on each rename
+    for f in 0..4096 {
+        s.create(&format!("/junk{f}"), Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+    }
+    s.mkdir("/d0", Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+    for f in 0..64 {
+        s.create(&format!("/d0/f{f}"), Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+    }
+    bench("rename_dir_64_of_4160", ops, |i| {
+        let from = format!("/d{i}");
+        let to = format!("/d{}", i + 1);
+        s.rename(&from, &to, i).unwrap();
+    })
+}
+
+fn bench_coalesce(ops: u64) -> PerfRow {
+    // Varmail pattern: create wal, write wal, write mbox, unlink wal —
+    // unlink-heavy, the old pass 1 was O(n²) in batch length
+    let n = 512;
+    let mut batch = Vec::new();
+    for i in 0..n {
+        let wal = format!("/wal{i}");
+        batch.push(LogOp::Create { path: wal.clone(), mode: Mode::DEFAULT_FILE, owner: Cred::ROOT });
+        batch.push(LogOp::Write { path: wal.clone(), off: 0, data: Payload::zero(4096) });
+        batch.push(LogOp::Write { path: format!("/mbox{}", i % 8), off: 0, data: Payload::zero(4096) });
+        batch.push(LogOp::Unlink { path: wal });
+    }
+    let entries: Vec<LogEntry> = batch
+        .into_iter()
+        .enumerate()
+        .map(|(i, op)| LogEntry { seq: i as u64 + 1, op })
+        .collect();
+    bench("coalesce_varmail_2048ops", ops, |_| {
+        let c = coalesce(&entries);
+        std::hint::black_box(c.entries.len());
+    })
+}
+
+fn bench_digest(ops: u64) -> PerfRow {
+    let buf = Payload::bytes(vec![6u8; 1 << 20]);
+    let mut batch = Vec::new();
+    for i in 0..64u64 {
+        let p = format!("/f{i}");
+        batch.push(LogOp::Create { path: p.clone(), mode: Mode::DEFAULT_FILE, owner: Cred::ROOT });
+        for w in 0..8u64 {
+            batch.push(LogOp::Write {
+                path: p.clone(),
+                off: w * 4096,
+                data: buf.slice((i * 8 + w) * 1311 % ((1 << 20) - 4096), 4096),
+            });
+        }
+    }
+    let entries: Vec<LogEntry> = batch
+        .into_iter()
+        .enumerate()
+        .map(|(i, op)| LogEntry { seq: i as u64 + 1, op })
+        .collect();
+    bench("digest_apply_576ops", ops, |_| {
+        let mut s = FileStore::new();
+        let _ = apply_entries(&mut s, &entries, 0, Tier::Hot, 1).unwrap();
+        std::hint::black_box(s.inode_count());
+    })
+}
+
+/// End-to-end fig2a at scale 0.2 — the acceptance wall-clock for the
+/// zero-copy + indexed-namespace work (PERF.md tracks this number).
+fn bench_fig2a_e2e() -> PerfRow {
+    stats::reset();
+    let t0 = Instant::now();
+    let t = super::fig2::write_latency(Scale(0.2));
+    std::hint::black_box(t.rows.len());
+    PerfRow {
+        name: "fig2a_e2e_scale0.2".into(),
+        ops: 1,
+        total_ns: t0.elapsed().as_nanos(),
+        copied_bytes: stats::copied_bytes(),
+        materializations: stats::materializations(),
+    }
+}
+
+/// Render the rows as the machine-readable `BENCH_perf.json` document.
+pub fn to_json(rows: &[PerfRow], scale: f64) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"schema\": \"assise-bench-perf/1\",\n");
+    out.push_str(&format!("  \"scale\": {scale},\n"));
+    out.push_str(&format!(
+        "  \"kernel_backend\": \"{}\",\n",
+        crate::runtime::backend_name()
+    ));
+    out.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ops\": {}, \"total_ns\": {}, \"ns_per_op\": {:.1}, \"copied_bytes\": {}, \"materializations\": {}}}{}\n",
+            r.name,
+            r.ops,
+            r.total_ns,
+            r.ns_per_op(),
+            r.copied_bytes,
+            r.materializations,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Run every microbenchmark. `scale` multiplies the iteration counts
+/// (wall-clock budget), not the structure sizes.
+pub fn run_rows(scale: Scale) -> Vec<PerfRow> {
+    let n = |base: usize| scale.ops(base).max(8) as u64;
+    vec![
+        bench_payload_slice(n(200_000)),
+        bench_payload_concat(n(100_000)),
+        bench_extent_write(n(100_000)),
+        bench_extent_read(n(20_000)),
+        bench_store_write(n(100_000)),
+        bench_store_read(n(20_000)),
+        bench_resolve(n(200_000)),
+        bench_rename_subtree(n(2_000)),
+        bench_coalesce(n(500)),
+        bench_digest(n(200)),
+        bench_fig2a_e2e(),
+    ]
+}
+
+/// `assise bench perf`: run, print a table, and write `BENCH_perf.json`
+/// (path overridable via `ASSISE_BENCH_PERF_OUT`).
+pub fn run(scale: Scale) -> Table {
+    let rows = run_rows(scale);
+    let json = to_json(&rows, scale.0);
+    let out_path = std::env::var("ASSISE_BENCH_PERF_OUT")
+        .unwrap_or_else(|_| "BENCH_perf.json".to_string());
+    let wrote = std::fs::write(&out_path, &json).is_ok();
+
+    let mut t = Table::new(
+        "bench perf: simulator hot-path wall-clock (host time, not virtual time)",
+        &["loop", "ops", "ns/op", "total ms", "copied bytes", "materializations"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            r.ops.to_string(),
+            format!("{:.1}", r.ns_per_op()),
+            format!("{:.1}", r.total_ns as f64 / 1e6),
+            r.copied_bytes.to_string(),
+            r.materializations.to_string(),
+        ]);
+    }
+    if wrote {
+        t.note(format!("wrote {out_path}"));
+    } else {
+        t.note(format!("FAILED to write {out_path}"));
+    }
+    t.note("zero-copy rows (slice/concat/extent/store) must report 0 copied bytes");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_loops_are_zero_copy() {
+        // tiny iteration counts: correctness of the counters, not timing
+        for row in [
+            bench_payload_slice(64),
+            bench_payload_concat(64),
+            bench_extent_write(64),
+            bench_extent_read(16),
+            bench_store_write(64),
+            bench_store_read(16),
+            bench_resolve(64),
+        ] {
+            assert_eq!(row.copied_bytes, 0, "{} copied bytes", row.name);
+            assert_eq!(row.materializations, 0, "{} materialized", row.name);
+        }
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let rows = vec![bench_payload_slice(8)];
+        let j = to_json(&rows, 0.1);
+        assert!(j.contains("\"schema\": \"assise-bench-perf/1\""));
+        assert!(j.contains("payload_slice_1mb"));
+        assert!(j.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn rename_loop_moves_subtree() {
+        let r = bench_rename_subtree(16);
+        assert_eq!(r.ops, 16);
+        assert_eq!(r.copied_bytes, 0);
+    }
+}

@@ -4,6 +4,10 @@
 //! NVM, SSD; local-NVM reads are not cached — "DRAM caching does not
 //! provide benefit", §A.2). Volatile: lost on process crash, rebuilt on
 //! demand (the paper measures the minimal impact of this in §5.4).
+//!
+//! Blocks are stored and gathered as Arc-slice payloads: `insert` splits
+//! the incoming payload into per-block windows and `get` re-concatenates
+//! them with zero byte copies (see `fs::payload` and PERF.md).
 
 use crate::cache::lru::Lru;
 use crate::fs::{Ino, Payload};

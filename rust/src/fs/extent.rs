@@ -6,6 +6,11 @@
 //! trees") and the baselines' server-side file representation. Writes
 //! overlay (split/trim overlapped extents); reads gather, exposing holes
 //! as zeros. Tier tags drive LRU migration hot → reserve → cold (§A.1).
+//!
+//! Split/trim and gather move no payload bytes (payloads are Arc
+//! slices), and per-tier byte totals are maintained incrementally on
+//! every insert/remove so [`ExtentMap::bytes_in_tier`] is O(1) instead
+//! of a full-map scan.
 
 use std::collections::BTreeMap;
 
@@ -20,6 +25,21 @@ pub enum Tier {
     Reserve,
     /// SSD cold shared area.
     Cold,
+}
+
+/// Number of [`Tier`] variants (size of per-tier counter arrays).
+pub const TIER_COUNT: usize = 3;
+
+impl Tier {
+    /// Dense index for per-tier counter arrays.
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            Tier::Hot => 0,
+            Tier::Reserve => 1,
+            Tier::Cold => 2,
+        }
+    }
 }
 
 /// One extent: a run of bytes at a file offset.
@@ -45,11 +65,29 @@ impl Extent {
 #[derive(Debug, Clone, Default)]
 pub struct ExtentMap {
     map: BTreeMap<u64, Extent>,
+    /// bytes per tier, indexed by [`Tier::idx`]; kept in sync by
+    /// [`Self::put`]/[`Self::take`]
+    tier_bytes: [u64; TIER_COUNT],
 }
 
 impl ExtentMap {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Counter-maintaining insert (replaces any extent at `off`).
+    fn put(&mut self, off: u64, e: Extent) {
+        self.tier_bytes[e.tier.idx()] += e.len();
+        if let Some(old) = self.map.insert(off, e) {
+            self.tier_bytes[old.tier.idx()] -= old.len();
+        }
+    }
+
+    /// Counter-maintaining remove.
+    fn take(&mut self, off: u64) -> Option<Extent> {
+        let e = self.map.remove(&off)?;
+        self.tier_bytes[e.tier.idx()] -= e.len();
+        Some(e)
     }
 
     /// Overlay `data` at `off`, splitting/trimming any overlapped extents.
@@ -72,12 +110,12 @@ impl ExtentMap {
             }
         }
         for s in to_fix {
-            let ext = self.map.remove(&s).expect("extent vanished");
+            let ext = self.take(s).expect("extent vanished");
             let e_end = s + ext.len();
             // left remainder
             if s < off {
                 let keep = off - s;
-                self.map.insert(
+                self.put(
                     s,
                     Extent {
                         data: ext.data.slice(0, keep),
@@ -89,7 +127,7 @@ impl ExtentMap {
             // right remainder
             if e_end > end {
                 let skip = end - s;
-                self.map.insert(
+                self.put(
                     end,
                     Extent {
                         data: ext.data.slice(skip, e_end - end),
@@ -99,7 +137,7 @@ impl ExtentMap {
                 );
             }
         }
-        self.map.insert(off, Extent { data, tier, last_access: now });
+        self.put(off, Extent { data, tier, last_access: now });
     }
 
     /// Gather `[off, off+len)`; holes read as zeros. Returns the payload
@@ -189,19 +227,21 @@ impl ExtentMap {
     pub fn truncate(&mut self, size: u64) {
         let keys: Vec<u64> = self.map.range(size..).map(|(&s, _)| s).collect();
         for k in keys {
-            self.map.remove(&k);
+            self.take(k);
         }
         // trim a straddling extent
-        if let Some((&s, _)) = self.map.range(..size).next_back() {
-            let e = &self.map[&s];
+        if let Some((&s, e)) = self.map.range(..size).next_back() {
             if s + e.len() > size {
                 let keep = size - s;
-                let trimmed = Extent {
-                    data: e.data.slice(0, keep),
-                    tier: e.tier,
-                    last_access: e.last_access,
-                };
-                self.map.insert(s, trimmed);
+                let old = self.take(s).expect("extent vanished");
+                self.put(
+                    s,
+                    Extent {
+                        data: old.data.slice(0, keep),
+                        tier: old.tier,
+                        last_access: old.last_access,
+                    },
+                );
             }
         }
     }
@@ -215,9 +255,15 @@ impl ExtentMap {
             .unwrap_or(0)
     }
 
-    /// Total bytes stored per tier.
+    /// Total bytes stored per tier — O(1), maintained incrementally.
     pub fn bytes_in_tier(&self, tier: Tier) -> u64 {
-        self.map.values().filter(|e| e.tier == tier).map(|e| e.len()).sum()
+        self.tier_bytes[tier.idx()]
+    }
+
+    /// Per-tier byte totals, indexed by [`Tier::idx`] — O(1) snapshot
+    /// used by [`super::store::FileStore`]'s aggregate accounting.
+    pub fn tier_snapshot(&self) -> [u64; TIER_COUNT] {
+        self.tier_bytes
     }
 
     /// All extents, in offset order.
@@ -235,11 +281,8 @@ impl ExtentMap {
     }
 
     pub fn touch(&mut self, off: u64, len: u64, now: u64) {
-        let end = off + len;
-        for (_, e) in self.map.range_mut(..end) {
-            e.last_access = e.last_access.max(0);
-        }
-        // cheap: touch extents intersecting range
+        // touch extents intersecting the range (last_access only; tiers
+        // and lengths are untouched, so counters are unaffected)
         let keys: Vec<u64> = self
             .tiers_in(off, len)
             .iter()
@@ -272,6 +315,15 @@ mod tests {
         Payload::bytes(s.to_vec())
     }
 
+    /// Recount per-tier bytes the slow way (oracle for the counters).
+    fn recount(m: &ExtentMap) -> [u64; TIER_COUNT] {
+        let mut t = [0u64; TIER_COUNT];
+        for (_, e) in m.iter() {
+            t[e.tier.idx()] += e.len();
+        }
+        t
+    }
+
     #[test]
     fn write_then_read_back() {
         let mut m = ExtentMap::new();
@@ -289,6 +341,7 @@ mod tests {
         let (p, n) = m.read(0, 10);
         assert_eq!(p.materialize(), b"aaaBBBaaaa");
         assert_eq!(n, 3);
+        assert_eq!(m.tier_snapshot(), recount(&m));
     }
 
     #[test]
@@ -299,6 +352,7 @@ mod tests {
         m.write(4, b(b"cc"), Tier::Hot, 0);
         m.write(1, b(b"XXXX"), Tier::Hot, 1);
         assert_eq!(m.read(0, 6).0.materialize(), b"aXXXXc");
+        assert_eq!(m.tier_snapshot(), recount(&m));
     }
 
     #[test]
@@ -324,6 +378,8 @@ mod tests {
         m.truncate(4);
         assert_eq!(m.max_end(), 4);
         assert_eq!(m.read(0, 6).0.materialize(), b"abcd\0\0");
+        assert_eq!(m.tier_snapshot(), recount(&m));
+        assert_eq!(m.bytes_in_tier(Tier::Hot), 4);
     }
 
     #[test]
@@ -338,6 +394,7 @@ mod tests {
         assert_eq!(m.bytes_in_tier(Tier::Cold), 8);
         // contents unchanged
         assert_eq!(m.read(0, 8).0.materialize(), b"aaaabbbb");
+        assert_eq!(m.tier_snapshot(), recount(&m));
     }
 
     #[test]
@@ -367,5 +424,20 @@ mod tests {
         let (p, _) = m.read(gb / 2, 16);
         assert_eq!(p.len(), 16);
         assert_eq!(p.materialize(), Payload::synthetic(1, gb).slice(gb / 2, 16).materialize());
+    }
+
+    #[test]
+    fn split_trim_is_zero_copy() {
+        let mut m = ExtentMap::new();
+        let buf = Payload::bytes(vec![7u8; 1 << 16]);
+        m.write(0, buf.clone(), Tier::Hot, 0);
+        crate::fs::payload::stats::reset();
+        // overlay into the middle: splits the big extent twice, writes the
+        // patch — all pointer arithmetic, no byte copies
+        m.write(100, buf.slice(0, 50), Tier::Hot, 1);
+        m.write(40_000, buf.slice(10, 1000), Tier::Hot, 2);
+        let (p, _) = m.read(0, 1 << 16);
+        assert_eq!(crate::fs::payload::stats::copied_bytes(), 0);
+        assert_eq!(p.len(), 1 << 16);
     }
 }

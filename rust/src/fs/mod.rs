@@ -15,8 +15,8 @@ pub mod path;
 pub mod extent;
 pub mod store;
 
-pub use extent::{Extent, ExtentMap, Tier};
-pub use path::{basename, dirname, is_subtree_of, normalize};
+pub use extent::{Extent, ExtentMap, Tier, TIER_COUNT};
+pub use path::{basename, dirname, is_normalized, is_subtree_of, normalize, normalized};
 pub use payload::Payload;
 pub use store::{FileStore, Stat};
 pub use types::{Cred, Fd, FsError, Ino, Mode, NodeId, ProcId, Result, SocketId};

@@ -5,7 +5,39 @@
 //! tests — everything here canonicalizes to `/a/b/c` form (no trailing
 //! slash except root, no empty or dot segments).
 
+use std::borrow::Cow;
+
 use super::types::{FsError, Result};
+
+/// Is `path` already in canonical `/a/b/c` form? Allocation-free check
+/// used by [`normalized`] to skip the rebuilding pass on hot paths
+/// (`resolve` calls on already-canonical paths are the common case).
+pub fn is_normalized(path: &str) -> bool {
+    if path == "/" {
+        return true;
+    }
+    if !path.starts_with('/') || path.ends_with('/') {
+        return false;
+    }
+    let mut iter = path.split('/');
+    iter.next(); // leading empty segment before the first '/'
+    for seg in iter {
+        if seg.is_empty() || seg == "." || seg == ".." {
+            return false;
+        }
+    }
+    true
+}
+
+/// Canonicalize without allocating when the input is already canonical
+/// (borrowed fast path); falls back to [`normalize`] otherwise.
+pub fn normalized(path: &str) -> Result<Cow<'_, str>> {
+    if is_normalized(path) {
+        Ok(Cow::Borrowed(path))
+    } else {
+        normalize(path).map(Cow::Owned)
+    }
+}
 
 /// Canonicalize a path: must be absolute; collapses `//`, handles `.`
 /// and rejects `..` (the FS has no notion of cwd and the lease-prefix
@@ -94,6 +126,20 @@ mod tests {
         assert!(!is_subtree_of("/ab", "/a")); // no false prefix match
         assert!(is_subtree_of("/anything", "/"));
         assert!(!is_subtree_of("/a", "/a/b"));
+    }
+
+    #[test]
+    fn normalized_borrows_when_canonical() {
+        assert!(is_normalized("/a/b/c"));
+        assert!(is_normalized("/"));
+        assert!(!is_normalized("/a/"));
+        assert!(!is_normalized("/a//b"));
+        assert!(!is_normalized("/a/./b"));
+        assert!(!is_normalized("a/b"));
+        assert!(matches!(normalized("/a/b").unwrap(), Cow::Borrowed(_)));
+        assert!(matches!(normalized("/a//b").unwrap(), Cow::Owned(_)));
+        assert_eq!(normalized("/a//b/").unwrap(), "/a/b");
+        assert!(normalized("/a/../b").is_err());
     }
 
     #[test]

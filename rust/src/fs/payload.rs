@@ -6,26 +6,79 @@
 //! `Payload::Synthetic` carries only `(seed, abs_off, len)` and generates
 //! any byte on demand — slices of a synthetic stream are consistent with
 //! the whole, so read-back verification still works.
+//!
+//! Real bytes are held as **Arc slices** (`Bytes { buf, off, len }`):
+//! `slice()` is a refcount bump plus pointer arithmetic, and `concat()`
+//! of unrelated buffers produces a flat `Chain` of sub-slices instead of
+//! copying. The entire LibFS→oplog→SharedFS data path (extent split/trim,
+//! read gather, log replication, digest) therefore moves zero payload
+//! bytes; copies happen only on explicit [`Payload::materialize`]. The
+//! [`stats`] counters observe this — the zero-copy property tests and the
+//! `assise bench perf` harness assert copy counts through them.
 
 use std::sync::Arc;
 
 use crate::util::rng::synthetic_fill;
 
+/// Chains longer than this are compacted into a single `Bytes` buffer by
+/// [`Payload::overlay`] (repeated small overlays would otherwise build
+/// unboundedly deep part lists whose gather cost defeats the point).
+const COMPACT_PARTS: usize = 64;
+
+/// Copy/materialization accounting, used by the zero-copy property tests
+/// and the `bench perf` harness. Thread-local so parallel `cargo test`
+/// threads don't contaminate each other's counts.
+pub mod stats {
+    use std::cell::Cell;
+
+    thread_local! {
+        static COPIED_BYTES: Cell<u64> = Cell::new(0);
+        static MATERIALIZATIONS: Cell<u64> = Cell::new(0);
+    }
+
+    /// Total payload bytes copied into freshly-materialized buffers on
+    /// this thread since the last [`reset`].
+    pub fn copied_bytes() -> u64 {
+        COPIED_BYTES.with(|c| c.get())
+    }
+
+    /// Number of materialize calls on this thread since the last [`reset`].
+    pub fn materializations() -> u64 {
+        MATERIALIZATIONS.with(|c| c.get())
+    }
+
+    pub fn reset() {
+        COPIED_BYTES.with(|c| c.set(0));
+        MATERIALIZATIONS.with(|c| c.set(0));
+    }
+
+    pub(super) fn record_materialize(bytes: u64) {
+        COPIED_BYTES.with(|c| c.set(c.get() + bytes));
+        MATERIALIZATIONS.with(|c| c.set(c.get() + 1));
+    }
+}
+
 /// A run of file bytes.
 #[derive(Debug, Clone)]
 pub enum Payload {
-    /// Real bytes (shared; cloning a payload is O(1)).
-    Bytes(Arc<Vec<u8>>),
+    /// Real bytes: a shared buffer plus a window into it. Cloning and
+    /// slicing are O(1); the underlying allocation is never copied.
+    Bytes { buf: Arc<Vec<u8>>, off: u64, len: u64 },
     /// Deterministic synthetic stream: byte `i` is
     /// `synthetic_byte(seed, abs_off + i)`.
     Synthetic { seed: u64, abs_off: u64, len: u64 },
     /// A hole / explicit zeros.
     Zero { len: u64 },
+    /// Flat concatenation of non-chain parts (rope node). `starts[i]` is
+    /// the cumulative offset of `parts[i]`; invariants: ≥ 2 parts, no
+    /// empty parts, no nested chains, adjacent parts not mergeable.
+    Chain { parts: Arc<Vec<Payload>>, starts: Arc<Vec<u64>>, len: u64 },
 }
 
 impl Payload {
     pub fn bytes(v: Vec<u8>) -> Self {
-        Payload::Bytes(Arc::new(v))
+        let len = v.len() as u64;
+        Payload::Bytes { buf: Arc::new(v), off: 0, len }
     }
 
     pub fn synthetic(seed: u64, len: u64) -> Self {
@@ -38,9 +91,10 @@ impl Payload {
 
     pub fn len(&self) -> u64 {
         match self {
-            Payload::Bytes(b) => b.len() as u64,
+            Payload::Bytes { len, .. } => *len,
             Payload::Synthetic { len, .. } => *len,
             Payload::Zero { len } => *len,
+            Payload::Chain { len, .. } => *len,
         }
     }
 
@@ -48,39 +102,184 @@ impl Payload {
         self.len() == 0
     }
 
-    /// Sub-range `[off, off+len)` of this payload, O(1) for synthetic and
-    /// zero payloads, O(len) copy for real bytes (an Arc-slice type would
-    /// avoid that; not worth it at sim scale).
+    /// Number of leaf parts (1 unless this is a chain).
+    pub fn part_count(&self) -> usize {
+        match self {
+            Payload::Chain { parts, .. } => parts.len(),
+            _ => 1,
+        }
+    }
+
+    /// Sub-range `[off, off+len)` of this payload. O(1) for bytes,
+    /// synthetic and zero payloads; O(parts in range) pointer clones for
+    /// chains. Never copies payload bytes.
     pub fn slice(&self, off: u64, len: u64) -> Payload {
         debug_assert!(off + len <= self.len(), "slice {off}+{len} > {}", self.len());
+        if len == 0 {
+            return Payload::Zero { len: 0 };
+        }
+        if off == 0 && len == self.len() {
+            return self.clone();
+        }
         match self {
-            Payload::Bytes(b) => {
-                if off == 0 && len == b.len() as u64 {
-                    self.clone()
-                } else {
-                    Payload::bytes(b[off as usize..(off + len) as usize].to_vec())
-                }
-            }
+            Payload::Bytes { buf, off: o, .. } => Payload::Bytes {
+                buf: Arc::clone(buf),
+                off: o + off,
+                len,
+            },
             Payload::Synthetic { seed, abs_off, .. } => Payload::Synthetic {
                 seed: *seed,
                 abs_off: abs_off + off,
                 len,
             },
             Payload::Zero { .. } => Payload::Zero { len },
+            Payload::Chain { parts, starts, .. } => {
+                let end = off + len;
+                // first part covering `off`
+                let mut i = match starts.binary_search(&off) {
+                    Ok(i) => i,
+                    Err(i) => i - 1,
+                };
+                let mut out: Vec<Payload> = Vec::new();
+                let mut cur = off;
+                while cur < end {
+                    let p = &parts[i];
+                    let p_off = cur - starts[i];
+                    let take = (p.len() - p_off).min(end - cur);
+                    out.push(p.slice(p_off, take));
+                    cur += take;
+                    i += 1;
+                }
+                Self::chain_from_parts(out)
+            }
         }
     }
 
-    /// Materialize into real bytes.
-    pub fn materialize(&self) -> Vec<u8> {
-        match self {
-            Payload::Bytes(b) => b.as_ref().clone(),
-            Payload::Synthetic { seed, abs_off, len } => {
-                let mut out = Vec::new();
-                synthetic_fill(*seed, *abs_off, &mut out, *len);
-                out
+    /// Try to fuse two adjacent payloads into one without touching bytes.
+    fn try_merge(a: &Payload, b: &Payload) -> Option<Payload> {
+        match (a, b) {
+            (Payload::Bytes { buf: b1, off: o1, len: l1 }, Payload::Bytes { buf: b2, off: o2, len: l2 })
+                if Arc::ptr_eq(b1, b2) && o1 + l1 == *o2 =>
+            {
+                Some(Payload::Bytes { buf: Arc::clone(b1), off: *o1, len: l1 + l2 })
             }
-            Payload::Zero { len } => vec![0; *len as usize],
+            (
+                Payload::Synthetic { seed: s1, abs_off: o1, len: l1 },
+                Payload::Synthetic { seed: s2, abs_off: o2, len: l2 },
+            ) if s1 == s2 && o1 + l1 == *o2 => {
+                Some(Payload::Synthetic { seed: *s1, abs_off: *o1, len: l1 + l2 })
+            }
+            (Payload::Zero { len: l1 }, Payload::Zero { len: l2 }) => {
+                Some(Payload::Zero { len: l1 + l2 })
+            }
+            _ => None,
         }
+    }
+
+    /// Normalize a flat part list (no chains, in order) into a payload:
+    /// drops empties, fuses mergeable neighbours, unwraps singletons.
+    fn chain_from_parts(parts: Vec<Payload>) -> Payload {
+        let mut merged: Vec<Payload> = Vec::with_capacity(parts.len());
+        for p in parts {
+            if p.is_empty() {
+                continue;
+            }
+            debug_assert!(!matches!(p, Payload::Chain { .. }), "nested chain");
+            if let Some(last) = merged.last_mut() {
+                if let Some(m) = Self::try_merge(last, &p) {
+                    *last = m;
+                    continue;
+                }
+            }
+            merged.push(p);
+        }
+        match merged.len() {
+            0 => Payload::Zero { len: 0 },
+            1 => merged.pop().unwrap(),
+            _ => {
+                let mut starts = Vec::with_capacity(merged.len());
+                let mut total = 0;
+                for p in &merged {
+                    starts.push(total);
+                    total += p.len();
+                }
+                Payload::Chain { parts: Arc::new(merged), starts: Arc::new(starts), len: total }
+            }
+        }
+    }
+
+    /// Concatenate payloads without copying: bytes-backed parts become a
+    /// flat chain of Arc slices; contiguous synthetic runs, same-buffer
+    /// byte runs and zero runs fuse back into single parts.
+    pub fn concat(parts: &[Payload]) -> Payload {
+        if parts.len() == 1 {
+            return parts[0].clone();
+        }
+        let mut flat: Vec<Payload> = Vec::with_capacity(parts.len());
+        for p in parts {
+            match p {
+                Payload::Chain { parts: inner, .. } => flat.extend(inner.iter().cloned()),
+                other => flat.push(other.clone()),
+            }
+        }
+        Self::chain_from_parts(flat)
+    }
+
+    /// Overlay `patch` on top of `self` at offset `at` (zero-extending if
+    /// the patch lands past the end). Pure slice/concat composition, so
+    /// zero-copy — except that chains past [`COMPACT_PARTS`] parts are
+    /// compacted into one buffer to bound gather cost.
+    pub fn overlay(&self, at: u64, patch: &Payload) -> Payload {
+        let base_len = self.len();
+        let patch_end = at + patch.len();
+        let mut parts: Vec<Payload> = Vec::with_capacity(3);
+        if at > 0 {
+            if at <= base_len {
+                parts.push(self.slice(0, at));
+            } else {
+                parts.push(self.clone());
+                parts.push(Payload::Zero { len: at - base_len });
+            }
+        }
+        parts.push(patch.clone());
+        if base_len > patch_end {
+            parts.push(self.slice(patch_end, base_len - patch_end));
+        }
+        let out = Payload::concat(&parts);
+        if out.part_count() > COMPACT_PARTS {
+            Payload::bytes(out.materialize())
+        } else {
+            out
+        }
+    }
+
+    /// Append this payload's bytes to `out` (no intermediate buffers).
+    fn write_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Payload::Bytes { buf, off, len } => {
+                out.extend_from_slice(&buf[*off as usize..(*off + *len) as usize]);
+            }
+            Payload::Synthetic { seed, abs_off, len } => {
+                synthetic_fill(*seed, *abs_off, out, *len);
+            }
+            Payload::Zero { len } => {
+                out.resize(out.len() + *len as usize, 0);
+            }
+            Payload::Chain { parts, .. } => {
+                for p in parts.iter() {
+                    p.write_into(out);
+                }
+            }
+        }
+    }
+
+    /// Materialize into real bytes — the only operation that copies
+    /// payload bytes (counted in [`stats`]).
+    pub fn materialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() as usize);
+        self.write_into(&mut out);
+        stats::record_materialize(self.len());
+        out
     }
 
     /// Content equality (semantic, not representational).
@@ -94,6 +293,10 @@ impl Payload {
                 Payload::Synthetic { seed: s1, abs_off: o1, .. },
                 Payload::Synthetic { seed: s2, abs_off: o2, .. },
             ) if s1 == s2 && o1 == o2 => true,
+            (
+                Payload::Bytes { buf: b1, off: o1, .. },
+                Payload::Bytes { buf: b2, off: o2, .. },
+            ) if Arc::ptr_eq(b1, b2) && o1 == o2 => true,
             _ => self.materialize() == other.materialize(),
         }
     }
@@ -112,42 +315,6 @@ impl Payload {
                 i32::from_le_bytes(w)
             })
             .collect()
-    }
-
-    /// Concatenate payloads (materializes unless all-zero / contiguous
-    /// synthetic).
-    pub fn concat(parts: &[Payload]) -> Payload {
-        if parts.len() == 1 {
-            return parts[0].clone();
-        }
-        // contiguous synthetic fast path
-        if let Some(Payload::Synthetic { seed, abs_off, .. }) = parts.first() {
-            let (seed, start) = (*seed, *abs_off);
-            let mut cursor = start;
-            let mut contiguous = true;
-            for p in parts {
-                match p {
-                    Payload::Synthetic { seed: s, abs_off: o, len } if *s == seed && *o == cursor => {
-                        cursor += len;
-                    }
-                    _ => {
-                        contiguous = false;
-                        break;
-                    }
-                }
-            }
-            if contiguous {
-                return Payload::Synthetic { seed, abs_off: start, len: cursor - start };
-            }
-        }
-        if parts.iter().all(|p| matches!(p, Payload::Zero { .. })) {
-            return Payload::Zero { len: parts.iter().map(|p| p.len()).sum() };
-        }
-        let mut out = Vec::with_capacity(parts.iter().map(|p| p.len()).sum::<u64>() as usize);
-        for p in parts {
-            out.extend_from_slice(&p.materialize());
-        }
-        Payload::bytes(out)
     }
 }
 
@@ -232,5 +399,62 @@ mod tests {
             Payload::bytes(b"cd".to_vec()),
         ]);
         assert_eq!(c.materialize(), b"ab\0\0cd");
+    }
+
+    #[test]
+    fn bytes_slice_is_zero_copy() {
+        let p = Payload::bytes(vec![9u8; 1 << 20]);
+        let whole = p.materialize();
+        stats::reset();
+        let a = p.slice(1000, 500_000);
+        let b = a.slice(100, 400_000);
+        let c = Payload::concat(&[b.slice(0, 1000), b.slice(1000, 399_000)]);
+        assert_eq!(stats::copied_bytes(), 0, "slicing/concat copied bytes");
+        assert_eq!(c.len(), 400_000);
+        assert_eq!(c.materialize(), &whole[1100..401_100]);
+    }
+
+    #[test]
+    fn concat_adjacent_arc_slices_fuses() {
+        let p = Payload::bytes((0..100u8).collect());
+        let c = Payload::concat(&[p.slice(0, 40), p.slice(40, 60)]);
+        // same buffer, contiguous window: fuses back into one Bytes part
+        assert_eq!(c.part_count(), 1);
+        assert_eq!(c, p);
+    }
+
+    #[test]
+    fn chain_slice_spans_parts() {
+        let c = Payload::concat(&[
+            Payload::bytes(b"abcd".to_vec()),
+            Payload::bytes(b"efgh".to_vec()),
+            Payload::bytes(b"ijkl".to_vec()),
+        ]);
+        assert_eq!(c.slice(2, 8).materialize(), b"cdefghij");
+        assert_eq!(c.slice(4, 4).materialize(), b"efgh");
+        assert_eq!(c.slice(0, 12).materialize(), b"abcdefghijkl");
+    }
+
+    #[test]
+    fn overlay_patches_and_extends() {
+        let base = Payload::bytes(b"aaaaaaaa".to_vec());
+        let o = base.overlay(2, &Payload::bytes(b"BB".to_vec()));
+        assert_eq!(o.materialize(), b"aaBBaaaa");
+        // patch past the end zero-extends
+        let o2 = base.overlay(10, &Payload::bytes(b"X".to_vec()));
+        assert_eq!(o2.materialize(), b"aaaaaaaa\0\0X");
+        // overwrite at the end grows the payload
+        let o3 = base.overlay(6, &Payload::bytes(b"YYYY".to_vec()));
+        assert_eq!(o3.materialize(), b"aaaaaaYYYY");
+    }
+
+    #[test]
+    fn overlay_compacts_deep_chains() {
+        let mut p = Payload::zero(4096);
+        for i in 0..200u64 {
+            p = p.overlay((i * 13) % 4000, &Payload::bytes(vec![i as u8; 7]));
+        }
+        assert!(p.part_count() <= COMPACT_PARTS, "chain depth {} unbounded", p.part_count());
+        assert_eq!(p.len(), 4096);
     }
 }

@@ -5,12 +5,23 @@
 //! and the baselines reuse it as their server-side store. Chain replicas
 //! converge because digests apply the same operation log to each store
 //! (checked by the chain-agreement property tests).
+//!
+//! Name resolution is index-backed: a `(parent_ino, name) → ino` dentry
+//! index plus a normalized-path → ino cache make the hot `resolve()` a
+//! single hash lookup instead of a component-by-component walk; both are
+//! maintained exactly on every namespace mutation (create/mkdir/unlink/
+//! rmdir/rename). `rename` of a directory rewrites only the moved
+//! subtree's index entries (an entries-tree walk of the moved inode)
+//! instead of scanning the whole path map, and per-tier byte totals are
+//! maintained incrementally so [`FileStore::bytes_in_tier`] is O(1)
+//! rather than a scan over all inodes' extents.
 
 use std::collections::BTreeMap;
-use std::collections::HashMap;
 
-use super::extent::{ExtentMap, Tier};
-use super::path::{basename, dirname, is_subtree_of, normalize};
+use crate::util::FastMap;
+
+use super::extent::{ExtentMap, Tier, TIER_COUNT};
+use super::path::{basename, dirname, is_subtree_of, normalize, normalized};
 use super::payload::Payload;
 use super::types::{Cred, FsError, Ino, Mode, Result, ROOT_INO};
 
@@ -49,13 +60,31 @@ pub struct Stat {
     pub mtime: u64,
 }
 
+/// Hash of a dentry name under the store's fast hasher (dentry-index key
+/// component; collisions are resolved by the small per-bucket vec).
+fn name_hash(name: &str) -> u64 {
+    use std::hash::Hasher;
+    let mut h = crate::util::FastHasher::default();
+    h.write(name.as_bytes());
+    h.finish()
+}
+
 #[derive(Debug, Clone)]
 pub struct FileStore {
-    inodes: HashMap<Ino, Inode>,
+    inodes: FastMap<Ino, Inode>,
     next_ino: Ino,
     /// reverse index: ino -> one canonical path (for invalidation)
-    // Maintained best-effort; renames update it.
-    paths: HashMap<Ino, String>,
+    paths: FastMap<Ino, String>,
+    /// normalized-path → ino cache; exact (every live namespace entry is
+    /// present), so a hot `resolve()` is one hash lookup
+    by_path: FastMap<String, Ino>,
+    /// global dentry index: (parent_ino, hash(name)) → [(name, ino)];
+    /// the tiny bucket vec disambiguates hash collisions
+    dentries: FastMap<(Ino, u64), Vec<(String, Ino)>>,
+    /// bytes per tier across all inodes, indexed by [`Tier::idx`];
+    /// updated by diffing each inode's extent-map snapshot around every
+    /// data mutation
+    tier_bytes: [u64; TIER_COUNT],
 }
 
 impl Default for FileStore {
@@ -66,7 +95,7 @@ impl Default for FileStore {
 
 impl FileStore {
     pub fn new() -> Self {
-        let mut inodes = HashMap::new();
+        let mut inodes = FastMap::default();
         inodes.insert(
             ROOT_INO,
             Inode {
@@ -82,26 +111,94 @@ impl FileStore {
                 entries: BTreeMap::new(),
             },
         );
-        let mut paths = HashMap::new();
+        let mut paths = FastMap::default();
         paths.insert(ROOT_INO, "/".to_string());
-        Self { inodes, next_ino: 2, paths }
+        let mut by_path = FastMap::default();
+        by_path.insert("/".to_string(), ROOT_INO);
+        Self {
+            inodes,
+            next_ino: 2,
+            paths,
+            by_path,
+            dentries: FastMap::default(),
+            tier_bytes: [0; TIER_COUNT],
+        }
+    }
+
+    // ---------------------------------------------------- index upkeep
+
+    fn dentry_insert(&mut self, parent: Ino, name: &str, ino: Ino) {
+        self.dentries
+            .entry((parent, name_hash(name)))
+            .or_default()
+            .push((name.to_string(), ino));
+    }
+
+    fn dentry_remove(&mut self, parent: Ino, name: &str) {
+        let key = (parent, name_hash(name));
+        if let Some(bucket) = self.dentries.get_mut(&key) {
+            bucket.retain(|(n, _)| n != name);
+            if bucket.is_empty() {
+                self.dentries.remove(&key);
+            }
+        }
+    }
+
+    /// One dentry lookup: `(parent, name) → ino`, allocation-free.
+    fn dentry_lookup(&self, parent: Ino, name: &str) -> Option<Ino> {
+        self.dentries
+            .get(&(parent, name_hash(name)))
+            .and_then(|b| b.iter().find(|(n, _)| n == name))
+            .map(|&(_, ino)| ino)
+    }
+
+    /// Register a new namespace entry in every index.
+    fn link_indices(&mut self, parent: Ino, name: &str, ino: Ino, path: String) {
+        self.dentry_insert(parent, name, ino);
+        self.by_path.insert(path.clone(), ino);
+        self.paths.insert(ino, path);
+    }
+
+    /// Drop a namespace entry from the dentry + path-cache indices
+    /// (the `paths` reverse map is handled by the caller, which knows
+    /// whether the inode itself survives).
+    fn unlink_indices(&mut self, parent: Ino, name: &str, path: &str) {
+        self.dentry_remove(parent, name);
+        self.by_path.remove(path);
+    }
+
+    /// Fold an inode's extent-byte delta into the aggregate counters.
+    fn apply_tier_delta(&mut self, before: [u64; TIER_COUNT], after: [u64; TIER_COUNT]) {
+        for i in 0..TIER_COUNT {
+            self.tier_bytes[i] = self.tier_bytes[i] - before[i] + after[i];
+        }
     }
 
     // ------------------------------------------------------- resolution
 
-    /// Resolve a normalized path to an inode number.
+    /// Resolve a normalized path to an inode number. Hot path: one hash
+    /// lookup in the path cache; the component walk only runs to produce
+    /// an exact error (ENOENT vs ENOTDIR) on miss.
     pub fn resolve(&self, path: &str) -> Result<Ino> {
-        let path = normalize(path)?;
+        let path = normalized(path)?;
+        if let Some(&ino) = self.by_path.get(path.as_ref()) {
+            return Ok(ino);
+        }
+        self.resolve_walk(&path)
+    }
+
+    /// Component-by-component walk via the dentry index (path-cache miss:
+    /// the entry does not exist; classify the error).
+    fn resolve_walk(&self, path: &str) -> Result<Ino> {
         let mut cur = ROOT_INO;
-        for seg in super::path::components(&path) {
+        for seg in super::path::components(path) {
             let node = &self.inodes[&cur];
             if node.kind != Kind::Dir {
-                return Err(FsError::NotADirectory(path.clone()));
+                return Err(FsError::NotADirectory(path.to_string()));
             }
-            cur = *node
-                .entries
-                .get(seg)
-                .ok_or_else(|| FsError::NotFound(path.clone()))?;
+            cur = self
+                .dentry_lookup(cur, seg)
+                .ok_or_else(|| FsError::NotFound(path.to_string()))?;
         }
         Ok(cur)
     }
@@ -114,8 +211,17 @@ impl FileStore {
         self.inodes.get(&ino)
     }
 
+    /// Mutable inode access. NOTE: mutating `extents` through this
+    /// bypasses the store's aggregate tier counters — use
+    /// [`FileStore::write_at`]/[`FileStore::retier`]/[`FileStore::truncate`]
+    /// for data mutations.
     pub fn inode_mut(&mut self, ino: Ino) -> Option<&mut Inode> {
         self.inodes.get_mut(&ino)
+    }
+
+    /// All inodes, in arbitrary order (LRU victim scans).
+    pub fn inodes_iter(&self) -> impl Iterator<Item = &Inode> {
+        self.inodes.values()
     }
 
     pub fn path_of(&self, ino: Ino) -> Option<&str> {
@@ -141,7 +247,7 @@ impl FileStore {
         }
         let ino = self.next_ino;
         self.next_ino += 1;
-        self.inodes.get_mut(&parent).unwrap().entries.insert(name, ino);
+        self.inodes.get_mut(&parent).unwrap().entries.insert(name.clone(), ino);
         self.inodes.get_mut(&parent).unwrap().mtime = now;
         self.inodes.insert(
             ino,
@@ -158,7 +264,7 @@ impl FileStore {
                 entries: BTreeMap::new(),
             },
         );
-        self.paths.insert(ino, path);
+        self.link_indices(parent, &name, ino, path);
         Ok(ino)
     }
 
@@ -180,7 +286,7 @@ impl FileStore {
         }
         let ino = self.next_ino;
         self.next_ino += 1;
-        self.inodes.get_mut(&parent).unwrap().entries.insert(name, ino);
+        self.inodes.get_mut(&parent).unwrap().entries.insert(name.clone(), ino);
         self.inodes.get_mut(&parent).unwrap().mtime = now;
         self.inodes.insert(
             ino,
@@ -197,7 +303,7 @@ impl FileStore {
                 entries: BTreeMap::new(),
             },
         );
-        self.paths.insert(ino, path);
+        self.link_indices(parent, &name, ino, path);
         Ok(ino)
     }
 
@@ -231,9 +337,12 @@ impl FileStore {
             .entries
             .remove(basename(&path));
         self.inodes.get_mut(&parent).unwrap().mtime = now;
+        self.unlink_indices(parent, basename(&path), &path);
         let node = self.inodes.get_mut(&ino).unwrap();
         node.nlink -= 1;
         if node.nlink == 0 {
+            let gone = node.extents.tier_snapshot();
+            self.apply_tier_delta(gone, [0; TIER_COUNT]);
             self.inodes.remove(&ino);
             self.paths.remove(&ino);
         }
@@ -257,6 +366,7 @@ impl FileStore {
             .entries
             .remove(basename(&path));
         self.inodes.get_mut(&parent).unwrap().mtime = now;
+        self.unlink_indices(parent, basename(&path), &path);
         self.inodes.remove(&ino);
         self.paths.remove(&ino);
         Ok(())
@@ -303,7 +413,7 @@ impl FileStore {
             .entries
             .remove(basename(&from));
         self.inodes.get_mut(&from_parent).unwrap().mtime = now;
-        let to_parent = self.resolve(&dirname(&to))?;
+        self.unlink_indices(from_parent, basename(&from), &from);
         self.inodes
             .get_mut(&to_parent)
             .unwrap()
@@ -311,21 +421,45 @@ impl FileStore {
             .insert(basename(&to).to_string(), ino);
         self.inodes.get_mut(&to_parent).unwrap().mtime = now;
         self.inodes.get_mut(&ino).unwrap().ctime = now;
-        // fix the path index for the moved subtree
-        let old_prefix = from.clone();
-        let moved: Vec<(Ino, String)> = self
-            .paths
-            .iter()
-            .filter(|(_, p)| is_subtree_of(p, &old_prefix))
-            .map(|(&i, p)| {
-                let suffix = &p[old_prefix.len()..];
-                (i, format!("{to}{suffix}"))
-            })
-            .collect();
-        for (i, p) in moved {
-            self.paths.insert(i, p);
+        self.dentry_insert(to_parent, basename(&to), ino);
+        // Re-path ONLY the moved subtree: walk the moved inode's entries
+        // tree (its size, not the whole namespace) and rewrite each
+        // descendant's path-index entries with the new prefix.
+        let moved = self.collect_subtree(ino);
+        for i in moved {
+            let old = match self.paths.get(&i) {
+                Some(p) => p.clone(),
+                None => continue,
+            };
+            let new = if i == ino {
+                to.clone()
+            } else {
+                format!("{to}{}", &old[from.len()..])
+            };
+            if i != ino {
+                self.by_path.remove(&old);
+            }
+            self.by_path.insert(new.clone(), i);
+            self.paths.insert(i, new);
         }
         Ok(())
+    }
+
+    /// The inode plus all its descendants (entries-tree walk).
+    fn collect_subtree(&self, ino: Ino) -> Vec<Ino> {
+        let mut out = vec![ino];
+        let mut stack = vec![ino];
+        while let Some(i) = stack.pop() {
+            if let Some(n) = self.inodes.get(&i) {
+                if n.kind == Kind::Dir {
+                    for &c in n.entries.values() {
+                        out.push(c);
+                        stack.push(c);
+                    }
+                }
+            }
+        }
+        out
     }
 
     // --------------------------------------------------------- file IO
@@ -339,9 +473,12 @@ impl FileStore {
             return Err(FsError::IsADirectory(format!("ino {ino}")));
         }
         let end = off + data.len();
+        let before = node.extents.tier_snapshot();
         node.extents.write(off, data, tier, now);
+        let after = node.extents.tier_snapshot();
         node.size = node.size.max(end);
         node.mtime = now;
+        self.apply_tier_delta(before, after);
         Ok(())
     }
 
@@ -363,12 +500,39 @@ impl FileStore {
             .inodes
             .get_mut(&ino)
             .ok_or(FsError::NotFound(format!("ino {ino}")))?;
-        if size < node.size {
-            node.extents.truncate(size);
+        if node.kind != Kind::File {
+            // truncating a directory must fail (EISDIR), not silently
+            // resize it
+            return Err(FsError::IsADirectory(format!("ino {ino}")));
         }
-        node.size = size;
-        node.mtime = now;
-        node.ctime = now;
+        if size < node.size {
+            let before = node.extents.tier_snapshot();
+            node.extents.truncate(size);
+            let after = node.extents.tier_snapshot();
+            node.size = size;
+            node.mtime = now;
+            node.ctime = now;
+            self.apply_tier_delta(before, after);
+        } else {
+            node.size = size;
+            node.mtime = now;
+            node.ctime = now;
+        }
+        Ok(())
+    }
+
+    /// Migrate `[off, off+len)` of `ino` to `tier`, keeping the aggregate
+    /// tier counters exact (the counter-safe version of mutating
+    /// `inode_mut(..).extents.retier(..)` directly).
+    pub fn retier(&mut self, ino: Ino, off: u64, len: u64, tier: Tier, now: u64) -> Result<()> {
+        let node = self
+            .inodes
+            .get_mut(&ino)
+            .ok_or(FsError::NotFound(format!("ino {ino}")))?;
+        let before = node.extents.tier_snapshot();
+        node.extents.retier(off, len, tier, now);
+        let after = node.extents.tier_snapshot();
+        self.apply_tier_delta(before, after);
         Ok(())
     }
 
@@ -404,8 +568,10 @@ impl FileStore {
 
     // ------------------------------------------------------- accounting
 
+    /// Bytes stored in `tier` across all inodes — O(1), maintained
+    /// incrementally by every data mutation.
     pub fn bytes_in_tier(&self, tier: Tier) -> u64 {
-        self.inodes.values().map(|n| n.extents.bytes_in_tier(tier)).sum()
+        self.tier_bytes[tier.idx()]
     }
 
     pub fn inode_count(&self) -> usize {
@@ -454,8 +620,43 @@ impl FileStore {
     /// marking size from the authoritative store at refetch time.
     pub fn invalidate_ino(&mut self, ino: Ino) {
         if let Some(n) = self.inodes.get_mut(&ino) {
+            let before = n.extents.tier_snapshot();
             n.extents = ExtentMap::new();
+            self.apply_tier_delta(before, [0; TIER_COUNT]);
         }
+    }
+
+    /// Slow full recount of the per-tier byte totals (test oracle for the
+    /// incremental counters).
+    #[doc(hidden)]
+    pub fn recount_tier_bytes(&self) -> [u64; TIER_COUNT] {
+        let mut t = [0u64; TIER_COUNT];
+        for n in self.inodes.values() {
+            let s = n.extents.tier_snapshot();
+            for i in 0..TIER_COUNT {
+                t[i] += s[i];
+            }
+        }
+        t
+    }
+
+    /// Resolve without consulting the path cache (test oracle for the
+    /// namespace indices).
+    #[doc(hidden)]
+    pub fn resolve_uncached(&self, path: &str) -> Result<Ino> {
+        let path = normalized(path)?;
+        let mut cur = ROOT_INO;
+        for seg in super::path::components(&path) {
+            let node = &self.inodes[&cur];
+            if node.kind != Kind::Dir {
+                return Err(FsError::NotADirectory(path.to_string()));
+            }
+            cur = *node
+                .entries
+                .get(seg)
+                .ok_or_else(|| FsError::NotFound(path.to_string()))?;
+        }
+        Ok(cur)
     }
 }
 
@@ -564,6 +765,9 @@ mod tests {
         assert!(!s.exists("/a"));
         let (p, _) = s.read_at(s.resolve("/b").unwrap(), 0, 3).unwrap();
         assert_eq!(p.materialize(), b"src");
+        // replaced destination's bytes no longer counted
+        assert_eq!(s.recount_tier_bytes(), [3, 0, 0]);
+        assert_eq!(s.bytes_in_tier(Tier::Hot), 3);
     }
 
     #[test]
@@ -581,6 +785,24 @@ mod tests {
         s.rename("/d", "/e", 1).unwrap();
         assert_eq!(s.resolve("/e/f").unwrap(), f);
         assert_eq!(s.path_of(f), Some("/e/f"));
+        // stale cache entries for the old prefix are gone
+        assert!(!s.exists("/d/f"));
+        assert!(!s.exists("/d"));
+    }
+
+    #[test]
+    fn rename_deep_subtree_repaths_all_descendants() {
+        let mut s = store();
+        s.mkdir_p("/a/b/c", Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+        let f1 = s.create("/a/b/c/f1", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        let f2 = s.create("/a/b/f2", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        let out = s.create("/outside", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.rename("/a", "/z", 1).unwrap();
+        assert_eq!(s.resolve("/z/b/c/f1").unwrap(), f1);
+        assert_eq!(s.resolve("/z/b/f2").unwrap(), f2);
+        assert_eq!(s.resolve("/outside").unwrap(), out);
+        assert!(!s.exists("/a/b/f2"));
+        assert_eq!(s.path_of(f1), Some("/z/b/c/f1"));
     }
 
     #[test]
@@ -595,6 +817,33 @@ mod tests {
         assert_eq!(s.stat("/f").unwrap().size, 10);
         let (p, _) = s.read_at(ino, 0, 10).unwrap();
         assert_eq!(p.materialize(), b"abc\0\0\0\0\0\0\0");
+    }
+
+    #[test]
+    fn truncate_directory_rejected() {
+        let mut s = store();
+        let d = s.mkdir("/d", Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+        assert!(matches!(s.truncate(d, 10, 1), Err(FsError::IsADirectory(_))));
+        // directory metadata untouched
+        assert_eq!(s.stat("/d").unwrap().size, 0);
+    }
+
+    #[test]
+    fn tier_counters_track_mutations() {
+        let mut s = store();
+        let ino = s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        s.write_at(ino, 0, Payload::zero(100), Tier::Hot, 0).unwrap();
+        s.write_at(ino, 200, Payload::zero(50), Tier::Cold, 0).unwrap();
+        assert_eq!(s.bytes_in_tier(Tier::Hot), 100);
+        assert_eq!(s.bytes_in_tier(Tier::Cold), 50);
+        s.retier(ino, 0, 40, Tier::Cold, 1).unwrap();
+        assert_eq!(s.bytes_in_tier(Tier::Hot), 60);
+        assert_eq!(s.bytes_in_tier(Tier::Cold), 90);
+        s.truncate(ino, 220, 2).unwrap();
+        s.invalidate_ino(ino);
+        assert_eq!(s.bytes_in_tier(Tier::Hot), 0);
+        assert_eq!(s.bytes_in_tier(Tier::Cold), 0);
+        assert_eq!(s.recount_tier_bytes(), [0, 0, 0]);
     }
 
     #[test]
@@ -616,5 +865,20 @@ mod tests {
         s.create("/b", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
         s.create("/a", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
         assert_eq!(s.readdir("/").unwrap(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn resolve_cache_matches_walk() {
+        let mut s = store();
+        s.mkdir_p("/x/y", Mode::DEFAULT_DIR, Cred::ROOT, 0).unwrap();
+        s.create("/x/y/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).unwrap();
+        for p in ["/", "/x", "/x/y", "/x/y/f"] {
+            assert_eq!(s.resolve(p).unwrap(), s.resolve_uncached(p).unwrap(), "{p}");
+        }
+        // non-normalized input still hits the same entry
+        assert_eq!(s.resolve("/x//y/./f").unwrap(), s.resolve("/x/y/f").unwrap());
+        // errors classified like the walk
+        assert!(matches!(s.resolve("/x/y/f/deeper"), Err(FsError::NotADirectory(_))));
+        assert!(matches!(s.resolve("/x/nope"), Err(FsError::NotFound(_))));
     }
 }

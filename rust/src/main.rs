@@ -19,6 +19,7 @@ fn usage() -> ! {
          \n\
          commands:\n\
            bench <exp|all> [--scale F] [--out FILE]   regenerate paper results\n\
+           bench perf [--scale F]                     hot-path microbenchmarks -> BENCH_perf.json\n\
            list                                       list experiments\n\
            selfcheck                                  validate AOT kernels (PJRT)\n\
            demo                                       2-node write/replicate/failover demo"
@@ -94,6 +95,7 @@ fn selfcheck() {
     };
     use assise::util::SplitMix64;
 
+    println!("kernel backend: {}", assise::runtime::backend_name());
     println!("artifacts dir: {}", assise::runtime::artifacts_dir().display());
     let mut failures = 0;
 
@@ -108,7 +110,11 @@ fn selfcheck() {
                 .iter()
                 .zip(&blocks)
                 .all(|(&(s1, s2), b)| (s1, s2) == checksum_ref(b));
-            println!("checksum kernel (PJRT) vs oracle: {}", if ok { "OK" } else { "MISMATCH" });
+            println!(
+                "checksum kernel ({}) vs oracle: {}",
+                assise::runtime::backend_name(),
+                if ok { "OK" } else { "MISMATCH" }
+            );
             if !ok {
                 failures += 1;
             }
@@ -126,7 +132,11 @@ fn selfcheck() {
             let (ids, hist) = exec.partition(&keys).expect("execute");
             let (eids, ehist) = partition_ref(&keys);
             let ok = ids == eids && hist == ehist;
-            println!("partition kernel (PJRT) vs oracle: {}", if ok { "OK" } else { "MISMATCH" });
+            println!(
+                "partition kernel ({}) vs oracle: {}",
+                assise::runtime::backend_name(),
+                if ok { "OK" } else { "MISMATCH" }
+            );
             if !ok {
                 failures += 1;
             }

@@ -37,45 +37,40 @@ pub fn coalesce(batch: &[LogEntry]) -> Coalesced {
     // (create, writes, truncates, renames) *if* the create is inside the
     // batch — otherwise the unlink must still replicate to delete remote
     // state. Lifetimes follow renames (the Varmail WAL is created under a
-    // temp name, sometimes renamed, then removed).
-    struct Lifetime {
-        start: usize,
-        names: Vec<String>,
-    }
-    let mut open: HashMap<String, Lifetime> = HashMap::new();
+    // temp name, sometimes renamed, then removed). Each open lifetime
+    // carries the indices of the ops that belong to it, so an unlink
+    // kills its lifetime in O(ops-in-lifetime) — the batch-wide pass is
+    // O(n) hash work instead of the old O(n²) rescan per unlink
+    // (unlink-heavy Varmail batches were quadratic).
+    let mut lifetimes: Vec<Vec<usize>> = Vec::new(); // op indices per lifetime
+    let mut open: HashMap<&str, usize> = HashMap::new(); // live name -> lifetime id
     for (i, e) in batch.iter().enumerate() {
         match &e.op {
             LogOp::Create { path, .. } => {
-                open.insert(path.clone(), Lifetime { start: i, names: vec![path.clone()] });
+                let id = lifetimes.len();
+                lifetimes.push(vec![i]);
+                open.insert(path.as_str(), id);
+            }
+            LogOp::Write { path, .. } | LogOp::Truncate { path, .. } => {
+                if let Some(&id) = open.get(path.as_str()) {
+                    lifetimes[id].push(i);
+                }
             }
             LogOp::Rename { from, to } => {
-                if let Some(mut lt) = open.remove(from) {
-                    lt.names.push(to.clone());
-                    open.insert(to.clone(), lt);
+                if let Some(id) = open.remove(from.as_str()) {
+                    lifetimes[id].push(i);
+                    open.insert(to.as_str(), id);
                 }
             }
             LogOp::Unlink { path } => {
-                if let Some(lt) = open.remove(path) {
-                    // kill every op in [start..=i] touching any of the
-                    // lifetime's names
-                    for (j, ej) in batch.iter().enumerate().take(i + 1).skip(lt.start) {
-                        let touches = match &ej.op {
-                            LogOp::Create { path: p, .. }
-                            | LogOp::Write { path: p, .. }
-                            | LogOp::Truncate { path: p, .. }
-                            | LogOp::Unlink { path: p } => lt.names.iter().any(|n| n == p),
-                            LogOp::Rename { from, to } => {
-                                lt.names.iter().any(|n| n == from || n == to)
-                            }
-                            LogOp::Mkdir { .. } => false,
-                        };
-                        if touches {
-                            dead[j] = true;
-                        }
+                if let Some(id) = open.remove(path.as_str()) {
+                    lifetimes[id].push(i);
+                    for &j in &lifetimes[id] {
+                        dead[j] = true;
                     }
                 }
             }
-            _ => {}
+            LogOp::Mkdir { .. } => {}
         }
     }
 

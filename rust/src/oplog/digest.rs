@@ -82,7 +82,14 @@ fn apply_one(store: &mut FileStore, op: &LogOp, tier: Tier, now: u64) -> Result<
                 Err(FsError::NotFound(_)) => return Ok(()),
                 Err(e) => return Err(e),
             };
-            store.truncate(ino, *size, now)
+            match store.truncate(ino, *size, now) {
+                Ok(()) => Ok(()),
+                // replay may see a directory where the live namespace had
+                // a file (path re-created across batches) — skip, as the
+                // kind check rejects directory truncation
+                Err(FsError::IsADirectory(_)) => Ok(()),
+                Err(e) => Err(e),
+            }
         }
         LogOp::Unlink { path } => match store.unlink(path, now) {
             Ok(_) => Ok(()),

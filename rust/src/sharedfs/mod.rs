@@ -99,22 +99,24 @@ impl SharedFs {
         let mut migrated = 0;
         let mut segments = 0;
         while self.hot_overflow() > 0 {
-            // find the LRU hot extent across all files
+            // find the LRU hot extent across all files: iterate the inode
+            // table directly (no namespace walk / path allocation), and
+            // skip files with no hot bytes via their O(1) tier counters
             let victim = {
                 let mut best: Option<(Ino, u64, u64, u64)> = None; // ino, off, len, age
-                for (ino, path) in self.all_paths() {
-                    let _ = path;
-                    if let Some(n) = self.store.inode(ino) {
-                        if let Some((off, len)) = n.extents.oldest_access(Tier::Hot) {
-                            let age = n
-                                .extents
-                                .iter()
-                                .find(|(&s, _)| s == off)
-                                .map(|(_, e)| e.last_access)
-                                .unwrap_or(0);
-                            if best.is_none() || age < best.unwrap().3 {
-                                best = Some((ino, off, len, age));
-                            }
+                for n in self.store.inodes_iter() {
+                    if n.extents.bytes_in_tier(Tier::Hot) == 0 {
+                        continue;
+                    }
+                    if let Some((off, len)) = n.extents.oldest_access(Tier::Hot) {
+                        let age = n
+                            .extents
+                            .iter()
+                            .find(|(&s, _)| s == off)
+                            .map(|(_, e)| e.last_access)
+                            .unwrap_or(0);
+                        if best.is_none() || age < best.unwrap().3 {
+                            best = Some((n.ino, off, len, age));
                         }
                     }
                 }
@@ -122,9 +124,9 @@ impl SharedFs {
             };
             match victim {
                 Some((ino, off, len, _)) => {
-                    if let Some(n) = self.store.inode_mut(ino) {
-                        n.extents.retier(off, len, target, now);
-                    }
+                    // counter-safe migration (keeps FileStore's aggregate
+                    // tier bytes exact, so hot_overflow stays O(1))
+                    let _ = self.store.retier(ino, off, len, target, now);
                     migrated += len;
                     segments += 1;
                 }
@@ -153,24 +155,6 @@ impl SharedFs {
         self.stale.remove(&ino);
     }
 
-    fn all_paths(&self) -> Vec<(Ino, String)> {
-        let mut out = Vec::new();
-        let mut stack = vec!["/".to_string()];
-        while let Some(dir) = stack.pop() {
-            if let Ok(names) = self.store.readdir(&dir) {
-                for n in names {
-                    let p = if dir == "/" { format!("/{n}") } else { format!("{dir}/{n}") };
-                    if let Ok(st) = self.store.stat(&p) {
-                        out.push((st.ino, p.clone()));
-                        if st.is_dir {
-                            stack.push(p);
-                        }
-                    }
-                }
-            }
-        }
-        out
-    }
 }
 
 #[cfg(test)]

@@ -757,7 +757,9 @@ impl Cluster {
         // base data from lower layers
         let base = self.read_below_log(pid, path, off, len, store_node, area_sock)?;
 
-        // overlay any log-view segments on top
+        // overlay any log-view segments on top — composed in a scratch
+        // extent map, so it is pure Arc-slice arithmetic (no payload
+        // bytes are materialized on the read path)
         let out = if let Ok(vino) = self.procs[pid].log_view.resolve(path) {
             let segs = self.procs[pid]
                 .log_view
@@ -767,15 +769,13 @@ impl Cluster {
             if segs.is_empty() {
                 base
             } else {
-                let mut bytes = base.materialize();
-                bytes.resize(len as usize, 0);
+                let mut overlay = crate::fs::ExtentMap::new();
+                overlay.write(off, base, Tier::Hot, 0);
                 for (s, l, _) in segs {
                     let (seg, _) = self.procs[pid].log_view.read_at(vino, s, l)?;
-                    let sb = seg.materialize();
-                    let at = (s - off) as usize;
-                    bytes[at..at + sb.len()].copy_from_slice(&sb);
+                    overlay.write(s, seg, Tier::Hot, 0);
                 }
-                Payload::bytes(bytes)
+                overlay.read(off, len).0
             }
         } else {
             base

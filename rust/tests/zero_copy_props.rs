@@ -1,0 +1,249 @@
+//! Property tests for the zero-copy payload representation and the
+//! extent-map overlay invariants, using the same in-crate seeded harness
+//! as `prop_invariants.rs` (no proptest in the offline environment).
+//!
+//! Three families:
+//! 1. Arc-slice `Payload` slice/concat chains are byte-identical to the
+//!    materialized equivalent AND copy zero payload bytes while composing.
+//! 2. `ExtentMap` overlay fuzz: random writes/truncates against a flat
+//!    `Vec<u8>` model — contents match, extents never overlap, and the
+//!    incremental per-tier counters equal a full recount.
+//! 3. `FileStore` namespace fuzz: the indexed `resolve` agrees with an
+//!    uncached walk after random create/mkdir/rename/unlink churn.
+
+use assise::fs::payload::stats;
+use assise::fs::{Cred, ExtentMap, FileStore, Mode, Payload, Tier, TIER_COUNT};
+use assise::util::SplitMix64;
+
+const SEEDS: u64 = 30;
+
+// ------------------------------------------------ payload slice/concat
+
+/// Build a random composition (slices + concats) over `base`, returning
+/// the payload and the equivalent byte range composition of `model`.
+fn random_composition(
+    rng: &mut SplitMix64,
+    base: &Payload,
+    model: &[u8],
+    depth: usize,
+) -> (Payload, Vec<u8>) {
+    if depth == 0 || rng.below(3) == 0 {
+        let len = base.len();
+        let off = rng.below(len);
+        let l = 1 + rng.below(len - off);
+        return (base.slice(off, l), model[off as usize..(off + l) as usize].to_vec());
+    }
+    let n = 2 + rng.below(3) as usize;
+    let mut parts = Vec::new();
+    let mut bytes = Vec::new();
+    for _ in 0..n {
+        let (p, b) = random_composition(rng, base, model, depth - 1);
+        parts.push(p);
+        bytes.extend_from_slice(&b);
+    }
+    (Payload::concat(&parts), bytes)
+}
+
+#[test]
+fn prop_slice_concat_chains_match_materialized_and_copy_nothing() {
+    for seed in 0..SEEDS {
+        let mut rng = SplitMix64::new(seed);
+        let size = 1024 + rng.below(64 * 1024);
+        let model: Vec<u8> = (0..size).map(|i| (i as u8) ^ (seed as u8)).collect();
+        let base = Payload::bytes(model.clone());
+
+        stats::reset();
+        let (composed, expect) = random_composition(&mut rng, &base, &model, 3);
+        // further slice the composition (exercises chain slicing)
+        let off = rng.below(composed.len());
+        let l = 1 + rng.below(composed.len() - off);
+        let sub = composed.slice(off, l);
+        assert_eq!(
+            stats::copied_bytes(),
+            0,
+            "seed {seed}: slice/concat composition copied bytes"
+        );
+        assert_eq!(
+            stats::materializations(),
+            0,
+            "seed {seed}: composition materialized"
+        );
+
+        // semantics: byte-identical to the model composition
+        assert_eq!(composed.materialize(), expect, "seed {seed}: composed bytes");
+        assert_eq!(
+            sub.materialize(),
+            &expect[off as usize..(off + l) as usize],
+            "seed {seed}: chain slice bytes"
+        );
+    }
+}
+
+#[test]
+fn prop_mixed_representation_concat_matches() {
+    // bytes + synthetic + zero mixed in one chain
+    for seed in 0..SEEDS {
+        let mut rng = SplitMix64::new(100 + seed);
+        let b = Payload::bytes((0..256u64).map(|i| (i * seed) as u8).collect());
+        let s = Payload::synthetic(seed, 300);
+        let z = Payload::zero(100);
+        let c = Payload::concat(&[b.slice(10, 100), s.slice(50, 200), z.slice(0, 60)]);
+        let mut expect = b.materialize()[10..110].to_vec();
+        expect.extend_from_slice(&s.materialize()[50..250]);
+        expect.extend_from_slice(&vec![0u8; 60]);
+        assert_eq!(c.materialize(), expect, "seed {seed}");
+        // random re-slices agree with the model
+        for _ in 0..20 {
+            let off = rng.below(c.len());
+            let l = 1 + rng.below(c.len() - off);
+            assert_eq!(
+                c.slice(off, l).materialize(),
+                &expect[off as usize..(off + l) as usize],
+                "seed {seed} off {off} len {l}"
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------- extent map fuzz
+
+#[test]
+fn prop_extent_overlay_fuzz_no_overlap_and_content() {
+    const FILE: u64 = 64 * 1024;
+    for seed in 0..SEEDS {
+        let mut rng = SplitMix64::new(200 + seed);
+        let mut m = ExtentMap::new();
+        let mut model = vec![0u8; FILE as usize];
+        for step in 0..200u64 {
+            let op = rng.below(10);
+            if op < 7 {
+                // random overlay write
+                let off = rng.below(FILE - 1);
+                let len = 1 + rng.below((FILE - off).min(4096));
+                let tier = match rng.below(3) {
+                    0 => Tier::Hot,
+                    1 => Tier::Reserve,
+                    _ => Tier::Cold,
+                };
+                let fill = (step as u8).wrapping_mul(31).wrapping_add(seed as u8);
+                m.write(off, Payload::bytes(vec![fill; len as usize]), tier, step);
+                model[off as usize..(off + len) as usize].fill(fill);
+            } else if op < 9 {
+                // synthetic write (different representation, same rules)
+                let off = rng.below(FILE - 1);
+                let len = 1 + rng.below((FILE - off).min(4096));
+                let p = Payload::synthetic(rng.next_u64(), len);
+                let bytes = p.materialize();
+                m.write(off, p, Tier::Hot, step);
+                model[off as usize..(off + len) as usize].copy_from_slice(&bytes);
+            } else {
+                // truncate, then the tail reads as a hole (zeros)
+                let size = rng.below(FILE);
+                m.truncate(size);
+                model[size as usize..].fill(0);
+            }
+
+            // invariant: extents sorted, non-overlapping, non-empty
+            let mut prev_end = 0u64;
+            for (&s, e) in m.iter() {
+                assert!(e.len() > 0, "seed {seed} step {step}: empty extent at {s}");
+                assert!(
+                    s >= prev_end,
+                    "seed {seed} step {step}: overlap at {s} (prev end {prev_end})"
+                );
+                prev_end = s + e.len();
+            }
+            // invariant: incremental tier counters == recount
+            let mut recount = [0u64; TIER_COUNT];
+            for (_, e) in m.iter() {
+                recount[e.tier.idx()] += e.len();
+            }
+            assert_eq!(m.tier_snapshot(), recount, "seed {seed} step {step}: counters");
+        }
+        // final content equivalence
+        let (p, _) = m.read(0, FILE);
+        assert_eq!(p.materialize(), model, "seed {seed}: content diverged");
+    }
+}
+
+// ------------------------------------------------- namespace index fuzz
+
+#[test]
+fn prop_indexed_resolve_agrees_with_walk() {
+    for seed in 0..SEEDS {
+        let mut rng = SplitMix64::new(300 + seed);
+        let mut s = FileStore::new();
+        let mut dirs: Vec<String> = vec![];
+        let mut files: Vec<String> = vec![];
+        let mut uniq = 0;
+        for step in 0..150u64 {
+            match rng.below(10) {
+                0..=2 => {
+                    let parent = if dirs.is_empty() || rng.below(2) == 0 {
+                        String::new()
+                    } else {
+                        dirs[rng.below(dirs.len() as u64) as usize].clone()
+                    };
+                    let p = format!("{parent}/d{uniq}");
+                    uniq += 1;
+                    if s.mkdir(&p, Mode::DEFAULT_DIR, Cred::ROOT, step).is_ok() {
+                        dirs.push(p);
+                    }
+                }
+                3..=5 => {
+                    let parent = if dirs.is_empty() || rng.below(2) == 0 {
+                        String::new()
+                    } else {
+                        dirs[rng.below(dirs.len() as u64) as usize].clone()
+                    };
+                    let p = format!("{parent}/f{uniq}");
+                    uniq += 1;
+                    if s.create(&p, Mode::DEFAULT_FILE, Cred::ROOT, step).is_ok() {
+                        files.push(p);
+                    }
+                }
+                6..=7 if !dirs.is_empty() => {
+                    // rename a whole directory subtree
+                    let i = rng.below(dirs.len() as u64) as usize;
+                    let from = dirs[i].clone();
+                    let to = format!("/r{uniq}");
+                    uniq += 1;
+                    if s.rename(&from, &to, step).is_ok() {
+                        // re-prefix every tracked path under `from`
+                        let prefix = format!("{from}/");
+                        let mut fix = |p: &mut String| {
+                            if *p == from {
+                                *p = to.clone();
+                            } else if p.starts_with(&prefix) {
+                                *p = format!("{to}{}", &p[from.len()..]);
+                            }
+                        };
+                        dirs.iter_mut().for_each(&mut fix);
+                        files.iter_mut().for_each(&mut fix);
+                    }
+                }
+                _ if !files.is_empty() => {
+                    let i = rng.below(files.len() as u64) as usize;
+                    let p = files.remove(i);
+                    let _ = s.unlink(&p, step);
+                }
+                _ => {}
+            }
+        }
+        // every tracked live path: cached resolve == uncached walk
+        for p in dirs.iter().chain(files.iter()) {
+            let cached = s.resolve(p);
+            let walked = s.resolve_uncached(p);
+            assert_eq!(cached, walked, "seed {seed}: divergence at {p}");
+            assert!(cached.is_ok(), "seed {seed}: tracked path {p} lost");
+            // reverse index agrees too
+            let ino = cached.unwrap();
+            assert_eq!(s.path_of(ino), Some(p.as_str()), "seed {seed}: path_of({ino})");
+        }
+        // tier counters still exact after namespace churn
+        let recount = s.recount_tier_bytes();
+        for t in [Tier::Hot, Tier::Reserve, Tier::Cold] {
+            assert_eq!(s.bytes_in_tier(t), recount[t.idx()], "seed {seed}: tier {t:?}");
+        }
+    }
+}
