@@ -46,13 +46,19 @@ fn mix(
     }
 }
 
-/// Steady-state latency (p50 over the last window).
+/// Steady-state latency (p50 over the last window). An empty series has
+/// no steady state — report NaN-free 0.0 explicitly rather than letting
+/// a silent `unwrap_or(0)` masquerade as a measured sub-ns latency; a
+/// window larger than the series falls back to the whole series.
 fn steady(ts: &TimeSeries, n: usize) -> f64 {
     let pts = &ts.points;
-    let tail = &pts[pts.len().saturating_sub(n)..];
+    if pts.is_empty() {
+        return 0.0;
+    }
+    let tail = &pts[pts.len().saturating_sub(n.max(1))..];
     let mut v: Vec<u64> = tail.iter().map(|&(_, l)| l).collect();
     v.sort_unstable();
-    v.get(v.len() / 2).copied().unwrap_or(0) as f64
+    v[v.len() / 2] as f64
 }
 
 pub fn run(scale: Scale) -> Vec<Table> {
@@ -200,6 +206,18 @@ pub fn run(scale: Scale) -> Vec<Table> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn steady_handles_empty_and_short_windows() {
+        let empty = TimeSeries::default();
+        assert_eq!(steady(&empty, 16), 0.0);
+        let mut ts = TimeSeries::default();
+        ts.record(0, 10);
+        ts.record(1, 30);
+        ts.record(2, 20);
+        assert_eq!(steady(&ts, 100), 20.0); // window larger than series
+        assert_eq!(steady(&ts, 0), 20.0); // degenerate window clamps to 1
+    }
 
     #[test]
     fn assise_failover_beats_ceph() {

@@ -32,6 +32,10 @@ pub struct PerfRow {
     pub total_ns: u128,
     pub copied_bytes: u64,
     pub materializations: u64,
+    /// replication wire traffic (virtual-time rows only, schema 2)
+    pub wire_bytes: Option<u64>,
+    /// modeled (virtual) elapsed time of the scenario (schema 2)
+    pub virtual_ns: Option<u64>,
 }
 
 impl PerfRow {
@@ -40,6 +44,15 @@ impl PerfRow {
             return 0.0;
         }
         self.total_ns as f64 / self.ops as f64
+    }
+
+    /// Modeled replication throughput in bytes per virtual ns (≈ GB/s),
+    /// for rows carrying the schema-2 fields.
+    pub fn virtual_gbps(&self) -> Option<f64> {
+        match (self.wire_bytes, self.virtual_ns) {
+            (Some(b), Some(ns)) if ns > 0 => Some(b as f64 / ns as f64),
+            _ => None,
+        }
     }
 }
 
@@ -57,6 +70,8 @@ fn bench<F: FnMut(u64)>(name: &str, ops: u64, mut f: F) -> PerfRow {
         total_ns,
         copied_bytes: stats::copied_bytes(),
         materializations: stats::materializations(),
+        wire_bytes: None,
+        virtual_ns: None,
     }
 }
 
@@ -232,13 +247,63 @@ fn bench_fig2a_e2e() -> PerfRow {
         total_ns: t0.elapsed().as_nanos(),
         copied_bytes: stats::copied_bytes(),
         materializations: stats::materializations(),
+        wire_bytes: None,
+        virtual_ns: None,
+    }
+}
+
+/// Virtual-time replication throughput of N writers over M sharded
+/// subtree chains — the shard-aware chain-replication scenario. Each
+/// writer appends + fsyncs into its own subtree; subtrees are pinned
+/// round-robin onto `chains` disjoint single-replica chains drawn from a
+/// dedicated replica pool. With one chain every batch funnels through
+/// one replica's NIC-rx and NVM log queues; with M chains the batches
+/// stream down disjoint chains concurrently, so wire bytes per virtual
+/// second must scale with M (the first benchmark where `set_chain`
+/// sharding visibly pays).
+fn bench_repl_scaling(chains: usize, writes_per_proc: usize) -> PerfRow {
+    use crate::sim::{Cluster, ClusterConfig, DistFs};
+    const WRITERS: usize = 4;
+    const POOL: usize = 4;
+    const CHUNK: u64 = 256 << 10;
+    let chains = chains.clamp(1, POOL);
+    let mut c = Cluster::new(ClusterConfig::default().nodes(WRITERS + POOL));
+    for i in 0..WRITERS {
+        c.set_subtree_chain(&format!("/s{i}"), vec![WRITERS + (i % chains)], vec![]);
+    }
+    let pids: Vec<usize> = (0..WRITERS).map(|i| c.spawn_process(i, 0)).collect();
+    let mut fds = Vec::new();
+    for (i, &pid) in pids.iter().enumerate() {
+        c.mkdir(pid, &format!("/s{i}")).unwrap();
+        fds.push(c.create(pid, &format!("/s{i}/f")).unwrap());
+    }
+    let chunk = Payload::zero(CHUNK);
+    stats::reset();
+    let t0 = Instant::now();
+    super::drive(&mut c, &pids, writes_per_proc, |fs, pid, k| {
+        // spawn order makes pid == writer index
+        fs.pwrite(pid, fds[pid], k as u64 * CHUNK, chunk.clone()).unwrap();
+        if k % 8 == 7 || k + 1 == writes_per_proc {
+            fs.fsync(pid, fds[pid]).unwrap();
+        }
+    });
+    let total_ns = t0.elapsed().as_nanos();
+    let virtual_ns = pids.iter().map(|&p| c.now(p)).max().unwrap_or(0);
+    PerfRow {
+        name: format!("repl_scaling_{chains}chains"),
+        ops: (writes_per_proc * WRITERS) as u64,
+        total_ns,
+        copied_bytes: stats::copied_bytes(),
+        materializations: stats::materializations(),
+        wire_bytes: Some(c.replicated_bytes),
+        virtual_ns: Some(virtual_ns),
     }
 }
 
 /// Render the rows as the machine-readable `BENCH_perf.json` document.
 pub fn to_json(rows: &[PerfRow], scale: f64) -> String {
     let mut out = String::from("{\n");
-    out.push_str("  \"schema\": \"assise-bench-perf/1\",\n");
+    out.push_str("  \"schema\": \"assise-bench-perf/2\",\n");
     out.push_str(&format!("  \"scale\": {scale},\n"));
     out.push_str(&format!(
         "  \"kernel_backend\": \"{}\",\n",
@@ -246,14 +311,22 @@ pub fn to_json(rows: &[PerfRow], scale: f64) -> String {
     ));
     out.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
+        let mut extras = String::new();
+        if let (Some(w), Some(v)) = (r.wire_bytes, r.virtual_ns) {
+            extras = format!(
+                ", \"wire_bytes\": {w}, \"virtual_ns\": {v}, \"virtual_gbps\": {:.3}",
+                r.virtual_gbps().unwrap_or(0.0)
+            );
+        }
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"ops\": {}, \"total_ns\": {}, \"ns_per_op\": {:.1}, \"copied_bytes\": {}, \"materializations\": {}}}{}\n",
+            "    {{\"name\": \"{}\", \"ops\": {}, \"total_ns\": {}, \"ns_per_op\": {:.1}, \"copied_bytes\": {}, \"materializations\": {}{}}}{}\n",
             r.name,
             r.ops,
             r.total_ns,
             r.ns_per_op(),
             r.copied_bytes,
             r.materializations,
+            extras,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -277,6 +350,11 @@ pub fn run_rows(scale: Scale) -> Vec<PerfRow> {
         bench_coalesce(n(500)),
         bench_digest(n(200)),
         bench_fig2a_e2e(),
+        // replication scaling: writes_per_proc scales with the budget,
+        // floored so the queues actually congest at tiny CI scales
+        bench_repl_scaling(1, scale.ops(48).clamp(16, 256)),
+        bench_repl_scaling(2, scale.ops(48).clamp(16, 256)),
+        bench_repl_scaling(4, scale.ops(48).clamp(16, 256)),
     ]
 }
 
@@ -303,12 +381,23 @@ pub fn run(scale: Scale) -> Table {
             r.materializations.to_string(),
         ]);
     }
+    for r in &rows {
+        if let Some(g) = r.virtual_gbps() {
+            t.note(format!(
+                "{}: {:.2} GB/s modeled replication throughput ({} wire bytes)",
+                r.name,
+                g,
+                r.wire_bytes.unwrap_or(0)
+            ));
+        }
+    }
     if wrote {
         t.note(format!("wrote {out_path}"));
     } else {
         t.note(format!("FAILED to write {out_path}"));
     }
     t.note("zero-copy rows (slice/concat/extent/store) must report 0 copied bytes");
+    t.note("repl_scaling_* rows: virtual_gbps must increase with chain count");
     t
 }
 
@@ -337,9 +426,36 @@ mod tests {
     fn json_is_well_formed_enough() {
         let rows = vec![bench_payload_slice(8)];
         let j = to_json(&rows, 0.1);
-        assert!(j.contains("\"schema\": \"assise-bench-perf/1\""));
+        assert!(j.contains("\"schema\": \"assise-bench-perf/2\""));
         assert!(j.contains("payload_slice_1mb"));
+        assert!(!j.contains("wire_bytes"), "schema-2 extras only on virtual-time rows");
         assert!(j.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn json_carries_replication_scaling_fields() {
+        let rows = vec![bench_repl_scaling(2, 16)];
+        let j = to_json(&rows, 0.1);
+        assert!(j.contains("repl_scaling_2chains"));
+        assert!(j.contains("\"wire_bytes\": "));
+        assert!(j.contains("\"virtual_ns\": "));
+        assert!(j.contains("\"virtual_gbps\": "));
+    }
+
+    #[test]
+    fn replication_scales_with_chains() {
+        // the tentpole's acceptance: modeled replication throughput must
+        // grow with the number of disjoint subtree chains
+        let r1 = bench_repl_scaling(1, 24);
+        let r4 = bench_repl_scaling(4, 24);
+        let t1 = r1.virtual_gbps().unwrap();
+        let t4 = r4.virtual_gbps().unwrap();
+        assert!(
+            t4 > t1 * 1.5,
+            "4-chain throughput {t4:.3} GB/s !> 1.5x 1-chain {t1:.3} GB/s"
+        );
+        // same data volume either way: only the routing changed
+        assert_eq!(r1.wire_bytes, r4.wire_bytes);
     }
 
     #[test]

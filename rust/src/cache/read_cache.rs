@@ -30,41 +30,47 @@ impl ReadCache {
         off / BLOCK
     }
 
-    /// Is the whole byte range `[off, off+len)` cached?
+    /// Is the whole byte range `[off, off+len)` cached — block presence
+    /// AND cached-byte extent? This is exactly `get`'s hit predicate
+    /// (a zero-length range is trivially covered and trivially served).
     pub fn covers(&self, ino: Ino, off: u64, len: u64) -> bool {
         if len == 0 {
             return true;
         }
         let first = Self::block_of(off);
         let last = Self::block_of(off + len - 1);
-        (first..=last).all(|b| self.index.contains(&(ino, b)))
+        (first..=last).all(|b| match self.data.get(&(ino, b)) {
+            // the block must hold bytes through the end of its window
+            // (the final cached block may be short)
+            Some(blk) => b * BLOCK + blk.len() >= (off + len).min((b + 1) * BLOCK),
+            None => false,
+        })
     }
 
-    /// Refresh recency for a hit and return the gathered bytes.
+    /// Return the gathered bytes and refresh recency — hits only; a miss
+    /// (full or partial) is **side-effect-free**, leaving the LRU stamps
+    /// exactly as they were.
     pub fn get(&mut self, ino: Ino, off: u64, len: u64) -> Option<Payload> {
         if !self.covers(ino, off, len) {
             return None;
         }
+        if len == 0 {
+            return Some(Payload::zero(0));
+        }
         let first = Self::block_of(off);
-        let last = Self::block_of(off + len.max(1) - 1);
+        let last = Self::block_of(off + len - 1);
         let mut parts = Vec::new();
         for b in first..=last {
             self.index.touch(&(ino, b));
-            let blk = self.data.get(&(ino, b))?;
+            let blk = self.data.get(&(ino, b)).expect("covers() checked presence");
             let blk_start = b * BLOCK;
             let s = off.max(blk_start) - blk_start;
-            let e = (off + len).min(blk_start + blk.len()).saturating_sub(blk_start);
-            if e <= s {
-                return None; // range extends past cached bytes
-            }
+            let e = (off + len).min(blk_start + blk.len()) - blk_start;
             parts.push(blk.slice(s, e - s));
         }
         let out = Payload::concat(&parts);
-        if out.len() == len {
-            Some(out)
-        } else {
-            None
-        }
+        debug_assert_eq!(out.len(), len);
+        Some(out)
     }
 
     /// Install blocks covering `[off, off+len)` from `data` (whose offset
@@ -160,5 +166,48 @@ mod tests {
         c.insert(1, 0, Payload::bytes(vec![9u8; 100]));
         assert_eq!(c.get(1, 0, 100).unwrap().len(), 100);
         assert!(c.get(1, 0, 200).is_none()); // beyond cached bytes
+    }
+
+    #[test]
+    fn covers_and_get_agree() {
+        let mut c = ReadCache::new(1 << 20);
+        c.insert(1, 0, Payload::bytes(vec![9u8; 100])); // short block 0
+        for (ino, off, len) in [
+            (1u64, 0u64, 0u64),
+            (1, 0, 50),
+            (1, 0, 100),
+            (1, 0, 101),  // past cached bytes
+            (1, 0, 5000), // block 1 missing
+            (1, 4096, 10),
+            (2, 0, 0), // zero-length on an uncached ino
+            (2, 0, 10),
+        ] {
+            assert_eq!(
+                c.covers(ino, off, len),
+                c.get(ino, off, len).is_some(),
+                "covers/get disagree at ({ino}, {off}, {len})"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_length_read_is_a_hit() {
+        let mut c = ReadCache::new(1 << 20);
+        assert!(c.covers(7, 123, 0));
+        assert_eq!(c.get(7, 123, 0).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn partial_miss_leaves_recency_untouched() {
+        let mut c = ReadCache::new(8192); // 2 blocks
+        c.insert(1, 0, Payload::bytes(vec![1u8; 4096])); // block 0 (older)
+        c.insert(1, 4096, Payload::bytes(vec![2u8; 4096])); // block 1
+        // a partial miss spanning blocks 0..2 must NOT refresh block 0:
+        // the old implementation touched blocks before discovering the
+        // miss, corrupting eviction order
+        assert!(c.get(1, 0, 3 * 4096).is_none());
+        c.insert(1, 8192, Payload::bytes(vec![3u8; 4096])); // evicts LRU
+        assert!(c.get(1, 0, 10).is_none(), "block 0 was LRU and must be evicted");
+        assert!(c.get(1, 4096, 10).is_some(), "block 1 must survive");
     }
 }

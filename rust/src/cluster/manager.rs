@@ -5,6 +5,7 @@ use std::collections::HashMap;
 use crate::coherence::EpochTracker;
 use crate::fs::path::is_subtree_of;
 use crate::fs::{NodeId, SocketId};
+use crate::replication::ChainKey;
 use crate::hw::params::HwParams;
 use crate::hw::Nanos;
 
@@ -106,6 +107,15 @@ impl ClusterManager {
             .expect("catch-all chain exists")
     }
 
+    /// Canonical cursor key for `path`'s **configured** chain. Keyed on
+    /// the configured membership (not the live view) so per-chain
+    /// replication cursors survive node churn; two subtrees pinned to the
+    /// same chain share a key — they replicate together.
+    pub fn chain_key_for(&self, path: &str) -> ChainKey {
+        let c = self.chain_for(path);
+        ChainKey::new(&c.cache_replicas, &c.reserve_replicas)
+    }
+
     /// Live cache replicas for `path`, in chain order. In a cascading
     /// failure that downs every cache replica, the reserve replicas are
     /// promoted (§3.5 "processes can fail-over to reserve replicas ...
@@ -127,6 +137,26 @@ impl ClusterManager {
             .copied()
             .filter(|&n| self.is_up(n))
             .collect()
+    }
+
+    /// Nodes sharing a configured chain (cache or reserve) with `node`,
+    /// first-appearance order, excluding `node` itself. Under sharded
+    /// `set_chain` configurations these are the only peers whose stores
+    /// cover the same subtrees — node recovery must resync from one of
+    /// them, not from an arbitrary live node.
+    pub fn chain_siblings(&self, node: NodeId) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        for (_, c) in &self.chains {
+            if !c.cache_replicas.contains(&node) && !c.reserve_replicas.contains(&node) {
+                continue;
+            }
+            for &n in c.cache_replicas.iter().chain(c.reserve_replicas.iter()) {
+                if n != node && !out.contains(&n) {
+                    out.push(n);
+                }
+            }
+        }
+        out
     }
 
     /// Live reserve replicas for `path`.
@@ -267,6 +297,30 @@ mod tests {
         m.set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![] });
         assert_eq!(m.chain_for("/maildir/u1").cache_replicas, vec![2, 0]);
         assert_eq!(m.chain_for("/other").cache_replicas, vec![0, 1]);
+    }
+
+    #[test]
+    fn chain_siblings_follow_configured_membership() {
+        let mut m = mgr(); // default: cache [0,1], reserve [2]
+        assert_eq!(m.chain_siblings(0), vec![1, 2]);
+        m.set_chain("/shard", Chain { cache_replicas: vec![2], reserve_replicas: vec![] });
+        // node 2's siblings come from every chain it serves
+        assert_eq!(m.chain_siblings(2), vec![0, 1]);
+        // a node in no chain has no siblings
+        m.set_chain("/", Chain { cache_replicas: vec![1], reserve_replicas: vec![] });
+        assert!(m.chain_siblings(0).is_empty());
+    }
+
+    #[test]
+    fn chain_key_is_configured_membership() {
+        let mut m = mgr();
+        m.set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![1] });
+        assert_eq!(m.chain_key_for("/maildir/u1"), ChainKey::new(&[2, 0], &[1]));
+        assert_eq!(m.chain_key_for("/other"), ChainKey::new(&[0, 1], &[2]));
+        // the key tracks configuration, not liveness
+        let p = HwParams::default();
+        m.node_failed(0, 0, &p);
+        assert_eq!(m.chain_key_for("/other"), ChainKey::new(&[0, 1], &[2]));
     }
 
     #[test]

@@ -53,6 +53,11 @@ pub struct LibFs {
     /// in-flight background digests, FIFO: (log seq covered, completes at).
     /// Depth > 1 lets digestion pipeline behind the application (§A.1).
     pub pending_digest: std::collections::VecDeque<(u64, Nanos)>,
+    /// in-flight background replication windows, FIFO: (log seq covered,
+    /// chain ack at). Bounded by `ClusterConfig::repl_window`; fsync
+    /// drains the acks (not the digests) — replication is what makes the
+    /// data crash-safe (§3.2 W2), digestion streams behind it.
+    pub pending_repl: std::collections::VecDeque<(u64, Nanos)>,
 
     fds: HashMap<Fd, OpenFile>,
     next_fd: Fd,
@@ -86,6 +91,7 @@ impl LibFs {
             leases: LeaseTable::new(),
             tombstones: std::collections::HashSet::new(),
             pending_digest: std::collections::VecDeque::new(),
+            pending_repl: std::collections::VecDeque::new(),
             fds: HashMap::new(),
             next_fd: 3,
             last_latency: 0,
@@ -203,6 +209,10 @@ impl LibFs {
         // tombstones are derived from the (persistent) log: rebuilt in
         // rebuild_view
         self.tombstones.clear();
+        // in-flight background replication/digestion dies with the
+        // process (recovery re-replicates/digests from the NVM log)
+        self.pending_digest.clear();
+        self.pending_repl.clear();
     }
 
     /// Rebuild the in-memory log view from the live log entries

@@ -16,7 +16,9 @@
 //! mode is when `replicated_upto` advances (fsync vs dsync/digest) — see
 //! [`crate::replication`].
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+
+use crate::replication::ChainKey;
 
 use super::op::{LogEntry, LogOp};
 
@@ -26,10 +28,18 @@ pub struct UpdateLog {
     /// seq of entries.front() (entries below have been reclaimed)
     head_seq: u64,
     next_seq: u64,
-    /// highest seq acked by the full replication chain
+    /// contiguous fully-replicated prefix: every entry at or below this
+    /// seq has been acked by **its own** subtree's chain
     pub replicated_upto: u64,
     /// highest seq applied to the shared areas (digested)
     pub digested_upto: u64,
+    /// per-chain replication cursors: for each configured chain, the
+    /// highest seq among entries *routed to that chain* that its replicas
+    /// have acked. Fail-over recovers the true per-chain prefix from
+    /// these (a single global watermark lies for sharded `set_chain`
+    /// configurations — a mixed batch is acked by several chains, each
+    /// holding only its own partition).
+    chain_cursors: HashMap<ChainKey, u64>,
     /// NVM budget for this log (§B: default 1 GB)
     capacity: u64,
     used: u64,
@@ -43,6 +53,7 @@ impl UpdateLog {
             next_seq: 1,
             replicated_upto: 0,
             digested_upto: 0,
+            chain_cursors: HashMap::new(),
             capacity,
             used: 0,
         }
@@ -91,6 +102,19 @@ impl UpdateLog {
         self.replicated_upto = self.replicated_upto.max(upto.min(self.tail_seq()));
     }
 
+    /// Record that `key`'s chain acked every one of its entries up to
+    /// `upto` (cursors only advance).
+    pub fn mark_chain_replicated(&mut self, key: ChainKey, upto: u64) {
+        let upto = upto.min(self.tail_seq());
+        let c = self.chain_cursors.entry(key).or_insert(0);
+        *c = (*c).max(upto);
+    }
+
+    /// `key`'s replication cursor (0 = nothing acked on that chain).
+    pub fn chain_cursor(&self, key: &ChainKey) -> u64 {
+        self.chain_cursors.get(key).copied().unwrap_or(0)
+    }
+
     pub fn mark_digested(&mut self, upto: u64) {
         self.digested_upto = self.digested_upto.max(upto.min(self.tail_seq()));
         debug_assert!(self.digested_upto <= self.replicated_upto.max(self.digested_upto));
@@ -124,6 +148,39 @@ impl UpdateLog {
         }
         self.next_seq = keep + 1;
         lost.reverse();
+        lost
+    }
+
+    /// Shard-aware fail-over truncation: an entry survives only if its
+    /// own chain acked it — `seq <= cursor(chain_of(entry))` — or it sits
+    /// inside the global prefix (forced by local recovery, which covers
+    /// every chain). Unlike [`Self::truncate_to_replicated`], losses may
+    /// be *interior* (chain A acked further than chain B), so survivors
+    /// are filtered, not just cut at the tail. Returns the lost entries
+    /// in log order.
+    pub fn truncate_to_replicated_by<F>(&mut self, mut chain_of: F) -> Vec<LogEntry>
+    where
+        F: FnMut(&LogEntry) -> ChainKey,
+    {
+        let global = self.replicated_upto;
+        let mut lost = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.entries.len());
+        let mut max_kept = global;
+        for e in std::mem::take(&mut self.entries) {
+            let acked = e.seq <= global || e.seq <= self.chain_cursor(&chain_of(&e));
+            if acked {
+                max_kept = max_kept.max(e.seq);
+                kept.push_back(e);
+            } else {
+                self.used -= e.bytes();
+                lost.push(e);
+            }
+        }
+        self.entries = kept;
+        self.next_seq = max_kept + 1;
+        // everything that survived is, by construction, replicated on its
+        // own chain: the replacement process may digest it all
+        self.replicated_upto = max_kept;
         lost
     }
 
@@ -237,5 +294,78 @@ mod tests {
         l.append(w("/a", 1));
         l.mark_replicated(99);
         assert_eq!(l.replicated_upto, 1);
+    }
+
+    fn key(nodes: &[usize]) -> ChainKey {
+        ChainKey::new(nodes, &[])
+    }
+
+    #[test]
+    fn chain_cursors_advance_independently() {
+        let mut l = UpdateLog::new(1 << 20);
+        for p in ["/a/1", "/b/1", "/a/2", "/b/2"] {
+            l.append(w(p, 10));
+        }
+        l.mark_chain_replicated(key(&[1]), 3); // /a entries: seqs 1, 3
+        l.mark_chain_replicated(key(&[2]), 2); // /b entries: seq 2 only
+        assert_eq!(l.chain_cursor(&key(&[1])), 3);
+        assert_eq!(l.chain_cursor(&key(&[2])), 2);
+        assert_eq!(l.chain_cursor(&key(&[9])), 0);
+        // cursors never regress, and clamp to the tail
+        l.mark_chain_replicated(key(&[1]), 1);
+        assert_eq!(l.chain_cursor(&key(&[1])), 3);
+        l.mark_chain_replicated(key(&[2]), 99);
+        assert_eq!(l.chain_cursor(&key(&[2])), 4);
+    }
+
+    #[test]
+    fn per_chain_truncation_keeps_each_chains_acked_prefix() {
+        // interleaved subtrees: /a -> chain [1], /b -> chain [2]
+        let mut l = UpdateLog::new(1 << 20);
+        for p in ["/a/1", "/b/1", "/a/2", "/b/2", "/a/3"] {
+            l.append(w(p, 10));
+        }
+        // chain [1] acked through seq 3; chain [2] only through seq 2
+        l.mark_chain_replicated(key(&[1]), 3);
+        l.mark_chain_replicated(key(&[2]), 2);
+        let chain_of = |e: &LogEntry| {
+            if e.op.path().starts_with("/a") { key(&[1]) } else { key(&[2]) }
+        };
+        let lost = l.truncate_to_replicated_by(chain_of);
+        // lost: /b/2 (seq 4, beyond chain [2]'s cursor — an INTERIOR
+        // loss) and /a/3 (seq 5, beyond chain [1]'s cursor)
+        assert_eq!(lost.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![4, 5]);
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.tail_seq(), 3);
+        assert_eq!(l.replicated_upto, 3);
+    }
+
+    #[test]
+    fn global_prefix_survives_per_chain_truncation() {
+        // local recovery forces the global watermark past entries whose
+        // chains never acked (restart_process semantics) — those must
+        // survive regardless of chain cursors
+        let mut l = UpdateLog::new(1 << 20);
+        for _ in 0..3 {
+            l.append(w("/a", 10));
+        }
+        l.mark_replicated(3);
+        let lost = l.truncate_to_replicated_by(|_| key(&[7]));
+        assert!(lost.is_empty());
+        assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn unknown_chain_entries_are_lost_on_failover() {
+        let mut l = UpdateLog::new(1 << 20);
+        l.append(w("/a", 10));
+        let used0 = l.used();
+        let lost = l.truncate_to_replicated_by(|_| key(&[1]));
+        assert_eq!(lost.len(), 1);
+        assert!(l.is_empty());
+        assert!(l.used() < used0);
+        // new appends continue after the highest surviving seq
+        let (s, _) = l.append(w("/a", 10));
+        assert_eq!(s, 1);
     }
 }

@@ -6,9 +6,17 @@
 //! hop-by-hop down the chain, ack returning along it) and
 //! [`crate::sim::assise::Cluster::digest_log`] (parallel digests). This
 //! module holds the pieces that are independent of the simulation state:
-//! chain-shape math used by the harnesses and tests.
+//! chain-shape math, and the **chain-partitioning** of mixed log batches
+//! that keeps sharded `set_chain` configurations crash-correct — every
+//! fsync'd entry must reach *its* subtree's chain, so a batch spanning
+//! subtrees is split into per-chain partitions that replicate (and
+//! digest) concurrently, each tracked by its own cursor in
+//! [`crate::oplog::UpdateLog`].
+
+use std::collections::HashMap;
 
 use crate::fs::NodeId;
+use crate::oplog::LogEntry;
 
 /// Expected chain-replication latency multiplier relative to a single
 /// hop: `k` replicas need `k-1` sequential forwards plus the ack path.
@@ -34,9 +42,139 @@ pub fn split_chain(nodes: &[NodeId], cache: usize) -> (Vec<NodeId>, Vec<NodeId>)
     (nodes[..c].to_vec(), nodes[c..].to_vec())
 }
 
+// ===================================================== chain partitioning
+
+/// Canonical identity of a **configured** replication chain: the ordered
+/// cache replicas then the ordered reserve replicas. Cursor bookkeeping
+/// is keyed by the configured chain (not the live view) so a cursor
+/// survives membership churn; routing resolves live members separately.
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChainKey {
+    pub cache: Vec<NodeId>,
+    pub reserve: Vec<NodeId>,
+}
+
+impl ChainKey {
+    pub fn new(cache: &[NodeId], reserve: &[NodeId]) -> Self {
+        Self { cache: cache.to_vec(), reserve: reserve.to_vec() }
+    }
+}
+
+/// One per-chain slice of a mixed log batch: every entry resolves to the
+/// same configured chain AND the same shared-area socket (sockets have
+/// separate stores, so a partition must land as one unit).
+#[derive(Debug, Clone)]
+pub struct ChainPartition {
+    pub key: ChainKey,
+    /// shared-area socket the partition's subtree is pinned to
+    pub sock: usize,
+    /// representative path (first entry) — resolves the same chain and
+    /// socket as every other member, usable for live-member lookups
+    pub path: String,
+    /// members in log (seq) order
+    pub entries: Vec<LogEntry>,
+}
+
+impl ChainPartition {
+    pub fn wire_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.bytes()).sum()
+    }
+
+    /// Highest sequence number in the partition (0 if empty).
+    pub fn max_seq(&self) -> u64 {
+        self.entries.last().map(|e| e.seq).unwrap_or(0)
+    }
+}
+
+/// Partition `entries` (ascending seq) by resolved `(chain, socket)`.
+/// `resolve` maps a path to its configured chain key and area socket —
+/// in the simulator that is `ClusterManager::chain_key_for` +
+/// `Cluster::area_socket`; tests pass closures. Renames route by their
+/// source path (a cross-chain rename is a namespace op; its data moved
+/// at digest time). Order within a partition is log order; partitions
+/// are ordered by first appearance.
+pub fn partition_by_chain<F>(entries: &[LogEntry], mut resolve: F) -> Vec<ChainPartition>
+where
+    F: FnMut(&str) -> (ChainKey, usize),
+{
+    let mut parts: Vec<ChainPartition> = Vec::new();
+    // resolve (and clone ChainKeys) once per DISTINCT path, not per
+    // entry — write-heavy batches repeat a handful of paths thousands
+    // of times, and this sits on the background replication hot path
+    let mut by_path: HashMap<&str, usize> = HashMap::new();
+    let mut by_target: HashMap<(ChainKey, usize), usize> = HashMap::new();
+    for e in entries {
+        let path = e.op.path();
+        let slot = match by_path.get(path) {
+            Some(&s) => s,
+            None => {
+                let (key, sock) = resolve(path);
+                let s = *by_target.entry((key.clone(), sock)).or_insert_with(|| {
+                    parts.push(ChainPartition {
+                        key,
+                        sock,
+                        path: path.to_string(),
+                        entries: Vec::new(),
+                    });
+                    parts.len() - 1
+                });
+                by_path.insert(path, s);
+                s
+            }
+        };
+        parts[slot].entries.push(e.clone());
+    }
+    parts
+}
+
+/// Merge several partitions routed to the *same* target (node, socket)
+/// back into one seq-ordered batch. A SharedFS serving multiple chains
+/// keeps a single per-process digest watermark, so interleaved chains
+/// must be applied through one sorted call — applying them as separate
+/// out-of-order batches would let the watermark skip entries.
+pub fn merge_for_target(parts: &[&ChainPartition]) -> Vec<LogEntry> {
+    let mut out: Vec<LogEntry> =
+        parts.iter().flat_map(|p| p.entries.iter().cloned()).collect();
+    out.sort_by_key(|e| e.seq);
+    out.dedup_by_key(|e| e.seq);
+    out
+}
+
+/// Resolve partitions to their replication targets and hand back one
+/// **seq-sorted merged batch per distinct target** — the one safe shape
+/// to feed `SharedFs::digest` (see [`merge_for_target`]). `targets_of`
+/// maps a partition to its live `(node, socket)` replicas (duplicates
+/// tolerated); target order is first-appearance.
+pub fn route_partitions<F>(
+    parts: &[ChainPartition],
+    mut targets_of: F,
+) -> Vec<((NodeId, usize), Vec<LogEntry>)>
+where
+    F: FnMut(&ChainPartition) -> Vec<(NodeId, usize)>,
+{
+    let mut route: Vec<((NodeId, usize), Vec<usize>)> = Vec::new();
+    for (i, part) in parts.iter().enumerate() {
+        for t in targets_of(part) {
+            match route.iter_mut().find(|(rt, _)| *rt == t) {
+                Some((_, v)) => v.push(i),
+                None => route.push((t, vec![i])),
+            }
+        }
+    }
+    route
+        .into_iter()
+        .map(|(t, idx)| {
+            let refs: Vec<&ChainPartition> = idx.iter().map(|&i| &parts[i]).collect();
+            (t, merge_for_target(&refs))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fs::Payload;
+    use crate::oplog::LogOp;
 
     #[test]
     fn hop_factor() {
@@ -56,5 +194,102 @@ mod tests {
         let (c, r) = split_chain(&[0, 1, 2, 3], 2);
         assert_eq!(c, vec![0, 1]);
         assert_eq!(r, vec![2, 3]);
+    }
+
+    fn w(seq: u64, path: &str, len: u64) -> LogEntry {
+        LogEntry {
+            seq,
+            op: LogOp::Write { path: path.into(), off: 0, data: Payload::zero(len) },
+        }
+    }
+
+    /// subtree "/a*" -> chain [1], "/b*" -> chain [2], rest -> [0, 1]
+    fn resolver(path: &str) -> (ChainKey, usize) {
+        if path.starts_with("/a") {
+            (ChainKey::new(&[1], &[]), 0)
+        } else if path.starts_with("/b") {
+            (ChainKey::new(&[2], &[]), 1)
+        } else {
+            (ChainKey::new(&[0, 1], &[]), 0)
+        }
+    }
+
+    #[test]
+    fn mixed_batch_splits_per_chain_preserving_order() {
+        let batch = vec![
+            w(1, "/a/x", 10),
+            w(2, "/b/y", 20),
+            w(3, "/a/z", 30),
+            w(4, "/c", 40),
+            w(5, "/b/y", 50),
+        ];
+        let parts = partition_by_chain(&batch, resolver);
+        assert_eq!(parts.len(), 3);
+        // first-appearance order, log order within each partition
+        assert_eq!(parts[0].key, ChainKey::new(&[1], &[]));
+        assert_eq!(parts[0].entries.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(parts[1].key, ChainKey::new(&[2], &[]));
+        assert_eq!(parts[1].sock, 1);
+        assert_eq!(parts[1].entries.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2, 5]);
+        assert_eq!(parts[2].entries.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(parts[0].max_seq(), 3);
+        assert_eq!(parts[0].wire_bytes(), batch[0].bytes() + batch[2].bytes());
+    }
+
+    #[test]
+    fn single_chain_batch_is_one_partition() {
+        let batch = vec![w(1, "/a/x", 10), w(2, "/a/y", 20)];
+        let parts = partition_by_chain(&batch, resolver);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].entries.len(), 2);
+        assert_eq!(parts[0].path, "/a/x");
+    }
+
+    #[test]
+    fn same_chain_different_socket_stays_split() {
+        // same chain key but different area sockets must not merge: the
+        // target stores are per-socket
+        let batch = vec![w(1, "/a/x", 1), w(2, "/a2", 1)];
+        let parts = partition_by_chain(&batch, |p| {
+            (ChainKey::new(&[1], &[]), if p == "/a2" { 1 } else { 0 })
+        });
+        assert_eq!(parts.len(), 2);
+    }
+
+    #[test]
+    fn merge_for_target_restores_seq_order() {
+        let batch = vec![w(1, "/a/x", 1), w(2, "/b/y", 1), w(3, "/a/z", 1), w(4, "/b/w", 1)];
+        let parts = partition_by_chain(&batch, resolver);
+        let refs: Vec<&ChainPartition> = parts.iter().collect();
+        let merged = merge_for_target(&refs);
+        assert_eq!(merged.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_batch_no_partitions() {
+        let parts = partition_by_chain(&[], resolver);
+        assert!(parts.is_empty());
+    }
+
+    #[test]
+    fn route_partitions_merges_shared_targets() {
+        // /a -> node 1 only; /b -> nodes 1 and 2: node 1 serves both
+        // chains and must receive ONE seq-sorted batch
+        let batch = vec![w(1, "/a/x", 1), w(2, "/b/y", 1), w(3, "/a/z", 1), w(4, "/b/w", 1)];
+        let parts = partition_by_chain(&batch, resolver);
+        let routed = route_partitions(&parts, |p| {
+            if p.key == ChainKey::new(&[1], &[]) {
+                vec![(1, 0)]
+            } else {
+                vec![(1, 0), (2, 0), (2, 0)] // duplicate targets tolerated
+            }
+        });
+        assert_eq!(routed.len(), 2);
+        let (t1, b1) = &routed[0];
+        assert_eq!(*t1, (1, 0));
+        assert_eq!(b1.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        let (t2, b2) = &routed[1];
+        assert_eq!(*t2, (2, 0));
+        assert_eq!(b2.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2, 4]);
     }
 }

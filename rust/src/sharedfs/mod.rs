@@ -64,12 +64,26 @@ impl SharedFs {
     /// Idempotent: entries at or below the watermark are skipped.
     /// Returns stats (bytes applied drive the NVM-write cost the caller
     /// charges).
+    ///
+    /// **Ordering contract** (shard-aware chains): the batch must be
+    /// ascending in seq. A SharedFS serving several subtree chains keeps
+    /// ONE per-process watermark, so a caller routing per-chain
+    /// partitions must merge every partition bound for this instance
+    /// into a single sorted batch (`replication::merge_for_target`) —
+    /// applying interleaved chains as separate batches would advance the
+    /// watermark past entries of the other chain and silently skip them.
+    /// Seq *gaps* are expected and fine: entries routed to other chains
+    /// never arrive here.
     pub fn digest(
         &mut self,
         pid: usize,
         entries: &[LogEntry],
         now: u64,
     ) -> Result<DigestStats> {
+        debug_assert!(
+            entries.windows(2).all(|w| w[0].seq < w[1].seq),
+            "digest batch must be ascending in seq (merge per-chain partitions per target)"
+        );
         let upto = *self.applied_upto.get(&pid).unwrap_or(&0);
         let (stats, new_upto) = apply_entries(&mut self.store, entries, upto, Tier::Hot, now)?;
         self.applied_upto.insert(pid, new_upto);
@@ -155,6 +169,12 @@ impl SharedFs {
         self.stale.remove(&ino);
     }
 
+    /// Highest seq of `pid`'s log this SharedFS has applied (0 = none).
+    /// Under sharded chains this is a per-replica view: it only ever
+    /// covers the entries routed to this instance's chains.
+    pub fn applied_watermark(&self, pid: usize) -> u64 {
+        self.applied_upto.get(&pid).copied().unwrap_or(0)
+    }
 }
 
 #[cfg(test)]

@@ -29,6 +29,7 @@ use crate::hw::rdma::Fabric;
 use crate::hw::ssd::SsdDevice;
 use crate::libfs::LibFs;
 use crate::oplog::{coalesce, LogEntry, LogOp};
+use crate::replication::{partition_by_chain, route_partitions};
 use crate::sharedfs::SharedFs;
 use crate::sim::api::DistFs;
 use crate::sim::{ClusterConfig, CrashMode};
@@ -154,7 +155,7 @@ impl Cluster {
         self.mgr.set_chain(subtree, Chain { cache_replicas: cache, reserve_replicas: reserve });
     }
 
-    fn area_socket(&self, path: &str) -> SocketId {
+    pub(crate) fn area_socket(&self, path: &str) -> SocketId {
         self.subtree_socket
             .iter()
             .find(|(s, _)| is_subtree_of(path, s))
@@ -448,7 +449,7 @@ impl Cluster {
             && self.procs[pid].log.unreplicated_bytes() >= batch.max(1)
         {
             let t = self.procs[pid].clock.now;
-            let acked = self.replicate_log_at(pid, t)?;
+            let acked = self.replicate_window(pid, t)?;
             let done = self.digest_log_at(pid, acked)?;
             let tail = self.procs[pid].log.tail_seq();
             self.procs[pid].pending_digest.push_back((tail, done));
@@ -474,7 +475,7 @@ impl Cluster {
                         break; // everything digested; log is just small
                     }
                     let t = self.procs[pid].clock.now;
-                    let acked = self.replicate_log_at(pid, t)?;
+                    let acked = self.replicate_window(pid, t)?;
                     let done = self.digest_log_at(pid, acked)?;
                     let tail = self.procs[pid].log.tail_seq();
                     self.procs[pid].pending_digest.push_back((tail, done));
@@ -485,19 +486,59 @@ impl Cluster {
     }
 
     /// Chain-replicate the unreplicated log suffix of `pid` (§3.2 W2),
-    /// waiting for the chain ack (pessimistic fsync path).
+    /// waiting for every outstanding replication window's chain ack plus
+    /// the residual suffix (pessimistic fsync path). The digests
+    /// streaming behind the windows are NOT waited for — replication is
+    /// what makes the data crash-safe.
     pub fn replicate_log(&mut self, pid: ProcId) -> Result<()> {
+        let mut ack = self.procs[pid].clock.now;
+        while let Some((_, a)) = self.procs[pid].pending_repl.pop_front() {
+            ack = ack.max(a);
+        }
         let t0 = self.procs[pid].clock.now;
-        let done = self.replicate_log_at(pid, t0)?;
-        self.procs[pid].clock.advance_to(done);
+        let residual = self.replicate_suffix_at(pid, t0)?;
+        self.procs[pid].clock.advance_to(ack.max(residual));
         Ok(())
     }
 
-    /// Cursor-based replication: starts at `t`, returns the ack time
-    /// WITHOUT advancing the proc clock (async digest path charges the
-    /// devices but lets the application keep running, §A.1 — eviction
-    /// and replication happen in the background).
-    fn replicate_log_at(&mut self, pid: ProcId, t_start: Nanos) -> Result<Nanos> {
+    /// Background (windowed) replication: issue the unreplicated suffix
+    /// as one more in-flight window without advancing the proc clock.
+    /// The window is bounded (`ClusterConfig::repl_window`): when full,
+    /// the new batch's wire issue is deferred until the oldest ack frees
+    /// a slot — the application keeps running, only the async issue
+    /// queue backs up (§A.1). Returns the new window's ack time.
+    fn replicate_window(&mut self, pid: ProcId, t_start: Nanos) -> Result<Nanos> {
+        let cap = self.cfg.repl_window.max(1);
+        // acked windows free their slots
+        while matches!(self.procs[pid].pending_repl.front(), Some(&(_, a)) if a <= t_start) {
+            self.procs[pid].pending_repl.pop_front();
+        }
+        let mut t_issue = t_start;
+        while self.procs[pid].pending_repl.len() >= cap {
+            let (_, a) = self.procs[pid].pending_repl.pop_front().unwrap();
+            t_issue = t_issue.max(a);
+        }
+        let ack = self.replicate_suffix_at(pid, t_issue)?;
+        let tail = self.procs[pid].log.tail_seq();
+        if ack > t_issue {
+            self.procs[pid].pending_repl.push_back((tail, ack));
+        }
+        Ok(ack)
+    }
+
+    /// Cursor-based replication of the whole unreplicated suffix:
+    /// starts at `t_start`, returns the slowest chain's ack time WITHOUT
+    /// advancing the proc clock (async digest path charges the devices
+    /// but lets the application keep running, §A.1).
+    ///
+    /// Shard-aware (§3.2 W2): the suffix is **partitioned by resolved
+    /// chain** — under a sharded `set_chain` configuration a mixed batch
+    /// spans several chains, and every entry must reach *its* subtree's
+    /// replicas or fail-over silently loses acknowledged writes. The
+    /// partitions stream down their chains concurrently and advance
+    /// per-chain cursors in the log; the global prefix watermark only
+    /// advances once every partition is acked.
+    fn replicate_suffix_at(&mut self, pid: ProcId, t_start: Nanos) -> Result<Nanos> {
         let p = self.p();
         let pnode = self.procs[pid].node;
         let tail = self.procs[pid].log.tail_seq();
@@ -510,63 +551,72 @@ impl Cluster {
             self.procs[pid].log.mark_replicated(tail);
             return Ok(t_start);
         }
-        // optimistic mode coalesces the batch before replication
-        let wire_entries = if self.cfg.mode == CrashMode::Optimistic {
-            let c = coalesce(&entries);
-            self.coalesce_saved_bytes += c.saved_bytes;
-            c.entries
-        } else {
-            entries.clone()
-        };
-        let wire_bytes: u64 = wire_entries.iter().map(|e| e.bytes()).sum();
+        let parts = partition_by_chain(&entries, |path| {
+            (self.mgr.chain_key_for(path), self.area_socket(path))
+        });
+        let mut ack_max = t_start;
+        for part in parts {
+            // optimistic mode coalesces each partition before the wire
+            // (coalescing across chains would merge ops that land on
+            // different replica sets)
+            let wire_entries = if self.cfg.mode == CrashMode::Optimistic {
+                let c = coalesce(&part.entries);
+                self.coalesce_saved_bytes += c.saved_bytes;
+                c.entries
+            } else {
+                part.entries.clone()
+            };
+            let wire_bytes: u64 = wire_entries.iter().map(|e| e.bytes()).sum();
+            let chain = self.mgr.live_chain_for(&part.path);
+            let reserves = self.mgr.live_reserves_for(&part.path);
+            let full_chain: Vec<NodeId> = chain
+                .iter()
+                .chain(reserves.iter())
+                .copied()
+                .filter(|&n| n != pnode)
+                .collect();
+            let max_seq = part.max_seq();
+            if full_chain.is_empty() || wire_bytes == 0 {
+                // no remote replica (factor 1, or the writer IS the
+                // chain): local NVM persistence is all the ack there is
+                self.procs[pid].log.mark_chain_replicated(part.key, max_seq);
+                continue;
+            }
 
-        // chain for the batch (keyed by the first entry's path)
-        let path = wire_entries
-            .first()
-            .map(|e| e.op.path().to_string())
-            .unwrap_or_else(|| "/".to_string());
-        let chain = self.mgr.live_chain_for(&path);
-        let reserves = self.mgr.live_reserves_for(&path);
-        let full_chain: Vec<NodeId> = chain
-            .iter()
-            .chain(reserves.iter())
-            .copied()
-            .filter(|&n| n != pnode)
-            .collect();
-
-        if full_chain.is_empty() || wire_bytes == 0 {
-            self.procs[pid].log.mark_replicated(tail);
-            return Ok(t_start);
+            // Chain replication LibFS -> r1 -> r2 -> ... (§3.2). Queue
+            // bookings for every pipeline stage are made at `t_start`
+            // (the batch streams through the stages; booking them
+            // serially at *future* cursor times would wrongly block
+            // other processes' present-time accesses on the shared
+            // devices) — so partitions on disjoint chains replicate in
+            // parallel, contending only on the sender NIC. The *fixed*
+            // per-hop latencies (RDMA persist + chain-forward RPC + ack
+            // path) accumulate serially per chain — these are what make
+            // Assise-3r ≈ 2.2× Assise in Fig. 2a.
+            let mut queue_done = t_start;
+            let mut prev = pnode;
+            let mut fixed: Nanos = 0;
+            for &r in &full_chain {
+                // wire: sender tx + receiver rx occupy their queues
+                let tx_done = self.fabric.nics[prev].tx.access(t_start, wire_bytes, 0, p.rdma_bw);
+                let rx_done = self.fabric.nics[r].rx.access(t_start, wire_bytes, 0, p.rdma_bw);
+                // remote NVM append into the reserved replicated-log
+                // region on the partition's area socket
+                let rsock = part.sock.min(self.nodes[r].sockets.len() - 1);
+                let nvm_done = self.nodes[r].sockets[rsock].nvm.write_log(t_start, wire_bytes, &p);
+                queue_done = queue_done.max(tx_done).max(rx_done).max(nvm_done);
+                fixed += p.rdma_write_lat + p.rpc_overhead; // persist + forward RPC
+                prev = r;
+            }
+            // ack travels back along the chain (small messages)
+            fixed += full_chain.len() as Nanos * (p.rdma_read_lat / 2);
+            ack_max = ack_max.max(queue_done + fixed);
+            self.replicated_bytes += wire_bytes * full_chain.len() as u64;
+            self.procs[pid].log.mark_chain_replicated(part.key, max_seq);
         }
-
-        // Chain replication LibFS -> r1 -> r2 -> ... (§3.2). Queue
-        // bookings for every pipeline stage are made at `t_start` (the
-        // batch streams through the stages; booking them serially at
-        // *future* cursor times would wrongly block other processes'
-        // present-time accesses on the shared devices), while the
-        // *fixed* per-hop latencies (RDMA persist + chain-forward RPC +
-        // ack path) accumulate serially — these are what make Assise-3r
-        // ≈ 2.2× Assise in Fig. 2a.
-        let mut queue_done = t_start;
-        let mut prev = pnode;
-        let mut fixed: Nanos = 0;
-        for &r in &full_chain {
-            // wire: sender tx + receiver rx occupy their queues
-            let tx_done = self.fabric.nics[prev].tx.access(t_start, wire_bytes, 0, p.rdma_bw);
-            let rx_done = self.fabric.nics[r].rx.access(t_start, wire_bytes, 0, p.rdma_bw);
-            // remote NVM append into the reserved replicated-log region
-            let rsock = self.area_socket(&path).min(self.nodes[r].sockets.len() - 1);
-            let nvm_done = self.nodes[r].sockets[rsock].nvm.write_log(t_start, wire_bytes, &p);
-            queue_done = queue_done.max(tx_done).max(rx_done).max(nvm_done);
-            fixed += p.rdma_write_lat + p.rpc_overhead; // persist + forward RPC
-            prev = r;
-        }
-        // ack travels back along the chain (small messages)
-        fixed += full_chain.len() as Nanos * (p.rdma_read_lat / 2);
-        let ack = queue_done + fixed;
-        self.replicated_bytes += wire_bytes * full_chain.len() as u64;
+        // every partition is acked on its own chain: the prefix is whole
         self.procs[pid].log.mark_replicated(tail);
-        Ok(ack)
+        Ok(ack_max)
     }
 
     /// Digest `pid`'s replicated-but-undigested entries on every chain
@@ -594,9 +644,6 @@ impl Cluster {
             self.procs[pid].log.mark_digested(upto);
             return Ok(t_start);
         }
-        let data_bytes: u64 = entries.iter().map(|e| e.bytes()).sum();
-        let path = entries[0].op.path().to_string();
-        let area_sock = self.area_socket(&path);
 
         // optional integrity verification with the AOT Pallas kernel
         if self.cfg.verify_digests {
@@ -613,11 +660,30 @@ impl Cluster {
             }
         }
 
-        let chain = self.mgr.live_chain_for(&path);
-        let reserves = self.mgr.live_reserves_for(&path);
+        // shard-aware routing (§3.2, §A.1): each partition digests on
+        // its own chain's replicas into its own area socket
+        let parts = partition_by_chain(&entries, |path| {
+            (self.mgr.chain_key_for(path), self.area_socket(path))
+        });
+
+        // a node serving several chains applies them as ONE seq-sorted
+        // batch per (node, socket): its digest watermark is per process,
+        // so out-of-order per-chain batches would skip entries
+        let routed = route_partitions(&parts, |part| {
+            let chain = self.mgr.live_chain_for(&part.path);
+            let reserves = self.mgr.live_reserves_for(&part.path);
+            chain
+                .iter()
+                .chain(reserves.iter())
+                .map(|&r| (r, part.sock.min(self.nodes[r].sockets.len() - 1)))
+                .collect()
+        });
+
         let t0 = t_start;
         let mut done_max = t0;
-        for &r in chain.iter().chain(reserves.iter()) {
+        for ((r, sock), batch) in &routed {
+            let (r, sock) = (*r, *sock);
+            let data_bytes: u64 = batch.iter().map(|e| e.bytes()).sum();
             // digest initiation RPC latency (local = syscall); replicas
             // digest in parallel. Queue bookings at t0 (see replicate).
             let init_lat = if r == pnode {
@@ -625,7 +691,6 @@ impl Cluster {
             } else {
                 p.rdma_read_lat + 2 * p.rpc_overhead
             };
-            let sock = area_sock.min(self.nodes[r].sockets.len() - 1);
             // read the log region: the LOCAL node's log lives on the
             // process's socket; remote replicas landed it in the area
             // socket's reserved log region
@@ -641,38 +706,62 @@ impl Cluster {
             let done = read_done.max(write_done) + init_lat;
             // apply to the replica's store
             let sfs = &mut self.nodes[r].sockets[sock].sharedfs;
-            sfs.digest(pid, &entries, done)?;
+            sfs.digest(pid, batch, done)?;
             done_max = done_max.max(done);
         }
 
-        // epoch write tracking (for node-recovery invalidation)
-        for e in &entries {
-            let sock = area_sock.min(self.nodes[pnode].sockets.len() - 1);
-            if let Ok(ino) = self.nodes[pnode].sockets[sock].sharedfs.store.resolve(e.op.path()) {
-                self.mgr.epochs.record_write(ino);
+        // epoch write tracking (node-recovery invalidation): resolve on
+        // each partition's chain head — the partition's data only exists
+        // on its own chain's replicas
+        for part in &parts {
+            if let Some(&head) = self.mgr.live_chain_for(&part.path).first() {
+                let sock = part.sock.min(self.nodes[head].sockets.len() - 1);
+                for e in &part.entries {
+                    if let Ok(ino) =
+                        self.nodes[head].sockets[sock].sharedfs.store.resolve(e.op.path())
+                    {
+                        self.mgr.epochs.record_write(ino);
+                    }
+                }
             }
         }
 
         self.procs[pid].log.mark_digested(upto);
 
-        // hot-area LRU migration on every replica (§A.1): cache replicas
-        // evict to cold SSD; reserve replicas keep a reserve tier in NVM
+        // hot-area LRU migration on every replica (§A.1), once per
+        // distinct (node, socket): cache replicas evict to cold SSD;
+        // reserve replicas keep a reserve tier in NVM
         let mut end = done_max;
-        for &r in chain.iter() {
-            let sock = area_sock.min(self.nodes[r].sockets.len() - 1);
-            let (migrated, _) = self.nodes[r].sockets[sock].sharedfs.migrate_lru(Tier::Cold, done_max);
-            if migrated > 0 {
-                let done = self.nodes[r].ssd.write(done_max, migrated, &p);
-                // eviction is off the critical path for remote replicas;
-                // local eviction extends the digest (backpressure)
-                if r == pnode {
-                    end = end.max(done);
+        let mut migrated: Vec<(NodeId, SocketId)> = Vec::new();
+        for part in &parts {
+            let chain = self.mgr.live_chain_for(&part.path);
+            let reserves = self.mgr.live_reserves_for(&part.path);
+            for &r in chain.iter() {
+                let sock = part.sock.min(self.nodes[r].sockets.len() - 1);
+                if migrated.contains(&(r, sock)) {
+                    continue;
+                }
+                migrated.push((r, sock));
+                let (moved, _) =
+                    self.nodes[r].sockets[sock].sharedfs.migrate_lru(Tier::Cold, done_max);
+                if moved > 0 {
+                    let done = self.nodes[r].ssd.write(done_max, moved, &p);
+                    // eviction is off the critical path for remote
+                    // replicas; local eviction extends the digest
+                    // (backpressure)
+                    if r == pnode {
+                        end = end.max(done);
+                    }
                 }
             }
-        }
-        for &r in reserves.iter() {
-            let sock = area_sock.min(self.nodes[r].sockets.len() - 1);
-            self.nodes[r].sockets[sock].sharedfs.migrate_lru(Tier::Reserve, done_max);
+            for &r in reserves.iter() {
+                let sock = part.sock.min(self.nodes[r].sockets.len() - 1);
+                if migrated.contains(&(r, sock)) {
+                    continue;
+                }
+                migrated.push((r, sock));
+                self.nodes[r].sockets[sock].sharedfs.migrate_lru(Tier::Reserve, done_max);
+            }
         }
         Ok(end)
     }
@@ -1130,12 +1219,10 @@ impl DistFs for Cluster {
         let t0 = self.begin_op(pid)?;
         match self.cfg.mode {
             CrashMode::Pessimistic => {
-                // wait for any in-flight replication (its ack covers a
-                // prefix), then replicate the residual
-                while let Some(&(_, at)) = self.procs[pid].pending_digest.front() {
-                    self.procs[pid].clock.advance_to(at);
-                    self.finalize_digest(pid);
-                }
+                // in-flight replication windows cover a prefix of the
+                // log: wait for their chain acks — NOT for the digests
+                // streaming behind them (§A.1) — then replicate the
+                // residual suffix as a final synchronous batch
                 self.replicate_log(pid)?;
             }
             CrashMode::Optimistic => {
@@ -1437,6 +1524,76 @@ mod tests {
         c.fsync(pid, fd).unwrap();
         c.digest_log(pid).unwrap();
         assert_eq!(c.stat(pid, "/f").unwrap().size, 100);
+    }
+
+    #[test]
+    fn mixed_batch_replicates_each_subtree_to_its_own_chain() {
+        use crate::replication::ChainKey;
+        let mut c = Cluster::new(ClusterConfig::default().nodes(4));
+        c.set_subtree_chain("/a", vec![1], vec![]);
+        c.set_subtree_chain("/b", vec![2], vec![]);
+        let pid = c.spawn_process(0, 0);
+        c.mkdir(pid, "/a").unwrap();
+        c.mkdir(pid, "/b").unwrap();
+        let fa = c.create(pid, "/a/f").unwrap();
+        let fb = c.create(pid, "/b/f").unwrap();
+        c.write(pid, fa, Payload::bytes(vec![1u8; 4096])).unwrap();
+        c.write(pid, fb, Payload::bytes(vec![2u8; 4096])).unwrap();
+        // one mixed fsync batch: each partition must ack on its own chain
+        c.fsync(pid, fa).unwrap();
+        let tail = c.procs[pid].log.tail_seq();
+        assert_eq!(c.procs[pid].log.replicated_upto, tail);
+        assert_eq!(c.procs[pid].log.chain_cursor(&ChainKey::new(&[1], &[])), 5); // write /a/f
+        assert_eq!(c.procs[pid].log.chain_cursor(&ChainKey::new(&[2], &[])), tail); // write /b/f
+        // digestion lands each partition ONLY on its own chain
+        c.digest_log(pid).unwrap();
+        assert!(c.nodes[1].sockets[0].sharedfs.store.exists("/a/f"));
+        assert!(!c.nodes[1].sockets[0].sharedfs.store.exists("/b/f"));
+        assert!(c.nodes[2].sockets[0].sharedfs.store.exists("/b/f"));
+        assert!(!c.nodes[2].sockets[0].sharedfs.store.exists("/a/f"));
+        assert!(!c.nodes[3].sockets[0].sharedfs.store.exists("/a/f"));
+        assert!(!c.nodes[3].sockets[0].sharedfs.store.exists("/b/f"));
+    }
+
+    #[test]
+    fn shared_replica_across_chains_applies_in_seq_order() {
+        // two chains sharing node 1: the shared replica must see one
+        // seq-ordered batch (its per-process watermark would otherwise
+        // skip the interleaved entries)
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3));
+        c.set_subtree_chain("/a", vec![1], vec![]);
+        c.set_subtree_chain("/b", vec![1, 2], vec![]);
+        let pid = c.spawn_process(0, 0);
+        c.mkdir(pid, "/a").unwrap();
+        c.mkdir(pid, "/b").unwrap();
+        let fa = c.create(pid, "/a/f").unwrap();
+        let fb = c.create(pid, "/b/f").unwrap();
+        c.write(pid, fa, Payload::bytes(b"aaa".to_vec())).unwrap();
+        c.write(pid, fb, Payload::bytes(b"bbb".to_vec())).unwrap();
+        c.fsync(pid, fa).unwrap();
+        c.digest_log(pid).unwrap();
+        let s = &c.nodes[1].sockets[0].sharedfs.store;
+        assert!(s.exists("/a/f") && s.exists("/b/f"));
+        let ia = s.resolve("/a/f").unwrap();
+        let ib = s.resolve("/b/f").unwrap();
+        assert_eq!(s.read_at(ia, 0, 3).unwrap().0.materialize(), b"aaa");
+        assert_eq!(s.read_at(ib, 0, 3).unwrap().0.materialize(), b"bbb");
+    }
+
+    #[test]
+    fn fsync_drains_outstanding_replication_windows() {
+        // small log + low threshold so background windows are in flight
+        let mut c = Cluster::new(
+            ClusterConfig::default().nodes(2).log_capacity(256 << 10).repl_window(2),
+        );
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        for i in 0..32u64 {
+            c.pwrite(pid, fd, i * 16384, Payload::bytes(vec![i as u8; 16384])).unwrap();
+        }
+        c.fsync(pid, fd).unwrap();
+        assert!(c.procs[pid].pending_repl.is_empty());
+        assert_eq!(c.procs[pid].log.replicated_upto, c.procs[pid].log.tail_seq());
     }
 
     #[test]

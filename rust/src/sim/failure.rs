@@ -1,8 +1,11 @@
 //! Failure injection and recovery — the machinery behind §5.4's
 //! fail-over experiments (Fig. 7) and the crash-consistency tests.
 
+use std::collections::HashMap;
+
 use crate::fs::{FsError, NodeId, ProcId, Result, SocketId};
 use crate::oplog::LogEntry;
+use crate::replication::{partition_by_chain, route_partitions, ChainKey};
 use crate::Nanos;
 
 use super::assise::Cluster;
@@ -49,8 +52,14 @@ impl Cluster {
         // reads flow through the shared area
         self.procs[pid].log_view = crate::fs::FileStore::new();
         // lease recovery: grant cost for re-acquisition is charged lazily
-        // on next access; SharedFS releases the old leases
+        // on next access; SharedFS releases the old leases. Dead nodes
+        // have no running SharedFS to sweep — their volatile lease
+        // tables come back EMPTY when the node reboots (`recover_node`),
+        // so there is nothing to revoke there.
         for node in 0..self.nodes.len() {
+            if !self.nodes[node].alive {
+                continue;
+            }
             for s in 0..self.nodes[node].sockets.len() {
                 self.nodes[node].sockets[s].sharedfs.leases.revoke_all(pid);
             }
@@ -79,9 +88,14 @@ impl Cluster {
 
     /// Fail a process over to a backup cache replica (§3.4, Fig. 7): a
     /// replacement is spawned on `to`, the backup SharedFS takes over,
-    /// and the dead process's *replicated* log is evicted there. Writes
-    /// beyond the replicated prefix are lost (prefix semantics). Returns
-    /// the new ProcId and a recovery report.
+    /// and the dead process's *replicated* log is evicted there. The
+    /// recovery is **shard-aware**: survivors hold, per subtree chain,
+    /// only the prefix *that chain* acked — entries beyond their own
+    /// chain's cursor are lost (which may leave interior gaps when
+    /// chains acked unevenly) — and each surviving partition is digested
+    /// on its own chain's replicas, every one of which pays the NVM
+    /// log-scan + area-write cost. Returns the new ProcId and a
+    /// recovery report.
     pub fn failover_process(
         &mut self,
         pid: ProcId,
@@ -101,8 +115,15 @@ impl Cluster {
             }
         };
 
-        // survivors only have the replicated prefix
-        let lost: Vec<LogEntry> = self.procs[pid].log.truncate_to_replicated();
+        // survivors only have each chain's own acked prefix
+        let chain_of: HashMap<u64, ChainKey> = self.procs[pid]
+            .log
+            .all()
+            .map(|e| (e.seq, self.mgr.chain_key_for(e.op.path())))
+            .collect();
+        let lost: Vec<LogEntry> = self.procs[pid]
+            .log
+            .truncate_to_replicated_by(|e| chain_of.get(&e.seq).cloned().unwrap_or_default());
 
         let new_pid = {
             use crate::sim::api::DistFs;
@@ -110,28 +131,47 @@ impl Cluster {
         };
         self.procs[new_pid].clock.now = detected_at;
 
-        // the backup evicts the dead process's replicated log into its
-        // shared areas (near-instantaneous fail-over: this is the only
-        // work on the critical path)
+        // each chain's replicas evict their copy of the dead process's
+        // replicated log into their shared areas (near-instantaneous
+        // fail-over: this is the only work on the critical path)
         let entries: Vec<LogEntry> = self.procs[pid].log.all().cloned().collect();
         if !entries.is_empty() {
-            let bytes: u64 = entries.iter().map(|e| e.bytes()).sum();
-            let sock = to_socket.min(self.nodes[to].sockets.len() - 1);
+            let parts = partition_by_chain(&entries, |path| {
+                (self.mgr.chain_key_for(path), self.area_socket(path))
+            });
+            // a replica serving several chains applies one sorted batch
+            let routed = route_partitions(&parts, |part| {
+                let chain = self.mgr.live_chain_for(&part.path);
+                let reserves = self.mgr.live_reserves_for(&part.path);
+                chain
+                    .iter()
+                    .chain(reserves.iter())
+                    .map(|&r| (r, part.sock.min(self.nodes[r].sockets.len() - 1)))
+                    .collect()
+            });
             let t0 = self.procs[new_pid].clock.now;
-            let read_done = self.nodes[to].sockets[sock].nvm.read_log(t0, bytes, &p);
-            let write_done = self.nodes[to].sockets[sock].nvm.write(read_done, bytes, &p);
-            // apply on every live replica so the chain stays converged
-            let live = self.mgr.up_nodes();
-            for &r in &live {
-                let rs = sock.min(self.nodes[r].sockets.len() - 1);
-                self.nodes[r].sockets[rs].sharedfs.digest(pid, &entries, write_done)?;
+            let mut t_done = t0;
+            for ((r, sock), batch) in &routed {
+                let (r, sock) = (*r, *sock);
+                let bytes: u64 = batch.iter().map(|e| e.bytes()).sum();
+                // every replica scans its local replicated-log copy and
+                // writes its shared area (replicas digest in parallel)
+                let read_done = self.nodes[r].sockets[sock].nvm.read_log(t0, bytes, &p);
+                let write_done = self.nodes[r].sockets[sock].nvm.write(read_done, bytes, &p);
+                self.nodes[r].sockets[sock].sharedfs.digest(pid, batch, write_done)?;
+                t_done = t_done.max(write_done);
             }
-            self.procs[new_pid].clock.advance_to(write_done);
+            self.procs[new_pid].clock.advance_to(t_done);
         }
-        // re-grant leases from the replicated SharedFS log
+        // sweep the dead process's leases from every LIVE SharedFS (dead
+        // nodes' volatile tables reboot empty in `recover_node`); the
+        // replacement re-acquires lazily
         let lease_count = {
             let mut count = 0;
             for node in 0..self.nodes.len() {
+                if !self.nodes[node].alive {
+                    continue;
+                }
                 for s in 0..self.nodes[node].sockets.len() {
                     count += self.nodes[node].sockets[s].sharedfs.leases.revoke_all(pid).len();
                 }
@@ -172,12 +212,17 @@ impl Cluster {
         let since = self.mgr.node_recovered(node, at);
         let written = self.mgr.epochs.written_since(since);
         let bitmap_bytes = self.mgr.epochs.bitmap_bytes(since);
-        // fetch bitmaps from a live peer
+        // fetch bitmaps + namespace from a live peer — prefer a
+        // configured chain SIBLING: under sharded `set_chain` configs
+        // stores legitimately diverge per chain, and resyncing from an
+        // arbitrary node would overwrite this node's subtrees with a
+        // store that never held them
         let peer = self
             .mgr
-            .up_nodes()
+            .chain_siblings(node)
             .into_iter()
-            .find(|&n| n != node)
+            .find(|&n| self.mgr.is_up(n))
+            .or_else(|| self.mgr.up_nodes().into_iter().find(|&n| n != node))
             .ok_or(FsError::NotFound("no live peer".into()))?;
         let done = self.fabric.rpc(at, node, peer, 64, bitmap_bytes.max(64), p.rpc_overhead, &p);
         // namespace sync: files created/renamed during the downtime are
@@ -195,6 +240,10 @@ impl Cluster {
             sfs.store = peer_store;
             sfs.applied_upto = peer_applied;
             sfs.invalidate_inos(&written);
+            // the daemon's lease table is volatile: it reboots empty
+            // (holders re-acquire lazily; stale grants died with the OS)
+            sfs.leases = crate::coherence::LeaseTable::new();
+            sfs.lease_busy_until = 0;
         }
         Ok(done)
     }

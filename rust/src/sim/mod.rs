@@ -44,6 +44,10 @@ pub struct ClusterConfig {
     pub manager_policy: ManagerPolicy,
     /// digest when the log fills beyond this fraction (§A.1).
     pub digest_threshold: f64,
+    /// bound on in-flight background replication windows per process
+    /// (§A.1 async replication): a full window defers the next batch's
+    /// wire issue until the oldest ack frees a slot.
+    pub repl_window: usize,
     /// use the I/OAT DMA engine for cross-socket digestion (§3.2).
     pub numa_dma: bool,
     /// verify digest batches with the AOT checksum kernel (costs real
@@ -68,6 +72,7 @@ impl Default for ClusterConfig {
             reserve_replicas: 0,
             manager_policy: ManagerPolicy::PerProcess,
             digest_threshold: 0.30,
+            repl_window: 4,
             numa_dma: false,
             verify_digests: false,
             params: HwParams::default(),
@@ -109,6 +114,11 @@ impl ClusterConfig {
 
     pub fn hot_capacity(mut self, c: u64) -> Self {
         self.hot_capacity = c;
+        self
+    }
+
+    pub fn repl_window(mut self, w: usize) -> Self {
+        self.repl_window = w.max(1);
         self
     }
 

@@ -1,0 +1,114 @@
+//! Sharded-chain correctness (§3.2 W2, §3.4): with subtrees pinned to
+//! disjoint replication chains via `set_chain`, a mixed-subtree fsync
+//! batch must be recoverable on **each** subtree's own chain after
+//! `kill_node` + `failover_process` — and only there. Keying a batch by
+//! its first entry's path (the old behavior) sent every partition down
+//! one chain and masked the loss by broadcasting fail-over digests to
+//! every live node.
+
+use assise::fs::Payload;
+use assise::sim::{Cluster, ClusterConfig, DistFs};
+
+/// writer on node 0; /a pinned to chain [1], /b to chain [2]; node 3 is
+/// in no chain at all.
+fn sharded() -> (Cluster, usize) {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(4));
+    c.set_subtree_chain("/a", vec![1], vec![]);
+    c.set_subtree_chain("/b", vec![2], vec![]);
+    let pid = c.spawn_process(0, 0);
+    c.mkdir(pid, "/a").unwrap();
+    c.mkdir(pid, "/b").unwrap();
+    (c, pid)
+}
+
+#[test]
+fn mixed_fsync_batch_recoverable_on_each_subtree_chain() {
+    let (mut c, pid) = sharded();
+    let fa = c.create(pid, "/a/f").unwrap();
+    let fb = c.create(pid, "/b/f").unwrap();
+    c.write(pid, fa, Payload::bytes(b"alpha-data".to_vec())).unwrap();
+    c.write(pid, fb, Payload::bytes(b"bravo-data".to_vec())).unwrap();
+    // ONE mixed-subtree fsync batch covering both chains
+    c.fsync(pid, fa).unwrap();
+    // a suffix beyond the fsync must be lost on fail-over
+    c.write(pid, fa, Payload::bytes(b"UNSYNCED".to_vec())).unwrap();
+
+    let t = c.now(pid);
+    c.kill_node(0, t);
+    let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
+    assert_eq!(report.lost_entries, 1, "exactly the unsynced write is lost");
+
+    // each subtree's fsync'd data is recoverable on ITS chain
+    let fa2 = c.open(np, "/a/f").unwrap();
+    assert_eq!(c.pread(np, fa2, 0, 10).unwrap().materialize(), b"alpha-data");
+    assert_eq!(c.stat(np, "/a/f").unwrap().size, 10, "unsynced suffix gone");
+    let fb2 = c.open(np, "/b/f").unwrap();
+    assert_eq!(c.pread(np, fb2, 0, 10).unwrap().materialize(), b"bravo-data");
+
+    // ...and ONLY on its chain: fail-over routes per subtree chain, it
+    // does not broadcast the dead process's log to every live node
+    assert!(c.nodes[1].sockets[0].sharedfs.store.exists("/a/f"));
+    assert!(!c.nodes[1].sockets[0].sharedfs.store.exists("/b/f"));
+    assert!(c.nodes[2].sockets[0].sharedfs.store.exists("/b/f"));
+    assert!(!c.nodes[2].sockets[0].sharedfs.store.exists("/a/f"));
+    for path in ["/a/f", "/b/f"] {
+        assert!(
+            !c.nodes[3].sockets[0].sharedfs.store.exists(path),
+            "{path} leaked to a node outside every chain"
+        );
+    }
+}
+
+#[test]
+fn uneven_chain_acks_lose_only_their_own_chains_suffix() {
+    let (mut c, pid) = sharded();
+    let fa = c.create(pid, "/a/f").unwrap();
+    let fb = c.create(pid, "/b/f").unwrap();
+    c.write(pid, fa, Payload::bytes(vec![1u8; 128])).unwrap();
+    c.write(pid, fb, Payload::bytes(vec![2u8; 128])).unwrap();
+    c.fsync(pid, fa).unwrap();
+    // chain [2] falls behind: /b-only suffix, never fsync'd
+    let fg = c.create(pid, "/b/g").unwrap();
+    c.write(pid, fg, Payload::bytes(vec![3u8; 128])).unwrap();
+
+    let t = c.now(pid);
+    c.kill_node(0, t);
+    let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
+    assert_eq!(report.lost_entries, 2, "create + write of /b/g");
+
+    // /a is whole, /b keeps its fsync'd prefix, /b/g is gone everywhere
+    assert_eq!(c.stat(np, "/a/f").unwrap().size, 128);
+    assert_eq!(c.stat(np, "/b/f").unwrap().size, 128);
+    assert!(c.stat(np, "/b/g").is_err());
+    for n in 0..4 {
+        assert!(
+            !c.nodes[n].sockets[0].sharedfs.store.exists("/b/g"),
+            "unreplicated /b/g resurrected on node {n}"
+        );
+    }
+}
+
+#[test]
+fn interleaved_fsyncs_keep_per_chain_cursors_exact() {
+    // alternating per-subtree fsyncs: each one covers a suffix that is
+    // pure /a or pure /b plus the other chain's residue; cursors must
+    // track each chain independently through several rounds
+    let (mut c, pid) = sharded();
+    let fa = c.create(pid, "/a/f").unwrap();
+    let fb = c.create(pid, "/b/f").unwrap();
+    let mut alen = 0u64;
+    let mut blen = 0u64;
+    for round in 0..6u64 {
+        c.pwrite(pid, fa, alen, Payload::bytes(vec![round as u8; 64])).unwrap();
+        alen += 64;
+        c.pwrite(pid, fb, blen, Payload::bytes(vec![round as u8; 96])).unwrap();
+        blen += 96;
+        c.fsync(pid, if round % 2 == 0 { fa } else { fb }).unwrap();
+    }
+    let t = c.now(pid);
+    c.kill_node(0, t);
+    let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
+    assert_eq!(report.lost_entries, 0, "every round ended fsync'd");
+    assert_eq!(c.stat(np, "/a/f").unwrap().size, alen);
+    assert_eq!(c.stat(np, "/b/f").unwrap().size, blen);
+}
