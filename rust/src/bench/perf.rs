@@ -300,6 +300,93 @@ fn bench_repl_scaling(chains: usize, writes_per_proc: usize) -> PerfRow {
     }
 }
 
+/// Virtual-time READ throughput of 3 readers (one per candidate node)
+/// against a subtree pinned to a chain of `replicas` nodes, while a
+/// concurrent off-chain writer keeps the same files churning dirty —
+/// the CRAQ apportioned-read scenario. With 1 replica every
+/// non-colocated read RPCs to the single store node (its NIC tx
+/// serializes the 128 KB replies); with 3 replicas each reader has a
+/// chain member on its own node and clean reads are local NVM, so read
+/// throughput (bytes served per virtual second) must scale with chain
+/// length. The DRAM read cache is shrunk to one block so the rows
+/// measure replica transport, not cache residency; `wire_bytes` on
+/// these rows is the payload bytes served to readers.
+fn bench_read_scaling(replicas: usize, reads_per_proc: usize) -> PerfRow {
+    use crate::sim::{Cluster, ClusterConfig, DistFs};
+    const READERS: usize = 3;
+    const FILES: u64 = 8;
+    const READ_CHUNK: u64 = 128 << 10;
+    const WRITE_CHUNK: u64 = 16 << 10;
+    const FILE_SZ: u64 = 1 << 20;
+    let replicas = replicas.clamp(1, READERS);
+    let mut c =
+        Cluster::new(ClusterConfig::default().nodes(READERS + 1).read_cache(4096));
+    c.set_subtree_chain("/data", (0..replicas).collect(), vec![]);
+    // readers first so pid == reader node; the writer lives off-chain
+    let rpids: Vec<usize> = (0..READERS).map(|i| c.spawn_process(i, 0)).collect();
+    let wpid = c.spawn_process(READERS, 0);
+    c.mkdir(wpid, "/data").unwrap();
+    let mut wfds = Vec::new();
+    for f in 0..FILES {
+        let fd = c.create(wpid, &format!("/data/f{f}")).unwrap();
+        c.pwrite(wpid, fd, 0, Payload::zero(FILE_SZ)).unwrap();
+        wfds.push(fd);
+    }
+    c.fsync(wpid, wfds[0]).unwrap();
+    c.digest_log(wpid).unwrap();
+    let t0 = c.now(wpid);
+    let mut rfds = Vec::new();
+    for &r in &rpids {
+        c.set_now(r, t0);
+        let fds: Vec<crate::fs::Fd> = (0..FILES)
+            .map(|f| c.open(r, &format!("/data/f{f}")).unwrap())
+            .collect();
+        rfds.push(fds);
+    }
+    let chunk = Payload::zero(WRITE_CHUNK);
+    let mut rng = SplitMix64::new(31);
+    let mut all = rpids.clone();
+    all.push(wpid);
+    stats::reset();
+    let t_host = Instant::now();
+    super::drive(&mut c, &all, reads_per_proc, |fs, pid, k| {
+        if pid == wpid {
+            // dirty churn at half the readers' op rate: overwrite a
+            // rotating file (small chunks keep the flush the readers'
+            // lease revocations force off the critical path)
+            if k % 2 == 0 {
+                let f = (k as u64 % FILES) as usize;
+                fs.pwrite(pid, wfds[f], 0, chunk.clone()).unwrap();
+                if k % 8 == 6 {
+                    fs.fsync(pid, wfds[f]).unwrap();
+                }
+            } else {
+                let _ = fs.stat(pid, "/data/f0").unwrap();
+            }
+        } else {
+            let f = rng.below(FILES) as usize;
+            let off = rng.below(FILE_SZ / READ_CHUNK) * READ_CHUNK;
+            let out = fs.pread(pid, rfds[pid][f], off, READ_CHUNK).unwrap();
+            std::hint::black_box(out.len());
+        }
+    });
+    let total_ns = t_host.elapsed().as_nanos();
+    let read_bytes: u64 = rpids.iter().map(|&r| c.procs[r].bytes_read).sum();
+    let virtual_ns = rpids.iter().map(|&r| c.now(r) - t0).max().unwrap_or(0);
+    PerfRow {
+        name: format!(
+            "read_scaling_{replicas}replica{}",
+            if replicas == 1 { "" } else { "s" }
+        ),
+        ops: (reads_per_proc * READERS) as u64,
+        total_ns,
+        copied_bytes: stats::copied_bytes(),
+        materializations: stats::materializations(),
+        wire_bytes: Some(read_bytes),
+        virtual_ns: Some(virtual_ns),
+    }
+}
+
 /// Render the rows as the machine-readable `BENCH_perf.json` document.
 pub fn to_json(rows: &[PerfRow], scale: f64) -> String {
     let mut out = String::from("{\n");
@@ -355,6 +442,10 @@ pub fn run_rows(scale: Scale) -> Vec<PerfRow> {
         bench_repl_scaling(1, scale.ops(48).clamp(16, 256)),
         bench_repl_scaling(2, scale.ops(48).clamp(16, 256)),
         bench_repl_scaling(4, scale.ops(48).clamp(16, 256)),
+        // CRAQ read scaling: reads_per_proc floored the same way
+        bench_read_scaling(1, scale.ops(48).clamp(16, 256)),
+        bench_read_scaling(2, scale.ops(48).clamp(16, 256)),
+        bench_read_scaling(3, scale.ops(48).clamp(16, 256)),
     ]
 }
 
@@ -398,6 +489,7 @@ pub fn run(scale: Scale) -> Table {
     }
     t.note("zero-copy rows (slice/concat/extent/store) must report 0 copied bytes");
     t.note("repl_scaling_* rows: virtual_gbps must increase with chain count");
+    t.note("read_scaling_* rows: virtual_gbps (read throughput) must increase with replica count");
     t
 }
 
@@ -456,6 +548,28 @@ mod tests {
         );
         // same data volume either way: only the routing changed
         assert_eq!(r1.wire_bytes, r4.wire_bytes);
+    }
+
+    #[test]
+    fn read_throughput_scales_with_replicas() {
+        // the CRAQ tentpole's acceptance: read throughput must grow with
+        // chain length while a writer churns the same objects dirty
+        let r1 = bench_read_scaling(1, 24);
+        let r3 = bench_read_scaling(3, 24);
+        let t1 = r1.virtual_gbps().unwrap();
+        let t3 = r3.virtual_gbps().unwrap();
+        assert!(
+            t3 > t1 * 1.5,
+            "3-replica read throughput {t3:.3} GB/s !> 1.5x 1-replica {t1:.3} GB/s"
+        );
+        // same payload volume either way: only the serving replica moved
+        assert_eq!(r1.wire_bytes, r3.wire_bytes);
+    }
+
+    #[test]
+    fn read_scaling_row_names_match_schema() {
+        assert_eq!(bench_read_scaling(1, 8).name, "read_scaling_1replica");
+        assert_eq!(bench_read_scaling(3, 8).name, "read_scaling_3replicas");
     }
 
     #[test]

@@ -139,6 +139,41 @@ impl ClusterManager {
             .collect()
     }
 
+    /// Ordered candidates for serving a READ of `path` to a process on
+    /// `reader` — the CRAQ apportioned-read placement policy. Nearest
+    /// first: the reader's own node when it is a live chain member
+    /// (colocated NVM beats any RPC; the local-socket vs cross-socket
+    /// distinction is charged by the caller's cost model), then the
+    /// remaining live members with the head LAST — any *clean* replica's
+    /// answer matches the head's, so reads should drain to non-head
+    /// members and leave the head's NIC to the write path. Non-head
+    /// peers are rotated by reader id so concurrent remote readers
+    /// spread instead of piling onto one replica. Empty iff every
+    /// configured replica (cache AND promoted reserves) is down.
+    pub fn read_candidates_for(&self, path: &str, reader: NodeId) -> Vec<NodeId> {
+        let live = self.live_chain_for(path);
+        let head = live.first().copied();
+        let mut out = Vec::with_capacity(live.len());
+        if live.contains(&reader) {
+            out.push(reader);
+        }
+        let peers: Vec<NodeId> = live
+            .iter()
+            .copied()
+            .filter(|&n| n != reader && Some(n) != head)
+            .collect();
+        if !peers.is_empty() {
+            let rot = reader % peers.len();
+            out.extend(peers[rot..].iter().chain(peers[..rot].iter()));
+        }
+        if let Some(h) = head {
+            if h != reader {
+                out.push(h);
+            }
+        }
+        out
+    }
+
     /// Nodes sharing a configured chain (cache or reserve) with `node`,
     /// first-appearance order, excluding `node` itself. Under sharded
     /// `set_chain` configurations these are the only peers whose stores
@@ -321,6 +356,40 @@ mod tests {
         let p = HwParams::default();
         m.node_failed(0, 0, &p);
         assert_eq!(m.chain_key_for("/other"), ChainKey::new(&[0, 1], &[2]));
+    }
+
+    #[test]
+    fn read_candidates_prefer_local_then_peers_then_head() {
+        let mut m = ClusterManager::new(
+            4,
+            Chain { cache_replicas: vec![0, 1, 2], reserve_replicas: vec![] },
+        );
+        // a chain member reads its own NVM first, head last
+        assert_eq!(m.read_candidates_for("/x", 1), vec![1, 2, 0]);
+        assert_eq!(m.read_candidates_for("/x", 0), vec![0, 1, 2]);
+        // a non-member reader spreads over non-head peers before the head
+        let c3 = m.read_candidates_for("/x", 3);
+        assert_eq!(c3.len(), 3);
+        assert_eq!(*c3.last().unwrap(), 0, "head is the last resort");
+        assert!(c3[..2].contains(&1) && c3[..2].contains(&2));
+        // down members drop out; an empty chain yields no candidates
+        let p = HwParams::default();
+        m.node_failed(1, 0, &p);
+        assert_eq!(m.read_candidates_for("/x", 3), vec![2, 0]);
+        m.node_failed(0, 1, &p);
+        m.node_failed(2, 2, &p);
+        assert!(m.read_candidates_for("/x", 3).is_empty());
+    }
+
+    #[test]
+    fn read_candidates_rotate_by_reader() {
+        let m = ClusterManager::new(
+            6,
+            Chain { cache_replicas: vec![0, 1, 2, 3], reserve_replicas: vec![] },
+        );
+        // non-member readers rotate over the non-head peers [1, 2, 3]
+        assert_eq!(m.read_candidates_for("/x", 4), vec![2, 3, 1, 0]); // rot 4 % 3 = 1
+        assert_eq!(m.read_candidates_for("/x", 5), vec![3, 1, 2, 0]); // rot 5 % 3 = 2
     }
 
     #[test]

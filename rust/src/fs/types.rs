@@ -76,6 +76,10 @@ pub enum FsError {
     LeaseConflict(String),
     /// The process/node this op was issued on is dead.
     Crashed,
+    /// Every configured replica of the path's chain is down: there is no
+    /// store left to serve reads (distinct from NotFound — the data may
+    /// well exist, it is just unreachable).
+    ChainUnavailable(String),
     /// Operation not supported by this file system (baseline gaps).
     NotSupported(&'static str),
     InvalidArgument(String),
@@ -94,6 +98,7 @@ impl std::fmt::Display for FsError {
             FsError::NoSpace => write!(f, "ENOSPC"),
             FsError::LeaseConflict(p) => write!(f, "lease conflict: {p}"),
             FsError::Crashed => write!(f, "process/node crashed"),
+            FsError::ChainUnavailable(p) => write!(f, "EHOSTDOWN: chain unavailable: {p}"),
             FsError::NotSupported(s) => write!(f, "ENOTSUP: {s}"),
             FsError::InvalidArgument(s) => write!(f, "EINVAL: {s}"),
         }

@@ -106,6 +106,51 @@ impl Throughput {
     }
 }
 
+/// Replication-window backpressure counters (the observability half of
+/// the ROADMAP window-tuning item): a *stall* is a background window
+/// whose wire issue had to wait for an older window's chain ack to free
+/// a slot (`ClusterConfig::repl_window` bound). `stalled_ns` accumulates
+/// the virtual time those issues were deferred — the signal a future
+/// BDP-style adaptive window would feed on.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplWindowStats {
+    /// background replication windows issued
+    pub windows: u64,
+    /// windows whose issue was deferred by a full in-flight window
+    pub stalls: u64,
+    /// total virtual ns of issue deferral across all stalls
+    pub stalled_ns: Nanos,
+}
+
+impl ReplWindowStats {
+    pub fn record_issue(&mut self) {
+        self.windows += 1;
+    }
+
+    pub fn record_stall(&mut self, deferred_ns: Nanos) {
+        self.stalls += 1;
+        self.stalled_ns += deferred_ns;
+    }
+
+    /// Fraction of windows that stalled (0.0 when none issued).
+    pub fn stall_ratio(&self) -> f64 {
+        if self.windows == 0 {
+            return 0.0;
+        }
+        self.stalls as f64 / self.windows as f64
+    }
+}
+
+/// CRAQ apportioned-read counters: how reads were served once the
+/// read-from-any-replica policy picked a chain member.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CraqStats {
+    /// reads served from a replica whose object version was clean
+    pub clean_reads: u64,
+    /// reads that hit a dirty object and paid the tail version-query RPC
+    pub dirty_redirects: u64,
+}
+
 /// A time series of (virtual time, latency) points — Fig. 7's raw data.
 #[derive(Debug, Clone, Default)]
 pub struct TimeSeries {
@@ -195,6 +240,20 @@ mod tests {
         assert!(b.len() >= 3);
         // later buckets have higher average latency
         assert!(b.last().unwrap().1 > b[0].1);
+    }
+
+    #[test]
+    fn repl_window_stats_accumulate() {
+        let mut s = ReplWindowStats::default();
+        assert_eq!(s.stall_ratio(), 0.0);
+        s.record_issue();
+        s.record_issue();
+        s.record_stall(1_500);
+        s.record_stall(500);
+        assert_eq!(s.windows, 2);
+        assert_eq!(s.stalls, 2);
+        assert_eq!(s.stalled_ns, 2_000);
+        assert!((s.stall_ratio() - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -15,8 +15,9 @@
 
 use std::collections::HashMap;
 
-use crate::fs::NodeId;
+use crate::fs::{Ino, NodeId};
 use crate::oplog::LogEntry;
+use crate::Nanos;
 
 /// Expected chain-replication latency multiplier relative to a single
 /// hop: `k` replicas need `k-1` sequential forwards plus the ack path.
@@ -127,6 +128,19 @@ where
     parts
 }
 
+/// Map each path appearing in `parts` to its partition's chain key —
+/// the resolver shape [`crate::sharedfs::SharedFs::digest`] wants for
+/// its per-(process, chain) watermarks.
+pub fn path_chain_map(parts: &[ChainPartition]) -> HashMap<&str, ChainKey> {
+    let mut m: HashMap<&str, ChainKey> = HashMap::new();
+    for part in parts {
+        for e in &part.entries {
+            m.entry(e.op.path()).or_insert_with(|| part.key.clone());
+        }
+    }
+    m
+}
+
 /// Merge several partitions routed to the *same* target (node, socket)
 /// back into one seq-ordered batch. A SharedFS serving multiple chains
 /// keeps a single per-process digest watermark, so interleaved chains
@@ -168,6 +182,105 @@ where
             (t, merge_for_target(&refs))
         })
         .collect()
+}
+
+// ================================================ CRAQ object versions
+
+/// Per-object clean/dirty version state on ONE replica (CRAQ §2
+/// apportioned reads): a digest apply marks the object *dirty* from the
+/// apply time until the tail's commit ack propagates back up the chain
+/// (`clean_at`); behind that point the version is *clean* and any chain
+/// member may serve it without consulting the head.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct VersionRecord {
+    /// highest committed (tail-acked) version
+    pub clean_upto: u64,
+    /// in-flight version and the virtual time its tail ack reaches this
+    /// replica; multiple overlapping applies fold into one record (max
+    /// version, max clean_at) — CRAQ's "newest pending" suffices here
+    /// because replicas apply whole batches atomically
+    pub dirty: Option<(u64, Nanos)>,
+}
+
+/// What a replica knows about an object at read time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadVersion {
+    /// highest version is committed: serve locally, no coordination
+    Clean(u64),
+    /// a newer version is in flight: CRAQ requires a version query to
+    /// the tail before answering (never a stale payload, never an
+    /// uncommitted claim)
+    Dirty { clean_upto: u64, pending: u64 },
+}
+
+/// The per-replica object version table. Replicas applying identical
+/// digest batches produce identical tables, so any clean replica's
+/// answer matches the head's.
+#[derive(Debug, Clone, Default)]
+pub struct VersionTable {
+    m: HashMap<Ino, VersionRecord>,
+}
+
+impl VersionTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a digest apply for `ino` at `now`: the object's version
+    /// bumps and stays dirty until `clean_at`. Returns the new pending
+    /// version.
+    pub fn bump(&mut self, ino: Ino, now: Nanos, clean_at: Nanos) -> u64 {
+        let r = self.m.entry(ino).or_default();
+        if let Some((v, at)) = r.dirty {
+            if at <= now {
+                // the prior apply's tail ack has arrived: it is committed
+                r.clean_upto = r.clean_upto.max(v);
+                r.dirty = None;
+            }
+        }
+        let base = r.clean_upto.max(r.dirty.map(|(v, _)| v).unwrap_or(0));
+        let version = base + 1;
+        let at = r.dirty.map(|(_, a)| a.max(clean_at)).unwrap_or(clean_at);
+        r.dirty = Some((version, at));
+        version
+    }
+
+    /// Fold a dirty record whose ack has arrived by `now` into the clean
+    /// watermark (read-path hygiene; `query` alone is already correct).
+    pub fn promote(&mut self, ino: Ino, now: Nanos) {
+        if let Some(r) = self.m.get_mut(&ino) {
+            if let Some((v, at)) = r.dirty {
+                if at <= now {
+                    r.clean_upto = r.clean_upto.max(v);
+                    r.dirty = None;
+                }
+            }
+        }
+    }
+
+    /// The object's state as of virtual time `now`. Unknown objects are
+    /// trivially clean at version 0 (never written through a digest).
+    pub fn query(&self, ino: Ino, now: Nanos) -> ReadVersion {
+        match self.m.get(&ino) {
+            None => ReadVersion::Clean(0),
+            Some(r) => match r.dirty {
+                Some((v, at)) if at > now => {
+                    ReadVersion::Dirty { clean_upto: r.clean_upto, pending: v }
+                }
+                Some((v, _)) => ReadVersion::Clean(r.clean_upto.max(v)),
+                None => ReadVersion::Clean(r.clean_upto),
+            },
+        }
+    }
+
+    /// Objects tracked (diagnostics).
+    pub fn len(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -269,6 +382,53 @@ mod tests {
     fn empty_batch_no_partitions() {
         let parts = partition_by_chain(&[], resolver);
         assert!(parts.is_empty());
+    }
+
+    #[test]
+    fn path_chain_map_covers_every_path_once() {
+        let batch = vec![w(1, "/a/x", 1), w(2, "/b/y", 1), w(3, "/a/x", 1)];
+        let parts = partition_by_chain(&batch, resolver);
+        let m = path_chain_map(&parts);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get("/a/x"), Some(&ChainKey::new(&[1], &[])));
+        assert_eq!(m.get("/b/y"), Some(&ChainKey::new(&[2], &[])));
+    }
+
+    #[test]
+    fn version_dirty_until_clean_at_then_clean() {
+        let mut vt = VersionTable::new();
+        let v = vt.bump(7, 100, 500);
+        assert_eq!(v, 1);
+        assert_eq!(vt.query(7, 200), ReadVersion::Dirty { clean_upto: 0, pending: 1 });
+        // at/after the tail ack the version is clean
+        assert_eq!(vt.query(7, 500), ReadVersion::Clean(1));
+        assert_eq!(vt.query(7, 900), ReadVersion::Clean(1));
+        // unknown objects are clean at version 0
+        assert_eq!(vt.query(8, 0), ReadVersion::Clean(0));
+    }
+
+    #[test]
+    fn overlapping_bumps_fold_to_newest_pending() {
+        let mut vt = VersionTable::new();
+        vt.bump(7, 100, 500);
+        // second apply while the first is still dirty: one pending record
+        // at the max version, clean no earlier than either ack
+        let v2 = vt.bump(7, 200, 400);
+        assert_eq!(v2, 2);
+        assert_eq!(vt.query(7, 450), ReadVersion::Dirty { clean_upto: 0, pending: 2 });
+        assert_eq!(vt.query(7, 500), ReadVersion::Clean(2));
+    }
+
+    #[test]
+    fn sequential_bumps_commit_prior_versions() {
+        let mut vt = VersionTable::new();
+        vt.bump(7, 100, 150);
+        let v2 = vt.bump(7, 200, 250); // prior ack arrived before this apply
+        assert_eq!(v2, 2);
+        assert_eq!(vt.query(7, 210), ReadVersion::Dirty { clean_upto: 1, pending: 2 });
+        vt.promote(7, 250);
+        assert_eq!(vt.query(7, 250), ReadVersion::Clean(2));
+        assert_eq!(vt.len(), 1);
     }
 
     #[test]

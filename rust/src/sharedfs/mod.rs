@@ -11,8 +11,9 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::coherence::LeaseTable;
-use crate::fs::{FileStore, Ino, NodeId, Result, SocketId, Tier};
+use crate::fs::{FileStore, Ino, NodeId, ProcId, Result, SocketId, Tier};
 use crate::oplog::{apply_entries, DigestStats, LogEntry};
+use crate::replication::{ChainKey, VersionTable};
 
 /// Per-socket SharedFS daemon state.
 #[derive(Debug, Clone)]
@@ -24,8 +25,19 @@ pub struct SharedFs {
     pub store: FileStore,
     /// lease table for subtrees this SharedFS manages
     pub leases: LeaseTable,
-    /// per-process-log digest watermark (idempotent replay, §3.4)
-    pub applied_upto: HashMap<usize, u64>,
+    /// per-(process log, configured chain) digest watermark (idempotent
+    /// replay, §3.4). Keyed per chain so a replica serving several
+    /// subtree chains can apply each chain's partitions independently —
+    /// chain B's batch arriving before chain A's no longer skips A's
+    /// interleaved entries — and can GC its replicated-log region per
+    /// chain instead of waiting for the merged prefix.
+    pub applied_upto: HashMap<(ProcId, ChainKey), u64>,
+    /// bytes of each (process, chain) replicated-log region held on this
+    /// replica's NVM, GC'd per chain as its partitions digest
+    pub repl_log_bytes: HashMap<(ProcId, ChainKey), u64>,
+    /// CRAQ per-object clean/dirty versions (apportioned reads): digest
+    /// apply marks objects dirty; the tail commit ack marks them clean
+    pub versions: VersionTable,
     /// the SharedFS log of lease transfers & digests — replicated for
     /// crash consistency (§3.3); we track its size for cost accounting
     pub sfs_log_bytes: u64,
@@ -51,6 +63,8 @@ impl SharedFs {
             store: FileStore::new(),
             leases: LeaseTable::new(),
             applied_upto: HashMap::new(),
+            repl_log_bytes: HashMap::new(),
+            versions: VersionTable::new(),
             sfs_log_bytes: 0,
             stale: HashSet::new(),
             hot_capacity,
@@ -61,34 +75,63 @@ impl SharedFs {
     }
 
     /// Digest `entries` from process `pid`'s log into the shared areas.
-    /// Idempotent: entries at or below the watermark are skipped.
-    /// Returns stats (bytes applied drive the NVM-write cost the caller
-    /// charges).
+    /// Idempotent: entries at or below their chain's watermark are
+    /// skipped. Returns stats (bytes applied drive the NVM-write cost
+    /// the caller charges).
     ///
     /// **Ordering contract** (shard-aware chains): the batch must be
-    /// ascending in seq. A SharedFS serving several subtree chains keeps
-    /// ONE per-process watermark, so a caller routing per-chain
-    /// partitions must merge every partition bound for this instance
-    /// into a single sorted batch (`replication::merge_for_target`) —
-    /// applying interleaved chains as separate batches would advance the
-    /// watermark past entries of the other chain and silently skip them.
-    /// Seq *gaps* are expected and fine: entries routed to other chains
-    /// never arrive here.
-    pub fn digest(
+    /// ascending in seq, and `chain_of` must resolve each entry's path
+    /// to its configured chain (`ClusterManager::chain_key_for` in the
+    /// simulator; tests pass closures). The watermark is kept per
+    /// (process, chain), so a batch may carry any subset of chains in
+    /// any cross-chain arrival order — each chain's partition is applied
+    /// against its own watermark and the others are untouched. Seq
+    /// *gaps* within a chain's partition are expected and fine: entries
+    /// routed to other chains never arrive here.
+    pub fn digest<F>(
         &mut self,
-        pid: usize,
+        pid: ProcId,
         entries: &[LogEntry],
         now: u64,
-    ) -> Result<DigestStats> {
+        mut chain_of: F,
+    ) -> Result<DigestStats>
+    where
+        F: FnMut(&str) -> ChainKey,
+    {
         debug_assert!(
             entries.windows(2).all(|w| w[0].seq < w[1].seq),
-            "digest batch must be ascending in seq (merge per-chain partitions per target)"
+            "digest batch must be ascending in seq"
         );
-        let upto = *self.applied_upto.get(&pid).unwrap_or(&0);
-        let (stats, new_upto) = apply_entries(&mut self.store, entries, upto, Tier::Hot, now)?;
-        self.applied_upto.insert(pid, new_upto);
+        let mut total = DigestStats::default();
+        if let Some(first) = entries.first() {
+            let first_key = chain_of(first.op.path());
+            if entries[1..].iter().all(|e| chain_of(e.op.path()) == first_key) {
+                // fast path: single-chain batch (the common case) —
+                // apply the input slice directly, no entry cloning
+                total = self.apply_chain_group(pid, first_key, entries, now)?;
+            } else {
+                // split the batch per chain, first-appearance order; seq
+                // order is preserved within each group (chains own
+                // disjoint subtrees, so cross-group apply order cannot
+                // change the resulting store)
+                let mut groups: Vec<(ChainKey, Vec<LogEntry>)> = Vec::new();
+                for e in entries {
+                    let key = chain_of(e.op.path());
+                    match groups.iter_mut().find(|(k, _)| *k == key) {
+                        Some((_, v)) => v.push(e.clone()),
+                        None => groups.push((key, vec![e.clone()])),
+                    }
+                }
+                for (key, group) in groups {
+                    let stats = self.apply_chain_group(pid, key, &group, now)?;
+                    total.applied += stats.applied;
+                    total.skipped += stats.skipped;
+                    total.data_bytes += stats.data_bytes;
+                }
+            }
+        }
         self.digests += 1;
-        self.digested_bytes += stats.data_bytes;
+        self.digested_bytes += total.data_bytes;
         self.sfs_log_bytes += 64; // digest record
         // freshly digested data supersedes stale marks for those inodes
         for e in entries {
@@ -96,7 +139,46 @@ impl SharedFs {
                 self.stale.remove(&ino);
             }
         }
+        Ok(total)
+    }
+
+    /// Apply one chain's slice of a digest batch against its
+    /// per-(process, chain) watermark and GC that chain's
+    /// replicated-log region.
+    fn apply_chain_group(
+        &mut self,
+        pid: ProcId,
+        key: ChainKey,
+        group: &[LogEntry],
+        now: u64,
+    ) -> Result<DigestStats> {
+        let upto = *self.applied_upto.get(&(pid, key.clone())).unwrap_or(&0);
+        let (stats, new_upto) = apply_entries(&mut self.store, group, upto, Tier::Hot, now)?;
+        self.applied_upto.insert((pid, key.clone()), new_upto);
+        // the chain's entries are in the shared area now
+        let group_bytes: u64 = group.iter().map(|e| e.bytes()).sum();
+        let gc_key = (pid, key);
+        if let Some(held) = self.repl_log_bytes.get(&gc_key).copied() {
+            let rest = held.saturating_sub(group_bytes);
+            if rest == 0 {
+                self.repl_log_bytes.remove(&gc_key);
+            } else {
+                self.repl_log_bytes.insert(gc_key, rest);
+            }
+        }
         Ok(stats)
+    }
+
+    /// Account `bytes` of `pid`'s log landing in this replica's
+    /// replicated-log region for `key`'s chain (GC'd per chain on
+    /// digest).
+    pub fn note_replicated(&mut self, pid: ProcId, key: ChainKey, bytes: u64) {
+        *self.repl_log_bytes.entry((pid, key)).or_insert(0) += bytes;
+    }
+
+    /// Un-GC'd replicated-log bytes held for (`pid`, `key`).
+    pub fn repl_log_bytes_for(&self, pid: ProcId, key: &ChainKey) -> u64 {
+        self.repl_log_bytes.get(&(pid, key.clone())).copied().unwrap_or(0)
     }
 
     /// Bytes currently in the hot area beyond budget (must migrate).
@@ -169,11 +251,21 @@ impl SharedFs {
         self.stale.remove(&ino);
     }
 
-    /// Highest seq of `pid`'s log this SharedFS has applied (0 = none).
-    /// Under sharded chains this is a per-replica view: it only ever
-    /// covers the entries routed to this instance's chains.
-    pub fn applied_watermark(&self, pid: usize) -> u64 {
-        self.applied_upto.get(&pid).copied().unwrap_or(0)
+    /// Highest seq of `pid`'s log this SharedFS has applied on ANY chain
+    /// (0 = none). Under sharded chains this is a per-replica view: it
+    /// only ever covers the entries routed to this instance's chains.
+    pub fn applied_watermark(&self, pid: ProcId) -> u64 {
+        self.applied_upto
+            .iter()
+            .filter(|((p, _), _)| *p == pid)
+            .map(|(_, &v)| v)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Highest seq of `pid`'s log applied for `key`'s chain (0 = none).
+    pub fn applied_watermark_for(&self, pid: ProcId, key: &ChainKey) -> u64 {
+        self.applied_upto.get(&(pid, key.clone())).copied().unwrap_or(0)
     }
 }
 
@@ -182,6 +274,11 @@ mod tests {
     use super::*;
     use crate::fs::{Cred, Mode, Payload};
     use crate::oplog::LogOp;
+
+    /// single-chain resolver for tests that don't shard
+    fn one_chain(_: &str) -> ChainKey {
+        ChainKey::default()
+    }
 
     fn entries() -> Vec<LogEntry> {
         vec![
@@ -207,9 +304,9 @@ mod tests {
     #[test]
     fn digest_applies_and_is_idempotent() {
         let mut s = SharedFs::new(0, 0, 1 << 30);
-        let st1 = s.digest(7, &entries(), 1).unwrap();
+        let st1 = s.digest(7, &entries(), 1, one_chain).unwrap();
         assert_eq!(st1.applied, 2);
-        let st2 = s.digest(7, &entries(), 2).unwrap();
+        let st2 = s.digest(7, &entries(), 2, one_chain).unwrap();
         assert_eq!(st2.applied, 0);
         assert_eq!(st2.skipped, 2);
         assert!(s.store.exists("/f"));
@@ -218,7 +315,7 @@ mod tests {
     #[test]
     fn per_process_watermarks_independent() {
         let mut s = SharedFs::new(0, 0, 1 << 30);
-        s.digest(1, &entries(), 1).unwrap();
+        s.digest(1, &entries(), 1, one_chain).unwrap();
         // a different process's log starts at seq 1 too
         let other = vec![LogEntry {
             seq: 1,
@@ -228,7 +325,7 @@ mod tests {
                 owner: Cred::ROOT,
             },
         }];
-        let st = s.digest(2, &other, 2).unwrap();
+        let st = s.digest(2, &other, 2, one_chain).unwrap();
         assert_eq!(st.applied, 1);
         assert!(s.store.exists("/g"));
     }
@@ -236,7 +333,7 @@ mod tests {
     #[test]
     fn hot_overflow_migrates_to_cold() {
         let mut s = SharedFs::new(0, 0, 2048); // tiny hot budget
-        s.digest(1, &entries(), 1).unwrap(); // 4 KB hot
+        s.digest(1, &entries(), 1, one_chain).unwrap(); // 4 KB hot
         assert!(s.hot_overflow() > 0);
         let (migrated, _) = s.migrate_lru(Tier::Cold, 2);
         assert!(migrated >= 2048);
@@ -252,7 +349,7 @@ mod tests {
     #[test]
     fn stale_marks_cleared_by_digest() {
         let mut s = SharedFs::new(0, 0, 1 << 30);
-        s.digest(1, &entries(), 1).unwrap();
+        s.digest(1, &entries(), 1, one_chain).unwrap();
         let ino = s.store.resolve("/f").unwrap();
         s.invalidate_inos(&HashSet::from([ino]));
         assert!(s.is_stale(ino));
@@ -261,7 +358,70 @@ mod tests {
             seq: 3,
             op: LogOp::Write { path: "/f".into(), off: 0, data: Payload::bytes(vec![1u8; 16]) },
         }];
-        s.digest(1, &more, 3).unwrap();
+        s.digest(1, &more, 3, one_chain).unwrap();
         assert!(!s.is_stale(ino));
+    }
+
+    /// "/a*" -> chain [1]; "/b*" -> chain [2]
+    fn two_chains(path: &str) -> ChainKey {
+        if path.starts_with("/a") {
+            ChainKey::new(&[1], &[])
+        } else {
+            ChainKey::new(&[2], &[])
+        }
+    }
+
+    fn w(seq: u64, path: &str, byte: u8) -> LogEntry {
+        LogEntry {
+            seq,
+            op: LogOp::Write { path: path.into(), off: 0, data: Payload::bytes(vec![byte; 64]) },
+        }
+    }
+
+    fn create_at(seq: u64, path: &str) -> LogEntry {
+        LogEntry {
+            seq,
+            op: LogOp::Create { path: path.into(), mode: Mode::DEFAULT_FILE, owner: Cred::ROOT },
+        }
+    }
+
+    #[test]
+    fn per_chain_watermarks_allow_out_of_order_chain_arrival() {
+        // a replica serving chains A and B gets B's partition (later
+        // seqs) BEFORE A's (earlier seqs): the old single per-process
+        // watermark would advance past A's entries and skip them
+        let mut s = SharedFs::new(0, 0, 1 << 30);
+        let chain_b = vec![create_at(3, "/b"), w(4, "/b", 2)];
+        let chain_a = vec![create_at(1, "/a"), w(2, "/a", 1)];
+        let st_b = s.digest(1, &chain_b, 1, two_chains).unwrap();
+        assert_eq!(st_b.applied, 2);
+        let st_a = s.digest(1, &chain_a, 2, two_chains).unwrap();
+        assert_eq!(st_a.applied, 2, "chain A entries must not be skipped");
+        assert!(s.store.exists("/a") && s.store.exists("/b"));
+        assert_eq!(s.applied_watermark_for(1, &ChainKey::new(&[1], &[])), 2);
+        assert_eq!(s.applied_watermark_for(1, &ChainKey::new(&[2], &[])), 4);
+        assert_eq!(s.applied_watermark(1), 4);
+        // replays of either chain are still idempotent
+        let st = s.digest(1, &chain_b, 3, two_chains).unwrap();
+        assert_eq!((st.applied, st.skipped), (0, 2));
+    }
+
+    #[test]
+    fn repl_log_region_gcs_per_chain() {
+        let mut s = SharedFs::new(0, 0, 1 << 30);
+        let ka = ChainKey::new(&[1], &[]);
+        let kb = ChainKey::new(&[2], &[]);
+        let chain_a = vec![create_at(1, "/a"), w(2, "/a", 1)];
+        let chain_b = vec![create_at(3, "/b"), w(4, "/b", 2)];
+        let bytes_a: u64 = chain_a.iter().map(|e| e.bytes()).sum();
+        let bytes_b: u64 = chain_b.iter().map(|e| e.bytes()).sum();
+        s.note_replicated(1, ka.clone(), bytes_a);
+        s.note_replicated(1, kb.clone(), bytes_b);
+        // digesting chain A's partition frees ONLY chain A's region
+        s.digest(1, &chain_a, 1, two_chains).unwrap();
+        assert_eq!(s.repl_log_bytes_for(1, &ka), 0);
+        assert_eq!(s.repl_log_bytes_for(1, &kb), bytes_b);
+        s.digest(1, &chain_b, 2, two_chains).unwrap();
+        assert_eq!(s.repl_log_bytes_for(1, &kb), 0);
     }
 }

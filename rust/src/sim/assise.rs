@@ -17,6 +17,8 @@
 //!   tier in NVM instead).
 
 
+use std::collections::HashMap;
+
 use crate::cluster::manager::{Chain, ClusterManager};
 use crate::coherence::lease::{Acquire, LeaseMode};
 use crate::coherence::ManagerPolicy;
@@ -28,8 +30,9 @@ use crate::hw::params::HwParams;
 use crate::hw::rdma::Fabric;
 use crate::hw::ssd::SsdDevice;
 use crate::libfs::LibFs;
+use crate::metrics::{CraqStats, ReplWindowStats};
 use crate::oplog::{coalesce, LogEntry, LogOp};
-use crate::replication::{partition_by_chain, route_partitions};
+use crate::replication::{partition_by_chain, route_partitions, ReadVersion};
 use crate::sharedfs::SharedFs;
 use crate::sim::api::DistFs;
 use crate::sim::{ClusterConfig, CrashMode};
@@ -52,6 +55,19 @@ pub struct Node {
     pub alive: bool,
 }
 
+/// Resolution of the CRAQ read policy for one read: which replica
+/// serves, and whether it must confirm with the tail first.
+#[derive(Debug, Clone, Copy)]
+struct ReadPlan {
+    /// replica whose SharedFS store serves the read
+    node: NodeId,
+    /// clamped shared-area socket on that replica
+    sock: SocketId,
+    /// `Some(tail)` when the object is dirty on `node`: the read pays a
+    /// version-query RPC to the chain tail before the payload is served
+    dirty_tail: Option<NodeId>,
+}
+
 /// The simulated Assise deployment.
 pub struct Cluster {
     pub cfg: ClusterConfig,
@@ -68,6 +84,13 @@ pub struct Cluster {
     pub replicated_bytes: u64,
     /// bytes saved by optimistic coalescing
     pub coalesce_saved_bytes: u64,
+    /// background replication window backpressure counters
+    pub repl_window_stats: ReplWindowStats,
+    /// CRAQ apportioned-read counters
+    pub craq: CraqStats,
+    /// reads served per node (store reads below the private log/cache —
+    /// the spread the read-replica policy exists to create)
+    pub reads_served_by: Vec<u64>,
 }
 
 impl Cluster {
@@ -94,6 +117,7 @@ impl Cluster {
                 alive: true,
             })
             .collect();
+        let node_count = cfg.nodes;
         Self {
             cfg,
             mgr,
@@ -104,7 +128,27 @@ impl Cluster {
             verifier: None,
             replicated_bytes: 0,
             coalesce_saved_bytes: 0,
+            repl_window_stats: ReplWindowStats::default(),
+            craq: CraqStats::default(),
+            reads_served_by: vec![0; node_count],
         }
+    }
+
+    /// Clamp a shared-area socket id to a node's actual socket count
+    /// (area pinning may name a socket a smaller node doesn't have).
+    pub(crate) fn clamped_sock(&self, node: NodeId, sock: SocketId) -> SocketId {
+        sock.min(self.nodes[node].sockets.len() - 1)
+    }
+
+    /// DRAM read-cache key for data served by (`node`, `ino`). FileStore
+    /// inos are per-store sequential, and replicas serving different
+    /// chain subsets assign divergent inos to the same path — so the
+    /// cache must be keyed per serving replica or a read that switches
+    /// replicas could hit another file's cached blocks. The +1 keeps
+    /// node 0's keys disjoint from raw log-view inos (which
+    /// `LibFs::invalidate_subtree` still passes to the same cache).
+    fn rc_key(node: NodeId, ino: u64) -> u64 {
+        ((node as u64 + 1) << 48) | ino
     }
 
     pub fn p(&self) -> HwParams {
@@ -128,8 +172,8 @@ impl Cluster {
         // authoritative stat: own view first, else nearest replica store
         let st = if let Ok(st) = self.procs[pid].log_view.stat(path) {
             st
-        } else if let Some(n) = self.store_node_for(pid, path) {
-            let sock = self.area_socket(path).min(self.nodes[n].sockets.len() - 1);
+        } else if let Ok(n) = self.store_node_for(pid, path) {
+            let sock = self.clamped_sock(n, self.area_socket(path));
             match self.nodes[n].sockets[sock].sharedfs.store.stat(path) {
                 Ok(st) => st,
                 Err(_) => return Ok(()), // brand-new file: creator owns it
@@ -396,6 +440,14 @@ impl Cluster {
             self.replicate_log(holder)?;
             self.digest_log(holder)?;
             self.procs[holder].invalidate_subtree(unit);
+            // the holder's DRAM read cache is keyed by replica-scoped
+            // SHARED-store inos (remote/reserve/cold reads), which the
+            // log-view walk in invalidate_subtree cannot see — drop
+            // those too, or the holder's next read of the unit serves
+            // bytes from before this lease transfer
+            for key in self.shared_cache_keys_under(holder, unit) {
+                self.procs[holder].read_cache.invalidate_ino(key);
+            }
             self.procs[holder].leases.revoke(unit, holder);
             let done = self.procs[holder].clock.now;
             self.procs[pid].clock.advance_to(done);
@@ -518,6 +570,12 @@ impl Cluster {
             let (_, a) = self.procs[pid].pending_repl.pop_front().unwrap();
             t_issue = t_issue.max(a);
         }
+        self.repl_window_stats.record_issue();
+        if t_issue > t_start {
+            // the window was full with unacked batches: the wire issue is
+            // deferred until the oldest ack frees a slot
+            self.repl_window_stats.record_stall(t_issue - t_start);
+        }
         let ack = self.replicate_suffix_at(pid, t_issue)?;
         let tail = self.procs[pid].log.tail_seq();
         if ack > t_issue {
@@ -567,6 +625,11 @@ impl Cluster {
                 part.entries.clone()
             };
             let wire_bytes: u64 = wire_entries.iter().map(|e| e.bytes()).sum();
+            // GC accounting uses the RAW entry bytes: digest later walks
+            // the un-coalesced log entries, and its per-chain GC subtracts
+            // raw sizes — noting coalesced wire bytes would zero the
+            // gauge early in optimistic mode
+            let raw_bytes = part.wire_bytes();
             let chain = self.mgr.live_chain_for(&part.path);
             let reserves = self.mgr.live_reserves_for(&part.path);
             let full_chain: Vec<NodeId> = chain
@@ -602,8 +665,13 @@ impl Cluster {
                 let rx_done = self.fabric.nics[r].rx.access(t_start, wire_bytes, 0, p.rdma_bw);
                 // remote NVM append into the reserved replicated-log
                 // region on the partition's area socket
-                let rsock = part.sock.min(self.nodes[r].sockets.len() - 1);
+                let rsock = self.clamped_sock(r, part.sock);
                 let nvm_done = self.nodes[r].sockets[rsock].nvm.write_log(t_start, wire_bytes, &p);
+                // the replica now holds this partition's entries for this
+                // chain until its digest GCs them (per-chain watermark)
+                self.nodes[r].sockets[rsock]
+                    .sharedfs
+                    .note_replicated(pid, part.key.clone(), raw_bytes);
                 queue_done = queue_done.max(tx_done).max(rx_done).max(nvm_done);
                 fixed += p.rdma_write_lat + p.rpc_overhead; // persist + forward RPC
                 prev = r;
@@ -666,21 +734,27 @@ impl Cluster {
             (self.mgr.chain_key_for(path), self.area_socket(path))
         });
 
-        // a node serving several chains applies them as ONE seq-sorted
-        // batch per (node, socket): its digest watermark is per process,
-        // so out-of-order per-chain batches would skip entries
+        // path -> configured chain of its partition, for the replicas'
+        // per-(process, chain) digest watermarks
+        let key_of = crate::replication::path_chain_map(&parts);
+
+        // a node serving several chains still receives ONE seq-sorted
+        // batch per (node, socket) — one NVM log scan, one apply call —
+        // and its per-chain watermarks split the batch internally
         let routed = route_partitions(&parts, |part| {
             let chain = self.mgr.live_chain_for(&part.path);
             let reserves = self.mgr.live_reserves_for(&part.path);
             chain
                 .iter()
                 .chain(reserves.iter())
-                .map(|&r| (r, part.sock.min(self.nodes[r].sockets.len() - 1)))
+                .map(|&r| (r, self.clamped_sock(r, part.sock)))
                 .collect()
         });
 
         let t0 = t_start;
         let mut done_max = t0;
+        // per-target apply completion times, for the CRAQ commit model
+        let mut done_at: HashMap<(NodeId, SocketId), Nanos> = HashMap::new();
         for ((r, sock), batch) in &routed {
             let (r, sock) = (*r, *sock);
             let data_bytes: u64 = batch.iter().map(|e| e.bytes()).sum();
@@ -704,10 +778,40 @@ impl Cluster {
                 self.nodes[r].sockets[sock].nvm.write(t0, data_bytes, &p)
             };
             let done = read_done.max(write_done) + init_lat;
-            // apply to the replica's store
+            // apply to the replica's store, per-chain watermarks
             let sfs = &mut self.nodes[r].sockets[sock].sharedfs;
-            sfs.digest(pid, batch, done)?;
+            sfs.digest(pid, batch, done, |path| {
+                key_of.get(path).cloned().unwrap_or_default()
+            })?;
+            done_at.insert((r, sock), done);
             done_max = done_max.max(done);
+        }
+
+        // CRAQ clean/dirty versioning (apportioned reads): a partition's
+        // objects go dirty on every routed replica at its apply time and
+        // come clean as the TAIL's commit ack propagates back up the
+        // chain — tail commit makes everything behind it clean, the head
+        // (farthest from the tail) cleans last
+        let ack_hop = p.rdma_read_lat / 2;
+        for part in &parts {
+            let chain = self.mgr.live_chain_for(&part.path);
+            let reserves = self.mgr.live_reserves_for(&part.path);
+            let members: Vec<NodeId> = chain.iter().chain(reserves.iter()).copied().collect();
+            if members.is_empty() {
+                continue;
+            }
+            // tail of the cache chain commits; reserves ride behind it
+            let tail_idx = chain.len().saturating_sub(1).min(members.len() - 1);
+            let tail = members[tail_idx];
+            let tsock = self.clamped_sock(tail, part.sock);
+            let commit = done_at.get(&(tail, tsock)).copied().unwrap_or(t0);
+            for (i, &r) in members.iter().enumerate() {
+                let sock = self.clamped_sock(r, part.sock);
+                let apply = done_at.get(&(r, sock)).copied().unwrap_or(t0);
+                let hops = (i as i64 - tail_idx as i64).unsigned_abs();
+                let clean_at = apply.max(commit + hops * ack_hop);
+                self.bump_versions(r, sock, &part.entries, apply, clean_at);
+            }
         }
 
         // epoch write tracking (node-recovery invalidation): resolve on
@@ -715,7 +819,7 @@ impl Cluster {
         // on its own chain's replicas
         for part in &parts {
             if let Some(&head) = self.mgr.live_chain_for(&part.path).first() {
-                let sock = part.sock.min(self.nodes[head].sockets.len() - 1);
+                let sock = self.clamped_sock(head, part.sock);
                 for e in &part.entries {
                     if let Ok(ino) =
                         self.nodes[head].sockets[sock].sharedfs.store.resolve(e.op.path())
@@ -737,7 +841,7 @@ impl Cluster {
             let chain = self.mgr.live_chain_for(&part.path);
             let reserves = self.mgr.live_reserves_for(&part.path);
             for &r in chain.iter() {
-                let sock = part.sock.min(self.nodes[r].sockets.len() - 1);
+                let sock = self.clamped_sock(r, part.sock);
                 if migrated.contains(&(r, sock)) {
                     continue;
                 }
@@ -755,7 +859,7 @@ impl Cluster {
                 }
             }
             for &r in reserves.iter() {
-                let sock = part.sock.min(self.nodes[r].sockets.len() - 1);
+                let sock = self.clamped_sock(r, part.sock);
                 if migrated.contains(&(r, sock)) {
                     continue;
                 }
@@ -764,6 +868,29 @@ impl Cluster {
             }
         }
         Ok(end)
+    }
+
+    /// CRAQ bookkeeping shared by the digest and fail-over paths: record
+    /// one version bump per distinct object in `entries` on replica
+    /// (`node`, `sock`) — dirty from `apply`, clean at `clean_at`.
+    pub(crate) fn bump_versions(
+        &mut self,
+        node: NodeId,
+        sock: SocketId,
+        entries: &[LogEntry],
+        apply: Nanos,
+        clean_at: Nanos,
+    ) {
+        let mut seen: std::collections::HashSet<&str> = std::collections::HashSet::new();
+        for e in entries {
+            let path = e.op.path();
+            if !seen.insert(path) {
+                continue;
+            }
+            if let Ok(ino) = self.nodes[node].sockets[sock].sharedfs.store.resolve(path) {
+                self.nodes[node].sockets[sock].sharedfs.versions.bump(ino, apply, clean_at);
+            }
+        }
     }
 
     /// Reclaim the log after a completed digest and drop the duplicated
@@ -785,26 +912,22 @@ impl Cluster {
     fn read_gather(&mut self, pid: ProcId, path: &str, off: u64, len: u64) -> Result<Payload> {
         let p = self.p();
         let (pnode, psock) = (self.procs[pid].node, self.procs[pid].socket);
-        let area_sock = self.area_socket(path);
 
         // authoritative size: log view first, then shared store
         let view_stat = self.procs[pid].log_view.stat(path).ok();
-        let local_in_chain = self.mgr.live_chain_for(path).contains(&pnode);
-        let store_node = if local_in_chain {
-            pnode
-        } else {
-            *self
-                .mgr
-                .live_chain_for(path)
-                .first()
-                .ok_or_else(|| FsError::NotFound(path.to_string()))?
+        // CRAQ apportioned reads: pick the nearest live *clean* replica —
+        // any clean replica's answer matches the head's, so reads spread
+        // across the chain instead of funneling to one node
+        let plan = match self.read_replica_for(pid, path) {
+            Ok(plan) => Some(plan),
+            // every replica down: the process's own log view can still
+            // serve reads it fully covers
+            Err(FsError::ChainUnavailable(_)) if view_stat.is_some() => None,
+            Err(e) => return Err(e),
         };
-        let store_stat = self.nodes[store_node].sockets
-            [area_sock.min(self.nodes[store_node].sockets.len() - 1)]
-        .sharedfs
-        .store
-        .stat(path)
-        .ok();
+        let store_stat = plan
+            .as_ref()
+            .and_then(|pl| self.nodes[pl.node].sockets[pl.sock].sharedfs.store.stat(path).ok());
 
         let size = match (view_stat.as_ref(), store_stat.as_ref()) {
             (Some(v), Some(s)) => v.size.max(s.size),
@@ -843,8 +966,14 @@ impl Cluster {
             return Ok(data);
         }
 
-        // base data from lower layers
-        let base = self.read_below_log(pid, path, off, len, store_node, area_sock)?;
+        // below the log the chain must be reachable: a partially-covered
+        // read with every replica down has unreachable bytes
+        let Some(plan) = plan else {
+            return Err(FsError::ChainUnavailable(path.to_string()));
+        };
+
+        // base data from lower layers via the policy-chosen replica
+        let base = self.read_below_log(pid, path, off, len, plan)?;
 
         // overlay any log-view segments on top — composed in a scratch
         // extent map, so it is pure Arc-slice arithmetic (no payload
@@ -873,40 +1002,64 @@ impl Cluster {
         Ok(out)
     }
 
-    /// Layers below the private log: DRAM read cache → SharedFS (local
-    /// or closest replica) → reserve → cold.
+    /// Layers below the private log: DRAM read cache → the policy-chosen
+    /// replica's SharedFS (local or remote) → reserve → cold.
     fn read_below_log(
         &mut self,
         pid: ProcId,
         path: &str,
         off: u64,
         len: u64,
-        store_node: NodeId,
-        area_sock: SocketId,
+        plan: ReadPlan,
     ) -> Result<Payload> {
         let p = self.p();
         let (pnode, psock) = (self.procs[pid].node, self.procs[pid].socket);
-        let sock = area_sock.min(self.nodes[store_node].sockets.len() - 1);
+        let ReadPlan { node: store_node, sock, dirty_tail } = plan;
 
         let ino = match self.nodes[store_node].sockets[sock].sharedfs.store.resolve(path) {
             Ok(i) => i,
             Err(_) => return Ok(Payload::zero(len)), // data only in log (holes below)
         };
 
-        // 2. private DRAM read cache
-        if let Some(hit) = self.procs[pid].read_cache.get(ino, off, len) {
+        let cache_key = Self::rc_key(store_node, ino);
+
+        // stale serving replica (epoch recovery)? its extents were
+        // invalidated — any blocks this reader cached from it predate
+        // the epoch too (revocation sweeps only live replicas, so a
+        // dead-then-recovered replica's keys can survive). Drop them and
+        // refetch the file onto the replica BEFORE the cache lookup.
+        if self.nodes[store_node].sockets[sock].sharedfs.is_stale(ino) {
+            self.procs[pid].read_cache.invalidate_ino(cache_key);
+            self.refetch_stale_to(pid, store_node, path, ino, sock)?;
+        }
+
+        // 2. private DRAM read cache, keyed per serving replica
+        // (coherent via leases: revocation drops cached blocks, so a
+        // hit cannot outlive a remote write)
+        if let Some(hit) = self.procs[pid].read_cache.get(cache_key, off, len) {
             let now = self.procs[pid].clock.now;
             let done = self.nodes[pnode].dram.read(now, len, &p);
             self.procs[pid].clock.advance_to(done);
             return Ok(hit);
         }
 
-        // stale after epoch recovery? refetch whole file from a live peer
-        if store_node == pnode
-            && self.nodes[pnode].sockets[sock].sharedfs.is_stale(ino)
-        {
-            self.refetch_stale(pid, path, ino, sock)?;
+        // CRAQ dirty hit: the replica must confirm the committed version
+        // with the chain tail before answering — one small RPC, and the
+        // payload served is the committed one (never stale, §2 of the
+        // CRAQ design; the eager-apply store holds exactly that data)
+        if let Some(tail) = dirty_tail {
+            self.craq.dirty_redirects += 1;
+            let now = self.procs[pid].clock.now;
+            if tail != pnode {
+                let done = self.fabric.rpc(now, pnode, tail, 64, 64, p.rpc_overhead, &p);
+                self.procs[pid].clock.advance_to(done);
+            } else {
+                self.procs[pid].clock.tick(p.syscall_read_lat);
+            }
+        } else {
+            self.craq.clean_reads += 1;
         }
+        self.reads_served_by[store_node] += 1;
 
         let (data, extents) = self.nodes[store_node].sockets[sock]
             .sharedfs
@@ -927,7 +1080,7 @@ impl Cluster {
                 .rpc(now, pnode, store_node, 64, len.max(64), p.rpc_overhead, &p);
             self.procs[pid].clock.advance_to(done);
             // cache remotely-read data in DRAM (4 KB prefetch granularity)
-            self.install_read_cache(pid, ino, off, len, &data);
+            self.install_read_cache(pid, cache_key, off, len, &data);
             return Ok(data);
         }
 
@@ -967,40 +1120,58 @@ impl Cluster {
 
         // cache non-local-NVM reads in DRAM (§A.2)
         if any_cold || any_reserve {
-            self.install_read_cache(pid, ino, off, len, &data);
+            self.install_read_cache(pid, cache_key, off, len, &data);
         }
         Ok(data)
     }
 
-    fn install_read_cache(&mut self, pid: ProcId, ino: u64, off: u64, len: u64, data: &Payload) {
+    /// `key` is a replica-scoped cache key (see [`Self::rc_key`]).
+    fn install_read_cache(&mut self, pid: ProcId, key: u64, off: u64, len: u64, data: &Payload) {
         // block-align: cache the read range rounded to 4 KB blocks
         let aligned = off - off % 4096;
         let pad_front = off - aligned;
         if pad_front == 0 {
-            self.procs[pid].read_cache.insert(ino, aligned, data.clone());
+            self.procs[pid].read_cache.insert(key, aligned, data.clone());
         } else {
             // only cache the aligned interior to keep the model simple
             let skip = 4096 - pad_front;
             if len > skip {
                 self.procs[pid]
                     .read_cache
-                    .insert(ino, aligned + 4096, data.slice(skip, len - skip));
+                    .insert(key, aligned + 4096, data.slice(skip, len - skip));
             }
         }
     }
 
-    /// Refetch a stale inode's contents from a live chain replica after
-    /// epoch recovery (§3.4 primary-recovery path).
-    fn refetch_stale(&mut self, pid: ProcId, path: &str, ino: u64, sock: SocketId) -> Result<()> {
+    /// Refetch a stale inode's contents onto `target` from a live,
+    /// non-stale chain replica after epoch recovery (§3.4
+    /// primary-recovery path). Peer choice follows the read policy:
+    /// nearest fresh replica as seen from `target`, head as last
+    /// resort; every candidate stale means the data is unreachable. The
+    /// reader `pid` pays the transfer (it is waiting on the read).
+    fn refetch_stale_to(
+        &mut self,
+        pid: ProcId,
+        target: NodeId,
+        path: &str,
+        ino: u64,
+        sock: SocketId,
+    ) -> Result<()> {
         let p = self.p();
-        let pnode = self.procs[pid].node;
         let peer = self
             .mgr
-            .live_chain_for(path)
+            .read_candidates_for(path, target)
             .into_iter()
-            .find(|&n| n != pnode)
-            .ok_or(FsError::NotFound(format!("no live replica for {path}")))?;
-        let psock = sock.min(self.nodes[peer].sockets.len() - 1);
+            .find(|&n| {
+                if n == target {
+                    return false;
+                }
+                let ps = self.clamped_sock(n, sock);
+                let sfs = &self.nodes[n].sockets[ps].sharedfs;
+                sfs.store.resolve(path).map(|i| !sfs.is_stale(i)).unwrap_or(false)
+            })
+            .ok_or(FsError::ChainUnavailable(format!("no fresh replica for {path}")))?;
+        let psock = self.clamped_sock(peer, sock);
         let peer_ino = self.nodes[peer].sockets[psock].sharedfs.store.resolve(path)?;
         let size = self.nodes[peer].sockets[psock].sharedfs.store.stat_ino(peer_ino)?.size;
         let (data, _) = self.nodes[peer].sockets[psock]
@@ -1008,14 +1179,14 @@ impl Cluster {
             .store
             .read_at(peer_ino, 0, size)?;
         let now = self.procs[pid].clock.now;
-        let done = self.fabric.rpc(now, pnode, peer, 64, size.max(64), p.rpc_overhead, &p);
+        let done = self.fabric.rpc(now, target, peer, 64, size.max(64), p.rpc_overhead, &p);
         self.procs[pid].clock.advance_to(done);
-        // reinstall locally (future reads are local, §5.4)
-        self.nodes[pnode].sockets[sock]
+        // reinstall on the serving replica (future reads hit it, §5.4)
+        self.nodes[target].sockets[sock]
             .sharedfs
             .store
             .write_at(ino, 0, data, Tier::Hot, done)?;
-        self.nodes[pnode].sockets[sock].sharedfs.mark_fresh(ino);
+        self.nodes[target].sockets[sock].sharedfs.mark_fresh(ino);
         Ok(())
     }
 
@@ -1044,30 +1215,118 @@ impl Cluster {
     }
 
     /// The node whose SharedFS store is authoritative-and-nearest for
-    /// `pid` reading `path`: the local node if it is a chain replica,
-    /// else the chain head.
-    fn store_node_for(&self, pid: ProcId, path: &str) -> Option<NodeId> {
+    /// `pid` resolving `path`'s METADATA: the first read-policy
+    /// candidate (every replica's namespace matches the head's). Errors
+    /// with `ChainUnavailable` when every configured replica is down —
+    /// never a silent fallback.
+    fn store_node_for(&self, pid: ProcId, path: &str) -> Result<NodeId> {
         let pnode = self.procs[pid].node;
-        let chain = self.mgr.live_chain_for(path);
-        if chain.contains(&pnode) {
-            Some(pnode)
-        } else {
-            chain.first().copied()
+        self.mgr
+            .read_candidates_for(path, pnode)
+            .first()
+            .copied()
+            .ok_or_else(|| FsError::ChainUnavailable(path.to_string()))
+    }
+
+    /// Resolve the current size of `path` as visible to `pid`: the max
+    /// of the process's own log view and the nearest replica store. With
+    /// every replica down the view alone can still answer for the
+    /// process's own writes; otherwise the outage surfaces as
+    /// `ChainUnavailable` instead of the old silent 0.
+    fn visible_size(&self, pid: ProcId, path: &str) -> Result<u64> {
+        let v = self.procs[pid].log_view.stat(path).ok().map(|s| s.size);
+        match self.store_node_for(pid, path) {
+            Ok(n) => {
+                let sock = self.clamped_sock(n, self.area_socket(path));
+                let s = self.nodes[n].sockets[sock].sharedfs.store.stat(path).ok().map(|s| s.size);
+                Ok(v.unwrap_or(0).max(s.unwrap_or(0)))
+            }
+            Err(e) => v.ok_or(e),
         }
     }
 
-    /// Resolve the current size of `path` as visible to `pid`.
-    fn visible_size(&self, pid: ProcId, path: &str) -> u64 {
-        let v = self.procs[pid].log_view.stat(path).map(|s| s.size).unwrap_or(0);
-        let s = self
-            .store_node_for(pid, path)
-            .and_then(|n| {
-                let sock = self.area_socket(path).min(self.nodes[n].sockets.len() - 1);
-                self.nodes[n].sockets[sock].sharedfs.store.stat(path).ok()
-            })
-            .map(|s| s.size)
-            .unwrap_or(0);
-        v.max(s)
+    /// Pick the replica to serve a DATA read of `path` for `pid` — the
+    /// CRAQ apportioned-read policy. Candidate order comes from
+    /// [`ClusterManager::read_candidates_for`] (local NVM > same-chain
+    /// peer > head); the NEAREST candidate holding the object serves.
+    /// A clean copy serves outright; a dirty copy serves after
+    /// confirming the committed version with the tail (the `dirty_tail`
+    /// marker — one 64 B RPC, which CRAQ prefers over shipping the full
+    /// payload from a farther clean replica). Epoch-stale remote copies
+    /// are a last resort (they must refetch before serving). Errors with
+    /// `ChainUnavailable` when no configured replica is live.
+    fn read_replica_for(&mut self, pid: ProcId, path: &str) -> Result<ReadPlan> {
+        let pnode = self.procs[pid].node;
+        let now = self.procs[pid].clock.now;
+        let cands = self.mgr.read_candidates_for(path, pnode);
+        if cands.is_empty() {
+            return Err(FsError::ChainUnavailable(path.to_string()));
+        }
+        let area = self.area_socket(path);
+        let mut stale_fallback: Option<(NodeId, SocketId)> = None;
+        for &r in &cands {
+            let sock = self.clamped_sock(r, area);
+            let sfs = &mut self.nodes[r].sockets[sock].sharedfs;
+            let ino = match sfs.store.resolve(path) {
+                Ok(i) => i,
+                Err(_) => continue,
+            };
+            // epoch-stale remote copies are a last resort (their extents
+            // were invalidated; serving one requires a refetch onto it
+            // first — read_below_log does that); the reader's LOCAL copy
+            // stays preferred since its refetch makes future reads local
+            if sfs.is_stale(ino) && r != pnode {
+                if stale_fallback.is_none() {
+                    stale_fallback = Some((r, sock));
+                }
+                continue;
+            }
+            sfs.versions.promote(ino, now);
+            let state = sfs.versions.query(ino, now);
+            let dirty_tail = match state {
+                ReadVersion::Clean(_) => None,
+                ReadVersion::Dirty { .. } => self.mgr.live_chain_for(path).last().copied(),
+            };
+            return Ok(ReadPlan { node: r, sock, dirty_tail });
+        }
+        if let Some((node, sock)) = stale_fallback {
+            // only stale replicas resolve the path: serve via the nearest
+            // one, which read_below_log refetches before answering
+            return Ok(ReadPlan { node, sock, dirty_tail: None });
+        }
+        // path unresolved on every live replica (log-only data or a
+        // brand-new file): the nearest candidate still anchors size
+        // lookups and hole fills
+        let node = cands[0];
+        Ok(ReadPlan { node, sock: self.clamped_sock(node, area), dirty_tail: None })
+    }
+
+    /// Read-cache keys ([`Self::rc_key`]) of every file under `unit` (a
+    /// file path or a directory subtree) on EVERY live replica that
+    /// could have served `pid`'s reads — replicas assign divergent inos,
+    /// so each candidate's ino space must be enumerated separately.
+    /// Empty when no replica is reachable (nothing was served to cache).
+    fn shared_cache_keys_under(&self, pid: ProcId, unit: &str) -> Vec<u64> {
+        let pnode = self.procs[pid].node;
+        let mut out = Vec::new();
+        for node in self.mgr.read_candidates_for(unit, pnode) {
+            let sock = self.clamped_sock(node, self.area_socket(unit));
+            let store = &self.nodes[node].sockets[sock].sharedfs.store;
+            let mut stack = vec![unit.to_string()];
+            while let Some(p) = stack.pop() {
+                if let Ok(st) = store.stat(&p) {
+                    out.push(Self::rc_key(node, st.ino));
+                    if st.is_dir {
+                        for n in store.readdir(&p).unwrap_or_default() {
+                            let child =
+                                if p == "/" { format!("/{n}") } else { format!("{p}/{n}") };
+                            stack.push(child);
+                        }
+                    }
+                }
+            }
+        }
+        out
     }
 
     /// Does the path exist anywhere visible to `pid`?
@@ -1083,7 +1342,7 @@ impl Cluster {
         let chain = self.mgr.live_chain_for(path);
         let sock = self.area_socket(path);
         chain.iter().any(|&n| {
-            self.nodes[n].sockets[sock.min(self.nodes[n].sockets.len() - 1)]
+            self.nodes[n].sockets[self.clamped_sock(n, sock)]
                 .sharedfs
                 .store
                 .exists(path)
@@ -1174,12 +1433,15 @@ impl DistFs for Cluster {
     }
 
     fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()> {
-        let (_path, off) = {
+        let off = {
             let of = self.procs[pid].fd(fd)?;
             let path = of.path.clone();
-            let size = self.visible_size(pid, &path);
-            let off = of.offset.max(0).max(size.min(of.offset));
-            (path, off)
+            let off = of.offset;
+            // the cursor is authoritative for the write position; the
+            // size resolve is kept for its error surfacing (a fully-down
+            // chain must fail the op, not silently write at a stale off)
+            self.visible_size(pid, &path)?;
+            off
         };
         // append semantics: cursor write at current offset
         let len = data.len();
@@ -1325,8 +1587,8 @@ impl DistFs for Cluster {
         } else {
             let pnode = self.procs[pid].node;
             match self.store_node_for(pid, &path) {
-                Some(n) => {
-                    let sock = self.area_socket(&path).min(self.nodes[n].sockets.len() - 1);
+                Ok(n) => {
+                    let sock = self.clamped_sock(n, self.area_socket(&path));
                     if n != pnode {
                         // remote metadata lookup (RMT case)
                         let p = self.p();
@@ -1336,7 +1598,7 @@ impl DistFs for Cluster {
                     }
                     self.nodes[n].sockets[sock].sharedfs.store.stat(&path)
                 }
-                None => Err(FsError::NotFound(path.clone())),
+                Err(e) => Err(e),
             }
         };
         self.end_op(pid, t0);
@@ -1594,6 +1856,144 @@ mod tests {
         c.fsync(pid, fd).unwrap();
         assert!(c.procs[pid].pending_repl.is_empty());
         assert_eq!(c.procs[pid].log.replicated_upto, c.procs[pid].log.tail_seq());
+    }
+
+    #[test]
+    fn reads_spread_across_chain_replicas() {
+        // CRAQ apportioned reads: a non-member reader's clean read is
+        // served by a non-head chain member, not funneled to the head
+        let mut c = Cluster::new(ClusterConfig::default().nodes(4).replication(3));
+        let w = c.spawn_process(0, 0);
+        let fd = c.create(w, "/f").unwrap();
+        c.write(w, fd, Payload::bytes(vec![5u8; 8192])).unwrap();
+        c.fsync(w, fd).unwrap();
+        c.digest_log(w).unwrap();
+        let r = c.spawn_process(3, 0); // not in chain [0, 1, 2]
+        c.set_now(r, c.now(w) + 1_000_000); // well past the dirty window
+        let fd2 = c.open(r, "/f").unwrap();
+        let d = c.pread(r, fd2, 0, 8192).unwrap();
+        assert_eq!(d.materialize(), vec![5u8; 8192]);
+        assert_eq!(c.reads_served_by[0], 0, "head must not serve this read");
+        assert_eq!(c.reads_served_by[1] + c.reads_served_by[2], 1);
+        assert!(c.craq.clean_reads >= 1);
+        assert_eq!(c.craq.dirty_redirects, 0);
+    }
+
+    #[test]
+    fn dirty_window_read_confirms_with_tail() {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+        let w = c.spawn_process(0, 0);
+        let fd = c.create(w, "/f").unwrap();
+        c.write(w, fd, Payload::bytes(vec![7u8; 4096])).unwrap();
+        c.fsync(w, fd).unwrap();
+        c.digest_log(w).unwrap();
+        // a reader on the middle replica whose clock sits before the
+        // tail commit ack: every replica still shows the object dirty
+        let r = c.spawn_process(1, 0);
+        c.procs[r].clock.now = 0;
+        let plan = c.read_replica_for(r, "/f").unwrap();
+        assert_eq!(plan.node, 1, "nearest (local) replica serves");
+        assert_eq!(plan.dirty_tail, Some(2), "dirty hit must confirm with the tail");
+        let out = c.read_below_log(r, "/f", 0, 4096, plan).unwrap();
+        assert_eq!(out.materialize(), vec![7u8; 4096], "never a stale payload");
+        assert_eq!(c.craq.dirty_redirects, 1);
+        // far past the window the same read is clean and local
+        c.procs[r].clock.now = c.now(w) + 10_000_000;
+        let plan2 = c.read_replica_for(r, "/f").unwrap();
+        assert_eq!(plan2.node, 1);
+        assert!(plan2.dirty_tail.is_none());
+    }
+
+    #[test]
+    fn chain_unavailable_surfaces_distinct_error() {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3));
+        // /s lives wholly on nodes 1 and 2; the reader is on node 0
+        c.set_subtree_chain("/s", vec![1, 2], vec![]);
+        let w = c.spawn_process(1, 0);
+        c.mkdir(w, "/s").unwrap();
+        let fd = c.create(w, "/s/f").unwrap();
+        c.write(w, fd, Payload::bytes(b"x".to_vec())).unwrap();
+        c.fsync(w, fd).unwrap();
+        c.digest_log(w).unwrap();
+        let r = c.spawn_process(0, 0);
+        c.set_now(r, c.now(w));
+        let fd2 = c.open(r, "/s/f").unwrap();
+        // kill every configured replica of the chain
+        let t = c.now(r);
+        c.kill_node(1, t);
+        c.kill_node(2, t);
+        assert!(matches!(c.pread(r, fd2, 0, 1), Err(FsError::ChainUnavailable(_))));
+        assert!(matches!(c.stat(r, "/s/f"), Err(FsError::ChainUnavailable(_))));
+        // the append-offset size resolve surfaces it too (no silent 0)
+        assert!(matches!(
+            c.write(r, fd2, Payload::bytes(b"y".to_vec())),
+            Err(FsError::ChainUnavailable(_))
+        ));
+    }
+
+    #[test]
+    fn window_full_stalls_are_counted() {
+        let mut c = Cluster::new(
+            ClusterConfig::default().nodes(2).log_capacity(256 << 10).repl_window(1),
+        );
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        for i in 0..64u64 {
+            c.pwrite(pid, fd, i * 16384, Payload::bytes(vec![i as u8; 16384])).unwrap();
+        }
+        c.fsync(pid, fd).unwrap();
+        assert!(c.repl_window_stats.windows > 0);
+        assert!(c.repl_window_stats.stalls > 0, "a window of 1 must stall under churn");
+        assert!(c.repl_window_stats.stalled_ns > 0);
+        assert!(c.repl_window_stats.stall_ratio() > 0.0);
+    }
+
+    #[test]
+    fn remote_reader_cache_invalidated_on_lease_transfer() {
+        // a non-member reader caches remotely-served blocks in DRAM; the
+        // writer's next write must not let those stale bytes serve again
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(2));
+        let w = c.spawn_process(0, 0);
+        let fd = c.create(w, "/f").unwrap();
+        c.write(w, fd, Payload::bytes(vec![1u8; 4096])).unwrap();
+        c.fsync(w, fd).unwrap();
+        c.digest_log(w).unwrap();
+        let r = c.spawn_process(2, 0); // not in chain [0, 1]
+        c.set_now(r, c.now(w) + 1_000_000);
+        let fd2 = c.open(r, "/f").unwrap();
+        assert_eq!(c.pread(r, fd2, 0, 4096).unwrap().materialize(), vec![1u8; 4096]);
+        // overwrite: the lease transfer must drop the reader's cache
+        c.set_now(w, c.now(r).max(c.now(w)));
+        c.pwrite(w, fd, 0, Payload::bytes(vec![2u8; 4096])).unwrap();
+        c.fsync(w, fd).unwrap();
+        c.digest_log(w).unwrap();
+        c.set_now(r, c.now(w) + 1_000_000);
+        assert_eq!(
+            c.pread(r, fd2, 0, 4096).unwrap().materialize(),
+            vec![2u8; 4096],
+            "reader must not serve stale cached bytes after the lease transfer"
+        );
+    }
+
+    #[test]
+    fn per_chain_repl_log_regions_gc_on_digest() {
+        use crate::replication::ChainKey;
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3));
+        c.set_subtree_chain("/a", vec![1], vec![]);
+        let pid = c.spawn_process(0, 0);
+        c.mkdir(pid, "/a").unwrap();
+        let fd = c.create(pid, "/a/f").unwrap();
+        c.write(pid, fd, Payload::bytes(vec![3u8; 8192])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        let key = ChainKey::new(&[1], &[]);
+        let held = c.nodes[1].sockets[0].sharedfs.repl_log_bytes_for(pid, &key);
+        assert!(held > 8192, "replica holds the replicated-log region");
+        c.digest_log(pid).unwrap();
+        assert_eq!(
+            c.nodes[1].sockets[0].sharedfs.repl_log_bytes_for(pid, &key),
+            0,
+            "digest GCs the chain's log region"
+        );
     }
 
     #[test]

@@ -139,6 +139,8 @@ impl Cluster {
             let parts = partition_by_chain(&entries, |path| {
                 (self.mgr.chain_key_for(path), self.area_socket(path))
             });
+            // path -> configured chain, for the per-chain digest watermarks
+            let key_of = crate::replication::path_chain_map(&parts);
             // a replica serving several chains applies one sorted batch
             let routed = route_partitions(&parts, |part| {
                 let chain = self.mgr.live_chain_for(&part.path);
@@ -146,7 +148,7 @@ impl Cluster {
                 chain
                     .iter()
                     .chain(reserves.iter())
-                    .map(|&r| (r, part.sock.min(self.nodes[r].sockets.len() - 1)))
+                    .map(|&r| (r, self.clamped_sock(r, part.sock)))
                     .collect()
             });
             let t0 = self.procs[new_pid].clock.now;
@@ -158,7 +160,12 @@ impl Cluster {
                 // writes its shared area (replicas digest in parallel)
                 let read_done = self.nodes[r].sockets[sock].nvm.read_log(t0, bytes, &p);
                 let write_done = self.nodes[r].sockets[sock].nvm.write(read_done, bytes, &p);
-                self.nodes[r].sockets[sock].sharedfs.digest(pid, batch, write_done)?;
+                self.nodes[r].sockets[sock].sharedfs.digest(pid, batch, write_done, |path| {
+                    key_of.get(path).cloned().unwrap_or_default()
+                })?;
+                // recovery digests commit synchronously: the objects are
+                // immediately clean on every surviving replica
+                self.bump_versions(r, sock, batch, write_done, write_done);
                 t_done = t_done.max(write_done);
             }
             self.procs[new_pid].clock.advance_to(t_done);
@@ -233,12 +240,21 @@ impl Cluster {
         // downtime keep their local NVM contents (that is the whole
         // point of NVM-colocated recovery).
         for s in 0..self.nodes[node].sockets.len() {
-            let ps = s.min(self.nodes[peer].sockets.len() - 1);
+            let ps = self.clamped_sock(peer, s);
             let peer_store = self.nodes[peer].sockets[ps].sharedfs.store.clone();
             let peer_applied = self.nodes[peer].sockets[ps].sharedfs.applied_upto.clone();
+            // object versions ride with the store: the peer's clean
+            // watermarks are exactly what this node's resynced copies are
+            let peer_versions = self.nodes[peer].sockets[ps].sharedfs.versions.clone();
             let sfs = &mut self.nodes[node].sockets[s].sharedfs;
             sfs.store = peer_store;
             sfs.applied_upto = peer_applied;
+            sfs.versions = peer_versions;
+            // replicated-log regions on this node's NVM survived the
+            // reboot but their chains may have digested past them while
+            // we were down; the copied watermarks make replay idempotent,
+            // so drop the GC accounting and let new replication rebuild it
+            sfs.repl_log_bytes.clear();
             sfs.invalidate_inos(&written);
             // the daemon's lease table is volatile: it reboots empty
             // (holders re-acquire lazily; stale grants died with the OS)

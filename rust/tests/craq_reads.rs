@@ -1,0 +1,194 @@
+//! CRAQ apportioned-read integration (read-from-any-replica): clean
+//! reads are served by the nearest live chain member, dirty hits confirm
+//! with the tail, and killing the chain head mid-workload must neither
+//! stop reads nor let survivors serve a stale payload.
+
+use assise::fs::{FsError, Payload};
+use assise::sim::{Cluster, ClusterConfig, DistFs};
+use assise::util::SplitMix64;
+
+fn encode(v: u64) -> Vec<u8> {
+    v.to_le_bytes().to_vec()
+}
+
+fn decode(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+#[test]
+fn head_kill_keeps_clean_reads_flowing() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+    let w = c.spawn_process(0, 0); // writer colocated with the chain head
+    let fd = c.create(w, "/v").unwrap();
+    c.pwrite(w, fd, 0, Payload::bytes(encode(1))).unwrap();
+    c.fsync(w, fd).unwrap();
+    c.digest_log(w).unwrap();
+
+    let r1 = c.spawn_process(1, 0);
+    let r2 = c.spawn_process(2, 0);
+    c.set_now(r1, c.now(w) + 1_000_000);
+    c.set_now(r2, c.now(w) + 1_000_000);
+    let f1 = c.open(r1, "/v").unwrap();
+    let f2 = c.open(r2, "/v").unwrap();
+    assert_eq!(decode(&c.pread(r1, f1, 0, 8).unwrap().materialize()), 1);
+
+    // another committed version, then the head dies mid-workload
+    c.set_now(w, c.now(w).max(c.now(r1)).max(c.now(r2)));
+    c.pwrite(w, fd, 0, Payload::bytes(encode(2))).unwrap();
+    c.fsync(w, fd).unwrap();
+    c.digest_log(w).unwrap();
+    let t = c.now(w);
+    c.kill_node(0, t);
+
+    // surviving replicas keep serving clean reads — and never version 1
+    for (i, &(r, f)) in [(r1, f1), (r2, f2)].iter().enumerate() {
+        c.set_now(r, t + (i as u64 + 1) * 2_000_000_000);
+        let got = decode(&c.pread(r, f, 0, 8).unwrap().materialize());
+        assert_eq!(got, 2, "survivor must serve the committed version, never a stale payload");
+    }
+    // the reads were served by the survivors themselves
+    assert_eq!(c.reads_served_by[0], 0, "the dead head cannot have served");
+    assert!(c.reads_served_by[1] >= 1 && c.reads_served_by[2] >= 1);
+    // ops through the dead node's process fail; reads elsewhere flowed
+    assert!(matches!(c.pread(w, fd, 0, 8), Err(FsError::Crashed)));
+}
+
+#[test]
+fn reads_survive_rolling_replica_loss_until_none_left() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(4).replication(3));
+    let w = c.spawn_process(0, 0);
+    let fd = c.create(w, "/v").unwrap();
+    c.pwrite(w, fd, 0, Payload::bytes(encode(7))).unwrap();
+    c.fsync(w, fd).unwrap();
+    c.digest_log(w).unwrap();
+
+    // reader OFF the chain [0, 1, 2]
+    let r = c.spawn_process(3, 0);
+    c.set_now(r, c.now(w) + 1_000_000);
+    let f = c.open(r, "/v").unwrap();
+    assert_eq!(decode(&c.pread(r, f, 0, 8).unwrap().materialize()), 7);
+
+    // kill replicas one by one: reads keep working until the last dies
+    let mut t = c.now(r);
+    for dead in [1usize, 2, 0] {
+        t += 2_000_000_000;
+        c.kill_node(dead, t);
+        c.set_now(r, t + 1_500_000_000);
+        let res = c.pread(r, f, 0, 8);
+        if dead == 0 {
+            // that was the last configured replica
+            assert!(
+                matches!(res, Err(FsError::ChainUnavailable(_))),
+                "all replicas down must surface ChainUnavailable, got {res:?}"
+            );
+        } else {
+            assert_eq!(decode(&res.unwrap().materialize()), 7, "after killing node {dead}");
+        }
+    }
+}
+
+/// One writer, readers on every node, random interleavings of writes,
+/// fsyncs, digests, and reads. The CRAQ invariants under test: a read
+/// never returns a version older than the last one whose digest
+/// completed before the read was issued (clean reads are committed
+/// reads), never one newer than the writer produced, per-reader
+/// observations are monotonic, and the writer always reads its own
+/// latest write.
+#[test]
+fn prop_reads_never_older_than_acked_fsync() {
+    for seed in 0..10 {
+        let mut rng = SplitMix64::new(9000 + seed);
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+        let w = c.spawn_process(0, 0);
+        let fd = c.create(w, "/v").unwrap();
+        c.pwrite(w, fd, 0, Payload::bytes(encode(1))).unwrap();
+        c.fsync(w, fd).unwrap();
+        c.digest_log(w).unwrap();
+
+        let readers =
+            [c.spawn_process(0, 0), c.spawn_process(1, 0), c.spawn_process(2, 0)];
+        let mut rfds = Vec::new();
+        for &r in readers.iter() {
+            c.set_now(r, c.now(w));
+            rfds.push(c.open(r, "/v").unwrap());
+        }
+
+        let mut latest = 1u64; // writer's last completed write
+        let mut committed = 1u64; // last version whose digest completed
+        let mut last_seen = [1u64; 3];
+        for _ in 0..60 {
+            match rng.below(4) {
+                0 => {
+                    latest += 1;
+                    c.pwrite(w, fd, 0, Payload::bytes(encode(latest))).unwrap();
+                }
+                1 => {
+                    c.fsync(w, fd).unwrap();
+                }
+                2 => {
+                    c.fsync(w, fd).unwrap();
+                    c.digest_log(w).unwrap();
+                    committed = latest;
+                }
+                _ => {
+                    let i = rng.below(3) as usize;
+                    let r = readers[i];
+                    // the read is issued at-or-after the digest completion
+                    c.set_now(r, c.now(r).max(c.now(w)));
+                    let got = decode(&c.pread(r, rfds[i], 0, 8).unwrap().materialize());
+                    assert!(
+                        got >= committed,
+                        "seed {seed}: read version {got} older than committed {committed}"
+                    );
+                    assert!(
+                        got <= latest,
+                        "seed {seed}: read version {got} newer than written {latest}"
+                    );
+                    assert!(
+                        got >= last_seen[i],
+                        "seed {seed}: reader {i} went backwards: {got} < {}",
+                        last_seen[i]
+                    );
+                    last_seen[i] = got;
+                }
+            }
+        }
+        assert!(c.craq.clean_reads + c.craq.dirty_redirects > 0);
+        // the writer's own view is always its latest write
+        let own = decode(&c.pread(w, fd, 0, 8).unwrap().materialize());
+        assert_eq!(own, latest, "seed {seed}: writer must read its own write");
+    }
+}
+
+/// Non-colocated readers spread over the chain instead of funneling to
+/// the head — the load-distribution half of apportioned reads.
+#[test]
+fn concurrent_readers_spread_over_non_head_replicas() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(6).replication(3));
+    let w = c.spawn_process(0, 0);
+    let fd = c.create(w, "/big").unwrap();
+    c.pwrite(w, fd, 0, Payload::zero(256 << 10)).unwrap();
+    c.fsync(w, fd).unwrap();
+    c.digest_log(w).unwrap();
+    let t0 = c.now(w) + 1_000_000;
+    // readers on nodes 3, 4, 5 (outside the chain [0, 1, 2]); tiny read
+    // cache so every read hits a replica store
+    for (i, node) in [3usize, 4, 5].iter().enumerate() {
+        let r = c.spawn_process(*node, 0);
+        c.set_now(r, t0 + i as u64 * 1_000);
+        let f = c.open(r, "/big").unwrap();
+        for k in 0..4u64 {
+            let d = c.pread(r, f, k * (64 << 10), 64 << 10).unwrap();
+            assert_eq!(d.len(), 64 << 10);
+        }
+    }
+    assert_eq!(
+        c.reads_served_by[0], 0,
+        "head should serve no reads while non-head members are clean"
+    );
+    assert!(
+        c.reads_served_by[1] > 0 && c.reads_served_by[2] > 0,
+        "reads must spread over both non-head members: {:?}",
+        c.reads_served_by
+    );
+}
