@@ -42,7 +42,12 @@ fn main() {
     // ---- Assise
     let mut c = Cluster::new(ClusterConfig::default().nodes(4).replication(1));
     let workers: Vec<_> = (0..workers_n).map(|w| c.spawn_process(w % 4, 0)).collect();
-    let job = SortJob { workers, records_per_worker, use_kernel: partition.is_some() };
+    let job = SortJob {
+        workers,
+        records_per_worker,
+        use_kernel: partition.is_some(),
+        batched: false,
+    };
     let wall = std::time::Instant::now();
     let (t, count) = job.run(&mut c, partition.as_ref()).expect("sort failed");
     println!(
@@ -54,10 +59,28 @@ fn main() {
         wall.elapsed().as_secs_f64()
     );
 
+    // ---- Assise, batched submission (io_uring-style driver)
+    let mut cb = Cluster::new(ClusterConfig::default().nodes(4).replication(1));
+    let workers: Vec<_> = (0..workers_n).map(|w| cb.spawn_process(w % 4, 0)).collect();
+    let job = SortJob {
+        workers,
+        records_per_worker,
+        use_kernel: partition.is_some(),
+        batched: true,
+    };
+    let (tb, count_b) = job.run(&mut cb, partition.as_ref()).expect("batched sort failed");
+    println!(
+        "assise (batched submit): {} records | partition {:.3}s sort {:.3}s total {:.3}s (virtual)",
+        count_b,
+        tb.partition_ns as f64 / 1e9,
+        tb.sort_ns as f64 / 1e9,
+        tb.total_ns() as f64 / 1e9,
+    );
+
     // ---- NFS comparison (per-machine mounts, the paper's baseline)
     let mut n = NfsLike::new(4, 3 << 30, Default::default());
     let workers: Vec<_> = (0..workers_n).map(|w| n.spawn_process(w % 4, 0)).collect();
-    let job = SortJob { workers, records_per_worker, use_kernel: false };
+    let job = SortJob { workers, records_per_worker, use_kernel: false, batched: false };
     let (tn, count_n) = job.run(&mut n, None).expect("nfs sort failed");
     println!(
         "nfs    : {} records | partition {:.3}s sort {:.3}s total {:.3}s (virtual)",

@@ -18,10 +18,10 @@ use crate::fs::{Cred, Fd, FileStore, FsError, Ino, Mode, NodeId, Payload, ProcId
 use crate::hw::nvm::NvmDevice;
 use crate::hw::params::HwParams;
 use crate::hw::rdma::Fabric;
-use crate::sim::api::DistFs;
+use crate::sim::api::{DistFs, FsCompletion, FsOp};
 use crate::Nanos;
 
-use super::common::{ClientProc, PageCache, PAGE};
+use super::common::{baseline_submission, ClientProc, PageCache, PAGE};
 
 pub struct CephLike {
     p: HwParams,
@@ -106,13 +106,19 @@ impl CephLike {
         self.live(h as usize % self.mds_count)
     }
 
-    /// Metadata RPC through the MDS journal queue.
-    fn meta_rpc(&mut self, pid: ProcId, path: &str) -> Nanos {
+    /// Metadata RPC through the MDS journal queue. Tail SQEs of a
+    /// batch (`sq`) ride op-batched MDS messages: the request/reply
+    /// legs were paid by the batch's first op, later ops pay only
+    /// marshalling — the journal serialization is NOT amortized (it is
+    /// the cluster-wide bottleneck the paper measures).
+    fn meta_rpc(&mut self, pid: ProcId, path: &str, sq: bool) -> Nanos {
         let node = self.procs[pid].node;
         let mds = self.mds_node(path);
         let now = self.procs[pid].clock.now;
         // request to the MDS
-        let arrive = if node == mds {
+        let arrive = if sq {
+            now + self.p.rpc_overhead / 4
+        } else if node == mds {
             now + 2 * self.p.rpc_overhead
         } else {
             self.fabric.rpc(now, node, mds, 128, 0, 0, &self.p)
@@ -124,7 +130,9 @@ impl CephLike {
         let done = start + self.p.ceph_mds_service;
         self.mds_free_at = done;
         // reply
-        let replied = if node == mds {
+        let replied = if sq {
+            done + self.p.rpc_overhead / 4
+        } else if node == mds {
             done + self.p.rpc_overhead
         } else {
             self.fabric.send(done, mds, node, 128, &self.p)
@@ -314,10 +322,29 @@ impl DistFs for CephLike {
         self.procs[pid].last_latency
     }
 
-    fn create(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+    /// Batched submission. The Ceph batch cost model: one syscall
+    /// crossing per ring (tail SQEs pay kernel-side dispatch only),
+    /// op-batched MDS messages (see [`Self::meta_rpc`]), and the
+    /// buffered write path coalesces copies. OSD data round trips and
+    /// BlueStore commits are NOT amortized.
+    fn submit(&mut self, pid: ProcId, ops: Vec<FsOp>) -> Vec<FsCompletion> {
+        self.submit_ops(pid, ops)
+    }
+}
+
+baseline_submission!(CephLike);
+
+impl CephLike {
+    /// Charge an op's syscall entry (tail SQEs pay dispatch only).
+    fn op_entry(&mut self, pid: ProcId, lat: Nanos, sq: bool) {
+        let lat = if sq { lat / 8 } else { lat };
+        self.procs[pid].clock.tick(lat);
+    }
+
+    fn op_create(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<Fd> {
         let t0 = self.begin(pid)?;
-        self.procs[pid].clock.tick(self.p.syscall_write_lat);
-        let t = self.meta_rpc(pid, path);
+        self.op_entry(pid, self.p.syscall_write_lat, sq);
+        let t = self.meta_rpc(pid, path, sq);
         let ino = self.store.create(path, Mode::DEFAULT_FILE, Cred::ROOT, t)?;
         let node = self.procs[pid].node;
         self.client_size.insert((node, ino), 0);
@@ -326,10 +353,10 @@ impl DistFs for CephLike {
         Ok(fd)
     }
 
-    fn open(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+    fn op_open(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<Fd> {
         let t0 = self.begin(pid)?;
-        self.procs[pid].clock.tick(self.p.syscall_read_lat);
-        self.meta_rpc(pid, path);
+        self.op_entry(pid, self.p.syscall_read_lat, sq);
+        self.meta_rpc(pid, path, sq);
         let st = self.store.stat(path)?;
         let node = self.procs[pid].node;
         self.client_size.insert((node, st.ino), st.size);
@@ -338,7 +365,7 @@ impl DistFs for CephLike {
         Ok(fd)
     }
 
-    fn close(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+    fn op_close(&mut self, pid: ProcId, fd: Fd, _sq: bool) -> Result<()> {
         let t0 = self.begin(pid)?;
         let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
         self.flush_dirty(pid, ino)?;
@@ -347,19 +374,19 @@ impl DistFs for CephLike {
         Ok(())
     }
 
-    fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()> {
+    fn op_write(&mut self, pid: ProcId, fd: Fd, data: Payload, sq: bool) -> Result<()> {
         let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
         let len = data.len();
-        self.pwrite(pid, fd, cursor, data)?;
+        self.op_pwrite(pid, fd, cursor, data, sq)?;
         self.procs[pid].fd_mut(fd).unwrap().2 = cursor + len;
         Ok(())
     }
 
-    fn pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload) -> Result<()> {
+    fn op_pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload, sq: bool) -> Result<()> {
         let t0 = self.begin(pid)?;
         let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
         let node = self.procs[pid].node;
-        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        self.op_entry(pid, self.p.syscall_write_lat, sq);
         let mut victims = Vec::new();
         let mut pos = 0;
         while pos < data.len() {
@@ -373,8 +400,10 @@ impl DistFs for CephLike {
             self.caches[node].write_into(ino, pg, pg_off, &data.slice(pos, take));
             pos += take;
         }
+        // tail SQEs coalesce into the open copy window (see NFS)
         let copy = (data.len() as f64 / self.p.dram_write_bw) as Nanos;
-        self.procs[pid].clock.tick(copy + self.p.dram_write_lat);
+        let copy_fixed = if sq { 0 } else { self.p.dram_write_lat };
+        self.procs[pid].clock.tick(copy + copy_fixed);
         let end = off + data.len();
         let e = self.client_size.entry((node, ino)).or_insert(0);
         *e = (*e).max(end);
@@ -383,18 +412,18 @@ impl DistFs for CephLike {
         Ok(())
     }
 
-    fn read(&mut self, pid: ProcId, fd: Fd, len: u64) -> Result<Payload> {
+    fn op_read(&mut self, pid: ProcId, fd: Fd, len: u64, sq: bool) -> Result<Payload> {
         let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
-        let out = self.pread(pid, fd, cursor, len)?;
+        let out = self.op_pread(pid, fd, cursor, len, sq)?;
         self.procs[pid].fd_mut(fd).unwrap().2 = cursor + out.len();
         Ok(out)
     }
 
-    fn pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64) -> Result<Payload> {
+    fn op_pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64, sq: bool) -> Result<Payload> {
         let t0 = self.begin(pid)?;
         let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
         let node = self.procs[pid].node;
-        self.procs[pid].clock.tick(self.p.syscall_read_lat);
+        self.op_entry(pid, self.p.syscall_read_lat, sq);
 
         let srv_size = self.store.stat_ino(ino).map(|s| s.size).unwrap_or(0);
         let known = self
@@ -476,52 +505,62 @@ impl DistFs for CephLike {
         Ok(Payload::concat(&parts))
     }
 
-    fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+    fn op_fsync(&mut self, pid: ProcId, fd: Fd, sq: bool) -> Result<()> {
         let t0 = self.begin(pid)?;
         let (_, ino, _) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
-        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        self.op_entry(pid, self.p.syscall_write_lat, sq);
         self.flush_dirty(pid, ino)?;
         self.end(pid, t0);
         Ok(())
     }
 
-    fn mkdir(&mut self, pid: ProcId, path: &str) -> Result<()> {
+    fn op_mkdir(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<()> {
         let t0 = self.begin(pid)?;
-        self.procs[pid].clock.tick(self.p.syscall_write_lat);
-        let t = self.meta_rpc(pid, path);
+        self.op_entry(pid, self.p.syscall_write_lat, sq);
+        let t = self.meta_rpc(pid, path, sq);
         self.store.mkdir(path, Mode::DEFAULT_DIR, Cred::ROOT, t)?;
         self.end(pid, t0);
         Ok(())
     }
 
-    fn rename(&mut self, pid: ProcId, from: &str, to: &str) -> Result<()> {
+    fn op_rename(&mut self, pid: ProcId, from: &str, to: &str, sq: bool) -> Result<()> {
         let t0 = self.begin(pid)?;
-        self.procs[pid].clock.tick(self.p.syscall_write_lat);
-        let t = self.meta_rpc(pid, from);
+        self.op_entry(pid, self.p.syscall_write_lat, sq);
+        let t = self.meta_rpc(pid, from, sq);
         self.store.rename(from, to, t)?;
         self.end(pid, t0);
         Ok(())
     }
 
-    fn unlink(&mut self, pid: ProcId, path: &str) -> Result<()> {
+    fn op_unlink(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<()> {
         let t0 = self.begin(pid)?;
-        self.procs[pid].clock.tick(self.p.syscall_write_lat);
+        self.op_entry(pid, self.p.syscall_write_lat, sq);
         let ino = self.store.resolve(path)?;
         let node = self.procs[pid].node;
         self.caches[node].invalidate_ino(ino);
-        let t = self.meta_rpc(pid, path);
+        let t = self.meta_rpc(pid, path, sq);
         self.store.unlink(path, t)?;
         self.end(pid, t0);
         Ok(())
     }
 
-    fn stat(&mut self, pid: ProcId, path: &str) -> Result<Stat> {
+    fn op_stat(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<Stat> {
         let t0 = self.begin(pid)?;
-        self.procs[pid].clock.tick(self.p.syscall_read_lat);
-        self.meta_rpc(pid, path);
+        self.op_entry(pid, self.p.syscall_read_lat, sq);
+        self.meta_rpc(pid, path, sq);
         let st = self.store.stat(path);
         self.end(pid, t0);
         st
+    }
+
+    /// READDIR: one MDS round trip, listing from the logical store.
+    fn op_readdir(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<Vec<String>> {
+        let t0 = self.begin(pid)?;
+        self.op_entry(pid, self.p.syscall_read_lat, sq);
+        self.meta_rpc(pid, path, sq);
+        let names = self.store.readdir(path);
+        self.end(pid, t0);
+        names
     }
 }
 

@@ -150,6 +150,79 @@ impl PageCache {
     }
 }
 
+/// Generates the shared submission-queue plumbing for a
+/// `ClientProc`-based baseline: `submit_ops` (the `DistFs::submit`
+/// body) and the `FsOp` -> `op_*` dispatch. One macro, three
+/// expansions — the dispatch table cannot drift apart per baseline;
+/// each system's batch COST model stays in its own `op_*` /
+/// `meta_rpc` / `begin` methods (which all take the tail-SQE flag).
+macro_rules! baseline_submission {
+    ($ty:ty) => {
+        impl $ty {
+            /// Run one submission ring: SQEs execute in order, `i > 0`
+            /// marks tail SQEs for the per-system entry amortization,
+            /// and every completion is timed off the client clock. A
+            /// failed SQE completes with its error; the ops behind it
+            /// still run.
+            fn submit_ops(
+                &mut self,
+                pid: crate::fs::ProcId,
+                ops: Vec<crate::sim::api::FsOp>,
+            ) -> Vec<crate::sim::api::FsCompletion> {
+                let mut out = Vec::with_capacity(ops.len());
+                for (i, op) in ops.into_iter().enumerate() {
+                    let t0 = self.procs[pid].clock.now;
+                    let result = self.exec_op(pid, op, i > 0);
+                    let latency = self.procs[pid].clock.now - t0;
+                    out.push(crate::sim::api::FsCompletion { result, latency });
+                }
+                out
+            }
+
+            fn exec_op(
+                &mut self,
+                pid: crate::fs::ProcId,
+                op: crate::sim::api::FsOp,
+                sq: bool,
+            ) -> crate::fs::Result<crate::sim::api::FsOut> {
+                use crate::sim::api::{FsOp, FsOut};
+                match op {
+                    FsOp::Create { path } => self.op_create(pid, &path, sq).map(FsOut::Fd),
+                    FsOp::Open { path } => self.op_open(pid, &path, sq).map(FsOut::Fd),
+                    FsOp::Close { fd } => self.op_close(pid, fd, sq).map(|()| FsOut::Unit),
+                    FsOp::Write { fd, data } => {
+                        self.op_write(pid, fd, data, sq).map(|()| FsOut::Unit)
+                    }
+                    FsOp::Pwrite { fd, off, data } => {
+                        self.op_pwrite(pid, fd, off, data, sq).map(|()| FsOut::Unit)
+                    }
+                    FsOp::Writev { fd, bufs } => {
+                        let data = crate::fs::Payload::concat(&bufs);
+                        self.op_write(pid, fd, data, sq).map(|()| FsOut::Unit)
+                    }
+                    FsOp::Read { fd, len } => self.op_read(pid, fd, len, sq).map(FsOut::Data),
+                    FsOp::Pread { fd, off, len } => {
+                        self.op_pread(pid, fd, off, len, sq).map(FsOut::Data)
+                    }
+                    // baselines have no optimistic mode: dsync is fsync
+                    FsOp::Fsync { fd } | FsOp::Dsync { fd } => {
+                        self.op_fsync(pid, fd, sq).map(|()| FsOut::Unit)
+                    }
+                    FsOp::Mkdir { path } => self.op_mkdir(pid, &path, sq).map(|()| FsOut::Unit),
+                    FsOp::Truncate { .. } => Err(crate::fs::FsError::NotSupported("truncate")),
+                    FsOp::Rename { from, to } => {
+                        self.op_rename(pid, &from, &to, sq).map(|()| FsOut::Unit)
+                    }
+                    FsOp::Unlink { path } => self.op_unlink(pid, &path, sq).map(|()| FsOut::Unit),
+                    FsOp::Stat { path } => self.op_stat(pid, &path, sq).map(FsOut::Stat),
+                    FsOp::Readdir { path } => self.op_readdir(pid, &path, sq).map(FsOut::Names),
+                }
+            }
+        }
+    };
+}
+pub(crate) use baseline_submission;
+
 /// Client-side per-process state (fd table + clock + counters).
 #[derive(Debug)]
 pub struct ClientProc {

@@ -12,10 +12,10 @@ use crate::fs::{Cred, Fd, FileStore, FsError, Mode, NodeId, Payload, ProcId, Res
 use crate::hw::nvm::{NvmDevice, Pattern};
 use crate::hw::params::HwParams;
 use crate::hw::rdma::Fabric;
-use crate::sim::api::DistFs;
+use crate::sim::api::{DistFs, FsCompletion, FsOp};
 use crate::Nanos;
 
-use super::common::ClientProc;
+use super::common::{baseline_submission, ClientProc};
 
 pub struct OctopusLike {
     p: HwParams,
@@ -63,13 +63,16 @@ impl OctopusLike {
         done
     }
 
-    fn begin(&mut self, pid: ProcId) -> Result<Nanos> {
+    fn begin(&mut self, pid: ProcId, sq: bool) -> Result<Nanos> {
         if !self.procs[pid].alive {
             return Err(FsError::Crashed);
         }
-        // every operation crosses FUSE (§5.2 "around 10µs")
+        // every operation crosses FUSE (§5.2 "around 10µs"); tail SQEs
+        // of a batch ride the already-filled FUSE request ring
+        // (max_background pipelining), paying a quarter crossing
         let t0 = self.procs[pid].clock.now;
-        self.procs[pid].clock.tick(self.p.fuse_lat);
+        let lat = if sq { self.p.fuse_lat / 4 } else { self.p.fuse_lat };
+        self.procs[pid].clock.tick(lat);
         Ok(t0)
     }
 
@@ -104,8 +107,21 @@ impl DistFs for OctopusLike {
         self.procs[pid].last_latency
     }
 
-    fn create(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
-        let t0 = self.begin(pid)?;
+    /// Batched submission. The Octopus batch cost model: FUSE has no
+    /// io_uring front end, but queued requests pipeline through the
+    /// kernel's FUSE ring — tail SQEs pay a quarter crossing. Every
+    /// remote NVM round trip stays serial and unamortized (the design
+    /// the paper critiques in §5.2).
+    fn submit(&mut self, pid: ProcId, ops: Vec<FsOp>) -> Vec<FsCompletion> {
+        self.submit_ops(pid, ops)
+    }
+}
+
+baseline_submission!(OctopusLike);
+
+impl OctopusLike {
+    fn op_create(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<Fd> {
+        let t0 = self.begin(pid, sq)?;
         let t = self.meta_rpc(pid, path);
         let ino = self.store.create(path, Mode::DEFAULT_FILE, Cred::ROOT, t)?;
         let fd = self.procs[pid].install_fd(path.to_string(), ino);
@@ -113,8 +129,8 @@ impl DistFs for OctopusLike {
         Ok(fd)
     }
 
-    fn open(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
-        let t0 = self.begin(pid)?;
+    fn op_open(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<Fd> {
+        let t0 = self.begin(pid, sq)?;
         self.meta_rpc(pid, path);
         let st = self.store.stat(path)?;
         let fd = self.procs[pid].install_fd(path.to_string(), st.ino);
@@ -122,23 +138,23 @@ impl DistFs for OctopusLike {
         Ok(fd)
     }
 
-    fn close(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
-        let t0 = self.begin(pid)?;
+    fn op_close(&mut self, pid: ProcId, fd: Fd, sq: bool) -> Result<()> {
+        let t0 = self.begin(pid, sq)?;
         self.procs[pid].remove_fd(fd).ok_or(FsError::BadFd(fd))?;
         self.end(pid, t0);
         Ok(())
     }
 
-    fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()> {
+    fn op_write(&mut self, pid: ProcId, fd: Fd, data: Payload, sq: bool) -> Result<()> {
         let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
         let len = data.len();
-        self.pwrite(pid, fd, cursor, data)?;
+        self.op_pwrite(pid, fd, cursor, data, sq)?;
         self.procs[pid].fd_mut(fd).unwrap().2 = cursor + len;
         Ok(())
     }
 
-    fn pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload) -> Result<()> {
-        let t0 = self.begin(pid)?;
+    fn op_pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload, sq: bool) -> Result<()> {
+        let t0 = self.begin(pid, sq)?;
         let (path, ino, _) = self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?.clone();
         let node = self.procs[pid].node;
         let owner = self.owner(&path);
@@ -159,15 +175,15 @@ impl DistFs for OctopusLike {
         Ok(())
     }
 
-    fn read(&mut self, pid: ProcId, fd: Fd, len: u64) -> Result<Payload> {
+    fn op_read(&mut self, pid: ProcId, fd: Fd, len: u64, sq: bool) -> Result<Payload> {
         let (_, _, cursor) = *self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
-        let out = self.pread(pid, fd, cursor, len)?;
+        let out = self.op_pread(pid, fd, cursor, len, sq)?;
         self.procs[pid].fd_mut(fd).unwrap().2 = cursor + out.len();
         Ok(out)
     }
 
-    fn pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64) -> Result<Payload> {
-        let t0 = self.begin(pid)?;
+    fn op_pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64, sq: bool) -> Result<Payload> {
+        let t0 = self.begin(pid, sq)?;
         let (path, ino, _) = self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?.clone();
         let node = self.procs[pid].node;
         let owner = self.owner(&path);
@@ -193,24 +209,24 @@ impl DistFs for OctopusLike {
         Ok(data)
     }
 
-    fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+    fn op_fsync(&mut self, pid: ProcId, fd: Fd, sq: bool) -> Result<()> {
         // no-op: writes are synchronous (§5.2 "Octopus' fsync is a no-op")
-        let t0 = self.begin(pid)?;
+        let t0 = self.begin(pid, sq)?;
         let _ = self.procs[pid].fd(fd).ok_or(FsError::BadFd(fd))?;
         self.end(pid, t0);
         Ok(())
     }
 
-    fn mkdir(&mut self, pid: ProcId, path: &str) -> Result<()> {
-        let t0 = self.begin(pid)?;
+    fn op_mkdir(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<()> {
+        let t0 = self.begin(pid, sq)?;
         let t = self.meta_rpc(pid, path);
         self.store.mkdir(path, Mode::DEFAULT_DIR, Cred::ROOT, t)?;
         self.end(pid, t0);
         Ok(())
     }
 
-    fn rename(&mut self, pid: ProcId, from: &str, to: &str) -> Result<()> {
-        let t0 = self.begin(pid)?;
+    fn op_rename(&mut self, pid: ProcId, from: &str, to: &str, sq: bool) -> Result<()> {
+        let t0 = self.begin(pid, sq)?;
         // rename touches two DHT owners
         let t1 = self.meta_rpc(pid, from);
         self.meta_rpc(pid, to);
@@ -221,20 +237,29 @@ impl DistFs for OctopusLike {
         Ok(())
     }
 
-    fn unlink(&mut self, pid: ProcId, path: &str) -> Result<()> {
-        let t0 = self.begin(pid)?;
+    fn op_unlink(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<()> {
+        let t0 = self.begin(pid, sq)?;
         let t = self.meta_rpc(pid, path);
         self.store.unlink(path, t)?;
         self.end(pid, t0);
         Ok(())
     }
 
-    fn stat(&mut self, pid: ProcId, path: &str) -> Result<Stat> {
-        let t0 = self.begin(pid)?;
+    fn op_stat(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<Stat> {
+        let t0 = self.begin(pid, sq)?;
         self.meta_rpc(pid, path);
         let st = self.store.stat(path);
         self.end(pid, t0);
         st
+    }
+
+    /// READDIR: metadata round trip to the directory's DHT owner.
+    fn op_readdir(&mut self, pid: ProcId, path: &str, sq: bool) -> Result<Vec<String>> {
+        let t0 = self.begin(pid, sq)?;
+        self.meta_rpc(pid, path);
+        let names = self.store.readdir(path);
+        self.end(pid, t0);
+        names
     }
 }
 

@@ -387,6 +387,59 @@ fn bench_read_scaling(replicas: usize, reads_per_proc: usize) -> PerfRow {
     }
 }
 
+/// Virtual-time throughput of the Assise write path driven per-op vs
+/// through submission batches — the submission-queue acceptance rows.
+/// Both sides issue the IDENTICAL op sequence (4 KB pwrites into one
+/// file); only the submission shape differs:
+/// per-op shim calls vs `batch`-op `submit` rings. The batch path pays
+/// ONE log reservation + NVM append, one lease memo hit, and a reduced
+/// SQE entry per ring — so modeled ops per virtual second must rise
+/// (`ops / virtual_ns`; the in-crate test pins the ≥1.3× floor).
+/// `wire_bytes` on these rows is the payload bytes appended to the log;
+/// `copied_bytes` must stay 0 (the batch path is zero-copy end to end).
+fn bench_submit(batch: usize, total_ops: usize) -> PerfRow {
+    use crate::sim::api::FsOp;
+    use crate::sim::{Cluster, ClusterConfig, DistFs};
+    const CHUNK: u64 = 4096;
+    let total_ops = (total_ops / batch.max(1)).max(1) * batch.max(1);
+    let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+    let pid = c.spawn_process(0, 0);
+    let fd = c.create(pid, "/f").unwrap();
+    let chunk = Payload::zero(CHUNK);
+    stats::reset();
+    let t_host = Instant::now();
+    let t0 = c.now(pid);
+    let mut k = 0u64;
+    while (k as usize) < total_ops {
+        if batch <= 1 {
+            c.pwrite(pid, fd, k * CHUNK, chunk.clone()).unwrap();
+            k += 1;
+        } else {
+            let ops: Vec<FsOp> = (0..batch as u64)
+                .map(|i| FsOp::Pwrite { fd, off: (k + i) * CHUNK, data: chunk.clone() })
+                .collect();
+            for cq in c.submit(pid, ops) {
+                cq.result.unwrap();
+            }
+            k += batch as u64;
+        }
+    }
+    let total_ns = t_host.elapsed().as_nanos();
+    PerfRow {
+        name: if batch <= 1 {
+            format!("submit_perop_{}k", CHUNK >> 10)
+        } else {
+            format!("submit_batch_{}k_x{batch}", CHUNK >> 10)
+        },
+        ops: total_ops as u64,
+        total_ns,
+        copied_bytes: stats::copied_bytes(),
+        materializations: stats::materializations(),
+        wire_bytes: Some(total_ops as u64 * CHUNK),
+        virtual_ns: Some(c.now(pid) - t0),
+    }
+}
+
 /// Render the rows as the machine-readable `BENCH_perf.json` document.
 pub fn to_json(rows: &[PerfRow], scale: f64) -> String {
     let mut out = String::from("{\n");
@@ -446,6 +499,11 @@ pub fn run_rows(scale: Scale) -> Vec<PerfRow> {
         bench_read_scaling(1, scale.ops(48).clamp(16, 256)),
         bench_read_scaling(2, scale.ops(48).clamp(16, 256)),
         bench_read_scaling(3, scale.ops(48).clamp(16, 256)),
+        // submission-queue amortization: identical op streams, per-op
+        // vs 64-op rings (ops floored high enough to integrate over
+        // the NVM write-tail distribution)
+        bench_submit(1, scale.ops(2048).clamp(1024, 8192)),
+        bench_submit(64, scale.ops(2048).clamp(1024, 8192)),
     ]
 }
 
@@ -490,6 +548,7 @@ pub fn run(scale: Scale) -> Table {
     t.note("zero-copy rows (slice/concat/extent/store) must report 0 copied bytes");
     t.note("repl_scaling_* rows: virtual_gbps must increase with chain count");
     t.note("read_scaling_* rows: virtual_gbps (read throughput) must increase with replica count");
+    t.note("submit_batch_4k_x64 must run >=1.3x the modeled ops/s of submit_perop_4k at copied_bytes == 0");
     t
 }
 
@@ -570,6 +629,27 @@ mod tests {
     fn read_scaling_row_names_match_schema() {
         assert_eq!(bench_read_scaling(1, 8).name, "read_scaling_1replica");
         assert_eq!(bench_read_scaling(3, 8).name, "read_scaling_3replicas");
+    }
+
+    #[test]
+    fn batched_submission_beats_per_op_loop() {
+        // the submission-queue tentpole's acceptance: the native batch
+        // path must clear >=1.3x the modeled ops/s of the per-op loop,
+        // with zero payload bytes copied
+        let seq = bench_submit(1, 2048);
+        let bat = bench_submit(64, 2048);
+        assert_eq!(seq.name, "submit_perop_4k");
+        assert_eq!(bat.name, "submit_batch_4k_x64");
+        assert_eq!(seq.ops, bat.ops, "identical op streams");
+        assert_eq!(seq.wire_bytes, bat.wire_bytes, "identical bytes logged");
+        let seq_ns = seq.virtual_ns.unwrap() as f64 / seq.ops as f64;
+        let bat_ns = bat.virtual_ns.unwrap() as f64 / bat.ops as f64;
+        assert!(
+            seq_ns >= 1.3 * bat_ns,
+            "batch {bat_ns:.0} ns/op must be >=1.3x faster than per-op {seq_ns:.0} ns/op"
+        );
+        assert_eq!(bat.copied_bytes, 0, "batch path must stay zero-copy");
+        assert_eq!(seq.copied_bytes, 0);
     }
 
     #[test]

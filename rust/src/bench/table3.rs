@@ -29,7 +29,7 @@ pub fn run(scale: Scale) -> Table {
                 ClusterConfig::default().nodes(NODES).replication(1),
             );
             let workers: Vec<_> = (0..procs).map(|w| c.spawn_process(w % NODES, 0)).collect();
-            let job = SortJob { workers, records_per_worker: records, use_kernel };
+            let job = SortJob { workers, records_per_worker: records, use_kernel, batched: false };
             let (timing, count) = job.run(&mut c, partition_exec.as_ref()).unwrap();
             t.row(vec![
                 "assise".into(),
@@ -44,7 +44,8 @@ pub fn run(scale: Scale) -> Table {
         {
             let mut n = NfsLike::new(NODES, 3 << 30, Default::default());
             let workers: Vec<_> = (0..procs).map(|w| n.spawn_process(w % NODES, 0)).collect();
-            let job = SortJob { workers, records_per_worker: records, use_kernel: false };
+            let job =
+                SortJob { workers, records_per_worker: records, use_kernel: false, batched: false };
             let (timing, count) = job.run(&mut n, None).unwrap();
             t.row(vec![
                 "nfs".into(),

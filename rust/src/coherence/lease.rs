@@ -17,7 +17,7 @@ use crate::fs::path::is_subtree_of;
 use crate::fs::ProcId;
 use crate::hw::Nanos;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LeaseMode {
     Read,
     Write,

@@ -445,6 +445,17 @@ impl FileStore {
         Ok(())
     }
 
+    /// Inos of `path` and every descendant, resolved through the
+    /// namespace indices and walked over the addressed subtree only —
+    /// never a whole-namespace scan (lease-release invalidation calls
+    /// this on every transfer). Empty when the path does not resolve.
+    pub fn inos_under(&self, path: &str) -> Vec<Ino> {
+        match self.resolve(path) {
+            Ok(ino) => self.collect_subtree(ino),
+            Err(_) => Vec::new(),
+        }
+    }
+
     /// The inode plus all its descendants (entries-tree walk).
     fn collect_subtree(&self, ino: Ino) -> Vec<Ino> {
         let mut out = vec![ino];

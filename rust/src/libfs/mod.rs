@@ -241,39 +241,15 @@ impl LibFs {
 
     /// Drop log-view and read-cache state for a path subtree (lease
     /// release invalidation, §3.2). The caller must have digested the
-    /// log first.
+    /// log first. Enumerates the unit through the view's dentry/path
+    /// indices ([`FileStore::inos_under`]) — the old implementation
+    /// re-walked the WHOLE view namespace from "/" on every lease
+    /// release, O(view) per transfer instead of O(subtree).
     pub fn invalidate_subtree(&mut self, subtree: &str) {
-        // collect inos in view under subtree, drop from read cache
-        let inos: Vec<u64> = self
-            .log_view_paths()
-            .into_iter()
-            .filter(|(_, p)| crate::fs::path::is_subtree_of(p, subtree))
-            .map(|(i, _)| i)
-            .collect();
-        for ino in inos {
+        for ino in self.log_view.inos_under(subtree) {
             self.read_cache.invalidate_ino(ino);
             self.log_view.invalidate_ino(ino);
         }
-    }
-
-    fn log_view_paths(&self) -> Vec<(u64, String)> {
-        // walk the view's path index
-        let mut out = Vec::new();
-        let mut stack = vec!["/".to_string()];
-        while let Some(dir) = stack.pop() {
-            if let Ok(names) = self.log_view.readdir(&dir) {
-                for n in names {
-                    let p = if dir == "/" { format!("/{n}") } else { format!("{dir}/{n}") };
-                    if let Ok(st) = self.log_view.stat(&p) {
-                        out.push((st.ino, p.clone()));
-                        if st.is_dir {
-                            stack.push(p);
-                        }
-                    }
-                }
-            }
-        }
-        out
     }
 }
 

@@ -5,10 +5,144 @@
 //! workload generators and figure harnesses drive all of them through
 //! identical op streams. POSIX-shaped on purpose: the paper's headline
 //! claim is that the *unmodified* POSIX API can be fast.
+//!
+//! ## Submission/completion shape
+//!
+//! The trait's one required op entry point is io_uring-style:
+//! [`DistFs::submit`] takes a batch of [`FsOp`] submission entries and
+//! returns one [`FsCompletion`] per entry, in order. Batching is where
+//! a kernel-bypass LibFS amortizes its per-op fixed costs (lease
+//! checks, update-log reservations, chain partitioning — §A.1), and
+//! where the baselines model their own batched submission (one syscall
+//! crossing per ring, NFS wsize-style write coalescing, Ceph op-batched
+//! MDS messages). The familiar per-op POSIX methods are **default-method
+//! shims over one-element batches**, so every existing harness drives
+//! the new path without change — and a one-element batch is defined to
+//! cost exactly what the old per-op call did.
+//!
+//! Semantics: ops in a batch execute strictly in submission order
+//! against the same process, an op's failure does not stop the ops
+//! behind it (each completion carries its own `Result`), and a batch
+//! must leave the file system in the same state as the equivalent
+//! sequence of per-op calls — only *virtual time* may differ (see
+//! `rust/tests/submit_equivalence.rs`).
 
-use crate::fs::{Fd, Payload, ProcId, Result, Stat};
+use crate::fs::{Fd, FsError, Payload, ProcId, Result, Stat};
 use crate::hw::params::HwParams;
 use crate::hw::Nanos;
+
+/// One submitted operation — an io_uring-style SQE over the POSIX
+/// surface. Ops that act on an open file reference it by `Fd`; a batch
+/// therefore cannot write to a file it creates in the same batch (match
+/// io_uring: obtain the fd first, then batch the IO against it).
+#[derive(Debug, Clone)]
+pub enum FsOp {
+    Create { path: String },
+    Open { path: String },
+    Close { fd: Fd },
+    /// Append-at-cursor write.
+    Write { fd: Fd, data: Payload },
+    /// Positional write (does not move the cursor).
+    Pwrite { fd: Fd, off: u64, data: Payload },
+    /// Vectored cursor write: the buffers land back-to-back as ONE
+    /// logged op (gathered at submit time by zero-copy concat).
+    Writev { fd: Fd, bufs: Vec<Payload> },
+    /// Read at cursor, advancing it.
+    Read { fd: Fd, len: u64 },
+    /// Positional read.
+    Pread { fd: Fd, off: u64, len: u64 },
+    Fsync { fd: Fd },
+    /// Optimistic-mode persistence barrier (Assise; baselines fsync).
+    Dsync { fd: Fd },
+    Mkdir { path: String },
+    Truncate { path: String, size: u64 },
+    Rename { from: String, to: String },
+    Unlink { path: String },
+    Stat { path: String },
+    Readdir { path: String },
+}
+
+/// The value a completed op carries.
+#[derive(Debug, Clone)]
+pub enum FsOut {
+    Unit,
+    Fd(Fd),
+    Data(Payload),
+    Stat(Stat),
+    Names(Vec<String>),
+}
+
+impl FsOut {
+    fn kind(&self) -> &'static str {
+        match self {
+            FsOut::Unit => "unit",
+            FsOut::Fd(_) => "fd",
+            FsOut::Data(_) => "data",
+            FsOut::Stat(_) => "stat",
+            FsOut::Names(_) => "names",
+        }
+    }
+
+    pub fn fd(self) -> Result<Fd> {
+        match self {
+            FsOut::Fd(fd) => Ok(fd),
+            other => Err(mismatch("fd", &other)),
+        }
+    }
+
+    pub fn data(self) -> Result<Payload> {
+        match self {
+            FsOut::Data(d) => Ok(d),
+            other => Err(mismatch("data", &other)),
+        }
+    }
+
+    pub fn stat(self) -> Result<Stat> {
+        match self {
+            FsOut::Stat(st) => Ok(st),
+            other => Err(mismatch("stat", &other)),
+        }
+    }
+
+    pub fn names(self) -> Result<Vec<String>> {
+        match self {
+            FsOut::Names(v) => Ok(v),
+            other => Err(mismatch("names", &other)),
+        }
+    }
+
+    pub fn unit(self) -> Result<()> {
+        match self {
+            FsOut::Unit => Ok(()),
+            other => Err(mismatch("unit", &other)),
+        }
+    }
+}
+
+fn mismatch(want: &str, got: &FsOut) -> FsError {
+    FsError::InvalidArgument(format!(
+        "completion carries {} (expected {want})",
+        got.kind()
+    ))
+}
+
+/// One completion — an io_uring-style CQE: the op's result plus its
+/// virtual latency (submission entry to completion, proc-clock time).
+#[derive(Debug, Clone)]
+pub struct FsCompletion {
+    pub result: Result<FsOut>,
+    pub latency: Nanos,
+}
+
+/// Unwrap the single completion of a one-element batch (shim helper).
+fn single(mut cqs: Vec<FsCompletion>) -> Result<FsOut> {
+    match cqs.pop() {
+        Some(c) => c.result,
+        None => Err(FsError::InvalidArgument(
+            "submit returned no completion".into(),
+        )),
+    }
+}
 
 pub trait DistFs {
     /// System name for harness output.
@@ -28,38 +162,93 @@ pub trait DistFs {
     /// Latency of `pid`'s last completed op.
     fn last_latency(&self, pid: ProcId) -> Nanos;
 
+    // ----------------------------------------------- submission queue
+
+    /// Submit a batch of ops for `pid`; returns one completion per op,
+    /// in submission order. The required entry point: per-op POSIX
+    /// methods below are shims over one-element batches. A failed op
+    /// completes with its error and execution continues with the next
+    /// op. Implementations may amortize per-op fixed costs across the
+    /// batch but must produce the same results, error classes, and
+    /// final store state as the per-op sequence.
+    fn submit(&mut self, pid: ProcId, ops: Vec<FsOp>) -> Vec<FsCompletion>;
+
     // ------------------------------------------------------------ POSIX
 
-    fn create(&mut self, pid: ProcId, path: &str) -> Result<Fd>;
-    fn open(&mut self, pid: ProcId, path: &str) -> Result<Fd>;
-    fn close(&mut self, pid: ProcId, fd: Fd) -> Result<()>;
+    fn create(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        single(self.submit(pid, vec![FsOp::Create { path: path.to_string() }]))?.fd()
+    }
+
+    fn open(&mut self, pid: ProcId, path: &str) -> Result<Fd> {
+        single(self.submit(pid, vec![FsOp::Open { path: path.to_string() }]))?.fd()
+    }
+
+    fn close(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        single(self.submit(pid, vec![FsOp::Close { fd }]))?.unit()
+    }
 
     /// Append-at-cursor write.
-    fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()>;
+    fn write(&mut self, pid: ProcId, fd: Fd, data: Payload) -> Result<()> {
+        single(self.submit(pid, vec![FsOp::Write { fd, data }]))?.unit()
+    }
+
     /// Positional write (does not move the cursor).
-    fn pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload) -> Result<()>;
+    fn pwrite(&mut self, pid: ProcId, fd: Fd, off: u64, data: Payload) -> Result<()> {
+        single(self.submit(pid, vec![FsOp::Pwrite { fd, off, data }]))?.unit()
+    }
+
+    /// Vectored cursor write (one logged op; zero-copy gather).
+    fn writev(&mut self, pid: ProcId, fd: Fd, bufs: Vec<Payload>) -> Result<()> {
+        single(self.submit(pid, vec![FsOp::Writev { fd, bufs }]))?.unit()
+    }
 
     /// Read at cursor, advancing it.
-    fn read(&mut self, pid: ProcId, fd: Fd, len: u64) -> Result<Payload>;
+    fn read(&mut self, pid: ProcId, fd: Fd, len: u64) -> Result<Payload> {
+        single(self.submit(pid, vec![FsOp::Read { fd, len }]))?.data()
+    }
+
     /// Positional read.
-    fn pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64) -> Result<Payload>;
+    fn pread(&mut self, pid: ProcId, fd: Fd, off: u64, len: u64) -> Result<Payload> {
+        single(self.submit(pid, vec![FsOp::Pread { fd, off, len }]))?.data()
+    }
 
-    fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()>;
+    fn fsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
+        single(self.submit(pid, vec![FsOp::Fsync { fd }]))?.unit()
+    }
 
-    fn mkdir(&mut self, pid: ProcId, path: &str) -> Result<()>;
+    fn mkdir(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        single(self.submit(pid, vec![FsOp::Mkdir { path: path.to_string() }]))?.unit()
+    }
 
     /// Truncate (or extend with zeros) a file to `size`.
     fn truncate(&mut self, pid: ProcId, path: &str, size: u64) -> Result<()> {
-        let _ = (pid, path, size);
-        Err(crate::fs::FsError::NotSupported("truncate"))
+        single(self.submit(pid, vec![FsOp::Truncate { path: path.to_string(), size }]))?.unit()
     }
-    fn rename(&mut self, pid: ProcId, from: &str, to: &str) -> Result<()>;
-    fn unlink(&mut self, pid: ProcId, path: &str) -> Result<()>;
-    fn stat(&mut self, pid: ProcId, path: &str) -> Result<Stat>;
+
+    fn rename(&mut self, pid: ProcId, from: &str, to: &str) -> Result<()> {
+        single(self.submit(
+            pid,
+            vec![FsOp::Rename { from: from.to_string(), to: to.to_string() }],
+        ))?
+        .unit()
+    }
+
+    fn unlink(&mut self, pid: ProcId, path: &str) -> Result<()> {
+        single(self.submit(pid, vec![FsOp::Unlink { path: path.to_string() }]))?.unit()
+    }
+
+    fn stat(&mut self, pid: ProcId, path: &str) -> Result<Stat> {
+        single(self.submit(pid, vec![FsOp::Stat { path: path.to_string() }]))?.stat()
+    }
+
+    /// Directory listing (sorted entry names).
+    fn readdir(&mut self, pid: ProcId, path: &str) -> Result<Vec<String>> {
+        single(self.submit(pid, vec![FsOp::Readdir { path: path.to_string() }]))?.names()
+    }
 
     /// Optimistic-mode persistence barrier (Assise only; baselines treat
     /// it as fsync).
     fn dsync(&mut self, pid: ProcId, fd: Fd) -> Result<()> {
-        self.fsync(pid, fd)
+        single(self.submit(pid, vec![FsOp::Dsync { fd }]))?.unit()
     }
 }

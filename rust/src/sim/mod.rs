@@ -6,7 +6,7 @@ pub mod api;
 pub mod assise;
 pub mod failure;
 
-pub use api::DistFs;
+pub use api::{DistFs, FsCompletion, FsOp, FsOut};
 pub use assise::{Cluster, Node, SocketUnit};
 
 use crate::coherence::ManagerPolicy;

@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 
 use crate::fs::{Fd, Payload, ProcId, Result};
-use crate::sim::api::DistFs;
+use crate::sim::api::{DistFs, FsOp};
 use crate::Nanos;
 
 #[derive(Debug, Clone)]
@@ -149,6 +149,56 @@ impl KvStore {
         self.memtable
             .insert(key, Self::value_for(key, self.cfg.value_size));
         self.memtable_used += self.rec_len();
+        if self.memtable_used >= self.cfg.memtable_bytes {
+            self.flush(fs)?;
+        }
+        Ok(fs.now(self.pid) - t0)
+    }
+
+    /// Batched puts (LevelDB `WriteBatch` over the submission queue):
+    /// ONE submission carries every WAL append, plus the group-commit
+    /// fsync for sync batches — amortizing the per-append fixed costs.
+    /// Each key becomes visible iff its WAL append completed (SQEs are
+    /// independent: a mid-batch failure does not stop the appends behind
+    /// it, and the first error is returned after the successful keys are
+    /// installed). The memtable-flush threshold is checked once at batch
+    /// end (group commit), so SST boundaries may differ from a per-put
+    /// sequence even though the logical contents match.
+    pub fn put_batch(&mut self, fs: &mut dyn DistFs, keys: &[u64], sync: bool) -> Result<Nanos> {
+        if keys.is_empty() {
+            return Ok(0);
+        }
+        let t0 = fs.now(self.pid);
+        let mut ops: Vec<FsOp> = keys
+            .iter()
+            .map(|&k| FsOp::Write {
+                fd: self.wal_fd,
+                data: Self::value_for(k, self.cfg.key_size + self.cfg.value_size),
+            })
+            .collect();
+        if sync {
+            ops.push(FsOp::Fsync { fd: self.wal_fd });
+        }
+        let cqs = fs.submit(self.pid, ops);
+        let mut first_err = None;
+        for (i, c) in cqs.into_iter().enumerate() {
+            match c.result {
+                Ok(_) => {
+                    if let Some(&k) = keys.get(i) {
+                        self.memtable.insert(k, Self::value_for(k, self.cfg.value_size));
+                        self.memtable_used += self.rec_len();
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
         if self.memtable_used >= self.cfg.memtable_bytes {
             self.flush(fs)?;
         }
@@ -325,6 +375,29 @@ mod tests {
         // key still found after flush (from SST now)
         let (found, _) = kv.get(&mut c, 0).unwrap();
         assert!(found);
+    }
+
+    #[test]
+    fn batched_puts_amortize_and_match_sequential() {
+        let mut c1 = fs();
+        let p1 = c1.spawn_process(0, 0);
+        let mut kv1 = KvStore::create(&mut c1, p1, KvConfig::default()).unwrap();
+        let mut c2 = fs();
+        let p2 = c2.spawn_process(0, 0);
+        let mut kv2 = KvStore::create(&mut c2, p2, KvConfig::default()).unwrap();
+        let keys: Vec<u64> = (0..64).collect();
+        let mut seq_ns = 0;
+        for &k in &keys {
+            seq_ns += kv1.put(&mut c1, k, false).unwrap();
+        }
+        let batch_ns = kv2.put_batch(&mut c2, &keys, false).unwrap();
+        assert!(batch_ns < seq_ns, "batch {batch_ns} !< sequential {seq_ns}");
+        // same logical contents either way
+        for &k in &keys {
+            assert!(kv1.get(&mut c1, k).unwrap().0);
+            assert!(kv2.get(&mut c2, k).unwrap().0);
+        }
+        assert!(!kv2.get(&mut c2, 10_000).unwrap().0);
     }
 
     #[test]

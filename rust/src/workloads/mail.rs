@@ -119,6 +119,13 @@ impl MailSim {
         fs.mkdir(self.pid, &format!("/queue-{}", self.pid))?;
         Ok(())
     }
+
+    /// A Maildir reader's scan for delivered messages — goes through
+    /// the `DistFs` API (`readdir`), never into a system's internals,
+    /// so it works against Assise and every baseline alike.
+    pub fn scan(&self, fs: &mut dyn DistFs, maildir: &str) -> Result<Vec<String>> {
+        fs.readdir(self.pid, maildir)
+    }
 }
 
 /// Maildir path for a recipient under a sharding policy.
@@ -163,13 +170,14 @@ mod tests {
         let mut w = MailSim::new(pid, 0);
         w.setup(&mut c).unwrap();
         w.deliver(&mut c, "/maildir/u1", 32 << 10, 7).unwrap();
-        // message landed in the maildir; queue file is gone
-        let entries = c.nodes[0].sockets[0].sharedfs.store.readdir("/maildir/u1");
-        // may still be in the log; check via the API instead
+        // message landed in the maildir; queue file is gone — all
+        // observed through the DistFs API (readdir), not the internals
+        let entries = w.scan(&mut c, "/maildir/u1").unwrap();
+        assert_eq!(entries, vec!["m0-0".to_string()]);
         let st = c.stat(pid, "/maildir/u1/m0-0").unwrap();
         assert_eq!(st.size, 32 << 10);
         assert!(c.stat(pid, "/queue-0/m0").is_err());
-        let _ = entries;
+        assert!(!w.scan(&mut c, "/queue-0").unwrap().contains(&"m0".to_string()));
     }
 
     #[test]

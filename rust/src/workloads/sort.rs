@@ -16,7 +16,7 @@
 
 use crate::fs::{Payload, ProcId, Result};
 use crate::runtime::PartitionExec;
-use crate::sim::api::DistFs;
+use crate::sim::api::{DistFs, FsOp};
 use crate::util::SplitMix64;
 use crate::Nanos;
 
@@ -91,6 +91,12 @@ pub struct SortJob {
     pub records_per_worker: usize,
     /// number of output partitions == workers
     pub use_kernel: bool,
+    /// drive the IO through submission batches: temp files are created
+    /// in one batch per worker and written/closed in a second; each
+    /// output partition lands as one `[Writev, Fsync, Close]` batch
+    /// (one log reservation, one window drain) instead of a per-op
+    /// call per 1 MB chunk
+    pub batched: bool,
 }
 
 impl SortJob {
@@ -155,15 +161,45 @@ impl SortJob {
                 tmp_data[b][w].extend_from_slice(&data[r * RECORD..(r + 1) * RECORD]);
             }
             // write temp files to the destination's subtree
-            for (b, bufs) in tmp_data.iter().enumerate() {
-                let buf = &bufs[w];
-                if buf.is_empty() {
-                    continue;
+            if self.batched {
+                // batched driver: create every temp file in one
+                // submission (completions carry the fds), then land all
+                // the writes + closes in a second
+                let targets: Vec<usize> = tmp_data
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, bufs)| !bufs[w].is_empty())
+                    .map(|(b, _)| b)
+                    .collect();
+                let creates: Vec<FsOp> = targets
+                    .iter()
+                    .map(|&b| FsOp::Create { path: format!("/sort/tmp/b{b}-from{w}") })
+                    .collect();
+                let mut fds = Vec::with_capacity(targets.len());
+                for c in fs.submit(pid, creates) {
+                    fds.push(c.result?.fd()?);
                 }
-                let tpath = format!("/sort/tmp/b{b}-from{w}");
-                let tfd = fs.create(pid, &tpath)?;
-                fs.write(pid, tfd, Payload::bytes(buf.clone()))?;
-                fs.close(pid, tfd)?;
+                let mut io: Vec<FsOp> = Vec::with_capacity(2 * targets.len());
+                for (&b, &tfd) in targets.iter().zip(&fds) {
+                    io.push(FsOp::Write { fd: tfd, data: Payload::bytes(tmp_data[b][w].clone()) });
+                }
+                for &tfd in &fds {
+                    io.push(FsOp::Close { fd: tfd });
+                }
+                for c in fs.submit(pid, io) {
+                    c.result?;
+                }
+            } else {
+                for (b, bufs) in tmp_data.iter().enumerate() {
+                    let buf = &bufs[w];
+                    if buf.is_empty() {
+                        continue;
+                    }
+                    let tpath = format!("/sort/tmp/b{b}-from{w}");
+                    let tfd = fs.create(pid, &tpath)?;
+                    fs.write(pid, tfd, Payload::bytes(buf.clone()))?;
+                    fs.close(pid, tfd)?;
+                }
             }
         }
         let partition_ns = self
@@ -199,15 +235,35 @@ impl SortJob {
             let sorted: Vec<u8> = recs.concat();
             let opath = format!("/sort/out/part-{b}");
             let ofd = fs.create(pid, &opath)?;
-            // 1 MB writes
-            let mut off = 0;
-            while off < sorted.len() {
-                let chunk = (1 << 20).min(sorted.len() - off);
-                fs.write(pid, ofd, Payload::bytes(sorted[off..off + chunk].to_vec()))?;
-                off += chunk;
+            if self.batched {
+                // one submission: a vectored write of the 1 MB chunks
+                // (one logged op, one log reservation), the partition's
+                // single fsync, and the close — the whole output lands
+                // through one batch
+                let whole = Payload::bytes(sorted.clone());
+                let bufs: Vec<Payload> = (0..sorted.len() as u64)
+                    .step_by(1 << 20)
+                    .map(|off| whole.slice(off, (1u64 << 20).min(sorted.len() as u64 - off)))
+                    .collect();
+                let ops = vec![
+                    FsOp::Writev { fd: ofd, bufs },
+                    FsOp::Fsync { fd: ofd },
+                    FsOp::Close { fd: ofd },
+                ];
+                for c in fs.submit(pid, ops) {
+                    c.result?;
+                }
+            } else {
+                // 1 MB writes
+                let mut off = 0;
+                while off < sorted.len() {
+                    let chunk = (1 << 20).min(sorted.len() - off);
+                    fs.write(pid, ofd, Payload::bytes(sorted[off..off + chunk].to_vec()))?;
+                    off += chunk;
+                }
+                fs.fsync(pid, ofd)?; // the single fsync per output partition
+                fs.close(pid, ofd)?;
             }
-            fs.fsync(pid, ofd)?; // the single fsync per output partition
-            fs.close(pid, ofd)?;
             outputs.push(sorted);
         }
         let sort_ns = self
@@ -251,11 +307,33 @@ mod tests {
     fn end_to_end_sort_is_correct() {
         let mut c = Cluster::new(ClusterConfig::default().nodes(2).replication(1));
         let workers: Vec<_> = (0..4).map(|w| c.spawn_process(w % 2, 0)).collect();
-        let job = SortJob { workers, records_per_worker: 500, use_kernel: false };
+        let job = SortJob { workers, records_per_worker: 500, use_kernel: false, batched: false };
         let (timing, count) = job.run(&mut c, None).unwrap();
         assert_eq!(count, 2_000);
         assert!(timing.partition_ns > 0);
         assert!(timing.sort_ns > 0);
+    }
+
+    #[test]
+    fn batched_sort_is_correct_and_no_slower() {
+        let run_one = |batched: bool| {
+            let mut c = Cluster::new(ClusterConfig::default().nodes(2).replication(1));
+            let workers: Vec<_> = (0..4).map(|w| c.spawn_process(w % 2, 0)).collect();
+            let job = SortJob { workers, records_per_worker: 400, use_kernel: false, batched };
+            job.run(&mut c, None).unwrap()
+        };
+        let (t_seq, n_seq) = run_one(false);
+        let (t_bat, n_bat) = run_one(true);
+        assert_eq!(n_seq, 1_600);
+        assert_eq!(n_bat, 1_600);
+        // batching only amortizes fixed costs; allow timing noise from
+        // the NVM tail distribution but never a structural regression
+        assert!(
+            t_bat.total_ns() as f64 <= t_seq.total_ns() as f64 * 1.05,
+            "batched {} !<= sequential {}",
+            t_bat.total_ns(),
+            t_seq.total_ns()
+        );
     }
 
     #[test]

@@ -105,7 +105,7 @@ fn sort_pipeline_kernel_vs_reference_same_output() {
     let run = |use_kernel: bool| {
         let mut c = Cluster::new(ClusterConfig::default().nodes(2).replication(1));
         let workers: Vec<_> = (0..4).map(|w| c.spawn_process(w % 2, 0)).collect();
-        let job = SortJob { workers, records_per_worker: 800, use_kernel };
+        let job = SortJob { workers, records_per_worker: 800, use_kernel, batched: false };
         job.run(&mut c, if use_kernel { Some(&exec) } else { None }).unwrap()
     };
     let (_, count_kernel) = run(true);

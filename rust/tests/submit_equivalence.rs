@@ -1,0 +1,248 @@
+//! Batch/sequential equivalence of the submission-queue API.
+//!
+//! For each of the four systems (Assise + Ceph/NFS/Octopus baselines),
+//! the same deterministic op script is executed twice on two freshly
+//! built instances:
+//!
+//! - **sequential**: one-element batches (the per-op POSIX shims);
+//! - **batched**: the identical op stream chopped into random-size
+//!   submission rings.
+//!
+//! The property: every completion carries the same result signature
+//! (success kind + payload bytes, or error class), and the final store
+//! state — observed purely through the `DistFs` API (stat / readdir /
+//! full-content preads over the whole path universe) — is identical.
+//! Batching may only change *virtual time*, never state.
+//!
+//! The script runs a single process: batches are a per-process
+//! submission ring (io_uring semantics), and cross-process lease
+//! revocation ordering is intentionally out of scope here (covered by
+//! the lease tests).
+
+use assise::baselines::{CephLike, NfsLike, OctopusLike};
+use assise::fs::{Fd, FsError, Payload};
+use assise::sim::api::{DistFs, FsOp, FsOut};
+use assise::sim::{Cluster, ClusterConfig};
+use assise::util::SplitMix64;
+
+/// Error class only — paths inside errors may legitimately differ in
+/// normalization, and timing never appears in errors.
+fn err_class(e: &FsError) -> &'static str {
+    match e {
+        FsError::NotFound(_) => "ENOENT",
+        FsError::AlreadyExists(_) => "EEXIST",
+        FsError::NotADirectory(_) => "ENOTDIR",
+        FsError::IsADirectory(_) => "EISDIR",
+        FsError::NotEmpty(_) => "ENOTEMPTY",
+        FsError::PermissionDenied(_) => "EACCES",
+        FsError::BadFd(_) => "EBADF",
+        FsError::NoSpace => "ENOSPC",
+        FsError::LeaseConflict(_) => "ELEASE",
+        FsError::Crashed => "ECRASHED",
+        FsError::ChainUnavailable(_) => "EHOSTDOWN",
+        FsError::NotSupported(_) => "ENOTSUP",
+        FsError::InvalidArgument(_) => "EINVAL",
+    }
+}
+
+/// Timing-free signature of one completion result.
+fn sig(r: &Result<FsOut, FsError>) -> String {
+    match r {
+        Ok(FsOut::Unit) => "ok".into(),
+        Ok(FsOut::Fd(fd)) => format!("fd:{fd}"),
+        Ok(FsOut::Data(d)) => {
+            let bytes = d.materialize();
+            let sum: u64 = bytes.iter().map(|&b| b as u64).sum();
+            format!("data:{}:{sum}", bytes.len())
+        }
+        Ok(FsOut::Stat(st)) => format!("stat:{}:{}", st.size, st.is_dir),
+        Ok(FsOut::Names(v)) => format!("names:{v:?}"),
+        Err(e) => format!("err:{}", err_class(e)),
+    }
+}
+
+/// Deterministic op script over a small path/fd universe. Fds 3..=10
+/// are pre-opened by the setup prologue on every instance (same script
+/// => same fd numbering), later ops may also close/reopen them.
+fn script(seed: u64, len: usize) -> Vec<FsOp> {
+    let mut rng = SplitMix64::new(seed);
+    let dirs = ["/d0", "/d1", "/d0/sub"];
+    let files = ["/d0/a", "/d0/b", "/d1/c", "/d0/sub/d", "/top"];
+    let mut ops: Vec<FsOp> = Vec::with_capacity(len + 16);
+    // prologue: namespace + one open fd per file (fds 3..=7)
+    for d in dirs {
+        ops.push(FsOp::Mkdir { path: d.into() });
+    }
+    for f in files {
+        ops.push(FsOp::Create { path: f.into() });
+    }
+    let fds: Vec<Fd> = (3..3 + files.len() as Fd).collect();
+    for _ in 0..len {
+        let fd = fds[rng.below(fds.len() as u64) as usize];
+        let path = files[rng.below(files.len() as u64) as usize];
+        match rng.below(12) {
+            0 => {
+                let data = Payload::synthetic(rng.next_u64(), 1 + rng.below(6000));
+                ops.push(FsOp::Write { fd, data });
+            }
+            1 => ops.push(FsOp::Pwrite {
+                fd,
+                off: rng.below(16 << 10),
+                data: Payload::synthetic(rng.next_u64(), 1 + rng.below(6000)),
+            }),
+            2 => ops.push(FsOp::Writev {
+                fd,
+                bufs: (0..1 + rng.below(3))
+                    .map(|_| Payload::synthetic(rng.next_u64(), 1 + rng.below(2000)))
+                    .collect(),
+            }),
+            3 => ops.push(FsOp::Read { fd, len: 1 + rng.below(8000) }),
+            4 => ops.push(FsOp::Pread { fd, off: rng.below(16 << 10), len: 1 + rng.below(8000) }),
+            5 => ops.push(FsOp::Fsync { fd }),
+            6 => ops.push(FsOp::Dsync { fd }),
+            7 => ops.push(FsOp::Stat { path: path.into() }),
+            8 => {
+                let dir = dirs[rng.below(dirs.len() as u64) as usize];
+                ops.push(FsOp::Readdir { path: dir.into() });
+            }
+            9 => ops.push(FsOp::Truncate { path: path.into(), size: rng.below(8 << 10) }),
+            10 => ops.push(FsOp::Rename { from: path.into(), to: "/d1/renamed".into() }),
+            _ => {
+                // create/unlink churn on a dedicated path so fd-backed
+                // files stay resolvable for the open prologue
+                if rng.below(2) == 0 {
+                    ops.push(FsOp::Create { path: "/d1/tmp".into() });
+                } else {
+                    ops.push(FsOp::Unlink { path: "/d1/tmp".into() });
+                }
+            }
+        }
+    }
+    ops
+}
+
+/// Run `ops` against `fs`, either per-op (batch 0) or chopped into
+/// random rings of 2..=9 ops; returns every completion signature.
+fn drive(fs: &mut dyn DistFs, pid: usize, ops: &[FsOp], batch_seed: Option<u64>) -> Vec<String> {
+    let mut out = Vec::with_capacity(ops.len());
+    match batch_seed {
+        None => {
+            for op in ops {
+                for cq in fs.submit(pid, vec![op.clone()]) {
+                    out.push(sig(&cq.result));
+                }
+            }
+        }
+        Some(seed) => {
+            let mut rng = SplitMix64::new(seed);
+            let mut i = 0;
+            while i < ops.len() {
+                let n = (2 + rng.below(8) as usize).min(ops.len() - i);
+                let ring: Vec<FsOp> = ops[i..i + n].to_vec();
+                i += n;
+                for cq in fs.submit(pid, ring) {
+                    out.push(sig(&cq.result));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Observe the final state purely through the API: stat + readdir +
+/// full-content reads over the whole path universe.
+fn observe(fs: &mut dyn DistFs, pid: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    for p in [
+        "/", "/d0", "/d1", "/d0/sub", "/d0/a", "/d0/b", "/d1/c", "/d0/sub/d", "/top",
+        "/d1/renamed", "/d1/tmp",
+    ] {
+        match fs.stat(pid, p) {
+            Ok(st) if st.is_dir => {
+                let names = fs.readdir(pid, p).map(|v| format!("{v:?}"));
+                out.push(format!("{p} dir {:?}", names.map_err(|e| err_class(&e))));
+            }
+            Ok(st) => {
+                let content = fs
+                    .open(pid, p)
+                    .and_then(|fd| {
+                        let d = fs.pread(pid, fd, 0, st.size)?;
+                        fs.close(pid, fd)?;
+                        Ok(d)
+                    })
+                    .map(|d| {
+                        let b = d.materialize();
+                        let sum: u64 = b.iter().map(|&x| x as u64).sum();
+                        format!("{}:{sum}", b.len())
+                    });
+                let content = content.map_err(|e| err_class(&e));
+                out.push(format!("{p} file size={} {content:?}", st.size));
+            }
+            Err(e) => out.push(format!("{p} {}", err_class(&e))),
+        }
+    }
+    out
+}
+
+fn check_system(mk: impl Fn() -> Box<dyn DistFs>, label: &str) {
+    for seed in [7u64, 42, 1234] {
+        let ops = script(seed, 160);
+
+        let mut seq = mk();
+        let sp = seq.spawn_process(0, 0);
+        let seq_sigs = drive(seq.as_mut(), sp, &ops, None);
+
+        let mut bat = mk();
+        let bp = bat.spawn_process(0, 0);
+        let bat_sigs = drive(bat.as_mut(), bp, &ops, Some(seed ^ 0xBEEF));
+
+        assert_eq!(sp, bp);
+        assert_eq!(seq_sigs.len(), bat_sigs.len());
+        for (i, (a, b)) in seq_sigs.iter().zip(&bat_sigs).enumerate() {
+            assert_eq!(a, b, "{label} seed {seed}: completion {i} diverged ({:?})", ops[i]);
+        }
+        assert_eq!(
+            observe(seq.as_mut(), sp),
+            observe(bat.as_mut(), bp),
+            "{label} seed {seed}: final state diverged"
+        );
+    }
+}
+
+#[test]
+fn assise_batches_equal_sequential() {
+    check_system(
+        || Box::new(Cluster::new(ClusterConfig::default().nodes(2))),
+        "assise",
+    );
+}
+
+#[test]
+fn assise_optimistic_batches_equal_sequential() {
+    use assise::sim::CrashMode;
+    check_system(
+        || Box::new(Cluster::new(ClusterConfig::default().nodes(3).mode(CrashMode::Optimistic))),
+        "assise-optimistic",
+    );
+}
+
+#[test]
+fn nfs_batches_equal_sequential() {
+    check_system(
+        || Box::new(NfsLike::new(2, 3 << 30, Default::default())),
+        "nfs",
+    );
+}
+
+#[test]
+fn ceph_batches_equal_sequential() {
+    check_system(
+        || Box::new(CephLike::new(3, 3 << 30, Default::default())),
+        "ceph",
+    );
+}
+
+#[test]
+fn octopus_batches_equal_sequential() {
+    check_system(|| Box::new(OctopusLike::new(2, Default::default())), "octopus");
+}
