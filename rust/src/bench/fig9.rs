@@ -101,7 +101,7 @@ pub fn run(scale: Scale) -> Table {
                     let home = cl % NODES;
                     let chain: Vec<usize> = (0..NODES).map(|i| (home + i) % NODES).collect();
                     for u in (cl..USERS).step_by(CLIQUES) {
-                        c.set_subtree_chain(&format!("/maildir/u{u}"), chain.clone(), vec![]);
+                        c.set_subtree_chain(&format!("/maildir/u{u}"), chain.clone(), vec![]).unwrap();
                     }
                 }
             }

@@ -1,13 +1,23 @@
-//! Membership, failure detection, epochs, and the subtree→chain map.
+//! Membership, failure detection, epochs, and the versioned
+//! subtree→chain routing table.
+//!
+//! Chain identity is **first-class**: every registered chain gets a
+//! stable [`ChainId`], the routing table maps subtrees to ids (ids to
+//! member lists), and every routing change bumps a monotonically
+//! increasing `generation`. Cursors and digest watermarks key on the
+//! id, so they survive membership/routing changes; live shard migration
+//! ([`crate::sim::Cluster::migrate_chain`]) retargets a subtree to a
+//! fresh id while the previous members stay **last-resort read
+//! candidates** (retirement records) until the new chain catches up.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::coherence::EpochTracker;
 use crate::fs::path::is_subtree_of;
-use crate::fs::{NodeId, SocketId};
-use crate::replication::ChainKey;
+use crate::fs::{FsError, NodeId, Result, SocketId};
 use crate::hw::params::HwParams;
 use crate::hw::Nanos;
+use crate::replication::ChainId;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NodeState {
@@ -15,6 +25,20 @@ pub enum NodeState {
     Up,
     /// Declared failed at the contained detection time.
     Down { detected_at: Nanos },
+}
+
+/// A subtree whose previous chain is being retired by a live migration:
+/// its members keep serving reads as last-resort candidates (like
+/// epoch-stale replicas) until the new chain's catch-up time `until`.
+#[derive(Debug, Clone)]
+pub struct RetiredRoute {
+    pub subtree: String,
+    pub members: Vec<NodeId>,
+    /// virtual time the new chain's `clean_upto` catches up (state copy
+    /// complete); past it the old members drop out of read placement
+    pub until: Nanos,
+    /// routing generation the migration moved the subtree to
+    pub generation: u64,
 }
 
 /// The replicated cluster manager.
@@ -25,10 +49,19 @@ pub struct ClusterManager {
     pub epochs: EpochTracker,
     /// node -> epoch current when it went down (for bitmap collection)
     pub down_epoch: HashMap<NodeId, u64>,
-    /// subtree -> ordered replication chain (cache replicas first, then
-    /// reserve replicas). Admin-configured (§3.1); the catch-all "/" maps
-    /// to the default chain.
-    chains: Vec<(String, Chain)>,
+    /// subtree -> chain id (longest prefix first; the catch-all "/"
+    /// maps to `ChainId(0)`)
+    routes: Vec<(String, ChainId)>,
+    /// chain id -> ordered membership (cache replicas first, then
+    /// reserve replicas). Ids referenced by stale cursors outlive their
+    /// routes, so entries are never removed.
+    members: HashMap<ChainId, Chain>,
+    next_chain: u64,
+    /// bumped on every routing change (`set_chain` / `migrate_chain`) —
+    /// the version readers of the routing table can pin
+    generation: u64,
+    /// subtrees mid-migration: previous members as last-resort readers
+    retiring: Vec<RetiredRoute>,
     /// subtree -> current lease manager (SharedFS). Migrates every
     /// `lease_manager_expiry` toward requesters (§3.3).
     lease_managers: HashMap<String, (NodeId, SocketId, Nanos /* since */)>,
@@ -42,11 +75,17 @@ pub struct Chain {
 
 impl ClusterManager {
     pub fn new(nodes: usize, default_chain: Chain) -> Self {
+        let mut members = HashMap::new();
+        members.insert(ChainId(0), default_chain);
         Self {
             nodes: vec![NodeState::Up; nodes],
             epochs: EpochTracker::new(),
             down_epoch: HashMap::new(),
-            chains: vec![("/".to_string(), default_chain)],
+            routes: vec![("/".to_string(), ChainId(0))],
+            members,
+            next_chain: 1,
+            generation: 0,
+            retiring: Vec::new(),
             lease_managers: HashMap::new(),
         }
     }
@@ -87,33 +126,147 @@ impl ClusterManager {
 
     // ------------------------------------------------------------ chains
 
-    /// Register a subtree chain (most-specific-match wins on lookup).
-    pub fn set_chain(&mut self, subtree: &str, chain: Chain) {
-        if let Some(e) = self.chains.iter_mut().find(|(s, _)| s == subtree) {
-            e.1 = chain;
-        } else {
-            self.chains.push((subtree.to_string(), chain));
-            // longest prefix first
-            self.chains.sort_by_key(|(s, _)| std::cmp::Reverse(s.len()));
+    /// Reject chains that would silently misroute at first use: every
+    /// replica must be a known node id, appear once, and at least one
+    /// cache replica must exist (the chain head).
+    fn validate_chain(&self, chain: &Chain) -> Result<()> {
+        if chain.cache_replicas.is_empty() {
+            return Err(FsError::InvalidArgument(
+                "chain needs at least one cache replica".into(),
+            ));
         }
+        let mut seen = HashSet::new();
+        for &n in chain.cache_replicas.iter().chain(chain.reserve_replicas.iter()) {
+            if n >= self.nodes.len() {
+                return Err(FsError::InvalidArgument(format!(
+                    "unknown replica node id {n} (cluster has {} nodes)",
+                    self.nodes.len()
+                )));
+            }
+            if !seen.insert(n) {
+                return Err(FsError::InvalidArgument(format!(
+                    "duplicate replica node id {n} in chain"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn alloc_chain(&mut self, chain: Chain) -> ChainId {
+        let id = ChainId(self.next_chain);
+        self.next_chain += 1;
+        self.members.insert(id, chain);
+        id
+    }
+
+    fn set_route(&mut self, subtree: &str, id: ChainId) {
+        match self.routes.iter_mut().find(|(s, _)| s == subtree) {
+            Some(e) => e.1 = id,
+            None => {
+                self.routes.push((subtree.to_string(), id));
+                // longest prefix first
+                self.routes.sort_by_key(|(s, _)| std::cmp::Reverse(s.len()));
+            }
+        }
+        self.generation += 1;
+    }
+
+    /// Register a subtree chain (most-specific-match wins on lookup).
+    /// Static admin configuration: cursors keyed on a previous chain id
+    /// of the same subtree do NOT carry over — use
+    /// `Cluster::migrate_chain` for the cursor-preserving path. Returns
+    /// the chain's id (re-registering identical membership is a no-op
+    /// returning the existing id).
+    pub fn set_chain(&mut self, subtree: &str, chain: Chain) -> Result<ChainId> {
+        self.validate_chain(&chain)?;
+        if let Some(&(_, id)) = self.routes.iter().find(|(s, _)| s == subtree) {
+            if self.members[&id] == chain {
+                return Ok(id);
+            }
+        }
+        let id = self.alloc_chain(chain);
+        self.set_route(subtree, id);
+        Ok(id)
+    }
+
+    /// Retarget `subtree` to a fresh chain, atomically bumping the
+    /// routing generation. Pure routing flip — the cursor/watermark
+    /// re-keying, drain, and state copy are orchestrated by
+    /// `Cluster::migrate_chain`. Returns (old id, new id).
+    pub fn migrate_route(&mut self, subtree: &str, chain: Chain) -> Result<(ChainId, ChainId)> {
+        self.validate_chain(&chain)?;
+        let old = self.chain_id_for(subtree);
+        let id = self.alloc_chain(chain);
+        self.set_route(subtree, id);
+        Ok((old, id))
+    }
+
+    /// Record that `subtree`'s previous chain members stay last-resort
+    /// read candidates until `until` (the new chain's catch-up time).
+    pub fn begin_retirement(&mut self, subtree: &str, members: Vec<NodeId>, until: Nanos) {
+        self.retiring.push(RetiredRoute {
+            subtree: subtree.to_string(),
+            members,
+            until,
+            generation: self.generation,
+        });
+    }
+
+    /// Drop retirement records whose catch-up time has passed.
+    pub fn retire_expired(&mut self, now: Nanos) {
+        self.retiring.retain(|r| r.until > now);
+    }
+
+    /// Retired members still holding pre-migration copies of `path`'s
+    /// subtree, excluding nodes that are ALSO members of the current
+    /// chain (those keep receiving digests). The digest path marks
+    /// re-written objects stale on these nodes so a last-resort read
+    /// can never serve a pre-migration payload.
+    pub fn retired_members_covering(&self, path: &str) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        if self.retiring.is_empty() {
+            return out;
+        }
+        let current = self.chain_for(path);
+        for r in &self.retiring {
+            if !is_subtree_of(path, &r.subtree) {
+                continue;
+            }
+            for &n in &r.members {
+                if !current.cache_replicas.contains(&n)
+                    && !current.reserve_replicas.contains(&n)
+                    && !out.contains(&n)
+                {
+                    out.push(n);
+                }
+            }
+        }
+        out
+    }
+
+    /// Current routing generation (bumped on every `set_chain` /
+    /// `migrate_chain`).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The chain id routing `path` (most specific subtree match).
+    pub fn chain_id_for(&self, path: &str) -> ChainId {
+        self.routes
+            .iter()
+            .find(|(s, _)| is_subtree_of(path, s))
+            .map(|&(_, id)| id)
+            .expect("catch-all route exists")
+    }
+
+    /// Membership of chain `id`, if it was ever registered.
+    pub fn chain(&self, id: ChainId) -> Option<&Chain> {
+        self.members.get(&id)
     }
 
     /// The chain for `path` (most specific subtree match).
     pub fn chain_for(&self, path: &str) -> &Chain {
-        self.chains
-            .iter()
-            .find(|(s, _)| is_subtree_of(path, s))
-            .map(|(_, c)| c)
-            .expect("catch-all chain exists")
-    }
-
-    /// Canonical cursor key for `path`'s **configured** chain. Keyed on
-    /// the configured membership (not the live view) so per-chain
-    /// replication cursors survive node churn; two subtrees pinned to the
-    /// same chain share a key — they replicate together.
-    pub fn chain_key_for(&self, path: &str) -> ChainKey {
-        let c = self.chain_for(path);
-        ChainKey::new(&c.cache_replicas, &c.reserve_replicas)
+        &self.members[&self.chain_id_for(path)]
     }
 
     /// Live cache replicas for `path`, in chain order. In a cascading
@@ -140,17 +293,20 @@ impl ClusterManager {
     }
 
     /// Ordered candidates for serving a READ of `path` to a process on
-    /// `reader` — the CRAQ apportioned-read placement policy. Nearest
-    /// first: the reader's own node when it is a live chain member
-    /// (colocated NVM beats any RPC; the local-socket vs cross-socket
-    /// distinction is charged by the caller's cost model), then the
-    /// remaining live members with the head LAST — any *clean* replica's
-    /// answer matches the head's, so reads should drain to non-head
-    /// members and leave the head's NIC to the write path. Non-head
-    /// peers are rotated by reader id so concurrent remote readers
-    /// spread instead of piling onto one replica. Empty iff every
-    /// configured replica (cache AND promoted reserves) is down.
-    pub fn read_candidates_for(&self, path: &str, reader: NodeId) -> Vec<NodeId> {
+    /// `reader` at virtual time `now` — the CRAQ apportioned-read
+    /// placement policy. Nearest first: the reader's own node when it is
+    /// a live chain member (colocated NVM beats any RPC; the
+    /// local-socket vs cross-socket distinction is charged by the
+    /// caller's cost model), then the remaining live members with the
+    /// head LAST — any *clean* replica's answer matches the head's, so
+    /// reads should drain to non-head members and leave the head's NIC
+    /// to the write path. Non-head peers are rotated by reader id so
+    /// concurrent remote readers spread instead of piling onto one
+    /// replica. During a live migration the RETIRED chain's members
+    /// trail the list (last resort, like epoch-stale replicas) until
+    /// the new chain's catch-up time passes. Empty iff every eligible
+    /// replica is down.
+    pub fn read_candidates_at(&self, path: &str, reader: NodeId, now: Nanos) -> Vec<NodeId> {
         let live = self.live_chain_for(path);
         let head = live.first().copied();
         let mut out = Vec::with_capacity(live.len());
@@ -171,17 +327,41 @@ impl ClusterManager {
                 out.push(h);
             }
         }
+        for r in &self.retiring {
+            if now >= r.until || !is_subtree_of(path, &r.subtree) {
+                continue;
+            }
+            for &n in &r.members {
+                if self.is_up(n) && !out.contains(&n) {
+                    out.push(n);
+                }
+            }
+        }
         out
     }
 
-    /// Nodes sharing a configured chain (cache or reserve) with `node`,
+    /// [`Self::read_candidates_at`] with every retirement window still
+    /// open — the safe default for non-latency-critical sweeps (cache
+    /// invalidation, refetch donors, metadata anchoring) that must not
+    /// miss a replica that could have served a past read.
+    pub fn read_candidates_for(&self, path: &str, reader: NodeId) -> Vec<NodeId> {
+        self.read_candidates_at(path, reader, 0)
+    }
+
+    /// Nodes sharing a routed chain (cache or reserve) with `node`,
     /// first-appearance order, excluding `node` itself. Under sharded
     /// `set_chain` configurations these are the only peers whose stores
     /// cover the same subtrees — node recovery must resync from one of
     /// them, not from an arbitrary live node.
     pub fn chain_siblings(&self, node: NodeId) -> Vec<NodeId> {
         let mut out = Vec::new();
-        for (_, c) in &self.chains {
+        let mut seen: Vec<ChainId> = Vec::new();
+        for &(_, id) in &self.routes {
+            if seen.contains(&id) {
+                continue;
+            }
+            seen.push(id);
+            let c = &self.members[&id];
             if !c.cache_replicas.contains(&node) && !c.reserve_replicas.contains(&node) {
                 continue;
             }
@@ -329,7 +509,8 @@ mod tests {
     #[test]
     fn chain_lookup_most_specific() {
         let mut m = mgr();
-        m.set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![] });
+        m.set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![] })
+            .unwrap();
         assert_eq!(m.chain_for("/maildir/u1").cache_replicas, vec![2, 0]);
         assert_eq!(m.chain_for("/other").cache_replicas, vec![0, 1]);
     }
@@ -338,24 +519,119 @@ mod tests {
     fn chain_siblings_follow_configured_membership() {
         let mut m = mgr(); // default: cache [0,1], reserve [2]
         assert_eq!(m.chain_siblings(0), vec![1, 2]);
-        m.set_chain("/shard", Chain { cache_replicas: vec![2], reserve_replicas: vec![] });
+        m.set_chain("/shard", Chain { cache_replicas: vec![2], reserve_replicas: vec![] })
+            .unwrap();
         // node 2's siblings come from every chain it serves
         assert_eq!(m.chain_siblings(2), vec![0, 1]);
         // a node in no chain has no siblings
-        m.set_chain("/", Chain { cache_replicas: vec![1], reserve_replicas: vec![] });
+        m.set_chain("/", Chain { cache_replicas: vec![1], reserve_replicas: vec![] }).unwrap();
         assert!(m.chain_siblings(0).is_empty());
     }
 
     #[test]
-    fn chain_key_is_configured_membership() {
+    fn chain_identity_is_stable_and_first_class() {
         let mut m = mgr();
-        m.set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![1] });
-        assert_eq!(m.chain_key_for("/maildir/u1"), ChainKey::new(&[2, 0], &[1]));
-        assert_eq!(m.chain_key_for("/other"), ChainKey::new(&[0, 1], &[2]));
-        // the key tracks configuration, not liveness
+        let id_root = m.chain_id_for("/other");
+        assert_eq!(id_root, ChainId(0));
+        let id_mail = m
+            .set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![1] })
+            .unwrap();
+        assert_eq!(m.chain_id_for("/maildir/u1"), id_mail);
+        assert_ne!(id_mail, id_root);
+        // the id tracks the route, not liveness
         let p = HwParams::default();
         m.node_failed(0, 0, &p);
-        assert_eq!(m.chain_key_for("/other"), ChainKey::new(&[0, 1], &[2]));
+        assert_eq!(m.chain_id_for("/maildir/u1"), id_mail);
+        // re-registering identical membership is a no-op (same id)
+        let g = m.generation();
+        let again = m
+            .set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![1] })
+            .unwrap();
+        assert_eq!(again, id_mail);
+        assert_eq!(m.generation(), g);
+        // a membership change mints a fresh id and bumps the generation
+        let id2 = m
+            .set_chain("/maildir", Chain { cache_replicas: vec![1], reserve_replicas: vec![] })
+            .unwrap();
+        assert_ne!(id2, id_mail);
+        assert_eq!(m.generation(), g + 1);
+        // the retired id's membership stays queryable (stale cursors)
+        assert_eq!(m.chain(id_mail).unwrap().cache_replicas, vec![2, 0]);
+    }
+
+    #[test]
+    fn set_chain_rejects_unknown_and_duplicate_replicas() {
+        let mut m = mgr();
+        assert!(matches!(
+            m.set_chain("/x", Chain { cache_replicas: vec![0, 9], reserve_replicas: vec![] }),
+            Err(FsError::InvalidArgument(_))
+        ));
+        assert!(matches!(
+            m.set_chain("/x", Chain { cache_replicas: vec![0, 1], reserve_replicas: vec![1] }),
+            Err(FsError::InvalidArgument(_))
+        ));
+        assert!(matches!(
+            m.set_chain("/x", Chain { cache_replicas: vec![], reserve_replicas: vec![1] }),
+            Err(FsError::InvalidArgument(_))
+        ));
+        // a failed registration changes nothing
+        assert_eq!(m.chain_id_for("/x"), ChainId(0));
+        assert_eq!(m.generation(), 0);
+    }
+
+    #[test]
+    fn migrate_route_mints_fresh_id_and_bumps_generation() {
+        let mut m = mgr();
+        let g0 = m.generation();
+        let (old, new) = m
+            .migrate_route("/hot", Chain { cache_replicas: vec![2], reserve_replicas: vec![] })
+            .unwrap();
+        assert_eq!(old, ChainId(0), "inherited from the catch-all route");
+        assert_ne!(new, old);
+        assert_eq!(m.generation(), g0 + 1);
+        assert_eq!(m.chain_id_for("/hot/f"), new);
+        assert_eq!(m.chain_id_for("/cold"), ChainId(0), "other subtrees keep their route");
+        assert!(matches!(
+            m.migrate_route("/hot", Chain { cache_replicas: vec![7], reserve_replicas: vec![] }),
+            Err(FsError::InvalidArgument(_))
+        ));
+    }
+
+    #[test]
+    fn retired_members_trail_read_candidates_until_catchup() {
+        let mut m = ClusterManager::new(
+            4,
+            Chain { cache_replicas: vec![0, 1], reserve_replicas: vec![] },
+        );
+        m.migrate_route("/d", Chain { cache_replicas: vec![2, 3], reserve_replicas: vec![] })
+            .unwrap();
+        m.begin_retirement("/d", vec![0, 1], 1_000);
+        // the record pins the post-flip generation it was created under
+        assert_eq!(m.retiring[0].generation, m.generation());
+        // before catch-up: new members lead, old members trail
+        assert_eq!(m.read_candidates_at("/d/f", 0, 500), vec![3, 2, 0, 1]);
+        // at/after catch-up the retired members drop out
+        assert_eq!(m.read_candidates_at("/d/f", 0, 1_000), vec![3, 2]);
+        // the timeless variant keeps them (safe sweeps)
+        assert_eq!(m.read_candidates_for("/d/f", 0), vec![3, 2, 0, 1]);
+        // other subtrees are unaffected
+        assert_eq!(m.read_candidates_at("/other", 2, 500), vec![1, 0]);
+        m.retire_expired(1_000);
+        assert_eq!(m.read_candidates_for("/d/f", 0), vec![3, 2]);
+    }
+
+    #[test]
+    fn retired_members_exclude_current_chain_overlap() {
+        let mut m = ClusterManager::new(
+            3,
+            Chain { cache_replicas: vec![0, 1], reserve_replicas: vec![] },
+        );
+        m.migrate_route("/d", Chain { cache_replicas: vec![1, 2], reserve_replicas: vec![] })
+            .unwrap();
+        m.begin_retirement("/d", vec![0, 1], 1_000);
+        // node 1 is in the NEW chain too: only node 0 is truly retired
+        assert_eq!(m.retired_members_covering("/d/f"), vec![0]);
+        assert!(m.retired_members_covering("/other").is_empty());
     }
 
     #[test]

@@ -9,4 +9,4 @@
 
 pub mod manager;
 
-pub use manager::{ClusterManager, NodeState};
+pub use manager::{ClusterManager, NodeState, RetiredRoute};

@@ -16,6 +16,7 @@ use crate::coherence::LeaseTable;
 use crate::fs::{Fd, FileStore, FsError, NodeId, Result, SocketId};
 use crate::hw::clock::Clock;
 use crate::oplog::{LogOp, UpdateLog};
+use crate::replication::ChainId;
 use crate::Nanos;
 
 /// An open file description.
@@ -23,6 +24,32 @@ use crate::Nanos;
 pub struct OpenFile {
     pub path: String,
     pub offset: u64,
+}
+
+/// One in-flight background replication window: a log suffix issued
+/// down its chains whose ack has not yet been waited for. The `chains`
+/// list is the drain key — a live shard migration barriers exactly the
+/// windows touching the chain being retired, leaving unrelated chains'
+/// windows in flight. `upto` and `generation` record which log prefix
+/// the window covers and the routing generation it was issued under
+/// (the observable contract migration tests pin; the adaptive-window
+/// controller will read them to age out pre-migration samples).
+#[derive(Debug, Clone)]
+pub struct ReplWindow {
+    /// highest log seq the window covers
+    pub upto: u64,
+    /// virtual time the slowest chain's ack arrives
+    pub ack_at: Nanos,
+    /// chains the window's partitions streamed down
+    pub chains: Vec<ChainId>,
+    /// routing generation at issue time
+    pub generation: u64,
+}
+
+impl ReplWindow {
+    pub fn covers_chain(&self, id: ChainId) -> bool {
+        self.chains.contains(&id)
+    }
 }
 
 /// Per-process LibFS state.
@@ -53,11 +80,12 @@ pub struct LibFs {
     /// in-flight background digests, FIFO: (log seq covered, completes at).
     /// Depth > 1 lets digestion pipeline behind the application (§A.1).
     pub pending_digest: std::collections::VecDeque<(u64, Nanos)>,
-    /// in-flight background replication windows, FIFO: (log seq covered,
-    /// chain ack at). Bounded by `ClusterConfig::repl_window`; fsync
-    /// drains the acks (not the digests) — replication is what makes the
-    /// data crash-safe (§3.2 W2), digestion streams behind it.
-    pub pending_repl: std::collections::VecDeque<(u64, Nanos)>,
+    /// in-flight background replication windows, FIFO. Bounded by
+    /// `ClusterConfig::repl_window`; fsync drains the acks (not the
+    /// digests) — replication is what makes the data crash-safe (§3.2
+    /// W2), digestion streams behind it. A shard migration drains only
+    /// the windows covering the retiring chain ([`ReplWindow::chains`]).
+    pub pending_repl: std::collections::VecDeque<ReplWindow>,
 
     fds: HashMap<Fd, OpenFile>,
     next_fd: Fd,

@@ -1,5 +1,7 @@
 //! Latency histograms and throughput accounting for the harnesses.
 
+use std::collections::VecDeque;
+
 use crate::Nanos;
 
 /// A simple exact-sample histogram (experiments collect ≤ a few million
@@ -106,13 +108,43 @@ impl Throughput {
     }
 }
 
+/// One ring-level stall aggregate: the windows issued, stalls hit, and
+/// virtual issue-deferral accumulated by a single completed submission
+/// ring (or by a migration drain, whose `windows` counts the in-flight
+/// windows it *barriered* — those are not new issues, so drain samples
+/// are not reflected in the aggregate issue counters). This is the
+/// **batch-level control signal** the ROADMAP re-scoped adaptive window
+/// sizing onto — one sample per ring already averages over a burst, so
+/// a future BDP-style controller can grow/shrink `repl_window` between
+/// rings without chasing per-op noise.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RingStallSample {
+    /// replication windows the ring issued
+    pub windows: u64,
+    /// how many of them had their wire issue deferred
+    pub stalls: u64,
+    /// total virtual ns of issue deferral inside the ring
+    pub stalled_ns: Nanos,
+}
+
+impl RingStallSample {
+    /// Fraction of the ring's windows that stalled (0.0 when none).
+    pub fn stall_ratio(&self) -> f64 {
+        if self.windows == 0 {
+            return 0.0;
+        }
+        self.stalls as f64 / self.windows as f64
+    }
+}
+
 /// Replication-window backpressure counters (the observability half of
 /// the ROADMAP window-tuning item): a *stall* is a background window
 /// whose wire issue had to wait for an older window's chain ack to free
 /// a slot (`ClusterConfig::repl_window` bound). `stalled_ns` accumulates
-/// the virtual time those issues were deferred — the signal a future
-/// BDP-style adaptive window would feed on.
-#[derive(Debug, Clone, Copy, Default)]
+/// the virtual time those issues were deferred; `rings` keeps the
+/// per-ring aggregates ([`RingStallSample`]) the adaptive-window
+/// controller will feed on.
+#[derive(Debug, Clone, Default)]
 pub struct ReplWindowStats {
     /// background replication windows issued
     pub windows: u64,
@@ -120,9 +152,18 @@ pub struct ReplWindowStats {
     pub stalls: u64,
     /// total virtual ns of issue deferral across all stalls
     pub stalled_ns: Nanos,
+    /// batch-level samples: one per completed submit ring that issued
+    /// at least one window, plus one per migration drain. Bounded to
+    /// the most recent [`Self::RING_SAMPLE_CAP`] — the controller only
+    /// feeds on the recent window, and a long-lived cluster must not
+    /// accumulate one sample per write forever.
+    pub rings: VecDeque<RingStallSample>,
 }
 
 impl ReplWindowStats {
+    /// Retained ring samples (oldest evicted beyond this).
+    pub const RING_SAMPLE_CAP: usize = 1024;
+
     pub fn record_issue(&mut self) {
         self.windows += 1;
     }
@@ -130,6 +171,23 @@ impl ReplWindowStats {
     pub fn record_stall(&mut self, deferred_ns: Nanos) {
         self.stalls += 1;
         self.stalled_ns += deferred_ns;
+    }
+
+    /// Record one completed ring's aggregate (skips empty rings — a
+    /// ring that issued no window carries no control signal).
+    pub fn record_ring(&mut self, sample: RingStallSample) {
+        if sample.windows == 0 && sample.stalled_ns == 0 {
+            return;
+        }
+        if self.rings.len() == Self::RING_SAMPLE_CAP {
+            self.rings.pop_front();
+        }
+        self.rings.push_back(sample);
+    }
+
+    /// The latest ring sample, if any.
+    pub fn last_ring(&self) -> Option<RingStallSample> {
+        self.rings.back().copied()
     }
 
     /// Fraction of windows that stalled (0.0 when none issued).
@@ -254,6 +312,36 @@ mod tests {
         assert_eq!(s.stalls, 2);
         assert_eq!(s.stalled_ns, 2_000);
         assert!((s.stall_ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_samples_capture_batch_level_stalls() {
+        let mut s = ReplWindowStats::default();
+        // an empty ring leaves no sample (no control signal)
+        s.record_ring(RingStallSample::default());
+        assert!(s.rings.is_empty());
+        s.record_ring(RingStallSample { windows: 4, stalls: 1, stalled_ns: 700 });
+        s.record_ring(RingStallSample { windows: 2, stalls: 0, stalled_ns: 0 });
+        assert_eq!(s.rings.len(), 2);
+        let last = s.last_ring().unwrap();
+        assert_eq!(last.windows, 2);
+        assert_eq!(last.stall_ratio(), 0.0);
+        assert!((s.rings[0].stall_ratio() - 0.25).abs() < 1e-9);
+        // a drain-only sample (no windows, deferral time) is kept
+        s.record_ring(RingStallSample { windows: 0, stalls: 1, stalled_ns: 300 });
+        assert_eq!(s.rings.len(), 3);
+    }
+
+    #[test]
+    fn ring_samples_are_bounded() {
+        let mut s = ReplWindowStats::default();
+        for i in 0..(ReplWindowStats::RING_SAMPLE_CAP + 10) as u64 {
+            s.record_ring(RingStallSample { windows: i + 1, stalls: 0, stalled_ns: 0 });
+        }
+        assert_eq!(s.rings.len(), ReplWindowStats::RING_SAMPLE_CAP);
+        // oldest evicted, newest retained
+        assert_eq!(s.rings[0].windows, 11);
+        assert_eq!(s.last_ring().unwrap().windows, (ReplWindowStats::RING_SAMPLE_CAP + 10) as u64);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::replication::ChainKey;
+use crate::replication::{ChainId, EntryRoute};
 
 use super::op::{LogEntry, LogOp};
 
@@ -33,13 +33,16 @@ pub struct UpdateLog {
     pub replicated_upto: u64,
     /// highest seq applied to the shared areas (digested)
     pub digested_upto: u64,
-    /// per-chain replication cursors: for each configured chain, the
+    /// per-chain replication cursors: for each routed chain id, the
     /// highest seq among entries *routed to that chain* that its replicas
     /// have acked. Fail-over recovers the true per-chain prefix from
     /// these (a single global watermark lies for sharded `set_chain`
     /// configurations — a mixed batch is acked by several chains, each
-    /// holding only its own partition).
-    chain_cursors: HashMap<ChainKey, u64>,
+    /// holding only its own partition). Keyed by the stable [`ChainId`],
+    /// not the member list, so a cursor survives membership changes and
+    /// live shard migration (`migrate_chain` re-keys the migrating
+    /// subtree onto its new id).
+    chain_cursors: HashMap<ChainId, u64>,
     /// NVM budget for this log (§B: default 1 GB)
     capacity: u64,
     used: u64,
@@ -102,17 +105,17 @@ impl UpdateLog {
         self.replicated_upto = self.replicated_upto.max(upto.min(self.tail_seq()));
     }
 
-    /// Record that `key`'s chain acked every one of its entries up to
+    /// Record that chain `id` acked every one of its entries up to
     /// `upto` (cursors only advance).
-    pub fn mark_chain_replicated(&mut self, key: ChainKey, upto: u64) {
+    pub fn mark_chain_replicated(&mut self, id: ChainId, upto: u64) {
         let upto = upto.min(self.tail_seq());
-        let c = self.chain_cursors.entry(key).or_insert(0);
+        let c = self.chain_cursors.entry(id).or_insert(0);
         *c = (*c).max(upto);
     }
 
-    /// `key`'s replication cursor (0 = nothing acked on that chain).
-    pub fn chain_cursor(&self, key: &ChainKey) -> u64 {
-        self.chain_cursors.get(key).copied().unwrap_or(0)
+    /// Chain `id`'s replication cursor (0 = nothing acked on that chain).
+    pub fn chain_cursor(&self, id: ChainId) -> u64 {
+        self.chain_cursors.get(&id).copied().unwrap_or(0)
     }
 
     pub fn mark_digested(&mut self, upto: u64) {
@@ -151,23 +154,27 @@ impl UpdateLog {
         lost
     }
 
-    /// Shard-aware fail-over truncation: an entry survives only if its
-    /// own chain acked it — `seq <= cursor(chain_of(entry))` — or it sits
-    /// inside the global prefix (forced by local recovery, which covers
-    /// every chain). Unlike [`Self::truncate_to_replicated`], losses may
-    /// be *interior* (chain A acked further than chain B), so survivors
-    /// are filtered, not just cut at the tail. Returns the lost entries
-    /// in log order.
-    pub fn truncate_to_replicated_by<F>(&mut self, mut chain_of: F) -> Vec<LogEntry>
+    /// Shard-aware fail-over truncation: an entry survives only if
+    /// **every** chain it routes to acked it — `seq <=
+    /// cursor(route.primary)` and, for cross-chain renames, `seq <=
+    /// cursor(route.secondary)` — or it sits inside the global prefix
+    /// (forced by local recovery, which covers every chain). Unlike
+    /// [`Self::truncate_to_replicated`], losses may be *interior*
+    /// (chain A acked further than chain B), so survivors are filtered,
+    /// not just cut at the tail. Returns the lost entries in log order.
+    pub fn truncate_to_replicated_by<F>(&mut self, mut route_of: F) -> Vec<LogEntry>
     where
-        F: FnMut(&LogEntry) -> ChainKey,
+        F: FnMut(&LogEntry) -> EntryRoute,
     {
         let global = self.replicated_upto;
         let mut lost = Vec::new();
         let mut kept = VecDeque::with_capacity(self.entries.len());
         let mut max_kept = global;
         for e in std::mem::take(&mut self.entries) {
-            let acked = e.seq <= global || e.seq <= self.chain_cursor(&chain_of(&e));
+            let route = route_of(&e);
+            let acked = e.seq <= global
+                || (e.seq <= self.chain_cursor(route.primary)
+                    && route.secondary.is_none_or(|c| e.seq <= self.chain_cursor(c)));
             if acked {
                 max_kept = max_kept.max(e.seq);
                 kept.push_back(e);
@@ -296,9 +303,8 @@ mod tests {
         assert_eq!(l.replicated_upto, 1);
     }
 
-    fn key(nodes: &[usize]) -> ChainKey {
-        ChainKey::new(nodes, &[])
-    }
+    const A: ChainId = ChainId(1);
+    const B: ChainId = ChainId(2);
 
     #[test]
     fn chain_cursors_advance_independently() {
@@ -306,38 +312,56 @@ mod tests {
         for p in ["/a/1", "/b/1", "/a/2", "/b/2"] {
             l.append(w(p, 10));
         }
-        l.mark_chain_replicated(key(&[1]), 3); // /a entries: seqs 1, 3
-        l.mark_chain_replicated(key(&[2]), 2); // /b entries: seq 2 only
-        assert_eq!(l.chain_cursor(&key(&[1])), 3);
-        assert_eq!(l.chain_cursor(&key(&[2])), 2);
-        assert_eq!(l.chain_cursor(&key(&[9])), 0);
+        l.mark_chain_replicated(A, 3); // /a entries: seqs 1, 3
+        l.mark_chain_replicated(B, 2); // /b entries: seq 2 only
+        assert_eq!(l.chain_cursor(A), 3);
+        assert_eq!(l.chain_cursor(B), 2);
+        assert_eq!(l.chain_cursor(ChainId(9)), 0);
         // cursors never regress, and clamp to the tail
-        l.mark_chain_replicated(key(&[1]), 1);
-        assert_eq!(l.chain_cursor(&key(&[1])), 3);
-        l.mark_chain_replicated(key(&[2]), 99);
-        assert_eq!(l.chain_cursor(&key(&[2])), 4);
+        l.mark_chain_replicated(A, 1);
+        assert_eq!(l.chain_cursor(A), 3);
+        l.mark_chain_replicated(B, 99);
+        assert_eq!(l.chain_cursor(B), 4);
     }
 
     #[test]
     fn per_chain_truncation_keeps_each_chains_acked_prefix() {
-        // interleaved subtrees: /a -> chain [1], /b -> chain [2]
+        // interleaved subtrees: /a -> chain A, /b -> chain B
         let mut l = UpdateLog::new(1 << 20);
         for p in ["/a/1", "/b/1", "/a/2", "/b/2", "/a/3"] {
             l.append(w(p, 10));
         }
-        // chain [1] acked through seq 3; chain [2] only through seq 2
-        l.mark_chain_replicated(key(&[1]), 3);
-        l.mark_chain_replicated(key(&[2]), 2);
-        let chain_of = |e: &LogEntry| {
-            if e.op.path().starts_with("/a") { key(&[1]) } else { key(&[2]) }
+        // chain A acked through seq 3; chain B only through seq 2
+        l.mark_chain_replicated(A, 3);
+        l.mark_chain_replicated(B, 2);
+        let route_of = |e: &LogEntry| {
+            EntryRoute::one(if e.op.path().starts_with("/a") { A } else { B })
         };
-        let lost = l.truncate_to_replicated_by(chain_of);
-        // lost: /b/2 (seq 4, beyond chain [2]'s cursor — an INTERIOR
-        // loss) and /a/3 (seq 5, beyond chain [1]'s cursor)
+        let lost = l.truncate_to_replicated_by(route_of);
+        // lost: /b/2 (seq 4, beyond chain B's cursor — an INTERIOR
+        // loss) and /a/3 (seq 5, beyond chain A's cursor)
         assert_eq!(lost.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![4, 5]);
         assert_eq!(l.len(), 3);
         assert_eq!(l.tail_seq(), 3);
         assert_eq!(l.replicated_upto, 3);
+    }
+
+    #[test]
+    fn cross_chain_entries_need_both_cursors() {
+        // a cross-chain rename (routes to A AND B) survives only when
+        // BOTH chains acked it
+        let mut l = UpdateLog::new(1 << 20);
+        for p in ["/a/1", "/a/2", "/a/3"] {
+            l.append(w(p, 10));
+        }
+        l.mark_chain_replicated(A, 3);
+        l.mark_chain_replicated(B, 1);
+        // seq 2 pretends to be a cross-chain rename: B lags behind it
+        let lost = l.truncate_to_replicated_by(|e| {
+            if e.seq == 2 { EntryRoute::two(A, B) } else { EntryRoute::one(A) }
+        });
+        assert_eq!(lost.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(l.len(), 2);
     }
 
     #[test]
@@ -350,7 +374,7 @@ mod tests {
             l.append(w("/a", 10));
         }
         l.mark_replicated(3);
-        let lost = l.truncate_to_replicated_by(|_| key(&[7]));
+        let lost = l.truncate_to_replicated_by(|_| EntryRoute::one(ChainId(7)));
         assert!(lost.is_empty());
         assert_eq!(l.len(), 3);
     }
@@ -360,7 +384,7 @@ mod tests {
         let mut l = UpdateLog::new(1 << 20);
         l.append(w("/a", 10));
         let used0 = l.used();
-        let lost = l.truncate_to_replicated_by(|_| key(&[1]));
+        let lost = l.truncate_to_replicated_by(|_| EntryRoute::one(A));
         assert_eq!(lost.len(), 1);
         assert!(l.is_empty());
         assert!(l.used() < used0);

@@ -6,17 +6,18 @@
 //! hop-by-hop down the chain, ack returning along it) and
 //! [`crate::sim::assise::Cluster::digest_log`] (parallel digests). This
 //! module holds the pieces that are independent of the simulation state:
-//! chain-shape math, and the **chain-partitioning** of mixed log batches
-//! that keeps sharded `set_chain` configurations crash-correct — every
-//! fsync'd entry must reach *its* subtree's chain, so a batch spanning
-//! subtrees is split into per-chain partitions that replicate (and
-//! digest) concurrently, each tracked by its own cursor in
-//! [`crate::oplog::UpdateLog`].
+//! chain-shape math, the first-class chain identity ([`ChainId`]) every
+//! cursor and watermark is keyed by, and the **chain-partitioning** of
+//! mixed log batches that keeps sharded `set_chain` configurations
+//! crash-correct — every fsync'd entry must reach *its* subtree's chain,
+//! so a batch spanning subtrees is split into per-chain partitions that
+//! replicate (and digest) concurrently, each tracked by its own cursor
+//! in [`crate::oplog::UpdateLog`].
 
 use std::collections::HashMap;
 
 use crate::fs::{Ino, NodeId};
-use crate::oplog::LogEntry;
+use crate::oplog::{LogEntry, LogOp};
 use crate::Nanos;
 
 /// Expected chain-replication latency multiplier relative to a single
@@ -45,19 +46,39 @@ pub fn split_chain(nodes: &[NodeId], cache: usize) -> (Vec<NodeId>, Vec<NodeId>)
 
 // ===================================================== chain partitioning
 
-/// Canonical identity of a **configured** replication chain: the ordered
-/// cache replicas then the ordered reserve replicas. Cursor bookkeeping
-/// is keyed by the configured chain (not the live view) so a cursor
-/// survives membership churn; routing resolves live members separately.
-#[derive(Debug, Clone, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct ChainKey {
-    pub cache: Vec<NodeId>,
-    pub reserve: Vec<NodeId>,
+/// First-class identity of a **configured** replication chain — the
+/// stable routing key minted by `ClusterManager` when a chain is
+/// registered (`set_chain`) or a shard migrates (`migrate_chain`).
+/// Cursor bookkeeping (per-chain replication cursors, per-(process,
+/// chain) digest watermarks, replicated-log GC gauges) is keyed by this
+/// id, NOT by the member list: membership is a property the routing
+/// table resolves per generation, and keying state on the id is what
+/// lets cursors survive a membership change or a live shard migration.
+/// `ChainId(0)` is the catch-all "/" chain of a fresh cluster.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChainId(pub u64);
+
+/// Every chain that must acknowledge one log entry before it counts as
+/// crash-safe: ordinary ops have one home chain; a **cross-chain
+/// rename** must be acked by BOTH the source and the destination chain
+/// (either alone cannot recover the namespace move on the other side).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EntryRoute {
+    pub primary: ChainId,
+    pub secondary: Option<ChainId>,
 }
 
-impl ChainKey {
-    pub fn new(cache: &[NodeId], reserve: &[NodeId]) -> Self {
-        Self { cache: cache.to_vec(), reserve: reserve.to_vec() }
+impl EntryRoute {
+    pub fn one(id: ChainId) -> Self {
+        Self { primary: id, secondary: None }
+    }
+
+    pub fn two(a: ChainId, b: ChainId) -> Self {
+        if a == b {
+            Self::one(a)
+        } else {
+            Self { primary: a, secondary: Some(b) }
+        }
     }
 }
 
@@ -66,7 +87,7 @@ impl ChainKey {
 /// separate stores, so a partition must land as one unit).
 #[derive(Debug, Clone)]
 pub struct ChainPartition {
-    pub key: ChainKey,
+    pub key: ChainId,
     /// shared-area socket the partition's subtree is pinned to
     pub sock: usize,
     /// representative path (first entry) — resolves the same chain and
@@ -87,65 +108,78 @@ impl ChainPartition {
     }
 }
 
+/// Memoized partition-slot lookup shared by the main loop and the
+/// rename destination probe.
+fn slot_for<'e, F>(
+    path: &'e str,
+    parts: &mut Vec<ChainPartition>,
+    by_path: &mut HashMap<&'e str, usize>,
+    by_target: &mut HashMap<(ChainId, usize), usize>,
+    resolve: &mut F,
+) -> usize
+where
+    F: FnMut(&str) -> (ChainId, usize),
+{
+    match by_path.get(path) {
+        Some(&s) => s,
+        None => {
+            let (key, sock) = resolve(path);
+            let s = *by_target.entry((key, sock)).or_insert_with(|| {
+                parts.push(ChainPartition {
+                    key,
+                    sock,
+                    path: path.to_string(),
+                    entries: Vec::new(),
+                });
+                parts.len() - 1
+            });
+            by_path.insert(path, s);
+            s
+        }
+    }
+}
+
 /// Partition `entries` (ascending seq) by resolved `(chain, socket)`.
-/// `resolve` maps a path to its configured chain key and area socket —
-/// in the simulator that is `ClusterManager::chain_key_for` +
-/// `Cluster::area_socket`; tests pass closures. Renames route by their
-/// source path (a cross-chain rename is a namespace op; its data moved
-/// at digest time). Order within a partition is log order; partitions
-/// are ordered by first appearance.
+/// `resolve` maps a path to its routed chain id and area socket — in
+/// the simulator that is `ClusterManager::chain_id_for` +
+/// `Cluster::area_socket`; tests pass closures. Order within a
+/// partition is log order; partitions are ordered by first appearance.
+///
+/// A rename routes by its source path, EXCEPT when the destination path
+/// resolves to a different `(chain, socket)`: a **cross-chain rename**
+/// is a two-chain namespace op, so the entry rides in *both* chains'
+/// partitions — the destination chain can digest (and recover) the move
+/// without waiting for cross-chain gossip. Targets serving both chains
+/// still receive one copy ([`merge_for_target`] dedups by seq).
 pub fn partition_by_chain<F>(entries: &[LogEntry], mut resolve: F) -> Vec<ChainPartition>
 where
-    F: FnMut(&str) -> (ChainKey, usize),
+    F: FnMut(&str) -> (ChainId, usize),
 {
     let mut parts: Vec<ChainPartition> = Vec::new();
-    // resolve (and clone ChainKeys) once per DISTINCT path, not per
-    // entry — write-heavy batches repeat a handful of paths thousands
-    // of times, and this sits on the background replication hot path
+    // resolve once per DISTINCT path, not per entry — write-heavy
+    // batches repeat a handful of paths thousands of times, and this
+    // sits on the background replication hot path
     let mut by_path: HashMap<&str, usize> = HashMap::new();
-    let mut by_target: HashMap<(ChainKey, usize), usize> = HashMap::new();
+    let mut by_target: HashMap<(ChainId, usize), usize> = HashMap::new();
     for e in entries {
-        let path = e.op.path();
-        let slot = match by_path.get(path) {
-            Some(&s) => s,
-            None => {
-                let (key, sock) = resolve(path);
-                let s = *by_target.entry((key.clone(), sock)).or_insert_with(|| {
-                    parts.push(ChainPartition {
-                        key,
-                        sock,
-                        path: path.to_string(),
-                        entries: Vec::new(),
-                    });
-                    parts.len() - 1
-                });
-                by_path.insert(path, s);
-                s
-            }
-        };
+        let slot = slot_for(e.op.path(), &mut parts, &mut by_path, &mut by_target, &mut resolve);
         parts[slot].entries.push(e.clone());
+        if let LogOp::Rename { to, .. } = &e.op {
+            let dst = slot_for(to, &mut parts, &mut by_path, &mut by_target, &mut resolve);
+            if dst != slot {
+                parts[dst].entries.push(e.clone());
+            }
+        }
     }
     parts
 }
 
-/// Map each path appearing in `parts` to its partition's chain key —
-/// the resolver shape [`crate::sharedfs::SharedFs::digest`] wants for
-/// its per-(process, chain) watermarks.
-pub fn path_chain_map(parts: &[ChainPartition]) -> HashMap<&str, ChainKey> {
-    let mut m: HashMap<&str, ChainKey> = HashMap::new();
-    for part in parts {
-        for e in &part.entries {
-            m.entry(e.op.path()).or_insert_with(|| part.key.clone());
-        }
-    }
-    m
-}
-
 /// Merge several partitions routed to the *same* target (node, socket)
 /// back into one seq-ordered batch. A SharedFS serving multiple chains
-/// keeps a single per-process digest watermark, so interleaved chains
-/// must be applied through one sorted call — applying them as separate
-/// out-of-order batches would let the watermark skip entries.
+/// keeps per-(process, chain) digest watermarks, but interleaved chains
+/// are still applied through one sorted call (one NVM log scan per
+/// target); a cross-chain rename present in two partitions collapses to
+/// one copy here.
 pub fn merge_for_target(parts: &[&ChainPartition]) -> Vec<LogEntry> {
     let mut out: Vec<LogEntry> =
         parts.iter().flat_map(|p| p.entries.iter().cloned()).collect();
@@ -316,14 +350,18 @@ mod tests {
         }
     }
 
-    /// subtree "/a*" -> chain [1], "/b*" -> chain [2], rest -> [0, 1]
-    fn resolver(path: &str) -> (ChainKey, usize) {
+    fn ren(seq: u64, from: &str, to: &str) -> LogEntry {
+        LogEntry { seq, op: LogOp::Rename { from: from.into(), to: to.into() } }
+    }
+
+    /// subtree "/a*" -> chain 1, "/b*" -> chain 2, rest -> chain 0
+    fn resolver(path: &str) -> (ChainId, usize) {
         if path.starts_with("/a") {
-            (ChainKey::new(&[1], &[]), 0)
+            (ChainId(1), 0)
         } else if path.starts_with("/b") {
-            (ChainKey::new(&[2], &[]), 1)
+            (ChainId(2), 1)
         } else {
-            (ChainKey::new(&[0, 1], &[]), 0)
+            (ChainId(0), 0)
         }
     }
 
@@ -339,9 +377,9 @@ mod tests {
         let parts = partition_by_chain(&batch, resolver);
         assert_eq!(parts.len(), 3);
         // first-appearance order, log order within each partition
-        assert_eq!(parts[0].key, ChainKey::new(&[1], &[]));
+        assert_eq!(parts[0].key, ChainId(1));
         assert_eq!(parts[0].entries.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1, 3]);
-        assert_eq!(parts[1].key, ChainKey::new(&[2], &[]));
+        assert_eq!(parts[1].key, ChainId(2));
         assert_eq!(parts[1].sock, 1);
         assert_eq!(parts[1].entries.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2, 5]);
         assert_eq!(parts[2].entries.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![4]);
@@ -360,21 +398,43 @@ mod tests {
 
     #[test]
     fn same_chain_different_socket_stays_split() {
-        // same chain key but different area sockets must not merge: the
+        // same chain id but different area sockets must not merge: the
         // target stores are per-socket
         let batch = vec![w(1, "/a/x", 1), w(2, "/a2", 1)];
         let parts = partition_by_chain(&batch, |p| {
-            (ChainKey::new(&[1], &[]), if p == "/a2" { 1 } else { 0 })
+            (ChainId(1), if p == "/a2" { 1 } else { 0 })
         });
         assert_eq!(parts.len(), 2);
     }
 
     #[test]
-    fn merge_for_target_restores_seq_order() {
-        let batch = vec![w(1, "/a/x", 1), w(2, "/b/y", 1), w(3, "/a/z", 1), w(4, "/b/w", 1)];
+    fn cross_chain_rename_rides_in_both_partitions() {
+        let batch = vec![w(1, "/a/x", 8), ren(2, "/a/x", "/b/y"), w(3, "/b/y", 4)];
+        let parts = partition_by_chain(&batch, resolver);
+        assert_eq!(parts.len(), 2);
+        // source chain: the write and the rename
+        assert_eq!(parts[0].key, ChainId(1));
+        assert_eq!(parts[0].entries.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1, 2]);
+        // destination chain: the rename AND the post-rename write
+        assert_eq!(parts[1].key, ChainId(2));
+        assert_eq!(parts[1].entries.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn same_chain_rename_stays_single() {
+        let batch = vec![ren(1, "/a/x", "/a/y")];
+        let parts = partition_by_chain(&batch, resolver);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].entries.len(), 1);
+    }
+
+    #[test]
+    fn merge_for_target_restores_seq_order_and_dedups_renames() {
+        let batch = vec![w(1, "/a/x", 1), ren(2, "/a/x", "/b/y"), w(3, "/b/y", 1), w(4, "/a/z", 1)];
         let parts = partition_by_chain(&batch, resolver);
         let refs: Vec<&ChainPartition> = parts.iter().collect();
         let merged = merge_for_target(&refs);
+        // the rename appears in both partitions but lands once
         assert_eq!(merged.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
     }
 
@@ -385,13 +445,10 @@ mod tests {
     }
 
     #[test]
-    fn path_chain_map_covers_every_path_once() {
-        let batch = vec![w(1, "/a/x", 1), w(2, "/b/y", 1), w(3, "/a/x", 1)];
-        let parts = partition_by_chain(&batch, resolver);
-        let m = path_chain_map(&parts);
-        assert_eq!(m.len(), 2);
-        assert_eq!(m.get("/a/x"), Some(&ChainKey::new(&[1], &[])));
-        assert_eq!(m.get("/b/y"), Some(&ChainKey::new(&[2], &[])));
+    fn entry_route_folds_identical_chains() {
+        assert_eq!(EntryRoute::two(ChainId(3), ChainId(3)), EntryRoute::one(ChainId(3)));
+        let r = EntryRoute::two(ChainId(1), ChainId(2));
+        assert_eq!(r.secondary, Some(ChainId(2)));
     }
 
     #[test]
@@ -438,7 +495,7 @@ mod tests {
         let batch = vec![w(1, "/a/x", 1), w(2, "/b/y", 1), w(3, "/a/z", 1), w(4, "/b/w", 1)];
         let parts = partition_by_chain(&batch, resolver);
         let routed = route_partitions(&parts, |p| {
-            if p.key == ChainKey::new(&[1], &[]) {
+            if p.key == ChainId(1) {
                 vec![(1, 0)]
             } else {
                 vec![(1, 0), (2, 0), (2, 0)] // duplicate targets tolerated

@@ -13,7 +13,7 @@ use std::collections::{HashMap, HashSet};
 use crate::coherence::LeaseTable;
 use crate::fs::{FileStore, Ino, NodeId, ProcId, Result, SocketId, Tier};
 use crate::oplog::{apply_entries, DigestStats, LogEntry};
-use crate::replication::{ChainKey, VersionTable};
+use crate::replication::{ChainId, VersionTable};
 
 /// Per-socket SharedFS daemon state.
 #[derive(Debug, Clone)]
@@ -25,16 +25,20 @@ pub struct SharedFs {
     pub store: FileStore,
     /// lease table for subtrees this SharedFS manages
     pub leases: LeaseTable,
-    /// per-(process log, configured chain) digest watermark (idempotent
+    /// per-(process log, routed chain) digest watermark (idempotent
     /// replay, §3.4). Keyed per chain so a replica serving several
     /// subtree chains can apply each chain's partitions independently —
     /// chain B's batch arriving before chain A's no longer skips A's
     /// interleaved entries — and can GC its replicated-log region per
-    /// chain instead of waiting for the merged prefix.
-    pub applied_upto: HashMap<(ProcId, ChainKey), u64>,
+    /// chain instead of waiting for the merged prefix. The key is the
+    /// stable [`ChainId`]; a live shard migration re-keys the migrating
+    /// subtree's watermarks onto the new id
+    /// ([`Self::adopt_chain_watermarks`] / [`Self::seed_chain_watermark`])
+    /// so replay stays idempotent across the routing change.
+    pub applied_upto: HashMap<(ProcId, ChainId), u64>,
     /// bytes of each (process, chain) replicated-log region held on this
     /// replica's NVM, GC'd per chain as its partitions digest
-    pub repl_log_bytes: HashMap<(ProcId, ChainKey), u64>,
+    pub repl_log_bytes: HashMap<(ProcId, ChainId), u64>,
     /// CRAQ per-object clean/dirty versions (apportioned reads): digest
     /// apply marks objects dirty; the tail commit ack marks them clean
     pub versions: VersionTable,
@@ -81,7 +85,7 @@ impl SharedFs {
     ///
     /// **Ordering contract** (shard-aware chains): the batch must be
     /// ascending in seq, and `chain_of` must resolve each entry's path
-    /// to its configured chain (`ClusterManager::chain_key_for` in the
+    /// to its routed chain id (`ClusterManager::chain_id_for` in the
     /// simulator; tests pass closures). The watermark is kept per
     /// (process, chain), so a batch may carry any subset of chains in
     /// any cross-chain arrival order — each chain's partition is applied
@@ -96,7 +100,7 @@ impl SharedFs {
         mut chain_of: F,
     ) -> Result<DigestStats>
     where
-        F: FnMut(&str) -> ChainKey,
+        F: FnMut(&str) -> ChainId,
     {
         debug_assert!(
             entries.windows(2).all(|w| w[0].seq < w[1].seq),
@@ -114,7 +118,7 @@ impl SharedFs {
                 // order is preserved within each group (chains own
                 // disjoint subtrees, so cross-group apply order cannot
                 // change the resulting store)
-                let mut groups: Vec<(ChainKey, Vec<LogEntry>)> = Vec::new();
+                let mut groups: Vec<(ChainId, Vec<LogEntry>)> = Vec::new();
                 for e in entries {
                     let key = chain_of(e.op.path());
                     match groups.iter_mut().find(|(k, _)| *k == key) {
@@ -148,13 +152,13 @@ impl SharedFs {
     fn apply_chain_group(
         &mut self,
         pid: ProcId,
-        key: ChainKey,
+        key: ChainId,
         group: &[LogEntry],
         now: u64,
     ) -> Result<DigestStats> {
-        let upto = *self.applied_upto.get(&(pid, key.clone())).unwrap_or(&0);
+        let upto = *self.applied_upto.get(&(pid, key)).unwrap_or(&0);
         let (stats, new_upto) = apply_entries(&mut self.store, group, upto, Tier::Hot, now)?;
-        self.applied_upto.insert((pid, key.clone()), new_upto);
+        self.applied_upto.insert((pid, key), new_upto);
         // the chain's entries are in the shared area now
         let group_bytes: u64 = group.iter().map(|e| e.bytes()).sum();
         let gc_key = (pid, key);
@@ -170,15 +174,42 @@ impl SharedFs {
     }
 
     /// Account `bytes` of `pid`'s log landing in this replica's
-    /// replicated-log region for `key`'s chain (GC'd per chain on
+    /// replicated-log region for chain `key` (GC'd per chain on
     /// digest).
-    pub fn note_replicated(&mut self, pid: ProcId, key: ChainKey, bytes: u64) {
+    pub fn note_replicated(&mut self, pid: ProcId, key: ChainId, bytes: u64) {
         *self.repl_log_bytes.entry((pid, key)).or_insert(0) += bytes;
     }
 
     /// Un-GC'd replicated-log bytes held for (`pid`, `key`).
-    pub fn repl_log_bytes_for(&self, pid: ProcId, key: &ChainKey) -> u64 {
-        self.repl_log_bytes.get(&(pid, key.clone())).copied().unwrap_or(0)
+    pub fn repl_log_bytes_for(&self, pid: ProcId, key: ChainId) -> u64 {
+        self.repl_log_bytes.get(&(pid, key)).copied().unwrap_or(0)
+    }
+
+    /// Migration re-key (overlap members): a replica serving the
+    /// migrating subtree under `old` keeps its idempotent-replay
+    /// protection when the subtree re-routes to `new` — every (process,
+    /// `old`) watermark is folded into (process, `new`) (floors only
+    /// rise; the `old` key stays for chains it still serves).
+    pub fn adopt_chain_watermarks(&mut self, old: ChainId, new: ChainId) {
+        let carried: Vec<(ProcId, u64)> = self
+            .applied_upto
+            .iter()
+            .filter(|((_, k), _)| *k == old)
+            .map(|(&(p, _), &v)| (p, v))
+            .collect();
+        for (pid, v) in carried {
+            self.seed_chain_watermark(pid, new, v);
+        }
+    }
+
+    /// Migration re-key (fresh members): the state copy installed onto
+    /// this replica embodies every already-digested entry of the
+    /// migrating subtree, so (pid, `id`) starts at the copy source's
+    /// watermark instead of 0 — a later full-log digest (fail-over)
+    /// must not re-apply what the copy already materialized.
+    pub fn seed_chain_watermark(&mut self, pid: ProcId, id: ChainId, upto: u64) {
+        let w = self.applied_upto.entry((pid, id)).or_insert(0);
+        *w = (*w).max(upto);
     }
 
     /// Bytes currently in the hot area beyond budget (must migrate).
@@ -263,9 +294,9 @@ impl SharedFs {
             .unwrap_or(0)
     }
 
-    /// Highest seq of `pid`'s log applied for `key`'s chain (0 = none).
-    pub fn applied_watermark_for(&self, pid: ProcId, key: &ChainKey) -> u64 {
-        self.applied_upto.get(&(pid, key.clone())).copied().unwrap_or(0)
+    /// Highest seq of `pid`'s log applied for chain `key` (0 = none).
+    pub fn applied_watermark_for(&self, pid: ProcId, key: ChainId) -> u64 {
+        self.applied_upto.get(&(pid, key)).copied().unwrap_or(0)
     }
 }
 
@@ -276,8 +307,8 @@ mod tests {
     use crate::oplog::LogOp;
 
     /// single-chain resolver for tests that don't shard
-    fn one_chain(_: &str) -> ChainKey {
-        ChainKey::default()
+    fn one_chain(_: &str) -> ChainId {
+        ChainId::default()
     }
 
     fn entries() -> Vec<LogEntry> {
@@ -362,12 +393,12 @@ mod tests {
         assert!(!s.is_stale(ino));
     }
 
-    /// "/a*" -> chain [1]; "/b*" -> chain [2]
-    fn two_chains(path: &str) -> ChainKey {
+    /// "/a*" -> chain 1; "/b*" -> chain 2
+    fn two_chains(path: &str) -> ChainId {
         if path.starts_with("/a") {
-            ChainKey::new(&[1], &[])
+            ChainId(1)
         } else {
-            ChainKey::new(&[2], &[])
+            ChainId(2)
         }
     }
 
@@ -398,8 +429,8 @@ mod tests {
         let st_a = s.digest(1, &chain_a, 2, two_chains).unwrap();
         assert_eq!(st_a.applied, 2, "chain A entries must not be skipped");
         assert!(s.store.exists("/a") && s.store.exists("/b"));
-        assert_eq!(s.applied_watermark_for(1, &ChainKey::new(&[1], &[])), 2);
-        assert_eq!(s.applied_watermark_for(1, &ChainKey::new(&[2], &[])), 4);
+        assert_eq!(s.applied_watermark_for(1, ChainId(1)), 2);
+        assert_eq!(s.applied_watermark_for(1, ChainId(2)), 4);
         assert_eq!(s.applied_watermark(1), 4);
         // replays of either chain are still idempotent
         let st = s.digest(1, &chain_b, 3, two_chains).unwrap();
@@ -409,19 +440,38 @@ mod tests {
     #[test]
     fn repl_log_region_gcs_per_chain() {
         let mut s = SharedFs::new(0, 0, 1 << 30);
-        let ka = ChainKey::new(&[1], &[]);
-        let kb = ChainKey::new(&[2], &[]);
+        let ka = ChainId(1);
+        let kb = ChainId(2);
         let chain_a = vec![create_at(1, "/a"), w(2, "/a", 1)];
         let chain_b = vec![create_at(3, "/b"), w(4, "/b", 2)];
         let bytes_a: u64 = chain_a.iter().map(|e| e.bytes()).sum();
         let bytes_b: u64 = chain_b.iter().map(|e| e.bytes()).sum();
-        s.note_replicated(1, ka.clone(), bytes_a);
-        s.note_replicated(1, kb.clone(), bytes_b);
+        s.note_replicated(1, ka, bytes_a);
+        s.note_replicated(1, kb, bytes_b);
         // digesting chain A's partition frees ONLY chain A's region
         s.digest(1, &chain_a, 1, two_chains).unwrap();
-        assert_eq!(s.repl_log_bytes_for(1, &ka), 0);
-        assert_eq!(s.repl_log_bytes_for(1, &kb), bytes_b);
+        assert_eq!(s.repl_log_bytes_for(1, ka), 0);
+        assert_eq!(s.repl_log_bytes_for(1, kb), bytes_b);
         s.digest(1, &chain_b, 2, two_chains).unwrap();
-        assert_eq!(s.repl_log_bytes_for(1, &kb), 0);
+        assert_eq!(s.repl_log_bytes_for(1, kb), 0);
+    }
+
+    #[test]
+    fn migration_rekey_carries_watermarks_to_the_new_id() {
+        // a replica digested chain 1's entries; the subtree then
+        // migrates to chain 3 — replay protection must carry over so a
+        // fail-over's full-log digest cannot double-apply
+        let mut s = SharedFs::new(0, 0, 1 << 30);
+        let chain_a = vec![create_at(1, "/a"), w(2, "/a", 1)];
+        s.digest(1, &chain_a, 1, two_chains).unwrap();
+        assert_eq!(s.applied_watermark_for(1, ChainId(1)), 2);
+        s.adopt_chain_watermarks(ChainId(1), ChainId(3));
+        assert_eq!(s.applied_watermark_for(1, ChainId(3)), 2);
+        // replaying the same entries under the NEW id is a no-op
+        let st = s.digest(1, &chain_a, 2, |_| ChainId(3)).unwrap();
+        assert_eq!((st.applied, st.skipped), (0, 2));
+        // seeding never lowers an existing floor
+        s.seed_chain_watermark(1, ChainId(3), 1);
+        assert_eq!(s.applied_watermark_for(1, ChainId(3)), 2);
     }
 }

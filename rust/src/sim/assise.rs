@@ -29,10 +29,10 @@ use crate::hw::nvm::{DramDevice, NvmDevice, Pattern};
 use crate::hw::params::HwParams;
 use crate::hw::rdma::Fabric;
 use crate::hw::ssd::SsdDevice;
-use crate::libfs::LibFs;
-use crate::metrics::{CraqStats, ReplWindowStats};
+use crate::libfs::{LibFs, ReplWindow};
+use crate::metrics::{CraqStats, ReplWindowStats, RingStallSample};
 use crate::oplog::{coalesce, LogEntry, LogOp};
-use crate::replication::{partition_by_chain, route_partitions, ReadVersion};
+use crate::replication::{partition_by_chain, route_partitions, ChainId, ReadVersion};
 use crate::sharedfs::SharedFs;
 use crate::sim::api::{DistFs, FsCompletion, FsOp, FsOut};
 use crate::sim::{ClusterConfig, CrashMode};
@@ -217,8 +217,17 @@ impl Cluster {
     }
 
     /// Pin a subtree to a specific replication chain (Postfix sharding).
-    pub fn set_subtree_chain(&mut self, subtree: &str, cache: Vec<NodeId>, reserve: Vec<NodeId>) {
-        self.mgr.set_chain(subtree, Chain { cache_replicas: cache, reserve_replicas: reserve });
+    /// Static admin configuration: rejects unknown or duplicate replica
+    /// node ids (previously accepted silently and misrouted at first
+    /// use). For the cursor-preserving runtime path use
+    /// [`Self::migrate_chain`].
+    pub fn set_subtree_chain(
+        &mut self,
+        subtree: &str,
+        cache: Vec<NodeId>,
+        reserve: Vec<NodeId>,
+    ) -> Result<ChainId> {
+        self.mgr.set_chain(subtree, Chain { cache_replicas: cache, reserve_replicas: reserve })
     }
 
     pub(crate) fn area_socket(&self, path: &str) -> SocketId {
@@ -591,11 +600,11 @@ impl Cluster {
     /// what makes the data crash-safe.
     pub fn replicate_log(&mut self, pid: ProcId) -> Result<()> {
         let mut ack = self.procs[pid].clock.now;
-        while let Some((_, a)) = self.procs[pid].pending_repl.pop_front() {
-            ack = ack.max(a);
+        while let Some(w) = self.procs[pid].pending_repl.pop_front() {
+            ack = ack.max(w.ack_at);
         }
         let t0 = self.procs[pid].clock.now;
-        let residual = self.replicate_suffix_at(pid, t0)?;
+        let (residual, _) = self.replicate_suffix_at(pid, t0)?;
         self.procs[pid].clock.advance_to(ack.max(residual));
         Ok(())
     }
@@ -609,13 +618,13 @@ impl Cluster {
     fn replicate_window(&mut self, pid: ProcId, t_start: Nanos) -> Result<Nanos> {
         let cap = self.cfg.repl_window.max(1);
         // acked windows free their slots
-        while matches!(self.procs[pid].pending_repl.front(), Some(&(_, a)) if a <= t_start) {
+        while matches!(self.procs[pid].pending_repl.front(), Some(w) if w.ack_at <= t_start) {
             self.procs[pid].pending_repl.pop_front();
         }
         let mut t_issue = t_start;
         while self.procs[pid].pending_repl.len() >= cap {
-            let (_, a) = self.procs[pid].pending_repl.pop_front().unwrap();
-            t_issue = t_issue.max(a);
+            let w = self.procs[pid].pending_repl.pop_front().unwrap();
+            t_issue = t_issue.max(w.ack_at);
         }
         self.repl_window_stats.record_issue();
         if t_issue > t_start {
@@ -623,18 +632,24 @@ impl Cluster {
             // deferred until the oldest ack frees a slot
             self.repl_window_stats.record_stall(t_issue - t_start);
         }
-        let ack = self.replicate_suffix_at(pid, t_issue)?;
+        let (ack, chains) = self.replicate_suffix_at(pid, t_issue)?;
         let tail = self.procs[pid].log.tail_seq();
         if ack > t_issue {
-            self.procs[pid].pending_repl.push_back((tail, ack));
+            self.procs[pid].pending_repl.push_back(ReplWindow {
+                upto: tail,
+                ack_at: ack,
+                chains,
+                generation: self.mgr.generation(),
+            });
         }
         Ok(ack)
     }
 
     /// Cursor-based replication of the whole unreplicated suffix:
-    /// starts at `t_start`, returns the slowest chain's ack time WITHOUT
-    /// advancing the proc clock (async digest path charges the devices
-    /// but lets the application keep running, §A.1).
+    /// starts at `t_start`, returns (slowest chain's ack time, chains
+    /// the suffix streamed down) WITHOUT advancing the proc clock
+    /// (async digest path charges the devices but lets the application
+    /// keep running, §A.1).
     ///
     /// Shard-aware (§3.2 W2): the suffix is **partitioned by resolved
     /// chain** — under a sharded `set_chain` configuration a mixed batch
@@ -642,41 +657,54 @@ impl Cluster {
     /// replicas or fail-over silently loses acknowledged writes. The
     /// partitions stream down their chains concurrently and advance
     /// per-chain cursors in the log; the global prefix watermark only
-    /// advances once every partition is acked.
-    fn replicate_suffix_at(&mut self, pid: ProcId, t_start: Nanos) -> Result<Nanos> {
-        let p = self.p();
+    /// advances once every partition is acked. Entries a chain already
+    /// acked (cursor ≥ seq — e.g. shipped ahead of time by a live
+    /// migration) are not re-sent.
+    fn replicate_suffix_at(&mut self, pid: ProcId, t_start: Nanos) -> Result<(Nanos, Vec<ChainId>)> {
         let pnode = self.procs[pid].node;
         let tail = self.procs[pid].log.tail_seq();
         let from = self.procs[pid].log.replicated_upto;
         if from >= tail {
-            return Ok(t_start);
+            return Ok((t_start, Vec::new()));
         }
         let entries: Vec<LogEntry> = self.procs[pid].log.unreplicated().cloned().collect();
         if entries.is_empty() {
             self.procs[pid].log.mark_replicated(tail);
-            return Ok(t_start);
+            return Ok((t_start, Vec::new()));
         }
         let parts = partition_by_chain(&entries, |path| {
-            (self.mgr.chain_key_for(path), self.area_socket(path))
+            (self.mgr.chain_id_for(path), self.area_socket(path))
         });
         let mut ack_max = t_start;
+        let mut chains_hit: Vec<ChainId> = Vec::new();
         for part in parts {
+            // entries this chain already acked (a migration may have
+            // shipped the suffix ahead of the global watermark)
+            let cursor = self.procs[pid].log.chain_cursor(part.key);
+            let pending: Vec<LogEntry> =
+                part.entries.iter().filter(|e| e.seq > cursor).cloned().collect();
+            if pending.is_empty() {
+                continue;
+            }
+            if !chains_hit.contains(&part.key) {
+                chains_hit.push(part.key);
+            }
             // optimistic mode coalesces each partition before the wire
             // (coalescing across chains would merge ops that land on
             // different replica sets)
             let wire_entries = if self.cfg.mode == CrashMode::Optimistic {
-                let c = coalesce(&part.entries);
+                let c = coalesce(&pending);
                 self.coalesce_saved_bytes += c.saved_bytes;
                 c.entries
             } else {
-                part.entries.clone()
+                pending.clone()
             };
             let wire_bytes: u64 = wire_entries.iter().map(|e| e.bytes()).sum();
             // GC accounting uses the RAW entry bytes: digest later walks
             // the un-coalesced log entries, and its per-chain GC subtracts
             // raw sizes — noting coalesced wire bytes would zero the
             // gauge early in optimistic mode
-            let raw_bytes = part.wire_bytes();
+            let raw_bytes: u64 = pending.iter().map(|e| e.bytes()).sum();
             let chain = self.mgr.live_chain_for(&part.path);
             let reserves = self.mgr.live_reserves_for(&part.path);
             let full_chain: Vec<NodeId> = chain
@@ -693,45 +721,29 @@ impl Cluster {
                 continue;
             }
 
-            // Chain replication LibFS -> r1 -> r2 -> ... (§3.2). Queue
-            // bookings for every pipeline stage are made at `t_start`
-            // (the batch streams through the stages; booking them
-            // serially at *future* cursor times would wrongly block
-            // other processes' present-time accesses on the shared
-            // devices) — so partitions on disjoint chains replicate in
-            // parallel, contending only on the sender NIC. The *fixed*
-            // per-hop latencies (RDMA persist + chain-forward RPC + ack
-            // path) accumulate serially per chain — these are what make
-            // Assise-3r ≈ 2.2× Assise in Fig. 2a.
-            let mut queue_done = t_start;
-            let mut prev = pnode;
-            let mut fixed: Nanos = 0;
-            for &r in &full_chain {
-                // wire: sender tx + receiver rx occupy their queues
-                let tx_done = self.fabric.nics[prev].tx.access(t_start, wire_bytes, 0, p.rdma_bw);
-                let rx_done = self.fabric.nics[r].rx.access(t_start, wire_bytes, 0, p.rdma_bw);
-                // remote NVM append into the reserved replicated-log
-                // region on the partition's area socket
-                let rsock = self.clamped_sock(r, part.sock);
-                let nvm_done = self.nodes[r].sockets[rsock].nvm.write_log(t_start, wire_bytes, &p);
+            // Chain replication LibFS -> r1 -> r2 -> ... (§3.2): the
+            // shared per-hop walk ([`Self::chain_ship_cost`]) books the
+            // queues at `t_start` so partitions on disjoint chains
+            // replicate in parallel, contending only on the sender NIC.
+            let hops: Vec<(NodeId, SocketId)> = full_chain
+                .iter()
+                .map(|&r| (r, self.clamped_sock(r, part.sock)))
+                .collect();
+            for &(r, rsock) in &hops {
                 // the replica now holds this partition's entries for this
                 // chain until its digest GCs them (per-chain watermark)
                 self.nodes[r].sockets[rsock]
                     .sharedfs
-                    .note_replicated(pid, part.key.clone(), raw_bytes);
-                queue_done = queue_done.max(tx_done).max(rx_done).max(nvm_done);
-                fixed += p.rdma_write_lat + p.rpc_overhead; // persist + forward RPC
-                prev = r;
+                    .note_replicated(pid, part.key, raw_bytes);
             }
-            // ack travels back along the chain (small messages)
-            fixed += full_chain.len() as Nanos * (p.rdma_read_lat / 2);
-            ack_max = ack_max.max(queue_done + fixed);
+            let ack = self.chain_ship_cost(Some(pnode), &hops, wire_bytes, t_start);
+            ack_max = ack_max.max(ack);
             self.replicated_bytes += wire_bytes * full_chain.len() as u64;
             self.procs[pid].log.mark_chain_replicated(part.key, max_seq);
         }
         // every partition is acked on its own chain: the prefix is whole
         self.procs[pid].log.mark_replicated(tail);
-        Ok(ack_max)
+        Ok((ack_max, chains_hit))
     }
 
     /// Digest `pid`'s replicated-but-undigested entries on every chain
@@ -775,15 +787,25 @@ impl Cluster {
             }
         }
 
+        // retirement windows that have fully elapsed stop costing the
+        // digest path their invalidation sweep (the new chain serves
+        // alone past catch-up; clocks are per-process but monotonic
+        // enough — a record pruned here was catch-up-complete for every
+        // writer that could still produce digests)
+        self.mgr.retire_expired(t_start);
+
         // shard-aware routing (§3.2, §A.1): each partition digests on
         // its own chain's replicas into its own area socket
         let parts = partition_by_chain(&entries, |path| {
-            (self.mgr.chain_key_for(path), self.area_socket(path))
+            (self.mgr.chain_id_for(path), self.area_socket(path))
         });
 
-        // path -> configured chain of its partition, for the replicas'
-        // per-(process, chain) digest watermarks
-        let key_of = crate::replication::path_chain_map(&parts);
+        // path -> routed chain id, for the replicas' per-(process,
+        // chain) digest watermarks. Built from the routing table (not
+        // partition first-appearance) so the same entry always groups
+        // under the same id across digest and fail-over replays.
+        let key_of = self.chain_ids_of(&entries);
+        let has_xrename = self.has_cross_chain_rename(&entries);
 
         // a node serving several chains still receives ONE seq-sorted
         // batch per (node, socket) — one NVM log scan, one apply call —
@@ -812,6 +834,13 @@ impl Cluster {
             } else {
                 p.rdma_read_lat + 2 * p.rpc_overhead
             };
+            // a cross-chain rename's destination replica may lack the
+            // source file: materialize it first (two-chain namespace op)
+            let t_stage = if has_xrename {
+                self.stage_cross_chain_renames(pid, r, sock, batch, &entries, t0)?
+            } else {
+                t0
+            };
             // read the log region: the LOCAL node's log lives on the
             // process's socket; remote replicas landed it in the area
             // socket's reserved log region
@@ -824,15 +853,21 @@ impl Cluster {
             } else {
                 self.nodes[r].sockets[sock].nvm.write(t0, data_bytes, &p)
             };
-            let done = read_done.max(write_done) + init_lat;
+            let done = read_done.max(write_done).max(t_stage) + init_lat;
             // apply to the replica's store, per-chain watermarks
             let sfs = &mut self.nodes[r].sockets[sock].sharedfs;
             sfs.digest(pid, batch, done, |path| {
-                key_of.get(path).cloned().unwrap_or_default()
+                key_of.get(path).copied().unwrap_or_default()
             })?;
             done_at.insert((r, sock), done);
             done_max = done_max.max(done);
         }
+
+        // objects re-digested after a migration must never be served
+        // from the retired chain's members again: mark them stale there
+        // (last-resort reads then refetch from the new chain, exactly
+        // like epoch recovery)
+        self.invalidate_on_retired(&parts);
 
         // CRAQ clean/dirty versioning (apportioned reads): a partition's
         // objects go dirty on every routed replica at its apply time and
@@ -936,6 +971,253 @@ impl Cluster {
             }
             if let Ok(ino) = self.nodes[node].sockets[sock].sharedfs.store.resolve(path) {
                 self.nodes[node].sockets[sock].sharedfs.versions.bump(ino, apply, clean_at);
+            }
+        }
+    }
+
+    /// One chain-replication pipeline walk, shared by the fsync/window
+    /// replication path and live migration so the cost model cannot
+    /// drift between them: stream `wire_bytes` from `sender` hop-by-hop
+    /// down `hops` (each a `(node, socket)` whose NVM log region
+    /// receives the batch), booking every stage's queues at `t_start`
+    /// (the batch streams through the stages; booking serially at
+    /// *future* cursor times would wrongly block other processes'
+    /// present-time accesses on the shared devices). The *fixed*
+    /// per-hop latencies (RDMA persist + chain-forward RPC) accumulate
+    /// serially per chain, plus the small-message ack path back along
+    /// it — these are what make Assise-3r ≈ 2.2× Assise in Fig. 2a.
+    /// Returns the chain ack time. `sender: None` books no wire (the
+    /// data is already resident on the hops).
+    pub(crate) fn chain_ship_cost(
+        &mut self,
+        sender: Option<NodeId>,
+        hops: &[(NodeId, SocketId)],
+        wire_bytes: u64,
+        t_start: Nanos,
+    ) -> Nanos {
+        let p = self.p();
+        let mut queue_done = t_start;
+        let mut fixed: Nanos = 0;
+        let mut prev = sender;
+        for &(r, rsock) in hops {
+            if let Some(s) = prev {
+                // wire: sender tx + receiver rx occupy their queues
+                let tx_done = self.fabric.nics[s].tx.access(t_start, wire_bytes, 0, p.rdma_bw);
+                let rx_done = self.fabric.nics[r].rx.access(t_start, wire_bytes, 0, p.rdma_bw);
+                queue_done = queue_done.max(tx_done).max(rx_done);
+            }
+            // remote NVM append into the reserved replicated-log region
+            let nvm_done = self.nodes[r].sockets[rsock].nvm.write_log(t_start, wire_bytes, &p);
+            queue_done = queue_done.max(nvm_done);
+            fixed += p.rdma_write_lat + p.rpc_overhead; // persist + forward RPC
+            prev = Some(r);
+        }
+        // ack travels back along the chain (small messages)
+        fixed += hops.len() as Nanos * (p.rdma_read_lat / 2);
+        queue_done + fixed
+    }
+
+    /// Path → routed chain id for every distinct path in `entries`
+    /// (renames resolve by their source path, matching `LogOp::path`).
+    /// The digest watermarks key on this map; building it from the live
+    /// routing table keeps grouping deterministic across replays.
+    pub(crate) fn chain_ids_of(&self, entries: &[LogEntry]) -> HashMap<String, ChainId> {
+        let mut m: HashMap<String, ChainId> = HashMap::new();
+        for e in entries {
+            let path = e.op.path();
+            if m.contains_key(path) {
+                continue; // resolve (and allocate) once per distinct path
+            }
+            m.insert(path.to_string(), self.mgr.chain_id_for(path));
+        }
+        m
+    }
+
+    /// Does the batch carry a rename whose source and destination
+    /// resolve to different chains or area sockets?
+    pub(crate) fn has_cross_chain_rename(&self, entries: &[LogEntry]) -> bool {
+        entries.iter().any(|e| match &e.op {
+            LogOp::Rename { from, to } => {
+                self.mgr.chain_id_for(from) != self.mgr.chain_id_for(to)
+                    || self.area_socket(from) != self.area_socket(to)
+            }
+            _ => false,
+        })
+    }
+
+    /// Make `target`'s store able to apply every cross-chain rename in
+    /// `batch`: ensure the destination's parent directory exists (the
+    /// source chain's replicas never digested the destination subtree's
+    /// mkdirs, and within one batch the destination chain's group may
+    /// apply after the rename's), and when the source path does not
+    /// resolve locally, materialize the file — from the nearest replica
+    /// still holding it under either name (retired members included; a
+    /// source replica that already applied the move serves it as the
+    /// destination) plus the log's own earlier entries for the path
+    /// (`all_entries`) — and install it at the source path so the
+    /// rename applies in place (overwriting any stale destination
+    /// copy). The destination chain thereby digests the move without
+    /// waiting for cross-chain gossip. Renames the replica's
+    /// per-(process, chain) watermark already covers are skipped (the
+    /// digest will skip them too). Returns the virtual time the
+    /// installs complete (`t0` when none needed).
+    pub(crate) fn stage_cross_chain_renames(
+        &mut self,
+        pid: ProcId,
+        target: NodeId,
+        sock: SocketId,
+        batch: &[LogEntry],
+        all_entries: &[LogEntry],
+        t0: Nanos,
+    ) -> Result<Nanos> {
+        let p = self.p();
+        let mut t_done = t0;
+        let renames: Vec<(u64, String, String)> = batch
+            .iter()
+            .filter_map(|e| match &e.op {
+                LogOp::Rename { from, to } => Some((e.seq, from.clone(), to.clone())),
+                _ => None,
+            })
+            .collect();
+        for (seq, from, to) in renames {
+            if self.mgr.chain_id_for(&from) == self.mgr.chain_id_for(&to)
+                && self.area_socket(&from) == self.area_socket(&to)
+            {
+                continue; // same-chain rename: the store applies it natively
+            }
+            // already applied here (idempotent replay): the digest's
+            // watermark will skip the entry, so stage nothing
+            let group = self.mgr.chain_id_for(&from);
+            if self.nodes[target].sockets[sock].sharedfs.applied_watermark_for(pid, group) >= seq {
+                continue;
+            }
+            {
+                // the rename WILL apply: its destination parent must
+                // exist in this store, even on the source chain (the
+                // namespace scaffold of the two-chain move)
+                let tstore = &mut self.nodes[target].sockets[sock].sharedfs.store;
+                let dparent = dirname(&to);
+                if dparent != "/" && !tstore.exists(&dparent) {
+                    tstore.mkdir_p(&dparent, Mode::DEFAULT_DIR, Cred::ROOT, 0)?;
+                }
+                if tstore.resolve(&from).is_ok() {
+                    continue; // source present: the move applies natively
+                }
+            }
+            // the committed content: nearest replica resolving the
+            // source path, else one resolving the destination (a source
+            // replica digesting first applies the move and then holds
+            // the file under its new name). The timeless candidate list
+            // keeps retired chains eligible as donors.
+            let mut cands = self.mgr.read_candidates_for(&from, target);
+            for n in self.mgr.read_candidates_for(&to, target) {
+                if !cands.contains(&n) {
+                    cands.push(n);
+                }
+            }
+            let mut donor: Option<(NodeId, SocketId, crate::fs::Ino)> = None;
+            for probe in [&from, &to] {
+                for &n in &cands {
+                    if n == target || !self.nodes[n].alive {
+                        continue;
+                    }
+                    let ds = self.clamped_sock(n, self.area_socket(probe));
+                    let sfs = &self.nodes[n].sockets[ds].sharedfs;
+                    if let Ok(i) = sfs.store.resolve(probe) {
+                        if !sfs.is_stale(i) {
+                            donor = Some((n, ds, i));
+                            break;
+                        }
+                    }
+                }
+                if donor.is_some() {
+                    break;
+                }
+            }
+            // materialize donor base + the log's earlier entries for
+            // the path in a scratch store (pure Arc-slice arithmetic)
+            let mut scratch = crate::fs::FileStore::new();
+            let parent = dirname(&from);
+            if parent != "/" {
+                scratch.mkdir_p(&parent, Mode::DEFAULT_DIR, Cred::ROOT, 0)?;
+            }
+            let mut donor_bytes = 0u64;
+            if let Some((d, ds, dino)) = donor {
+                let dstore = &self.nodes[d].sockets[ds].sharedfs.store;
+                let st = dstore.stat_ino(dino)?;
+                let (data, _) = dstore.read_at(dino, 0, st.size)?;
+                let sino = scratch.create(&from, st.mode, st.owner, 0)?;
+                if st.size > 0 {
+                    scratch.write_at(sino, 0, data, Tier::Hot, 0)?;
+                }
+                donor_bytes = st.size;
+            }
+            let history: Vec<LogEntry> = all_entries
+                .iter()
+                .filter(|e| e.seq < seq && e.op.path() == from && !matches!(e.op, LogOp::Rename { .. }))
+                .cloned()
+                .collect();
+            crate::oplog::apply_entries(&mut scratch, &history, 0, Tier::Hot, 0)?;
+            if scratch.resolve(&from).is_err() {
+                // no donor and no log history: the op-time existence
+                // check passed against state no live replica retains.
+                // The CONTENT is unrecoverable, but the namespace move
+                // must still apply (skipping would hard-fail the whole
+                // digest: the rename's apply only tolerates a missing
+                // source when the destination already exists) — scaffold
+                // an empty file; its bytes read back as holes, like any
+                // other unreachable data
+                scratch.create(&from, Mode::DEFAULT_FILE, Cred::ROOT, 0)?;
+            }
+            let sino = scratch.resolve(&from)?;
+            let st = scratch.stat_ino(sino)?;
+            let (data, _) = scratch.read_at(sino, 0, st.size)?;
+            // install at the SOURCE path; the rename then moves it
+            {
+                let tstore = &mut self.nodes[target].sockets[sock].sharedfs.store;
+                if parent != "/" && !tstore.exists(&parent) {
+                    tstore.mkdir_p(&parent, Mode::DEFAULT_DIR, Cred::ROOT, 0)?;
+                }
+                let tino = tstore.create(&from, st.mode, st.owner, 0)?;
+                if st.size > 0 {
+                    tstore.write_at(tino, 0, data, Tier::Hot, 0)?;
+                }
+            }
+            // charge: one fetch RPC from the donor + the local NVM write
+            if let Some((d, _, _)) = donor {
+                if d != target {
+                    t_done =
+                        t_done.max(self.fabric.rpc(t0, target, d, 64, donor_bytes.max(64), p.rpc_overhead, &p));
+                }
+            }
+            let w = self.nodes[target].sockets[sock].nvm.write(t0, st.size.max(64), &p);
+            t_done = t_done.max(w);
+        }
+        Ok(t_done)
+    }
+
+    /// Mark every object a digest just rewrote stale on the retired
+    /// members of a migrating subtree — their pre-migration copies must
+    /// never serve a read again (they refetch like epoch-stale replicas
+    /// if ever asked).
+    pub(crate) fn invalidate_on_retired(&mut self, parts: &[crate::replication::ChainPartition]) {
+        for part in parts {
+            let retired = self.mgr.retired_members_covering(&part.path);
+            for m in retired {
+                if !self.nodes[m].alive {
+                    continue;
+                }
+                let msock = self.clamped_sock(m, part.sock);
+                let inos: std::collections::HashSet<crate::fs::Ino> = part
+                    .entries
+                    .iter()
+                    .filter_map(|e| {
+                        self.nodes[m].sockets[msock].sharedfs.store.resolve(e.op.path()).ok()
+                    })
+                    .collect();
+                if !inos.is_empty() {
+                    self.nodes[m].sockets[msock].sharedfs.invalidate_inos(&inos);
+                }
             }
         }
     }
@@ -1318,7 +1600,9 @@ impl Cluster {
     fn read_replica_for(&mut self, pid: ProcId, path: &str) -> Result<ReadPlan> {
         let pnode = self.procs[pid].node;
         let now = self.procs[pid].clock.now;
-        let cands = self.mgr.read_candidates_for(path, pnode);
+        // time-aware candidates: a retiring chain's members trail the
+        // list until the new chain's catch-up time, then drop out
+        let cands = self.mgr.read_candidates_at(path, pnode, now);
         if cands.is_empty() {
             return Err(FsError::ChainUnavailable(path.to_string()));
         }
@@ -1466,6 +1750,11 @@ impl DistFs for Cluster {
             self.batch_first = true;
             self.batch_leases = Some(Default::default());
         }
+        let (w0, s0, ns0) = (
+            self.repl_window_stats.windows,
+            self.repl_window_stats.stalls,
+            self.repl_window_stats.stalled_ns,
+        );
         let mut out = Vec::with_capacity(n);
         for op in ops {
             let t0 = if live { self.procs[pid].clock.now } else { 0 };
@@ -1473,6 +1762,14 @@ impl DistFs for Cluster {
             let latency = if live { self.procs[pid].clock.now - t0 } else { 0 };
             out.push(FsCompletion { result, latency });
         }
+        // batch-level stall sample: one aggregate per completed ring
+        // that issued replication windows — the control signal adaptive
+        // window sizing feeds on (per-op samples would chase noise)
+        self.repl_window_stats.record_ring(RingStallSample {
+            windows: self.repl_window_stats.windows - w0,
+            stalls: self.repl_window_stats.stalls - s0,
+            stalled_ns: self.repl_window_stats.stalled_ns - ns0,
+        });
         // any unconsumed reservation (ops that failed validation before
         // appending) is discarded — the time was already charged
         self.prepaid_log = 0;
@@ -2061,10 +2358,9 @@ mod tests {
 
     #[test]
     fn mixed_batch_replicates_each_subtree_to_its_own_chain() {
-        use crate::replication::ChainKey;
         let mut c = Cluster::new(ClusterConfig::default().nodes(4));
-        c.set_subtree_chain("/a", vec![1], vec![]);
-        c.set_subtree_chain("/b", vec![2], vec![]);
+        let ka = c.set_subtree_chain("/a", vec![1], vec![]).unwrap();
+        let kb = c.set_subtree_chain("/b", vec![2], vec![]).unwrap();
         let pid = c.spawn_process(0, 0);
         c.mkdir(pid, "/a").unwrap();
         c.mkdir(pid, "/b").unwrap();
@@ -2076,8 +2372,8 @@ mod tests {
         c.fsync(pid, fa).unwrap();
         let tail = c.procs[pid].log.tail_seq();
         assert_eq!(c.procs[pid].log.replicated_upto, tail);
-        assert_eq!(c.procs[pid].log.chain_cursor(&ChainKey::new(&[1], &[])), 5); // write /a/f
-        assert_eq!(c.procs[pid].log.chain_cursor(&ChainKey::new(&[2], &[])), tail); // write /b/f
+        assert_eq!(c.procs[pid].log.chain_cursor(ka), 5); // write /a/f
+        assert_eq!(c.procs[pid].log.chain_cursor(kb), tail); // write /b/f
         // digestion lands each partition ONLY on its own chain
         c.digest_log(pid).unwrap();
         assert!(c.nodes[1].sockets[0].sharedfs.store.exists("/a/f"));
@@ -2094,8 +2390,8 @@ mod tests {
         // seq-ordered batch (its per-process watermark would otherwise
         // skip the interleaved entries)
         let mut c = Cluster::new(ClusterConfig::default().nodes(3));
-        c.set_subtree_chain("/a", vec![1], vec![]);
-        c.set_subtree_chain("/b", vec![1, 2], vec![]);
+        c.set_subtree_chain("/a", vec![1], vec![]).unwrap();
+        c.set_subtree_chain("/b", vec![1, 2], vec![]).unwrap();
         let pid = c.spawn_process(0, 0);
         c.mkdir(pid, "/a").unwrap();
         c.mkdir(pid, "/b").unwrap();
@@ -2179,7 +2475,7 @@ mod tests {
     fn chain_unavailable_surfaces_distinct_error() {
         let mut c = Cluster::new(ClusterConfig::default().nodes(3));
         // /s lives wholly on nodes 1 and 2; the reader is on node 0
-        c.set_subtree_chain("/s", vec![1, 2], vec![]);
+        c.set_subtree_chain("/s", vec![1, 2], vec![]).unwrap();
         let w = c.spawn_process(1, 0);
         c.mkdir(w, "/s").unwrap();
         let fd = c.create(w, "/s/f").unwrap();
@@ -2248,23 +2544,60 @@ mod tests {
 
     #[test]
     fn per_chain_repl_log_regions_gc_on_digest() {
-        use crate::replication::ChainKey;
         let mut c = Cluster::new(ClusterConfig::default().nodes(3));
-        c.set_subtree_chain("/a", vec![1], vec![]);
+        let key = c.set_subtree_chain("/a", vec![1], vec![]).unwrap();
         let pid = c.spawn_process(0, 0);
         c.mkdir(pid, "/a").unwrap();
         let fd = c.create(pid, "/a/f").unwrap();
         c.write(pid, fd, Payload::bytes(vec![3u8; 8192])).unwrap();
         c.fsync(pid, fd).unwrap();
-        let key = ChainKey::new(&[1], &[]);
-        let held = c.nodes[1].sockets[0].sharedfs.repl_log_bytes_for(pid, &key);
+        let held = c.nodes[1].sockets[0].sharedfs.repl_log_bytes_for(pid, key);
         assert!(held > 8192, "replica holds the replicated-log region");
         c.digest_log(pid).unwrap();
         assert_eq!(
-            c.nodes[1].sockets[0].sharedfs.repl_log_bytes_for(pid, &key),
+            c.nodes[1].sockets[0].sharedfs.repl_log_bytes_for(pid, key),
             0,
             "digest GCs the chain's log region"
         );
+    }
+
+    #[test]
+    fn set_subtree_chain_rejects_bad_replicas() {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+        assert!(matches!(
+            c.set_subtree_chain("/x", vec![0, 7], vec![]),
+            Err(FsError::InvalidArgument(_))
+        ));
+        assert!(matches!(
+            c.set_subtree_chain("/x", vec![0], vec![0]),
+            Err(FsError::InvalidArgument(_))
+        ));
+        // the failed calls left routing untouched
+        assert_eq!(c.mgr.chain_id_for("/x"), crate::replication::ChainId(0));
+    }
+
+    #[test]
+    fn submit_rings_record_batch_level_stall_samples() {
+        let mut c = Cluster::new(
+            ClusterConfig::default().nodes(2).log_capacity(256 << 10).repl_window(1),
+        );
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        let rings0 = c.repl_window_stats.rings.len();
+        let ops: Vec<FsOp> = (0..64u64)
+            .map(|i| FsOp::Pwrite { fd, off: i * 16384, data: Payload::zero(16384) })
+            .collect();
+        for cq in c.submit(pid, ops) {
+            cq.result.unwrap();
+        }
+        // the ring issued windows against a window cap of 1: ONE
+        // aggregate sample covering the whole burst, not one per op
+        assert_eq!(c.repl_window_stats.rings.len(), rings0 + 1);
+        let s = c.repl_window_stats.last_ring().unwrap();
+        assert!(s.windows > 0);
+        assert!(s.stalls > 0, "window of 1 must stall under a 64-op ring");
+        assert!(s.stalled_ns > 0);
+        assert_eq!(s.windows, c.repl_window_stats.windows, "only this ring issued");
     }
 
     #[test]

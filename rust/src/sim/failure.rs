@@ -4,8 +4,8 @@
 use std::collections::HashMap;
 
 use crate::fs::{FsError, NodeId, ProcId, Result, SocketId};
-use crate::oplog::LogEntry;
-use crate::replication::{partition_by_chain, route_partitions, ChainKey};
+use crate::oplog::{LogEntry, LogOp};
+use crate::replication::{partition_by_chain, route_partitions, EntryRoute};
 use crate::Nanos;
 
 use super::assise::Cluster;
@@ -115,15 +115,25 @@ impl Cluster {
             }
         };
 
-        // survivors only have each chain's own acked prefix
-        let chain_of: HashMap<u64, ChainKey> = self.procs[pid]
+        // survivors only have each chain's own acked prefix; a
+        // cross-chain rename must have been acked by BOTH its chains
+        let route_of: HashMap<u64, EntryRoute> = self.procs[pid]
             .log
             .all()
-            .map(|e| (e.seq, self.mgr.chain_key_for(e.op.path())))
+            .map(|e| {
+                let primary = self.mgr.chain_id_for(e.op.path());
+                let route = match &e.op {
+                    LogOp::Rename { to, .. } => {
+                        EntryRoute::two(primary, self.mgr.chain_id_for(to))
+                    }
+                    _ => EntryRoute::one(primary),
+                };
+                (e.seq, route)
+            })
             .collect();
         let lost: Vec<LogEntry> = self.procs[pid]
             .log
-            .truncate_to_replicated_by(|e| chain_of.get(&e.seq).cloned().unwrap_or_default());
+            .truncate_to_replicated_by(|e| route_of.get(&e.seq).copied().unwrap_or_default());
 
         let new_pid = {
             use crate::sim::api::DistFs;
@@ -137,10 +147,13 @@ impl Cluster {
         let entries: Vec<LogEntry> = self.procs[pid].log.all().cloned().collect();
         if !entries.is_empty() {
             let parts = partition_by_chain(&entries, |path| {
-                (self.mgr.chain_key_for(path), self.area_socket(path))
+                (self.mgr.chain_id_for(path), self.area_socket(path))
             });
-            // path -> configured chain, for the per-chain digest watermarks
-            let key_of = crate::replication::path_chain_map(&parts);
+            // path -> routed chain id, for the per-chain digest
+            // watermarks (same grouping digest_log used, so replay of
+            // already-digested prefixes stays idempotent)
+            let key_of = self.chain_ids_of(&entries);
+            let has_xrename = self.has_cross_chain_rename(&entries);
             // a replica serving several chains applies one sorted batch
             let routed = route_partitions(&parts, |part| {
                 let chain = self.mgr.live_chain_for(&part.path);
@@ -156,18 +169,26 @@ impl Cluster {
             for ((r, sock), batch) in &routed {
                 let (r, sock) = (*r, *sock);
                 let bytes: u64 = batch.iter().map(|e| e.bytes()).sum();
+                // a surviving cross-chain rename may land on a chain
+                // whose store never held the source file
+                if has_xrename {
+                    self.stage_cross_chain_renames(pid, r, sock, batch, &entries, t0)?;
+                }
                 // every replica scans its local replicated-log copy and
                 // writes its shared area (replicas digest in parallel)
                 let read_done = self.nodes[r].sockets[sock].nvm.read_log(t0, bytes, &p);
                 let write_done = self.nodes[r].sockets[sock].nvm.write(read_done, bytes, &p);
                 self.nodes[r].sockets[sock].sharedfs.digest(pid, batch, write_done, |path| {
-                    key_of.get(path).cloned().unwrap_or_default()
+                    key_of.get(path).copied().unwrap_or_default()
                 })?;
                 // recovery digests commit synchronously: the objects are
                 // immediately clean on every surviving replica
                 self.bump_versions(r, sock, batch, write_done, write_done);
                 t_done = t_done.max(write_done);
             }
+            // pre-migration copies on retired members must not outlive
+            // the recovery digest
+            self.invalidate_on_retired(&parts);
             self.procs[new_pid].clock.advance_to(t_done);
         }
         // sweep the dead process's leases from every LIVE SharedFS (dead

@@ -1,0 +1,520 @@
+//! Live, cursor-preserving shard migration — the runtime counterpart of
+//! the static `set_chain` admin configuration (ROADMAP "chain
+//! rebalancing"; crash-consistent reconfiguration per the disaggregated
+//! PM literature).
+//!
+//! [`Cluster::migrate_chain`] moves a subtree from its current chain to
+//! a new one **under live load**, without losing the crash-recoverable
+//! prefix:
+//!
+//! 1. **drain** — the old chain's in-flight replication windows are
+//!    barriered (their acks fold into the migration's completion; the
+//!    deferral is sampled into `ReplWindowStats::rings` as the
+//!    batch-level control signal);
+//! 2. **routing flip** — the subtree re-routes to a freshly minted
+//!    [`ChainId`] and the routing generation bumps atomically (the
+//!    simulator call is the atomic step: no op interleaves);
+//! 3. **suffix replication** — every process's undigested entries for
+//!    the subtree stream down the new chain and advance the new id's
+//!    cursor, so `fsync`'s residual replication does not re-send them
+//!    and fail-over truncation keeps them;
+//! 4. **cursor/watermark re-keying** — overlap members fold their
+//!    (process, old-chain) digest watermarks into the new id; fresh
+//!    members receive a **state copy** of the subtree (the digested
+//!    prefix) and are seeded with the copy source's watermarks, so a
+//!    later full-log digest cannot double-apply;
+//! 5. **retirement** — the old members keep serving CRAQ reads as
+//!    last-resort candidates (like epoch-stale replicas) until the new
+//!    chain's `clean_upto` catches up (the state-copy completion time);
+//!    objects re-digested on the new chain are marked stale on them so
+//!    a last-resort read can never return a pre-migration payload.
+
+use crate::cluster::manager::Chain;
+use crate::fs::path::is_subtree_of;
+use crate::fs::{NodeId, Payload, Result, Tier};
+use crate::hw::nvm::Pattern;
+use crate::libfs::ReplWindow;
+use crate::metrics::RingStallSample;
+use crate::oplog::{LogEntry, LogOp};
+use crate::replication::ChainId;
+use crate::Nanos;
+
+use super::assise::Cluster;
+
+/// Virtual-time breakdown of one `migrate_chain` call.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationReport {
+    pub subtree: String,
+    pub old_chain: ChainId,
+    pub new_chain: ChainId,
+    /// routing generation after the flip
+    pub generation: u64,
+    /// in-flight windows covering the old chain that the drain barriered
+    pub drained_windows: usize,
+    /// when the drain barrier cleared
+    pub drain_done: Nanos,
+    /// undigested subtree entries shipped to the new chain
+    pub suffix_entries: usize,
+    /// wire bytes of that suffix (summed over processes)
+    pub suffix_bytes: u64,
+    /// digested state copied onto fresh members (bytes per member)
+    pub synced_bytes: u64,
+    /// when the new chain's `clean_upto` catches up (state copy done);
+    /// old members serve as last-resort read candidates until then
+    pub catchup_at: Nanos,
+}
+
+/// One file (or directory) captured from the migration donor's store.
+struct CopyItem {
+    path: String,
+    is_dir: bool,
+    mode: crate::fs::Mode,
+    owner: crate::fs::Cred,
+    size: u64,
+    data: Option<Payload>,
+}
+
+/// An entry belongs to the migrating subtree if its primary path — or,
+/// for renames, its destination — falls under it.
+fn touches_subtree(e: &LogEntry, subtree: &str) -> bool {
+    if is_subtree_of(e.op.path(), subtree) {
+        return true;
+    }
+    matches!(&e.op, LogOp::Rename { to, .. } if is_subtree_of(to, subtree))
+}
+
+impl Cluster {
+    /// Migrate `subtree` to a new replication chain at virtual time
+    /// `at`, preserving cursors and acknowledged writes. Rejects
+    /// unknown/duplicate replica node ids before touching any state.
+    /// Control-plane operation: it does NOT advance any process clock —
+    /// writers keep running; their next fsync simply finds the suffix
+    /// already acked by the new chain.
+    pub fn migrate_chain(
+        &mut self,
+        subtree: &str,
+        cache: Vec<NodeId>,
+        reserve: Vec<NodeId>,
+        at: Nanos,
+    ) -> Result<MigrationReport> {
+        let p = self.p();
+        self.mgr.retire_expired(at);
+        let old_id = self.mgr.chain_id_for(subtree);
+        let old_chain = self.mgr.chain_for(subtree).clone();
+        let area = self.area_socket(subtree);
+
+        // a migration target with no live member could not receive the
+        // suffix or the state copy — raising the new chain's cursor
+        // would claim safety no replica provides. Reject up front.
+        if !cache
+            .iter()
+            .chain(reserve.iter())
+            .any(|&n| n < self.nodes.len() && self.mgr.is_up(n))
+        {
+            return Err(crate::fs::FsError::InvalidArgument(
+                "migration target chain has no live replica".into(),
+            ));
+        }
+
+        // -- routing flip (validates; fail fast with no side effects) --
+        let (_, new_id) = self
+            .mgr
+            .migrate_route(subtree, Chain { cache_replicas: cache, reserve_replicas: reserve })?;
+        let new_chain = self.mgr.chain_for(subtree).clone();
+        let old_members: Vec<NodeId> = old_chain
+            .cache_replicas
+            .iter()
+            .chain(old_chain.reserve_replicas.iter())
+            .copied()
+            .collect();
+        let new_members: Vec<NodeId> = new_chain
+            .cache_replicas
+            .iter()
+            .chain(new_chain.reserve_replicas.iter())
+            .copied()
+            .collect();
+
+        // -------- drain the old chain's in-flight replication windows
+        let mut drain_done = at;
+        let mut drained = 0usize;
+        let mut deferred = 0usize;
+        let mut deferred_ns: Nanos = 0;
+        for proc in &self.procs {
+            for w in &proc.pending_repl {
+                if w.covers_chain(old_id) {
+                    drained += 1;
+                    if w.ack_at > at {
+                        deferred += 1;
+                        deferred_ns += w.ack_at - at;
+                    }
+                    drain_done = drain_done.max(w.ack_at);
+                }
+            }
+        }
+        if drained > 0 {
+            // drain deferral is a batch-level stall sample: the signal
+            // adaptive window sizing feeds on. `windows` here counts the
+            // windows the drain BARRIERED (none are newly issued, so
+            // the aggregate issue counters are untouched); `stalled_ns`
+            // sums per-window deferrals, matching the submit-path
+            // samples' accumulation
+            self.repl_window_stats.record_ring(RingStallSample {
+                windows: drained as u64,
+                stalls: deferred as u64,
+                stalled_ns: deferred_ns,
+            });
+        }
+
+        // ---- ship each process's undigested subtree suffix down the
+        // ---- new chain (the unreplicated tail rides along; entries the
+        // ---- new chain now covers are skipped by later fsyncs)
+        let ship_targets: Vec<NodeId> = {
+            let live = self.mgr.live_chain_for(subtree);
+            let reserves = self.mgr.live_reserves_for(subtree);
+            live.iter().chain(reserves.iter()).copied().collect()
+        };
+        let mut suffix_entries = 0usize;
+        let mut suffix_bytes = 0u64;
+        for pid in 0..self.procs.len() {
+            if self.procs[pid].log.is_empty() {
+                continue;
+            }
+            let digested = self.procs[pid].log.digested_upto;
+            let covered = self.procs[pid].log.chain_cursor(new_id);
+            let pending: Vec<LogEntry> = self
+                .procs[pid]
+                .log
+                .all()
+                .filter(|e| e.seq > digested && e.seq > covered && touches_subtree(e, subtree))
+                .cloned()
+                .collect();
+            let tail = self.procs[pid].log.tail_seq();
+            if pending.is_empty() {
+                // nothing undigested: the digested prefix travels in the
+                // state copy and nothing else routes to the new id, so
+                // the cursor claim below is exact
+                self.procs[pid].log.mark_chain_replicated(new_id, tail);
+                continue;
+            }
+            let wire_bytes: u64 = pending.iter().map(|e| e.bytes()).sum();
+            // the writer streams its own NVM log; if its node died, an
+            // old-chain survivor holds the replicated copy
+            let pnode = self.procs[pid].node;
+            let sender = if self.nodes[pnode].alive {
+                Some(pnode)
+            } else {
+                old_members.iter().copied().find(|&n| self.mgr.is_up(n))
+            };
+            if sender.is_none() {
+                // no live holder of the suffix exists (writer node AND
+                // every old member down): the entries are unobtainable —
+                // leave the cursor alone so fail-over truncation does
+                // not claim safety no replica provides
+                continue;
+            }
+            let hops: Vec<(NodeId, usize)> = ship_targets
+                .iter()
+                .copied()
+                .filter(|&r| Some(r) != sender)
+                .map(|r| (r, self.clamped_sock(r, area)))
+                .collect();
+            for &(r, rsock) in &hops {
+                self.nodes[r].sockets[rsock]
+                    .sharedfs
+                    .note_replicated(pid, new_id, wire_bytes);
+            }
+            let ack = self.chain_ship_cost(sender, &hops, wire_bytes, drain_done);
+            self.replicated_bytes += wire_bytes * hops.len() as u64;
+            suffix_entries += pending.len();
+            suffix_bytes += wire_bytes;
+            if ack > drain_done {
+                let generation = self.mgr.generation();
+                self.procs[pid].pending_repl.push_back(ReplWindow {
+                    upto: tail,
+                    ack_at: ack,
+                    chains: vec![new_id],
+                    generation,
+                });
+            }
+            // every subtree entry at or below the tail is now covered by
+            // the new chain: digested ones travel in the state copy,
+            // undigested ones were just shipped. Other entries never
+            // route to the new id, so the cursor claim is exact.
+            self.procs[pid].log.mark_chain_replicated(new_id, tail);
+        }
+
+        // ------- catch-up state copy onto members new to the subtree
+        let donor = old_members.iter().copied().find(|&n| self.mgr.is_up(n));
+        let fresh: Vec<NodeId> = new_members
+            .iter()
+            .copied()
+            .filter(|n| !old_members.contains(n) && self.mgr.is_up(*n))
+            .collect();
+        let mut synced_bytes = 0u64;
+        let mut catchup_at = drain_done;
+        if let Some(d) = donor {
+            let dsock = self.clamped_sock(d, area);
+            // capture the donor's subtree (Arc-slice payloads: no copy)
+            let items: Vec<CopyItem> = {
+                let sfs = &self.nodes[d].sockets[dsock].sharedfs;
+                let mut items = Vec::new();
+                for ino in sfs.store.inos_under(subtree) {
+                    if sfs.is_stale(ino) {
+                        continue; // stale donor data refetches lazily
+                    }
+                    let Some(path) = sfs.store.path_of(ino) else { continue };
+                    let path = path.to_string();
+                    let Ok(st) = sfs.store.stat_ino(ino) else { continue };
+                    let data = if st.is_dir {
+                        None
+                    } else {
+                        Some(sfs.store.read_at(ino, 0, st.size)?.0)
+                    };
+                    items.push(CopyItem {
+                        path,
+                        is_dir: st.is_dir,
+                        mode: st.mode,
+                        owner: st.owner,
+                        size: st.size,
+                        data,
+                    });
+                }
+                items
+            };
+            let total: u64 = items.iter().map(|i| i.size.max(64)).sum();
+            let watermarks: Vec<(crate::fs::ProcId, u64)> = self.nodes[d].sockets[dsock]
+                .sharedfs
+                .applied_upto
+                .iter()
+                .filter(|((_, k), _)| *k == old_id)
+                .map(|(&(pid, _), &v)| (pid, v))
+                .collect();
+            for &t in &fresh {
+                let tsock = self.clamped_sock(t, area);
+                // donor NVM scan + one bulk transfer + target NVM write
+                let read_done = if total > 0 {
+                    self.nodes[d].sockets[dsock].nvm.read(drain_done, total, Pattern::Seq, &p)
+                } else {
+                    drain_done
+                };
+                let rpc_done =
+                    self.fabric.rpc(read_done, t, d, 64, total.max(64), p.rpc_overhead, &p);
+                let write_done = if total > 0 {
+                    self.nodes[t].sockets[tsock].nvm.write(rpc_done, total, &p)
+                } else {
+                    rpc_done
+                };
+                for item in &items {
+                    let tstore = &mut self.nodes[t].sockets[tsock].sharedfs.store;
+                    if item.is_dir {
+                        let _ = tstore.mkdir_p(&item.path, item.mode, item.owner, write_done);
+                        continue;
+                    }
+                    let parent = crate::fs::path::dirname(&item.path);
+                    if parent != "/" && !tstore.exists(&parent) {
+                        tstore.mkdir_p(&parent, crate::fs::Mode::DEFAULT_DIR, item.owner, write_done)?;
+                    }
+                    let ino = match tstore.resolve(&item.path) {
+                        Ok(i) => i,
+                        Err(_) => tstore.create(&item.path, item.mode, item.owner, write_done)?,
+                    };
+                    if let Some(data) = &item.data {
+                        if item.size > 0 {
+                            tstore.write_at(ino, 0, data.clone(), Tier::Hot, write_done)?;
+                        }
+                    }
+                    // CRAQ: the copied object is dirty on the new member
+                    // until the copy commits — a read before `write_done`
+                    // pays the tail version confirm, never serves early
+                    self.nodes[t].sockets[tsock]
+                        .sharedfs
+                        .versions
+                        .bump(ino, drain_done, write_done);
+                }
+                // the copy embodies the donor's digested prefix: seed the
+                // new id's watermarks so fail-over replay stays idempotent
+                for &(pid, v) in &watermarks {
+                    self.nodes[t].sockets[tsock]
+                        .sharedfs
+                        .seed_chain_watermark(pid, new_id, v);
+                }
+                synced_bytes = synced_bytes.max(total);
+                catchup_at = catchup_at.max(write_done);
+            }
+        }
+        // overlap members already hold the subtree: re-key their digest
+        // watermarks onto the new id
+        for &m in new_members.iter().filter(|m| old_members.contains(m)) {
+            let msock = self.clamped_sock(m, area);
+            self.nodes[m].sockets[msock].sharedfs.adopt_chain_watermarks(old_id, new_id);
+        }
+
+        // ---- retirement: pure old members stay last-resort readers
+        let retired: Vec<NodeId> =
+            old_members.iter().copied().filter(|n| !new_members.contains(n)).collect();
+        if !retired.is_empty() {
+            self.mgr.begin_retirement(subtree, retired, catchup_at);
+        }
+
+        Ok(MigrationReport {
+            subtree: subtree.to_string(),
+            old_chain: old_id,
+            new_chain: new_id,
+            generation: self.mgr.generation(),
+            drained_windows: drained,
+            drain_done,
+            suffix_entries,
+            suffix_bytes,
+            synced_bytes,
+            catchup_at,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::fs::Payload;
+    use crate::replication::ChainId;
+    use crate::sim::api::DistFs;
+    use crate::sim::{Cluster, ClusterConfig};
+
+    /// writer on node 0, /hot pinned to chain [1]; nodes 2..3 free.
+    fn setup() -> (Cluster, usize, crate::fs::Fd, ChainId) {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(4));
+        let old = c.set_subtree_chain("/hot", vec![1], vec![]).unwrap();
+        let pid = c.spawn_process(0, 0);
+        c.mkdir(pid, "/hot").unwrap();
+        let fd = c.create(pid, "/hot/f").unwrap();
+        (c, pid, fd, old)
+    }
+
+    #[test]
+    fn migrate_rejects_bad_chains_without_side_effects() {
+        let (mut c, pid, fd, old) = setup();
+        c.write(pid, fd, Payload::bytes(vec![1u8; 4096])).unwrap();
+        let g = c.mgr.generation();
+        assert!(c.migrate_chain("/hot", vec![9], vec![], c.now(pid)).is_err());
+        assert!(c.migrate_chain("/hot", vec![2, 2], vec![], c.now(pid)).is_err());
+        assert_eq!(c.mgr.generation(), g, "failed migration must not bump the generation");
+        assert_eq!(c.mgr.chain_id_for("/hot/f"), old);
+    }
+
+    #[test]
+    fn migration_rekeys_cursors_and_routes_future_digests() {
+        let (mut c, pid, fd, old) = setup();
+        c.write(pid, fd, Payload::bytes(vec![1u8; 4096])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        c.digest_log(pid).unwrap();
+        assert!(c.nodes[1].sockets[0].sharedfs.store.exists("/hot/f"));
+
+        // an fsync'd-but-undigested suffix plus an unreplicated tail
+        c.pwrite(pid, fd, 4096, Payload::bytes(vec![2u8; 4096])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        c.pwrite(pid, fd, 8192, Payload::bytes(vec![3u8; 4096])).unwrap();
+
+        let rep = c.migrate_chain("/hot", vec![2], vec![], c.now(pid)).unwrap();
+        assert_eq!(rep.old_chain, old);
+        assert_ne!(rep.new_chain, old);
+        assert!(rep.suffix_entries >= 2, "undigested + unreplicated suffix shipped");
+        assert!(rep.synced_bytes >= 4096, "digested prefix copied to the fresh member");
+        // the new chain's cursor covers the whole log: fsync must not
+        // re-send, fail-over must keep the suffix
+        let tail = c.procs[pid].log.tail_seq();
+        assert_eq!(c.procs[pid].log.chain_cursor(rep.new_chain), tail);
+        // the copied state is on the new member
+        assert!(c.nodes[2].sockets[0].sharedfs.store.exists("/hot/f"));
+
+        // post-migration writes digest on the NEW chain only
+        c.pwrite(pid, fd, 12288, Payload::bytes(vec![4u8; 4096])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        c.digest_log(pid).unwrap();
+        let s2 = &c.nodes[2].sockets[0].sharedfs.store;
+        let ino = s2.resolve("/hot/f").unwrap();
+        assert_eq!(s2.stat_ino(ino).unwrap().size, 16384);
+        // and the old member's copy is now stale (never serves again)
+        let old_ino = c.nodes[1].sockets[0].sharedfs.store.resolve("/hot/f").unwrap();
+        assert!(c.nodes[1].sockets[0].sharedfs.is_stale(old_ino));
+    }
+
+    #[test]
+    fn migration_report_counts_drained_windows() {
+        let mut c = Cluster::new(
+            ClusterConfig::default().nodes(4).log_capacity(256 << 10).repl_window(2),
+        );
+        c.set_subtree_chain("/hot", vec![1], vec![]).unwrap();
+        let pid = c.spawn_process(0, 0);
+        c.mkdir(pid, "/hot").unwrap();
+        let fd = c.create(pid, "/hot/f").unwrap();
+        for i in 0..32u64 {
+            c.pwrite(pid, fd, i * 16384, Payload::bytes(vec![i as u8; 16384])).unwrap();
+        }
+        assert!(!c.procs[pid].pending_repl.is_empty(), "windows in flight");
+        let rings0 = c.repl_window_stats.rings.len();
+        let t = c.now(pid);
+        let rep = c.migrate_chain("/hot", vec![2, 3], vec![], t).unwrap();
+        assert!(rep.drained_windows > 0);
+        assert!(rep.drain_done >= t);
+        assert!(
+            c.repl_window_stats.rings.len() > rings0,
+            "drain contributes a batch-level stall sample"
+        );
+        // the migration-shipped suffix rides in a window carrying the
+        // NEW chain, the post-flip generation, and the covered prefix
+        let w = c.procs[pid].pending_repl.back().unwrap();
+        assert_eq!(w.chains, vec![rep.new_chain]);
+        assert_eq!(w.generation, rep.generation);
+        assert_eq!(w.upto, c.procs[pid].log.tail_seq());
+        // writer keeps running: fsync after migration drains cleanly
+        c.fsync(pid, fd).unwrap();
+        assert_eq!(c.procs[pid].log.replicated_upto, c.procs[pid].log.tail_seq());
+    }
+
+    #[test]
+    fn reads_flow_through_the_transition() {
+        let (mut c, pid, fd, _) = setup();
+        c.write(pid, fd, Payload::bytes(vec![7u8; 8192])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        c.digest_log(pid).unwrap();
+        let t = c.now(pid);
+        let rep = c.migrate_chain("/hot", vec![2], vec![], t).unwrap();
+
+        // a reader BEFORE catch-up: the new member may still be syncing,
+        // the retired member serves as last resort — never an outage,
+        // never stale bytes
+        let r1 = c.spawn_process(3, 0);
+        c.set_now(r1, t);
+        let fd1 = c.open(r1, "/hot/f").unwrap();
+        assert_eq!(c.pread(r1, fd1, 0, 8192).unwrap().materialize(), vec![7u8; 8192]);
+
+        // a reader past catch-up is served by the new chain
+        let r2 = c.spawn_process(3, 0);
+        c.set_now(r2, rep.catchup_at + 1_000_000);
+        let fd2 = c.open(r2, "/hot/f").unwrap();
+        assert_eq!(c.pread(r2, fd2, 0, 8192).unwrap().materialize(), vec![7u8; 8192]);
+        assert!(c.reads_served_by[2] >= 1, "new chain member serves after catch-up");
+    }
+
+    #[test]
+    fn overlap_member_keeps_watermarks_without_recopy() {
+        // migrate [1] -> [1, 2]: node 1 stays a member; its watermarks
+        // re-key onto the new id and a replayed digest stays idempotent
+        let (mut c, pid, fd, old) = setup();
+        c.write(pid, fd, Payload::bytes(vec![5u8; 4096])).unwrap();
+        c.fsync(pid, fd).unwrap();
+        c.digest_log(pid).unwrap();
+        let w_old = c.nodes[1].sockets[0].sharedfs.applied_watermark_for(pid, old);
+        assert!(w_old > 0);
+        let rep = c.migrate_chain("/hot", vec![1, 2], vec![], c.now(pid)).unwrap();
+        assert_eq!(
+            c.nodes[1].sockets[0].sharedfs.applied_watermark_for(pid, rep.new_chain),
+            w_old,
+            "overlap member adopts its old watermark under the new id"
+        );
+        // node 2 (fresh) is seeded from the donor
+        assert_eq!(
+            c.nodes[2].sockets[0].sharedfs.applied_watermark_for(pid, rep.new_chain),
+            w_old,
+            "fresh member seeded by the state copy"
+        );
+    }
+}

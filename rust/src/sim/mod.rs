@@ -5,9 +5,11 @@
 pub mod api;
 pub mod assise;
 pub mod failure;
+pub mod migrate;
 
 pub use api::{DistFs, FsCompletion, FsOp, FsOut};
 pub use assise::{Cluster, Node, SocketUnit};
+pub use migrate::MigrationReport;
 
 use crate::coherence::ManagerPolicy;
 use crate::hw::params::HwParams;

@@ -270,8 +270,8 @@ fn prop_log_never_exceeds_capacity_after_write() {
             ClusterConfig::default().nodes(3).log_capacity(cap).repl_window(2),
         );
         // sharded subtrees so backpressure drains PARTITIONED batches too
-        c.set_subtree_chain("/a", vec![1], vec![]);
-        c.set_subtree_chain("/b", vec![2], vec![]);
+        c.set_subtree_chain("/a", vec![1], vec![]).unwrap();
+        c.set_subtree_chain("/b", vec![2], vec![]).unwrap();
         let pid = c.spawn_process(0, 0);
         c.mkdir(pid, "/a").unwrap();
         c.mkdir(pid, "/b").unwrap();

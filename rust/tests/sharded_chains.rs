@@ -13,8 +13,8 @@ use assise::sim::{Cluster, ClusterConfig, DistFs};
 /// in no chain at all.
 fn sharded() -> (Cluster, usize) {
     let mut c = Cluster::new(ClusterConfig::default().nodes(4));
-    c.set_subtree_chain("/a", vec![1], vec![]);
-    c.set_subtree_chain("/b", vec![2], vec![]);
+    c.set_subtree_chain("/a", vec![1], vec![]).unwrap();
+    c.set_subtree_chain("/b", vec![2], vec![]).unwrap();
     let pid = c.spawn_process(0, 0);
     c.mkdir(pid, "/a").unwrap();
     c.mkdir(pid, "/b").unwrap();
