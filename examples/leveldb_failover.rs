@@ -29,7 +29,7 @@ fn main() {
 
     // kill the primary
     let t_fail = c.now(pid);
-    c.kill_node(0, t_fail);
+    c.kill_node(0, t_fail).unwrap();
     let (np, report) = c.failover_process(pid, 1, 0, t_fail).unwrap();
     println!(
         "primary killed @ {:.2}s | detected +{} ms | backup evicted log +{} us",

@@ -35,7 +35,7 @@ fn main() {
 
     // ---- 4. node failure: fail over to the cache replica
     let t = cluster.now(pid);
-    cluster.kill_node(0, t);
+    cluster.kill_node(0, t).unwrap();
     let (np, report) = cluster.failover_process(pid, 1, 0, t).unwrap();
     println!(
         "failover : detection {} ms (heartbeat), recovery work {} us",

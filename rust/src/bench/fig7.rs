@@ -86,7 +86,7 @@ pub fn run(scale: Scale) -> Vec<Table> {
         let pre = steady(&ts, 256);
 
         let t_fail = c.now(pid);
-        c.kill_node(0, t_fail);
+        c.kill_node(0, t_fail).unwrap();
         let (np, report) = c.failover_process(pid, 1, 0, t_fail).unwrap();
         // LevelDB restart: integrity check over the dataset
         let (manifest, wal_seq) = kv.manifest();
@@ -138,7 +138,7 @@ pub fn run(scale: Scale) -> Vec<Table> {
         let mut ts = TimeSeries::default();
         mix(&mut c, &mut kv, &mut rng, keyspace, ops / 2, &mut ts);
         let t_fail = c.now(pid);
-        c.kill_process(pid);
+        c.kill_process(pid).unwrap();
         // local OS detects immediately; restart on same node
         let ready = c.restart_process(pid, t_fail).unwrap();
         let (manifest, wal_seq) = kv.manifest();

@@ -62,6 +62,10 @@ pub struct ClusterManager {
     generation: u64,
     /// subtrees mid-migration: previous members as last-resort readers
     retiring: Vec<RetiredRoute>,
+    /// nodes flagged as stragglers (degraded NVM/NIC): still correct,
+    /// just slow — read placement demotes them to last-resort within the
+    /// live-member ranking ([`Self::read_candidates_ranked`])
+    stragglers: HashSet<NodeId>,
     /// subtree -> current lease manager (SharedFS). Migrates every
     /// `lease_manager_expiry` toward requesters (§3.3).
     lease_managers: HashMap<String, (NodeId, SocketId, Nanos /* since */)>,
@@ -86,6 +90,7 @@ impl ClusterManager {
             next_chain: 1,
             generation: 0,
             retiring: Vec::new(),
+            stragglers: HashSet::new(),
             lease_managers: HashMap::new(),
         }
     }
@@ -104,11 +109,35 @@ impl ClusterManager {
     /// later (heartbeat miss, §3.1/§5.4). Bumps the epoch. Returns the
     /// detection time.
     pub fn node_failed(&mut self, node: NodeId, t: Nanos, p: &HwParams) -> Nanos {
-        let detected = t + p.failure_timeout;
-        self.nodes[node] = NodeState::Down { detected_at: detected };
+        self.node_failed_at(node, t + p.failure_timeout)
+    }
+
+    /// Declare a node failed with an **explicit** detection time — the
+    /// per-fault-class detection model (clean kill vs gray partition vs
+    /// flap charge different latencies; the caller knows which class it
+    /// is injecting). Bumps the epoch. Returns `detected_at`.
+    pub fn node_failed_at(&mut self, node: NodeId, detected_at: Nanos) -> Nanos {
+        self.nodes[node] = NodeState::Down { detected_at };
         self.down_epoch.insert(node, self.epochs.current());
         self.epochs.bump();
-        detected
+        detected_at
+    }
+
+    // -------------------------------------------------------- stragglers
+
+    /// Flag a node as a straggler (degraded NVM/NIC): read placement
+    /// demotes it behind every healthy live member.
+    pub fn mark_straggler(&mut self, node: NodeId) {
+        self.stragglers.insert(node);
+    }
+
+    /// Clear a node's straggler flag (device recovered).
+    pub fn clear_straggler(&mut self, node: NodeId) {
+        self.stragglers.remove(&node);
+    }
+
+    pub fn is_straggler(&self, node: NodeId) -> bool {
+        self.stragglers.contains(&node)
     }
 
     /// A node rejoined at `t`. Bumps the epoch; returns the epoch the
@@ -307,6 +336,22 @@ impl ClusterManager {
     /// the new chain's catch-up time passes. Empty iff every eligible
     /// replica is down.
     pub fn read_candidates_at(&self, path: &str, reader: NodeId, now: Nanos) -> Vec<NodeId> {
+        self.read_candidates_ranked(path, reader, now).0
+    }
+
+    /// [`Self::read_candidates_at`] plus a flag telling whether straggler
+    /// demotion changed the ranking (the caller counts those as rerouted
+    /// reads). Stragglers are demoted to the tail of the live-member
+    /// section — still ahead of retired last-resort members, because a
+    /// slow replica beats a pre-migration copy that must refetch. The
+    /// reader's own node is never demoted: colocated NVM at N× still
+    /// beats a cross-network RPC for the sizes reads serve.
+    pub fn read_candidates_ranked(
+        &self,
+        path: &str,
+        reader: NodeId,
+        now: Nanos,
+    ) -> (Vec<NodeId>, bool) {
         let live = self.live_chain_for(path);
         let head = live.first().copied();
         let mut out = Vec::with_capacity(live.len());
@@ -327,6 +372,18 @@ impl ClusterManager {
                 out.push(h);
             }
         }
+        let mut demoted = false;
+        if !self.stragglers.is_empty() && out.len() > 1 {
+            let (fast, slow): (Vec<NodeId>, Vec<NodeId>) = out
+                .iter()
+                .copied()
+                .partition(|&n| n == reader || !self.stragglers.contains(&n));
+            if !slow.is_empty() && !fast.is_empty() {
+                let reordered: Vec<NodeId> = fast.into_iter().chain(slow).collect();
+                demoted = reordered != out;
+                out = reordered;
+            }
+        }
         for r in &self.retiring {
             if now >= r.until || !is_subtree_of(path, &r.subtree) {
                 continue;
@@ -337,7 +394,7 @@ impl ClusterManager {
                 }
             }
         }
-        out
+        (out, demoted)
     }
 
     /// [`Self::read_candidates_at`] with every retirement window still
@@ -655,6 +712,56 @@ mod tests {
         m.node_failed(0, 1, &p);
         m.node_failed(2, 2, &p);
         assert!(m.read_candidates_for("/x", 3).is_empty());
+    }
+
+    #[test]
+    fn node_failed_at_uses_explicit_detection_time() {
+        let mut m = mgr();
+        let e0 = m.epochs.current();
+        let detected = m.node_failed_at(1, 7_777);
+        assert_eq!(detected, 7_777);
+        assert_eq!(m.state(1), NodeState::Down { detected_at: 7_777 });
+        assert_eq!(m.epochs.current(), e0 + 1);
+    }
+
+    #[test]
+    fn stragglers_are_demoted_but_not_dropped() {
+        let mut m = ClusterManager::new(
+            6,
+            Chain { cache_replicas: vec![0, 1, 2, 3], reserve_replicas: vec![] },
+        );
+        // healthy baseline for reader 4: [2, 3, 1, 0]
+        assert_eq!(m.read_candidates_for("/x", 4), vec![2, 3, 1, 0]);
+        m.mark_straggler(2);
+        let (ranked, demoted) = m.read_candidates_ranked("/x", 4, 0);
+        assert!(demoted);
+        assert_eq!(ranked, vec![3, 1, 0, 2], "straggler trails every healthy member");
+        // the reader's own node is never demoted (local NVM still wins)
+        m.mark_straggler(1);
+        let (own, _) = m.read_candidates_ranked("/x", 1, 0);
+        assert_eq!(own[0], 1);
+        // clearing restores the healthy ranking
+        m.clear_straggler(2);
+        m.clear_straggler(1);
+        assert!(!m.is_straggler(2));
+        let (back, demoted2) = m.read_candidates_ranked("/x", 4, 0);
+        assert_eq!(back, vec![2, 3, 1, 0]);
+        assert!(!demoted2);
+    }
+
+    #[test]
+    fn all_straggler_chain_keeps_serving() {
+        let mut m = ClusterManager::new(
+            3,
+            Chain { cache_replicas: vec![0, 1, 2], reserve_replicas: vec![] },
+        );
+        for n in 0..3 {
+            m.mark_straggler(n);
+        }
+        // every member slow: ranking unchanged, nobody dropped
+        let (ranked, demoted) = m.read_candidates_ranked("/x", 0, 0);
+        assert_eq!(ranked.len(), 3);
+        assert!(!demoted);
     }
 
     #[test]

@@ -83,6 +83,17 @@ impl Clock {
     pub fn tick(&mut self, d: Nanos) {
         self.now += d;
     }
+
+    /// Apply a signed skew to this clock (fault injection: a process
+    /// whose local time drifts from the cluster's). Saturates at 0 — a
+    /// skewed clock can be early, but virtual time never goes negative.
+    pub fn skew(&mut self, delta_ns: i64) {
+        if delta_ns >= 0 {
+            self.now = self.now.saturating_add(delta_ns as Nanos);
+        } else {
+            self.now = self.now.saturating_sub(delta_ns.unsigned_abs());
+        }
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +140,18 @@ mod tests {
         assert_eq!(c.now, 100);
         c.tick(5);
         assert_eq!(c.now, 105);
+    }
+
+    #[test]
+    fn clock_skew_is_signed_and_saturating() {
+        let mut c = Clock::new();
+        c.advance_to(1_000);
+        c.skew(500);
+        assert_eq!(c.now, 1_500);
+        c.skew(-700);
+        assert_eq!(c.now, 800);
+        c.skew(-10_000); // saturates, never wraps
+        assert_eq!(c.now, 0);
     }
 
     #[test]

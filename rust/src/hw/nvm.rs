@@ -40,6 +40,11 @@ pub struct NvmDevice {
     tail_rng: SplitMix64,
     /// write-tail events observed (for reporting)
     pub tail_events: u64,
+    /// gray-failure straggler knob: every access latency is multiplied
+    /// by this factor (1 = healthy). A degraded DIMM set slows down
+    /// without failing — exactly the partial-failure mode fault
+    /// injection needs ([`crate::sim::fault`]).
+    lat_mult: u64,
 }
 
 impl NvmDevice {
@@ -51,7 +56,17 @@ impl NvmDevice {
             used: 0,
             tail_rng: SplitMix64::new(seed),
             tail_events: 0,
+            lat_mult: 1,
         }
+    }
+
+    /// Set the straggler latency multiplier (clamped to ≥ 1).
+    pub fn set_lat_mult(&mut self, mult: u64) {
+        self.lat_mult = mult.max(1);
+    }
+
+    pub fn lat_mult(&self) -> u64 {
+        self.lat_mult
     }
 
     /// Persistent store of `bytes` issued at `now`; returns completion
@@ -63,7 +78,7 @@ impl NvmDevice {
             lat = (lat as f64 * p.nvm_tail_mult) as Nanos;
             self.tail_events += 1;
         }
-        self.queue.access(now, bytes, lat, p.nvm_write_bw)
+        self.queue.access(now, bytes, lat * self.lat_mult, p.nvm_write_bw)
     }
 
     /// Load of `bytes` issued at `now`. Random accesses below the PMM
@@ -73,7 +88,7 @@ impl NvmDevice {
         if pat == Pattern::Rand {
             lat += p.nvm_buffer_miss_lat;
         }
-        self.queue.access(now, bytes, lat, p.nvm_read_bw)
+        self.queue.access(now, bytes, lat * self.lat_mult, p.nvm_read_bw)
     }
 
     // ------------------------------------------------------ capacity
@@ -110,12 +125,12 @@ impl NvmDevice {
             lat = (lat as f64 * p.nvm_tail_mult) as Nanos;
             self.tail_events += 1;
         }
-        self.log_queue.access(now, bytes, lat, p.nvm_write_bw)
+        self.log_queue.access(now, bytes, lat * self.lat_mult, p.nvm_write_bw)
     }
 
     /// Log-region read (digest source scan).
     pub fn read_log(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
-        self.log_queue.access(now, bytes, p.nvm_read_lat, p.nvm_read_bw)
+        self.log_queue.access(now, bytes, p.nvm_read_lat * self.lat_mult, p.nvm_read_bw)
     }
 
     /// Reboot: timing queue resets; *contents survive* (this is the whole
@@ -234,6 +249,20 @@ mod tests {
         assert!(nvm.alloc(600));
         assert_eq!(nvm.used(), 900);
         assert_eq!(nvm.available(), 100);
+    }
+
+    #[test]
+    fn straggler_multiplier_inflates_latency() {
+        let p = p();
+        let mut healthy = NvmDevice::new(1 << 30, 1);
+        let mut slow = NvmDevice::new(1 << 30, 1);
+        slow.set_lat_mult(10);
+        let h = healthy.read(0, 256, Pattern::Seq, &p);
+        let s = slow.read(0, 256, Pattern::Seq, &p);
+        assert!(s >= 10 * h - 100, "straggler read {s} vs healthy {h}");
+        // clamped: 0 behaves as healthy
+        slow.set_lat_mult(0);
+        assert_eq!(slow.lat_mult(), 1);
     }
 
     #[test]

@@ -162,7 +162,7 @@ fn demo() {
     c.digest_log(pid).unwrap();
 
     let t = c.now(pid);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
     println!(
         "node 0 killed at t={} ms; detected {} ms later; fail-over work took {} us",

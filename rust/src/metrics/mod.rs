@@ -209,6 +209,27 @@ pub struct CraqStats {
     pub dirty_redirects: u64,
 }
 
+/// Gray-failure observability: how the fault-injection layer degraded
+/// and how the cluster routed around it. Degradation must be observable,
+/// not inferred — every refused send, rerouted read, and detection event
+/// is counted here ([`crate::sim::fault`]).
+#[derive(Debug, Clone, Default)]
+pub struct FaultStats {
+    /// sends (RPC or chain hop) refused because the link was partitioned
+    /// or the retry budget ran dry — each surfaced to the caller as an
+    /// explicit `ChainUnavailable`, never a silent fallback
+    pub partitioned_sends_refused: u64,
+    /// reads whose candidate ranking routed around a straggler replica
+    pub straggler_reads_rerouted: u64,
+    /// messages dropped by the seeded drop plan (retries included)
+    pub messages_dropped: u64,
+    /// messages delivered late by the seeded reorder plan
+    pub messages_reordered: u64,
+    /// failure-detection latency (declared-dead minus failed-at), one
+    /// sample per declaration — the per-fault-class detection charge
+    pub detection_latency: Hist,
+}
+
 /// A time series of (virtual time, latency) points — Fig. 7's raw data.
 #[derive(Debug, Clone, Default)]
 pub struct TimeSeries {

@@ -30,11 +30,12 @@ use crate::hw::params::HwParams;
 use crate::hw::rdma::Fabric;
 use crate::hw::ssd::SsdDevice;
 use crate::libfs::{LibFs, ReplWindow};
-use crate::metrics::{CraqStats, ReplWindowStats, RingStallSample};
+use crate::metrics::{CraqStats, FaultStats, ReplWindowStats, RingStallSample};
 use crate::oplog::{coalesce, LogEntry, LogOp};
 use crate::replication::{partition_by_chain, route_partitions, ChainId, ReadVersion};
 use crate::sharedfs::SharedFs;
 use crate::sim::api::{DistFs, FsCompletion, FsOp, FsOut};
+use crate::sim::fault::FaultPlan;
 use crate::sim::{ClusterConfig, CrashMode};
 use crate::Nanos;
 
@@ -91,6 +92,12 @@ pub struct Cluster {
     /// reads served per node (store reads below the private log/cache —
     /// the spread the read-replica policy exists to create)
     pub reads_served_by: Vec<u64>,
+    /// gray-failure injection schedule (default: no-op; see
+    /// [`crate::sim::fault`])
+    pub fault: FaultPlan,
+    /// counters the fault layer maintains (refused sends, rerouted
+    /// straggler reads, detection latencies)
+    pub fault_stats: FaultStats,
 
     // ---- submission-batch amortization state (live only inside one
     // ---- `submit` call; see `DistFs::submit` below)
@@ -149,6 +156,8 @@ impl Cluster {
             repl_window_stats: ReplWindowStats::default(),
             craq: CraqStats::default(),
             reads_served_by: vec![0; node_count],
+            fault: FaultPlan::default(),
+            fault_stats: FaultStats::default(),
             prepaid_log: 0,
             batch_tail: 0,
             batch_first: false,
@@ -271,6 +280,13 @@ impl Cluster {
         let mut t_prepare = t0;
         for &r in &chain {
             let sock = 0usize;
+            // a replica the coordinator cannot reach votes Deny — 2PC's
+            // safe default under partition (the resize simply aborts)
+            if r != pnode && !self.fault.bidirectional(pnode, r) {
+                self.fault_stats.partitioned_sends_refused += 1;
+                votes.push(Vote::Deny);
+                continue;
+            }
             let ok = self.nodes[r].sockets[sock].nvm.alloc(new_size.saturating_sub(old));
             votes.push(if ok { Vote::Accept } else { Vote::Deny });
             if r != pnode {
@@ -280,7 +296,7 @@ impl Cluster {
         // phase 2: COMMIT / ABORT
         let mut t_commit = t_prepare;
         for &r in &chain {
-            if r != pnode {
+            if r != pnode && self.fault.bidirectional(pnode, r) {
                 t_commit =
                     t_commit.max(self.fabric.rpc(t_prepare, pnode, r, 64, 64, p.rpc_overhead, &p));
             }
@@ -374,7 +390,7 @@ impl Cluster {
         } else {
             // remote manager: RDMA RPC
             let now = self.procs[pid].clock.now;
-            let done = self.fabric.rpc(now, pnode, mnode, 128, 128, p.syscall_write_lat, &p);
+            let done = self.fault_rpc(now, pnode, mnode, 128, 128, p.syscall_write_lat)?;
             self.procs[pid].clock.advance_to(done);
         }
         // the manager daemon serializes lease operations (single process
@@ -479,7 +495,7 @@ impl Cluster {
             let notified = if hnode == mnode {
                 t0 + p.syscall_write_lat
             } else {
-                self.fabric.rpc(t0, mnode, hnode, 128, 128, p.syscall_write_lat, &p)
+                self.fault_rpc(t0, mnode, hnode, 128, 128, p.syscall_write_lat)?
             };
             // holder flushes: replicate + digest its log (dirty state for
             // the unit must be clean & replicated before transfer)
@@ -736,7 +752,7 @@ impl Cluster {
                     .sharedfs
                     .note_replicated(pid, part.key, raw_bytes);
             }
-            let ack = self.chain_ship_cost(Some(pnode), &hops, wire_bytes, t_start);
+            let ack = self.chain_ship_cost(Some(pnode), &hops, wire_bytes, t_start)?;
             ack_max = ack_max.max(ack);
             self.replicated_bytes += wire_bytes * full_chain.len() as u64;
             self.procs[pid].log.mark_chain_replicated(part.key, max_seq);
@@ -988,19 +1004,46 @@ impl Cluster {
     /// it — these are what make Assise-3r ≈ 2.2× Assise in Fig. 2a.
     /// Returns the chain ack time. `sender: None` books no wire (the
     /// data is already resident on the hops).
+    ///
+    /// Under an armed [`FaultPlan`], every hop is also a fault point:
+    /// a partitioned hop link (either direction — the ack must return)
+    /// refuses the whole ship with [`FsError::ChainUnavailable`], a
+    /// dropped hop send burns retry timeouts from the seeded sampler,
+    /// and a straggler NIC inflates that hop's fixed cost.
     pub(crate) fn chain_ship_cost(
         &mut self,
         sender: Option<NodeId>,
         hops: &[(NodeId, SocketId)],
         wire_bytes: u64,
         t_start: Nanos,
-    ) -> Nanos {
+    ) -> Result<Nanos> {
         let p = self.p();
+        let faulty = !self.fault.is_noop();
         let mut queue_done = t_start;
         let mut fixed: Nanos = 0;
         let mut prev = sender;
         for &(r, rsock) in hops {
             if let Some(s) = prev {
+                if faulty {
+                    if !self.fault.bidirectional(s, r) {
+                        self.fault_stats.partitioned_sends_refused += 1;
+                        return Err(FsError::ChainUnavailable(format!(
+                            "chain hop {s}->{r} partitioned"
+                        )));
+                    }
+                    let mut attempts = 0u32;
+                    while self.fault.sample_drop() {
+                        self.fault_stats.messages_dropped += 1;
+                        attempts += 1;
+                        fixed += self.fault.retry_timeout();
+                        if attempts > self.fault.max_retries() {
+                            self.fault_stats.partitioned_sends_refused += 1;
+                            return Err(FsError::ChainUnavailable(format!(
+                                "chain hop {s}->{r} dropped {attempts} times"
+                            )));
+                        }
+                    }
+                }
                 // wire: sender tx + receiver rx occupy their queues
                 let tx_done = self.fabric.nics[s].tx.access(t_start, wire_bytes, 0, p.rdma_bw);
                 let rx_done = self.fabric.nics[r].rx.access(t_start, wire_bytes, 0, p.rdma_bw);
@@ -1009,12 +1052,17 @@ impl Cluster {
             // remote NVM append into the reserved replicated-log region
             let nvm_done = self.nodes[r].sockets[rsock].nvm.write_log(t_start, wire_bytes, &p);
             queue_done = queue_done.max(nvm_done);
-            fixed += p.rdma_write_lat + p.rpc_overhead; // persist + forward RPC
+            let mut hop_fixed = p.rdma_write_lat + p.rpc_overhead; // persist + forward RPC
+            if faulty {
+                // straggler NIC on either endpoint slows this hop
+                hop_fixed *= self.fault.nic_mult_pair(prev, r);
+            }
+            fixed += hop_fixed;
             prev = Some(r);
         }
         // ack travels back along the chain (small messages)
         fixed += hops.len() as Nanos * (p.rdma_read_lat / 2);
-        queue_done + fixed
+        Ok(queue_done + fixed)
     }
 
     /// Path → routed chain id for every distinct path in `entries`
@@ -1186,8 +1234,8 @@ impl Cluster {
             // charge: one fetch RPC from the donor + the local NVM write
             if let Some((d, _, _)) = donor {
                 if d != target {
-                    t_done =
-                        t_done.max(self.fabric.rpc(t0, target, d, 64, donor_bytes.max(64), p.rpc_overhead, &p));
+                    t_done = t_done
+                        .max(self.fault_rpc(t0, target, d, 64, donor_bytes.max(64), p.rpc_overhead)?);
                 }
             }
             let w = self.nodes[target].sockets[sock].nvm.write(t0, st.size.max(64), &p);
@@ -1380,7 +1428,7 @@ impl Cluster {
             self.craq.dirty_redirects += 1;
             let now = self.procs[pid].clock.now;
             if tail != pnode {
-                let done = self.fabric.rpc(now, pnode, tail, 64, 64, p.rpc_overhead, &p);
+                let done = self.fault_rpc(now, pnode, tail, 64, 64, p.rpc_overhead)?;
                 self.procs[pid].clock.advance_to(done);
             } else {
                 self.procs[pid].clock.tick(p.syscall_read_lat);
@@ -1434,7 +1482,7 @@ impl Cluster {
                     // they are checked in parallel (§3.2), take the winner
                     let reserves = self.mgr.live_reserves_for(path);
                     if let Some(&rr) = reserves.first() {
-                        let d = self.fabric.rpc(t_done, pnode, rr, 64, seg_len.max(64), p.rpc_overhead, &p);
+                        let d = self.fault_rpc(t_done, pnode, rr, 64, seg_len.max(64), p.rpc_overhead)?;
                         t_done = d;
                         any_reserve = true;
                     } else {
@@ -1508,7 +1556,7 @@ impl Cluster {
             .store
             .read_at(peer_ino, 0, size)?;
         let now = self.procs[pid].clock.now;
-        let done = self.fabric.rpc(now, target, peer, 64, size.max(64), p.rpc_overhead, &p);
+        let done = self.fault_rpc(now, target, peer, 64, size.max(64), p.rpc_overhead)?;
         self.procs[pid].clock.advance_to(done);
         // reinstall on the serving replica (future reads hit it, §5.4)
         self.nodes[target].sockets[sock]
@@ -1601,8 +1649,22 @@ impl Cluster {
         let pnode = self.procs[pid].node;
         let now = self.procs[pid].clock.now;
         // time-aware candidates: a retiring chain's members trail the
-        // list until the new chain's catch-up time, then drop out
-        let cands = self.mgr.read_candidates_at(path, pnode, now);
+        // list until the new chain's catch-up time, then drop out.
+        // Straggler replicas are demoted (not dropped) by the ranking —
+        // count each read the demotion actually redirected.
+        let (mut cands, demoted) = self.mgr.read_candidates_ranked(path, pnode, now);
+        if demoted {
+            self.fault_stats.straggler_reads_rerouted += 1;
+        }
+        if !self.fault.is_noop() {
+            // a partitioned replica cannot serve this reader (request
+            // out, payload back) — the reader's own node always can
+            let before = cands.len();
+            cands.retain(|&r| r == pnode || self.fault.bidirectional(pnode, r));
+            if cands.is_empty() && before > 0 {
+                self.fault_stats.partitioned_sends_refused += 1;
+            }
+        }
         if cands.is_empty() {
             return Err(FsError::ChainUnavailable(path.to_string()));
         }
@@ -2054,7 +2116,7 @@ impl Cluster {
                         // remote metadata lookup (RMT case)
                         let p = self.p();
                         let now = self.procs[pid].clock.now;
-                        let done = self.fabric.rpc(now, pnode, n, 64, 128, p.rpc_overhead, &p);
+                        let done = self.fault_rpc(now, pnode, n, 64, 128, p.rpc_overhead)?;
                         self.procs[pid].clock.advance_to(done);
                     }
                     self.nodes[n].sockets[sock].sharedfs.store.stat(&path)
@@ -2126,7 +2188,7 @@ impl Cluster {
                             let now = self.procs[pid].clock.now;
                             if tail != pnode {
                                 let done =
-                                    self.fabric.rpc(now, pnode, tail, 64, 64, p.rpc_overhead, &p);
+                                    self.fault_rpc(now, pnode, tail, 64, 64, p.rpc_overhead)?;
                                 self.procs[pid].clock.advance_to(done);
                             } else {
                                 self.procs[pid].clock.tick(p.syscall_read_lat);
@@ -2487,8 +2549,8 @@ mod tests {
         let fd2 = c.open(r, "/s/f").unwrap();
         // kill every configured replica of the chain
         let t = c.now(r);
-        c.kill_node(1, t);
-        c.kill_node(2, t);
+        c.kill_node(1, t).unwrap();
+        c.kill_node(2, t).unwrap();
         assert!(matches!(c.pread(r, fd2, 0, 1), Err(FsError::ChainUnavailable(_))));
         assert!(matches!(c.stat(r, "/s/f"), Err(FsError::ChainUnavailable(_))));
         // the append-offset size resolve surfaces it too (no silent 0)

@@ -27,8 +27,10 @@ impl Cluster {
     /// Kill an application process (most common failure, §3.4). The NVM
     /// log survives; volatile state is dropped. Leases are *not* yet
     /// released — the local SharedFS does that during recovery.
-    pub fn kill_process(&mut self, pid: ProcId) {
+    pub fn kill_process(&mut self, pid: ProcId) -> Result<()> {
+        self.check_pid(pid)?;
         self.procs[pid].crash_volatile();
+        Ok(())
     }
 
     /// Restart a crashed process on its home node (§3.4 LibFS recovery):
@@ -37,6 +39,7 @@ impl Cluster {
     /// expires its leases; the process rebuilds its in-memory state.
     /// Returns the virtual time at which it can serve ops.
     pub fn restart_process(&mut self, pid: ProcId, at: Nanos) -> Result<Nanos> {
+        self.check_pid(pid)?;
         if self.procs[pid].alive {
             return Err(FsError::InvalidArgument("process not crashed".into()));
         }
@@ -68,22 +71,29 @@ impl Cluster {
     }
 
     /// Kill a whole node (power/hardware failure). All processes on it
-    /// die; the cluster manager detects it one heartbeat-timeout later
-    /// and bumps the epoch. Returns the detection time.
-    pub fn kill_node(&mut self, node: NodeId, at: Nanos) -> Nanos {
+    /// die. A clean kill silences the node completely, so the cluster
+    /// manager declares it after one missed heartbeat plus the suspect
+    /// window (`heartbeat_interval + suspect_timeout`) and bumps the
+    /// epoch; gray failures charge more (see
+    /// [`Cluster::suspect_partitioned_node`](super::fault)). Returns
+    /// the detection time.
+    pub fn kill_node(&mut self, node: NodeId, at: Nanos) -> Result<Nanos> {
+        self.check_node_id(node)?;
         self.nodes[node].alive = false;
         for pid in 0..self.procs.len() {
             if self.procs[pid].node == node {
                 self.procs[pid].crash_volatile();
             }
         }
-        let p = self.p();
-        let detected = self.mgr.node_failed(node, at, &p);
+        let detected =
+            at + self.cfg.heartbeat_interval + self.cfg.suspect_timeout;
+        self.mgr.node_failed_at(node, detected);
+        self.fault_stats.detection_latency.record(detected - at);
         // lease management fails over to the chain successor (§3.4)
         if let Some(&succ) = self.mgr.up_nodes().first() {
             self.mgr.fail_over_lease_management(node, (succ, 0));
         }
-        detected
+        Ok(detected)
     }
 
     /// Fail a process over to a backup cache replica (§3.4, Fig. 7): a
@@ -103,16 +113,19 @@ impl Cluster {
         to_socket: SocketId,
         failed_at: Nanos,
     ) -> Result<(ProcId, RecoveryReport)> {
+        self.check_pid(pid)?;
+        self.check_node_id(to)?;
         let p = self.p();
         let home = self.procs[pid].node;
-        let detected_at = if self.nodes[home].alive {
-            // process-only failure: detected immediately by the local OS
-            failed_at
-        } else {
-            match self.mgr.state(home) {
-                crate::cluster::NodeState::Down { detected_at } => detected_at,
-                _ => failed_at + p.failure_timeout,
-            }
+        // the manager's verdict wins: a node it declared Down (clean
+        // kill OR partition-suspected while still running) carries its
+        // own detection time. Otherwise a live home means a process-only
+        // failure the local OS reports immediately; a dead, undeclared
+        // home waits out the heartbeat + suspect window.
+        let detected_at = match self.mgr.state(home) {
+            crate::cluster::NodeState::Down { detected_at } => detected_at,
+            _ if self.nodes[home].alive => failed_at,
+            _ => failed_at + self.cfg.heartbeat_interval + self.cfg.suspect_timeout,
         };
 
         // survivors only have each chain's own acked prefix; a
@@ -224,6 +237,7 @@ impl Cluster {
     /// every inode written while down. Returns the time recovery
     /// completes (the node serves — stale inodes refetch lazily).
     pub fn recover_node(&mut self, node: NodeId, at: Nanos) -> Result<Nanos> {
+        self.check_node_id(node)?;
         if self.nodes[node].alive {
             return Err(FsError::InvalidArgument("node not down".into()));
         }
@@ -252,7 +266,7 @@ impl Cluster {
             .find(|&n| self.mgr.is_up(n))
             .or_else(|| self.mgr.up_nodes().into_iter().find(|&n| n != node))
             .ok_or(FsError::NotFound("no live peer".into()))?;
-        let done = self.fabric.rpc(at, node, peer, 64, bitmap_bytes.max(64), p.rpc_overhead, &p);
+        let done = self.fault_rpc(at, node, peer, 64, bitmap_bytes.max(64), p.rpc_overhead)?;
         // namespace sync: files created/renamed during the downtime are
         // unknown locally — rebuild the store's *metadata* from the live
         // peer's replicated state (the SharedFS log, §3.4), then
@@ -293,6 +307,7 @@ impl Cluster {
     /// (time the FS is recovered, report).
     pub fn os_failover(&mut self, node: NodeId, at: Nanos) -> Result<(Nanos, RecoveryReport)> {
         const VM_SNAPSHOT_BOOT: Nanos = 1_660_000_000; // §5.4: 1.66 s
+        self.check_node_id(node)?;
         // kill volatile state of every process on the node (the VM died)
         for pid in 0..self.procs.len() {
             if self.procs[pid].node == node {
@@ -348,7 +363,7 @@ mod tests {
         c.write(pid, fd, Payload::bytes(b"persisted".to_vec())).unwrap();
         // NOT fsynced — still recovered locally (NVM log survives)
         let t = c.now(pid);
-        c.kill_process(pid);
+        c.kill_process(pid).unwrap();
         c.restart_process(pid, t + 1_000_000).unwrap();
         let fd2 = c.open(pid, "/f").unwrap();
         let data = c.pread(pid, fd2, 0, 9).unwrap();
@@ -363,7 +378,7 @@ mod tests {
         c.write(pid, fd, Payload::bytes(b"optim".to_vec())).unwrap();
         c.fsync(pid, fd).unwrap(); // no-op in optimistic mode
         let t = c.now(pid);
-        c.kill_process(pid);
+        c.kill_process(pid).unwrap();
         c.restart_process(pid, t).unwrap();
         let fd2 = c.open(pid, "/f").unwrap();
         assert_eq!(c.pread(pid, fd2, 0, 5).unwrap().materialize(), b"optim");
@@ -378,7 +393,7 @@ mod tests {
         c.fsync(pid, fd).unwrap();
         c.write(pid, fd, Payload::bytes(b"UNSYNCED".to_vec())).unwrap();
         let t = c.now(pid);
-        c.kill_node(0, t);
+        c.kill_node(0, t).unwrap();
         let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
         assert_eq!(report.lost_entries, 1); // the unsynced write
         assert!(report.detected_at >= t + 1_000_000_000); // 1s heartbeat
@@ -400,7 +415,7 @@ mod tests {
         }
         c.fsync(pid, fd).unwrap();
         let t = c.now(pid);
-        c.kill_node(0, t);
+        c.kill_node(0, t).unwrap();
         let (_, report) = c.failover_process(pid, 1, 0, t).unwrap();
         // fail-over work after detection ≪ 1 s (paper: 230 ms to full
         // perf for a 1 GB log; here the log is ~400 KB)
@@ -419,7 +434,7 @@ mod tests {
 
         // node 1 goes down; p0 keeps writing
         let t = c.now(pid);
-        c.kill_node(1, t);
+        c.kill_node(1, t).unwrap();
         c.pwrite(pid, fd, 0, Payload::bytes(b"AFTER!".to_vec())).unwrap();
         c.fsync(pid, fd).unwrap();
         c.digest_log(pid).unwrap();
@@ -450,7 +465,7 @@ mod tests {
         let mut c = cluster();
         let pid = c.spawn_process(0, 0);
         c.create(pid, "/f").unwrap();
-        c.kill_node(0, 0);
+        c.kill_node(0, 0).unwrap();
         assert!(matches!(
             c.create(pid, "/g"),
             Err(crate::fs::FsError::Crashed)

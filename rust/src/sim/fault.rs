@@ -1,0 +1,579 @@
+//! Gray-failure fault injection — the partial-failure counterpart of
+//! [`super::failure`]'s clean kills.
+//!
+//! A [`FaultPlan`] owned by [`Cluster`] models the failures production
+//! clusters actually suffer:
+//!
+//! - **link partitions** — an asymmetric reachability matrix consulted
+//!   by every fabric send path (one-way, two-way, and partial cuts: a
+//!   chain head that reaches its tail but not its clients);
+//! - **stragglers** — a replica whose NVM or NIC runs at N× latency
+//!   without failing; read placement routes around it
+//!   ([`crate::cluster::ClusterManager::read_candidates_ranked`]);
+//! - **message drop/reorder** — a deterministic seeded RNG
+//!   ([`SplitMix64`]) drops sends (each costing a retry timeout, with a
+//!   bounded retry budget) or delays delivery;
+//! - **flapping** — nodes that bounce on a schedule; an outage shorter
+//!   than one heartbeat + suspect window is absorbed, never declared;
+//! - **clock skew** — per-process clocks drift to stress lease-expiry
+//!   safety ([`crate::coherence::LeaseTable::check_exclusivity`]).
+//!
+//! The standing invariant the property suite checks on top: every
+//! unreachable outcome surfaces as [`FsError::ChainUnavailable`] — never
+//! a silent fallback, never a wrong answer.
+//!
+//! **Determinism contract**: the same `FaultPlan` seed over the same op
+//! script produces an identical virtual-time trace. The drop/reorder
+//! sampler consumes RNG words only when a drop/reorder probability is
+//! armed, so plans without those knobs perturb nothing at all — a
+//! default (no-op) plan leaves every latency byte-identical to a
+//! cluster built without the fault layer.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::fs::{FsError, NodeId, ProcId, Result};
+use crate::util::SplitMix64;
+use crate::Nanos;
+
+use super::assise::Cluster;
+
+/// One scheduled node flap: down at `down_at`, back at `up_at`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlapSpec {
+    pub node: NodeId,
+    pub down_at: Nanos,
+    pub up_at: Nanos,
+}
+
+/// The fault schedule a [`Cluster`] consults on every send, read
+/// placement, and detection decision. Default is a no-op: every link
+/// reachable, every device healthy, nothing dropped.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// directed blocked links: `(src, dst)` present ⇒ src cannot reach
+    /// dst (asymmetric on purpose — one-way partitions are the gray
+    /// failure RDMA deployments actually see)
+    blocked: HashSet<(NodeId, NodeId)>,
+    /// per-node NIC latency multiplier (straggler NIC; 1 = healthy)
+    nic_mult: HashMap<NodeId, u64>,
+    /// probability a send attempt is dropped (0.0 disarms the sampler)
+    drop_prob: f64,
+    /// probability a delivered message is reordered (delivered late)
+    reorder_prob: f64,
+    /// extra delivery delay bound for a reordered message
+    reorder_window: Nanos,
+    /// drop retries before the sender gives up with `ChainUnavailable`
+    max_retries: u32,
+    /// virtual time charged per dropped attempt (sender retry timer)
+    retry_timeout: Nanos,
+    /// scheduled node flaps, consumed by `Cluster::run_flap_schedule`
+    flaps: Vec<FlapSpec>,
+    /// record of applied per-process clock skews (observability)
+    skews: HashMap<ProcId, i64>,
+    seed: u64,
+    rng: SplitMix64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+impl FaultPlan {
+    /// An empty plan with a deterministic RNG seed. The seed only
+    /// matters once drop/reorder probabilities are armed.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            blocked: HashSet::new(),
+            nic_mult: HashMap::new(),
+            drop_prob: 0.0,
+            reorder_prob: 0.0,
+            reorder_window: 0,
+            max_retries: 0,
+            retry_timeout: 0,
+            flaps: Vec::new(),
+            skews: HashMap::new(),
+            seed,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// True when the plan cannot perturb anything: the fast path every
+    /// send takes in a healthy cluster (no RNG consumption, no extra
+    /// branches in the cost model).
+    pub fn is_noop(&self) -> bool {
+        self.blocked.is_empty() && self.nic_mult.is_empty() && self.drop_prob == 0.0
+            && self.reorder_prob == 0.0
+    }
+
+    // ------------------------------------------------------- partitions
+
+    /// Block the directed link `src -> dst` (one-way partition).
+    pub fn block_oneway(&mut self, src: NodeId, dst: NodeId) {
+        self.blocked.insert((src, dst));
+    }
+
+    /// Block both directions between `a` and `b`.
+    pub fn block_twoway(&mut self, a: NodeId, b: NodeId) {
+        self.blocked.insert((a, b));
+        self.blocked.insert((b, a));
+    }
+
+    /// Restore both directions between `a` and `b`.
+    pub fn heal(&mut self, a: NodeId, b: NodeId) {
+        self.blocked.remove(&(a, b));
+        self.blocked.remove(&(b, a));
+    }
+
+    /// Drop every blocked link.
+    pub fn heal_all(&mut self) {
+        self.blocked.clear();
+    }
+
+    /// Can `src` deliver to `dst`? (Self-delivery is always true.)
+    pub fn reachable(&self, src: NodeId, dst: NodeId) -> bool {
+        src == dst || !self.blocked.contains(&(src, dst))
+    }
+
+    /// Both directions up — what an RPC round trip needs.
+    pub fn bidirectional(&self, a: NodeId, b: NodeId) -> bool {
+        self.reachable(a, b) && self.reachable(b, a)
+    }
+
+    // ------------------------------------------------------- stragglers
+
+    /// Inflate a node's NIC latency by `mult` (clamped ≥ 1).
+    pub fn set_nic_mult(&mut self, node: NodeId, mult: u64) {
+        if mult <= 1 {
+            self.nic_mult.remove(&node);
+        } else {
+            self.nic_mult.insert(node, mult);
+        }
+    }
+
+    pub fn nic_mult(&self, node: NodeId) -> u64 {
+        self.nic_mult.get(&node).copied().unwrap_or(1)
+    }
+
+    /// The worse NIC multiplier of a (sender, receiver) pair — what a
+    /// transfer between them actually experiences.
+    pub fn nic_mult_pair(&self, a: Option<NodeId>, b: NodeId) -> u64 {
+        let ma = a.map(|n| self.nic_mult(n)).unwrap_or(1);
+        ma.max(self.nic_mult(b))
+    }
+
+    // ----------------------------------------------------- drop/reorder
+
+    /// Arm the seeded drop/reorder sampler. Each dropped attempt charges
+    /// `retry_timeout`; after `max_retries` drops the send surfaces as
+    /// `ChainUnavailable`. Reordered messages deliver up to
+    /// `reorder_window` late.
+    pub fn set_drop_plan(
+        &mut self,
+        drop_prob: f64,
+        reorder_prob: f64,
+        max_retries: u32,
+        retry_timeout: Nanos,
+        reorder_window: Nanos,
+    ) {
+        self.drop_prob = drop_prob.clamp(0.0, 1.0);
+        self.reorder_prob = reorder_prob.clamp(0.0, 1.0);
+        self.max_retries = max_retries;
+        self.retry_timeout = retry_timeout;
+        self.reorder_window = reorder_window;
+    }
+
+    pub fn max_retries(&self) -> u32 {
+        self.max_retries
+    }
+
+    pub fn retry_timeout(&self) -> Nanos {
+        self.retry_timeout
+    }
+
+    /// Sample whether this send attempt is dropped. Consumes an RNG
+    /// word only when the sampler is armed (determinism contract).
+    pub fn sample_drop(&mut self) -> bool {
+        self.drop_prob > 0.0 && self.rng.f64() < self.drop_prob
+    }
+
+    /// Sample the extra delivery delay of a reordered message
+    /// (`None` = delivered in order).
+    pub fn sample_reorder(&mut self) -> Option<Nanos> {
+        if self.reorder_prob > 0.0 && self.rng.f64() < self.reorder_prob {
+            Some(self.rng.below(self.reorder_window.max(1)))
+        } else {
+            None
+        }
+    }
+
+    // --------------------------------------------------- flaps and skew
+
+    /// Schedule a node flap (consumed by `Cluster::run_flap_schedule`).
+    pub fn schedule_flap(&mut self, node: NodeId, down_at: Nanos, up_at: Nanos) {
+        self.flaps.push(FlapSpec { node, down_at, up_at });
+    }
+
+    /// Drain the flap schedule in `down_at` order.
+    pub fn take_flaps(&mut self) -> Vec<FlapSpec> {
+        let mut flaps = std::mem::take(&mut self.flaps);
+        flaps.sort_by_key(|f| f.down_at);
+        flaps
+    }
+
+    pub(crate) fn note_skew(&mut self, pid: ProcId, delta: i64) {
+        *self.skews.entry(pid).or_insert(0) += delta;
+    }
+
+    /// Net skew applied to a process's clock so far.
+    pub fn skew_of(&self, pid: ProcId) -> i64 {
+        self.skews.get(&pid).copied().unwrap_or(0)
+    }
+}
+
+impl Cluster {
+    /// Bounds-check a node id from a fault schedule — a bad id must
+    /// surface as `InvalidArgument`, not abort the whole simulation.
+    pub(crate) fn check_node_id(&self, node: NodeId) -> Result<()> {
+        if node < self.nodes.len() {
+            Ok(())
+        } else {
+            Err(FsError::InvalidArgument(format!(
+                "unknown node id {node} (cluster has {} nodes)",
+                self.nodes.len()
+            )))
+        }
+    }
+
+    /// Bounds-check a process id from a fault schedule.
+    pub(crate) fn check_pid(&self, pid: ProcId) -> Result<()> {
+        if pid < self.procs.len() {
+            Ok(())
+        } else {
+            Err(FsError::InvalidArgument(format!(
+                "unknown process id {pid} (cluster has {} processes)",
+                self.procs.len()
+            )))
+        }
+    }
+
+    // ------------------------------------------------------- partitions
+
+    /// Cut both directions between `a` and `b`.
+    pub fn partition(&mut self, a: NodeId, b: NodeId) -> Result<()> {
+        self.check_node_id(a)?;
+        self.check_node_id(b)?;
+        self.fault.block_twoway(a, b);
+        Ok(())
+    }
+
+    /// Cut only `src -> dst` (asymmetric: dst still reaches src).
+    pub fn partition_oneway(&mut self, src: NodeId, dst: NodeId) -> Result<()> {
+        self.check_node_id(src)?;
+        self.check_node_id(dst)?;
+        self.fault.block_oneway(src, dst);
+        Ok(())
+    }
+
+    /// Cut `node` off from every other node (both directions).
+    pub fn isolate_node(&mut self, node: NodeId) -> Result<()> {
+        self.check_node_id(node)?;
+        for other in 0..self.nodes.len() {
+            if other != node {
+                self.fault.block_twoway(node, other);
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore both directions between `a` and `b`.
+    pub fn heal_partition(&mut self, a: NodeId, b: NodeId) -> Result<()> {
+        self.check_node_id(a)?;
+        self.check_node_id(b)?;
+        self.fault.heal(a, b);
+        Ok(())
+    }
+
+    /// Restore every link.
+    pub fn heal_all_partitions(&mut self) {
+        self.fault.heal_all();
+    }
+
+    /// Declare a node suspected-dead because it is *partitioned* (gray
+    /// failure), installing the partition and charging the gray-class
+    /// detection latency: the signal is ambiguous (the node still
+    /// answers some peers), so the manager needs one extra suspicion
+    /// round — `heartbeat_interval + 2 × suspect_timeout` instead of the
+    /// clean kill's single window. The node's processes stay alive; its
+    /// colocated NVM keeps its contents. Returns the detection time.
+    pub fn suspect_partitioned_node(&mut self, node: NodeId, at: Nanos) -> Result<Nanos> {
+        self.check_node_id(node)?;
+        self.isolate_node(node)?;
+        let detected =
+            at + self.cfg.heartbeat_interval + 2 * self.cfg.suspect_timeout;
+        self.mgr.node_failed_at(node, detected);
+        self.fault_stats.detection_latency.record(detected - at);
+        if let Some(&succ) = self.mgr.up_nodes().first() {
+            self.mgr.fail_over_lease_management(node, (succ, 0));
+        }
+        Ok(detected)
+    }
+
+    // ------------------------------------------------------- stragglers
+
+    /// Run a node's NVM at `mult`× latency (a degraded DIMM set) and
+    /// flag it for read-placement demotion. `mult <= 1` heals it.
+    pub fn straggle_nvm(&mut self, node: NodeId, mult: u64) -> Result<()> {
+        self.check_node_id(node)?;
+        for s in 0..self.nodes[node].sockets.len() {
+            self.nodes[node].sockets[s].nvm.set_lat_mult(mult.max(1));
+        }
+        self.note_straggler(node);
+        Ok(())
+    }
+
+    /// Run a node's NIC at `mult`× latency and flag it for demotion.
+    /// `mult <= 1` heals the NIC.
+    pub fn straggle_nic(&mut self, node: NodeId, mult: u64) -> Result<()> {
+        self.check_node_id(node)?;
+        self.fault.set_nic_mult(node, mult);
+        self.note_straggler(node);
+        Ok(())
+    }
+
+    /// Re-derive the manager's straggler flag from the device state (the
+    /// flag is placement policy; the devices are ground truth).
+    fn note_straggler(&mut self, node: NodeId) {
+        let slow_nvm = self.nodes[node].sockets.iter().any(|s| s.nvm.lat_mult() > 1);
+        let slow_nic = self.fault.nic_mult(node) > 1;
+        if slow_nvm || slow_nic {
+            self.mgr.mark_straggler(node);
+        } else {
+            self.mgr.clear_straggler(node);
+        }
+    }
+
+    // ----------------------------------------------------- drop/reorder
+
+    /// Arm the seeded message drop/reorder plan (see
+    /// [`FaultPlan::set_drop_plan`]).
+    pub fn set_drop_plan(
+        &mut self,
+        drop_prob: f64,
+        reorder_prob: f64,
+        max_retries: u32,
+        retry_timeout: Nanos,
+        reorder_window: Nanos,
+    ) {
+        self.fault
+            .set_drop_plan(drop_prob, reorder_prob, max_retries, retry_timeout, reorder_window);
+    }
+
+    // --------------------------------------------------------- flapping
+
+    /// Flap `node`: down at `down_at`, back at `up_at`. An outage
+    /// shorter than one heartbeat + suspect window is **absorbed** — the
+    /// first missed beat only starts the suspicion timer, so the node is
+    /// never declared dead and nothing fails over (`Ok(None)`). A longer
+    /// outage is a real kill + recovery; returns the detection time.
+    pub fn flap_node(&mut self, node: NodeId, down_at: Nanos, up_at: Nanos) -> Result<Option<Nanos>> {
+        self.check_node_id(node)?;
+        if up_at < down_at {
+            return Err(FsError::InvalidArgument(
+                "flap up_at precedes down_at".into(),
+            ));
+        }
+        let declare_after = self.cfg.heartbeat_interval + self.cfg.suspect_timeout;
+        if up_at - down_at < declare_after {
+            // missed beats within the suspicion window: absorbed
+            return Ok(None);
+        }
+        let detected = self.kill_node(node, down_at)?;
+        self.recover_node(node, up_at.max(detected))?;
+        Ok(Some(detected))
+    }
+
+    /// Execute every flap scheduled on the plan, in `down_at` order.
+    /// Returns one `(node, Some(detected) | None)` entry per flap.
+    pub fn run_flap_schedule(&mut self) -> Result<Vec<(NodeId, Option<Nanos>)>> {
+        let flaps = self.fault.take_flaps();
+        let mut out = Vec::with_capacity(flaps.len());
+        for f in flaps {
+            let detected = self.flap_node(f.node, f.down_at, f.up_at)?;
+            out.push((f.node, detected));
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------- clock skew
+
+    /// Skew a process's clock by `delta_ns` (positive = ahead of the
+    /// cluster). Stresses lease-expiry safety: a process whose clock
+    /// runs ahead must not treat an unexpired remote lease as expired.
+    pub fn skew_clock(&mut self, pid: ProcId, delta_ns: i64) -> Result<()> {
+        self.check_pid(pid)?;
+        self.procs[pid].clock.skew(delta_ns);
+        self.fault.note_skew(pid, delta_ns);
+        Ok(())
+    }
+
+    /// Lease safety predicate: no SharedFS lease table on any live node
+    /// holds overlapping write leases valid at `now`. The clock-skew
+    /// property tests assert this after every skewed step.
+    pub fn lease_exclusivity_ok(&self, now: Nanos) -> bool {
+        self.nodes.iter().filter(|n| n.alive).all(|n| {
+            n.sockets.iter().all(|s| s.sharedfs.leases.check_exclusivity(now))
+        })
+    }
+
+    // ------------------------------------------------ fault-aware sends
+
+    /// Fault-aware RPC: the single funnel every simulator RPC takes.
+    /// With a no-op plan this is exactly `Fabric::rpc` (byte-identical
+    /// timing, no RNG consumption). Otherwise the round trip requires
+    /// both directions reachable, survives the drop-retry budget, and
+    /// pays straggler-NIC inflation plus any reorder delay. Unreachable
+    /// ⇒ `ChainUnavailable`, counted in
+    /// [`FaultStats::partitioned_sends_refused`](crate::metrics::FaultStats).
+    pub(crate) fn fault_rpc(
+        &mut self,
+        now: Nanos,
+        src: NodeId,
+        dst: NodeId,
+        req_bytes: u64,
+        resp_bytes: u64,
+        handler_ns: Nanos,
+    ) -> Result<Nanos> {
+        let p = self.p();
+        if self.fault.is_noop() {
+            return Ok(self.fabric.rpc(now, src, dst, req_bytes, resp_bytes, handler_ns, &p));
+        }
+        if !self.fault.bidirectional(src, dst) {
+            self.fault_stats.partitioned_sends_refused += 1;
+            return Err(FsError::ChainUnavailable(format!(
+                "link {src}<->{dst} partitioned"
+            )));
+        }
+        let mut t = now;
+        let mut attempts = 0u32;
+        while self.fault.sample_drop() {
+            self.fault_stats.messages_dropped += 1;
+            attempts += 1;
+            t += self.fault.retry_timeout();
+            if attempts > self.fault.max_retries() {
+                self.fault_stats.partitioned_sends_refused += 1;
+                return Err(FsError::ChainUnavailable(format!(
+                    "rpc {src}->{dst} dropped {attempts} times (retry budget exhausted)"
+                )));
+            }
+        }
+        let done = self.fabric.rpc(t, src, dst, req_bytes, resp_bytes, handler_ns, &p);
+        // straggler NIC: the transfer's elapsed time inflates by the
+        // worse endpoint's multiplier
+        let mult = self.fault.nic_mult_pair(Some(src), dst);
+        let mut done = done + done.saturating_sub(t) * (mult - 1);
+        if let Some(extra) = self.fault.sample_reorder() {
+            self.fault_stats.messages_reordered += 1;
+            done += extra;
+        }
+        Ok(done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_noop_and_fully_reachable() {
+        let f = FaultPlan::default();
+        assert!(f.is_noop());
+        assert!(f.reachable(0, 1) && f.reachable(1, 0));
+        assert!(f.bidirectional(0, 1));
+    }
+
+    #[test]
+    fn oneway_partition_is_asymmetric() {
+        let mut f = FaultPlan::new(1);
+        f.block_oneway(0, 1);
+        assert!(!f.reachable(0, 1));
+        assert!(f.reachable(1, 0), "reverse direction stays up");
+        assert!(!f.bidirectional(0, 1), "an RPC needs both directions");
+        assert!(!f.is_noop());
+        f.heal(0, 1);
+        assert!(f.reachable(0, 1));
+        assert!(f.is_noop());
+    }
+
+    #[test]
+    fn twoway_partition_blocks_both_and_heals() {
+        let mut f = FaultPlan::new(1);
+        f.block_twoway(2, 3);
+        assert!(!f.reachable(2, 3) && !f.reachable(3, 2));
+        f.heal_all();
+        assert!(f.bidirectional(2, 3));
+    }
+
+    #[test]
+    fn self_delivery_always_reachable() {
+        let mut f = FaultPlan::new(1);
+        f.block_twoway(0, 0);
+        assert!(f.reachable(0, 0));
+    }
+
+    #[test]
+    fn drop_sampler_is_deterministic_per_seed() {
+        let mut a = FaultPlan::new(42);
+        let mut b = FaultPlan::new(42);
+        a.set_drop_plan(0.3, 0.2, 5, 1_000, 10_000);
+        b.set_drop_plan(0.3, 0.2, 5, 1_000, 10_000);
+        for _ in 0..200 {
+            assert_eq!(a.sample_drop(), b.sample_drop());
+            assert_eq!(a.sample_reorder(), b.sample_reorder());
+        }
+    }
+
+    #[test]
+    fn disarmed_sampler_consumes_no_rng() {
+        let mut f = FaultPlan::new(7);
+        for _ in 0..100 {
+            assert!(!f.sample_drop());
+            assert!(f.sample_reorder().is_none());
+        }
+        // the RNG stream is untouched: arming now starts from word 0
+        let mut fresh = FaultPlan::new(7);
+        f.set_drop_plan(0.5, 0.0, 3, 100, 0);
+        fresh.set_drop_plan(0.5, 0.0, 3, 100, 0);
+        for _ in 0..50 {
+            assert_eq!(f.sample_drop(), fresh.sample_drop());
+        }
+    }
+
+    #[test]
+    fn nic_mult_pair_takes_worse_endpoint() {
+        let mut f = FaultPlan::new(1);
+        f.set_nic_mult(2, 8);
+        assert_eq!(f.nic_mult_pair(Some(0), 2), 8);
+        assert_eq!(f.nic_mult_pair(Some(2), 0), 8);
+        assert_eq!(f.nic_mult_pair(None, 1), 1);
+        f.set_nic_mult(2, 1); // heals
+        assert!(f.is_noop());
+    }
+
+    #[test]
+    fn flap_schedule_drains_in_time_order() {
+        let mut f = FaultPlan::new(1);
+        f.schedule_flap(2, 5_000, 6_000);
+        f.schedule_flap(1, 1_000, 2_000);
+        let flaps = f.take_flaps();
+        assert_eq!(flaps.len(), 2);
+        assert_eq!(flaps[0].node, 1);
+        assert_eq!(flaps[1].node, 2);
+        assert!(f.take_flaps().is_empty(), "schedule is consumed");
+    }
+}

@@ -103,6 +103,12 @@ impl Cluster {
         let old_chain = self.mgr.chain_for(subtree).clone();
         let area = self.area_socket(subtree);
 
+        // every target must name a real node — a single out-of-range id
+        // would otherwise panic deep in the copy loops after the routing
+        // flip already committed
+        for &n in cache.iter().chain(reserve.iter()) {
+            self.check_node_id(n)?;
+        }
         // a migration target with no live member could not receive the
         // suffix or the state copy — raising the new chain's cursor
         // would claim safety no replica provides. Reject up front.
@@ -223,7 +229,7 @@ impl Cluster {
                     .sharedfs
                     .note_replicated(pid, new_id, wire_bytes);
             }
-            let ack = self.chain_ship_cost(sender, &hops, wire_bytes, drain_done);
+            let ack = self.chain_ship_cost(sender, &hops, wire_bytes, drain_done)?;
             self.replicated_bytes += wire_bytes * hops.len() as u64;
             suffix_entries += pending.len();
             suffix_bytes += wire_bytes;
@@ -298,7 +304,7 @@ impl Cluster {
                     drain_done
                 };
                 let rpc_done =
-                    self.fabric.rpc(read_done, t, d, 64, total.max(64), p.rpc_overhead, &p);
+                    self.fault_rpc(read_done, t, d, 64, total.max(64), p.rpc_overhead)?;
                 let write_done = if total > 0 {
                     self.nodes[t].sockets[tsock].nvm.write(rpc_done, total, &p)
                 } else {

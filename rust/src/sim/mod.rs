@@ -5,10 +5,12 @@
 pub mod api;
 pub mod assise;
 pub mod failure;
+pub mod fault;
 pub mod migrate;
 
 pub use api::{DistFs, FsCompletion, FsOp, FsOut};
 pub use assise::{Cluster, Node, SocketUnit};
+pub use fault::FaultPlan;
 pub use migrate::MigrationReport;
 
 use crate::coherence::ManagerPolicy;
@@ -52,6 +54,17 @@ pub struct ClusterConfig {
     pub repl_window: usize,
     /// use the I/OAT DMA engine for cross-socket digestion (§3.2).
     pub numa_dma: bool,
+    /// cluster-manager heartbeat period (§3.1): a missed beat starts the
+    /// suspicion window, it does NOT declare the node dead.
+    pub heartbeat_interval: crate::Nanos,
+    /// how long a node stays suspected after its first missed beat
+    /// before being declared failed. Detection for a clean kill is
+    /// `heartbeat_interval + suspect_timeout` (defaults sum to the
+    /// paper's 1 s detection, §5.4); gray classes charge more (see
+    /// [`assise::Cluster::suspect_partitioned_node`]) and an outage
+    /// shorter than the sum is absorbed entirely
+    /// ([`assise::Cluster::flap_node`]).
+    pub suspect_timeout: crate::Nanos,
     /// verify digest batches with the AOT checksum kernel (costs real
     /// wall-clock; enabled in examples/tests, off in big sweeps).
     pub verify_digests: bool,
@@ -76,6 +89,8 @@ impl Default for ClusterConfig {
             digest_threshold: 0.30,
             repl_window: 4,
             numa_dma: false,
+            heartbeat_interval: 500_000_000,
+            suspect_timeout: 500_000_000,
             verify_digests: false,
             params: HwParams::default(),
         }
@@ -131,6 +146,16 @@ impl ClusterConfig {
 
     pub fn dma(mut self, on: bool) -> Self {
         self.numa_dma = on;
+        self
+    }
+
+    pub fn heartbeat(mut self, interval: crate::Nanos) -> Self {
+        self.heartbeat_interval = interval;
+        self
+    }
+
+    pub fn suspect(mut self, timeout: crate::Nanos) -> Self {
+        self.suspect_timeout = timeout;
         self
     }
 

@@ -227,7 +227,7 @@ fn truncate_survives_digest_and_failover() {
     c.fsync(p, fd).unwrap();
     c.digest_log(p).unwrap();
     let t = c.now(p);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, _) = c.failover_process(p, 1, 0, t).unwrap();
     assert_eq!(c.stat(np, "/t").unwrap().size, 100);
 }

@@ -38,7 +38,7 @@ fn head_kill_keeps_clean_reads_flowing() {
     c.fsync(w, fd).unwrap();
     c.digest_log(w).unwrap();
     let t = c.now(w);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
 
     // surviving replicas keep serving clean reads — and never version 1
     for (i, &(r, f)) in [(r1, f1), (r2, f2)].iter().enumerate() {
@@ -72,7 +72,7 @@ fn reads_survive_rolling_replica_loss_until_none_left() {
     let mut t = c.now(r);
     for dead in [1usize, 2, 0] {
         t += 2_000_000_000;
-        c.kill_node(dead, t);
+        c.kill_node(dead, t).unwrap();
         c.set_now(r, t + 1_500_000_000);
         let res = c.pread(r, f, 0, 8);
         if dead == 0 {
@@ -155,6 +155,68 @@ fn prop_reads_never_older_than_acked_fsync() {
         }
         assert!(c.craq.clean_reads + c.craq.dirty_redirects > 0);
         // the writer's own view is always its latest write
+        let own = decode(&c.pread(w, fd, 0, 8).unwrap().materialize());
+        assert_eq!(own, latest, "seed {seed}: writer must read its own write");
+    }
+}
+
+/// The same CRAQ invariants with a 10× NVM straggler sitting in the
+/// chain: the ranking demotes (never drops) the slow replica, remote
+/// readers route around it, and no read weakens — not stale, not torn,
+/// not backwards.
+#[test]
+fn prop_craq_invariants_hold_with_straggler_in_chain() {
+    for seed in 0..5 {
+        let mut rng = SplitMix64::new(9500 + seed);
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+        c.straggle_nvm(1, 10).unwrap();
+        let w = c.spawn_process(0, 0);
+        let fd = c.create(w, "/v").unwrap();
+        c.pwrite(w, fd, 0, Payload::bytes(encode(1))).unwrap();
+        c.fsync(w, fd).unwrap();
+        c.digest_log(w).unwrap();
+
+        let readers =
+            [c.spawn_process(0, 0), c.spawn_process(1, 0), c.spawn_process(2, 0)];
+        let mut rfds = Vec::new();
+        for &r in readers.iter() {
+            c.set_now(r, c.now(w));
+            rfds.push(c.open(r, "/v").unwrap());
+        }
+
+        let mut latest = 1u64;
+        let mut committed = 1u64;
+        let mut last_seen = [1u64; 3];
+        for _ in 0..60 {
+            match rng.below(4) {
+                0 => {
+                    latest += 1;
+                    c.pwrite(w, fd, 0, Payload::bytes(encode(latest))).unwrap();
+                }
+                1 => {
+                    c.fsync(w, fd).unwrap();
+                }
+                2 => {
+                    c.fsync(w, fd).unwrap();
+                    c.digest_log(w).unwrap();
+                    committed = latest;
+                }
+                _ => {
+                    let i = rng.below(3) as usize;
+                    let r = readers[i];
+                    c.set_now(r, c.now(r).max(c.now(w)));
+                    let got = decode(&c.pread(r, rfds[i], 0, 8).unwrap().materialize());
+                    assert!(
+                        got >= committed,
+                        "seed {seed}: straggler chain served stale {got} < {committed}"
+                    );
+                    assert!(got <= latest, "seed {seed}: torn read {got} > {latest}");
+                    assert!(got >= last_seen[i], "seed {seed}: reader {i} went backwards");
+                    last_seen[i] = got;
+                }
+            }
+        }
+        assert!(c.craq.clean_reads + c.craq.dirty_redirects > 0);
         let own = decode(&c.pread(w, fd, 0, 8).unwrap().materialize());
         assert_eq!(own, latest, "seed {seed}: writer must read its own write");
     }

@@ -29,7 +29,7 @@ fn prefix_semantics_on_failover() {
         c.write(p, fd, Payload::bytes(vec![i; 100])).unwrap();
     }
     let t = c.now(p);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, report) = c.failover_process(p, 1, 0, t).unwrap();
     assert_eq!(report.lost_entries, 2);
     let fd2 = c.open(np, "/f").unwrap();
@@ -55,7 +55,7 @@ fn no_holes_in_recovered_prefix() {
     c.fsync(p, fa).unwrap(); // fsync replicates the whole log prefix
     c.write(p, fa, Payload::bytes(b"a2".to_vec())).unwrap();
     let t = c.now(p);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, _) = c.failover_process(p, 1, 0, t).unwrap();
     let fa2 = c.open(np, "/d/a").unwrap();
     let fb2 = c.open(np, "/d/b").unwrap();
@@ -72,7 +72,7 @@ fn local_restart_recovers_unreplicated_writes_pessimistic() {
     let fd = c.create(p, "/f").unwrap();
     c.write(p, fd, Payload::bytes(b"never-fsynced".to_vec())).unwrap();
     let t = c.now(p);
-    c.kill_process(p);
+    c.kill_process(p).unwrap();
     c.restart_process(p, t).unwrap();
     let fd2 = c.open(p, "/f").unwrap();
     assert_eq!(c.pread(p, fd2, 0, 13).unwrap().materialize(), b"never-fsynced");
@@ -87,7 +87,7 @@ fn local_restart_recovers_optimistic_mode_too() {
     c.write(p, fd, Payload::bytes(b"optimistic".to_vec())).unwrap();
     c.fsync(p, fd).unwrap(); // no-op in this mode
     let t = c.now(p);
-    c.kill_process(p);
+    c.kill_process(p).unwrap();
     c.restart_process(p, t).unwrap();
     let fd2 = c.open(p, "/f").unwrap();
     assert_eq!(c.pread(p, fd2, 0, 10).unwrap().materialize(), b"optimistic");
@@ -102,7 +102,7 @@ fn optimistic_failover_loses_uncoalesced_suffix_only() {
     c.dsync(p, fd).unwrap(); // explicit persistence point
     c.write(p, fd, Payload::bytes(vec![2; 64])).unwrap();
     let t = c.now(p);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, report) = c.failover_process(p, 1, 0, t).unwrap();
     assert_eq!(report.lost_entries, 1);
     assert_eq!(c.stat(np, "/f").unwrap().size, 64);
@@ -140,7 +140,7 @@ fn rename_durability_across_failover() {
     c.rename(p, "/q/tmp", "/mbox/msg").unwrap();
     c.fsync(p, fd).unwrap();
     let t = c.now(p);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, _) = c.failover_process(p, 1, 0, t).unwrap();
     assert!(c.stat(np, "/mbox/msg").is_ok());
     assert!(c.stat(np, "/q/tmp").is_err());
@@ -158,7 +158,7 @@ fn epoch_invalidation_prevents_stale_reads() {
     c.digest_log(p).unwrap();
     // node 1 dies; the survivor overwrites
     let t = c.now(p);
-    c.kill_node(1, t);
+    c.kill_node(1, t).unwrap();
     c.pwrite(p, fd, 0, Payload::bytes(b"NEW".to_vec())).unwrap();
     c.fsync(p, fd).unwrap();
     c.digest_log(p).unwrap();
@@ -188,8 +188,8 @@ fn cascading_failure_to_reserve_replica() {
     c.fsync(p, fd).unwrap();
     c.digest_log(p).unwrap();
     let t = c.now(p);
-    c.kill_node(0, t);
-    c.kill_node(1, t + 1_000);
+    c.kill_node(0, t).unwrap();
+    c.kill_node(1, t + 1_000).unwrap();
     // fail over to the reserve replica (node 2)
     let (np, _) = c.failover_process(p, 2, 0, t + 1_000).unwrap();
     let fd2 = c.open(np, "/f").unwrap();

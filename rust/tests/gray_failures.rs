@@ -1,0 +1,410 @@
+//! Gray-failure property suite: randomized op scripts under each fault
+//! class — link partitions (one-way, two-way), stragglers, message
+//! drop/reorder, flapping nodes, and clock skew — asserting the
+//! availability invariants the fault layer exists to protect:
+//!
+//! 1. no acknowledged (fsync'd) write is ever lost across a failover,
+//!    clean-kill or partition-suspected alike;
+//! 2. no read returns a stale or torn payload, straggler in the chain
+//!    or not;
+//! 3. lease exclusivity survives per-process clock skew;
+//! 4. every unreachable outcome surfaces as an explicit
+//!    `FsError::ChainUnavailable` — never a silent wrong answer;
+//! 5. the same fault seed replays an identical virtual-time trace.
+
+use assise::fs::{FsError, Payload};
+use assise::sim::{Cluster, ClusterConfig, DistFs, FaultPlan};
+use assise::util::SplitMix64;
+
+fn encode(v: u64) -> Vec<u8> {
+    v.to_le_bytes().to_vec()
+}
+
+fn decode(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+/// Committed state on a 4-node cluster: version 1 of `/v` written,
+/// fsync'd, and digested by a writer on node 0 (chain `[0, 1, 2]`).
+fn seeded_cluster() -> (Cluster, usize, u64) {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(4).replication(3).read_cache(0));
+    let w = c.spawn_process(0, 0);
+    let fd = c.create(w, "/v").unwrap();
+    c.pwrite(w, fd, 0, Payload::bytes(encode(1))).unwrap();
+    c.fsync(w, fd).unwrap();
+    c.digest_log(w).unwrap();
+    (c, w, fd)
+}
+
+// ================================================== partitions
+
+#[test]
+fn two_way_partition_surfaces_chain_unavailable_then_heals() {
+    let (mut c, w, fd) = seeded_cluster();
+    let r = c.spawn_process(3, 0); // off-chain reader
+    c.set_now(r, c.now(w) + 1_000_000);
+    let f = c.open(r, "/v").unwrap();
+    assert_eq!(decode(&c.pread(r, f, 0, 8).unwrap().materialize()), 1);
+
+    // cut the reader's node off from every replica
+    c.isolate_node(3).unwrap();
+    let res = c.pread(r, f, 0, 8);
+    assert!(
+        matches!(res, Err(FsError::ChainUnavailable(_))),
+        "partitioned read must surface ChainUnavailable, got {res:?}"
+    );
+    assert!(c.fault_stats.partitioned_sends_refused > 0);
+
+    // a new committed version lands while the reader is cut off
+    c.pwrite(w, fd, 0, Payload::bytes(encode(2))).unwrap();
+    c.fsync(w, fd).unwrap();
+    c.digest_log(w).unwrap();
+
+    // heal: reads flow again and serve the committed version, never the
+    // stale pre-partition payload
+    c.heal_all_partitions();
+    c.set_now(r, c.now(w) + 1_000_000);
+    assert_eq!(decode(&c.pread(r, f, 0, 8).unwrap().materialize()), 2);
+}
+
+#[test]
+fn oneway_partition_is_asymmetric_but_blocks_round_trips() {
+    let (mut c, w, _fd) = seeded_cluster();
+    let r = c.spawn_process(3, 0);
+    c.set_now(r, c.now(w) + 1_000_000);
+    let f = c.open(r, "/v").unwrap();
+
+    // blocking only one outbound link leaves other candidates serving
+    c.partition_oneway(3, 2).unwrap();
+    assert_eq!(decode(&c.pread(r, f, 0, 8).unwrap().materialize()), 1);
+
+    // blocking ALL outbound links starves the reader even though every
+    // reverse direction is still up — an RPC needs the round trip
+    c.partition_oneway(3, 0).unwrap();
+    c.partition_oneway(3, 1).unwrap();
+    assert!(c.fault.reachable(0, 3) && c.fault.reachable(1, 3) && c.fault.reachable(2, 3));
+    assert!(matches!(c.pread(r, f, 0, 8), Err(FsError::ChainUnavailable(_))));
+}
+
+#[test]
+fn partitioned_chain_hop_fails_fsync_explicitly() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+    let w = c.spawn_process(0, 0);
+    let fd = c.create(w, "/f").unwrap();
+    c.pwrite(w, fd, 0, Payload::zero(4096)).unwrap();
+    c.fsync(w, fd).unwrap(); // healthy chain acks
+
+    // head -> successor link dies; the local append still succeeds but
+    // the replication ack cannot form
+    c.partition(0, 1).unwrap();
+    c.pwrite(w, fd, 4096, Payload::zero(4096)).unwrap();
+    let res = c.fsync(w, fd);
+    assert!(
+        matches!(res, Err(FsError::ChainUnavailable(_))),
+        "fsync over a partitioned hop must refuse, got {res:?}"
+    );
+    assert!(c.fault_stats.partitioned_sends_refused > 0);
+
+    // heal: the suffix replicates and the ack completes
+    c.heal_partition(0, 1).unwrap();
+    c.fsync(w, fd).unwrap();
+}
+
+#[test]
+fn no_acked_write_lost_across_partition_failover() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+    let w = c.spawn_process(0, 0);
+    let fd = c.create(w, "/f").unwrap();
+    for k in 0..32u64 {
+        c.pwrite(w, fd, k * 4096, Payload::zero(4096)).unwrap();
+        c.fsync(w, fd).unwrap(); // every write acked
+    }
+    let t = c.now(w);
+
+    // gray failure: node 0 still runs, but the manager declares it via
+    // the partition-suspect path (one extra suspicion round)
+    let detected = c.suspect_partitioned_node(0, t).unwrap();
+    assert_eq!(
+        detected,
+        t + c.cfg.heartbeat_interval + 2 * c.cfg.suspect_timeout,
+        "gray detection charges heartbeat + two suspect windows"
+    );
+
+    let (np, report) = c.failover_process(w, 1, 0, t).unwrap();
+    assert_eq!(report.detected_at, detected);
+    assert_eq!(report.lost_entries, 0, "acked writes must survive failover");
+    assert_eq!(c.stat(np, "/f").unwrap().size, 32 * 4096);
+    let fd2 = c.open(np, "/f").unwrap();
+    assert_eq!(c.pread(np, fd2, 0, 32 * 4096).unwrap().len(), 32 * 4096);
+    assert!(!c.fault_stats.detection_latency.is_empty());
+}
+
+// ================================================== stragglers
+
+#[test]
+fn straggler_replica_demoted_but_chain_still_serves() {
+    let (mut c, w, _fd) = seeded_cluster();
+    // node 1's NVM runs 10x slow — degraded, not dead
+    c.straggle_nvm(1, 10).unwrap();
+    let r = c.spawn_process(3, 0);
+    c.set_now(r, c.now(w) + 1_000_000);
+    let f = c.open(r, "/v").unwrap();
+    for k in 0..8u64 {
+        c.set_now(r, c.now(r) + k * 1_000_000);
+        assert_eq!(decode(&c.pread(r, f, 0, 8).unwrap().materialize()), 1);
+    }
+    assert_eq!(c.reads_served_by[1], 0, "straggler must not serve while peers can");
+    assert!(c.fault_stats.straggler_reads_rerouted > 0);
+
+    // healing the device restores the replica to normal ranking
+    c.straggle_nvm(1, 1).unwrap();
+    assert!(!c.mgr.is_straggler(1));
+    assert_eq!(decode(&c.pread(r, f, 0, 8).unwrap().materialize()), 1);
+}
+
+#[test]
+fn nic_straggler_flags_node_and_inflates_rpc() {
+    let (mut c, _w, _fd) = seeded_cluster();
+    c.straggle_nic(2, 8).unwrap();
+    assert!(c.mgr.is_straggler(2));
+    assert_eq!(c.fault.nic_mult(2), 8);
+    c.straggle_nic(2, 1).unwrap();
+    assert!(!c.mgr.is_straggler(2));
+}
+
+// ================================================== drop / reorder
+
+#[test]
+fn drop_budget_exhaustion_surfaces_chain_unavailable() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+    let w = c.spawn_process(0, 0);
+    let fd = c.create(w, "/f").unwrap();
+    c.set_drop_plan(1.0, 0.0, 2, 1_000, 0); // every send drops
+    c.pwrite(w, fd, 0, Payload::zero(4096)).unwrap(); // local append fine
+    let res = c.fsync(w, fd);
+    assert!(
+        matches!(res, Err(FsError::ChainUnavailable(_))),
+        "retry budget exhaustion must refuse, got {res:?}"
+    );
+    assert!(c.fault_stats.messages_dropped >= 3, "initial try + 2 retries all dropped");
+    assert!(c.fault_stats.partitioned_sends_refused >= 1);
+}
+
+#[test]
+fn lossy_link_with_retry_budget_still_acks_everything() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+    c.fault = FaultPlan::new(11);
+    c.set_drop_plan(0.25, 0.10, 30, 1_000, 5_000);
+    let w = c.spawn_process(0, 0);
+    let fd = c.create(w, "/f").unwrap();
+    for k in 0..24u64 {
+        c.pwrite(w, fd, k * 4096, Payload::zero(4096)).unwrap();
+        c.fsync(w, fd).unwrap(); // retries absorb every drop
+    }
+    assert!(c.fault_stats.messages_dropped > 0, "a 25% drop plan must have fired");
+    c.digest_log(w).unwrap();
+    assert_eq!(c.stat(w, "/f").unwrap().size, 24 * 4096, "acked writes all durable");
+}
+
+#[test]
+fn same_seed_replays_identical_virtual_time_trace() {
+    fn run(seed: u64) -> (u64, u64, u64, u64) {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+        c.fault = FaultPlan::new(seed);
+        c.set_drop_plan(0.15, 0.10, 20, 1_000, 5_000);
+        let pid = c.spawn_process(0, 0);
+        let fd = c.create(pid, "/f").unwrap();
+        let mut rng = SplitMix64::new(77);
+        for _ in 0..40 {
+            c.pwrite(pid, fd, rng.below(64) * 4096, Payload::zero(4096)).unwrap();
+            if rng.below(4) == 0 {
+                c.fsync(pid, fd).unwrap();
+            }
+        }
+        c.fsync(pid, fd).unwrap();
+        (
+            c.now(pid),
+            c.fault_stats.messages_dropped,
+            c.fault_stats.messages_reordered,
+            c.fault_stats.partitioned_sends_refused,
+        )
+    }
+    let a = run(42);
+    let b = run(42);
+    assert_eq!(a, b, "same fault seed must replay an identical trace");
+    assert!(a.1 > 0, "the drop plan must actually have perturbed the run");
+}
+
+// ================================================== flapping
+
+#[test]
+fn flap_within_suspicion_window_is_absorbed() {
+    let (mut c, w, _fd) = seeded_cluster();
+    let t = c.now(w);
+    // outage shorter than heartbeat + suspect: the first missed beat
+    // only starts the suspicion timer — the node is never declared dead
+    let short = c.cfg.heartbeat_interval / 2;
+    assert_eq!(c.flap_node(1, t, t + short).unwrap(), None);
+    assert!(c.mgr.is_up(1), "absorbed flap must not declare the node down");
+    assert!(c.nodes[1].alive);
+
+    // outage past the window is a real failure: declared, then recovered
+    let long = 2 * (c.cfg.heartbeat_interval + c.cfg.suspect_timeout);
+    let detected = c.flap_node(1, t, t + long).unwrap();
+    assert_eq!(detected, Some(t + c.cfg.heartbeat_interval + c.cfg.suspect_timeout));
+    assert!(c.mgr.is_up(1), "flapped node rejoins after recovery");
+}
+
+#[test]
+fn scheduled_flaps_run_in_order_and_reads_survive() {
+    let (mut c, w, _fd) = seeded_cluster();
+    let t = c.now(w);
+    let window = c.cfg.heartbeat_interval + c.cfg.suspect_timeout;
+    // one absorbed blip, one real outage, scheduled out of order
+    c.fault.schedule_flap(2, t + 10 * window, t + 13 * window);
+    c.fault.schedule_flap(1, t + 2 * window, t + 2 * window + window / 4);
+    let outcomes = c.run_flap_schedule().unwrap();
+    assert_eq!(outcomes.len(), 2);
+    assert_eq!(outcomes[0], (1, None), "short blip absorbed");
+    assert_eq!(outcomes[1].0, 2);
+    assert!(outcomes[1].1.is_some(), "long outage declared");
+
+    // after the dust settles every replica serves the committed version
+    let r = c.spawn_process(3, 0);
+    c.set_now(r, t + 20 * window);
+    let f = c.open(r, "/v").unwrap();
+    assert_eq!(decode(&c.pread(r, f, 0, 8).unwrap().materialize()), 1);
+}
+
+// ================================================== clock skew
+
+#[test]
+fn lease_exclusivity_survives_clock_skew() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+    let a = c.spawn_process(0, 0);
+    let b = c.spawn_process(1, 0);
+    let fda = c.create(a, "/shared").unwrap();
+    c.pwrite(a, fda, 0, Payload::bytes(encode(1))).unwrap();
+    c.fsync(a, fda).unwrap();
+    c.digest_log(a).unwrap();
+
+    // b's clock runs 2 s ahead of the cluster; a fast clock must not
+    // let it treat an unexpired remote lease as expired
+    c.skew_clock(b, 2_000_000_000).unwrap();
+    assert_eq!(c.fault.skew_of(b), 2_000_000_000);
+    let fdb = c.open(b, "/shared").unwrap();
+    c.pwrite(b, fdb, 0, Payload::bytes(encode(2))).unwrap();
+    c.fsync(b, fdb).unwrap();
+    let now = c.now(a).max(c.now(b));
+    assert!(c.lease_exclusivity_ok(now), "overlapping write leases under +skew");
+
+    // a drifts backwards; reclaiming the lease must stay exclusive too
+    c.skew_clock(a, -500_000_000).unwrap();
+    c.set_now(a, c.now(a).max(c.now(b)));
+    c.pwrite(a, fda, 0, Payload::bytes(encode(3))).unwrap();
+    c.fsync(a, fda).unwrap();
+    let now = c.now(a).max(c.now(b));
+    assert!(c.lease_exclusivity_ok(now), "overlapping write leases under -skew");
+
+    // and the last write wins: no torn/stale payload on either side
+    c.digest_log(a).unwrap();
+    let r = c.spawn_process(1, 0);
+    c.set_now(r, now + 1_000_000);
+    let f = c.open(r, "/shared").unwrap();
+    assert_eq!(decode(&c.pread(r, f, 0, 8).unwrap().materialize()), 3);
+}
+
+// ================================================== randomized scripts
+
+/// The CRAQ property script from `craq_reads.rs`, re-run under a rotating
+/// fault mix: a straggler NVM, a straggler NIC, and a lossy (but
+/// retry-covered) fabric. The read invariants may not weaken under any
+/// of them.
+#[test]
+fn prop_read_invariants_hold_under_fault_mix() {
+    for seed in 0..6u64 {
+        let mut c = Cluster::new(ClusterConfig::default().nodes(3).replication(3));
+        c.fault = FaultPlan::new(500 + seed);
+        match seed % 3 {
+            0 => c.straggle_nvm(1, 10).unwrap(),
+            1 => c.straggle_nic(2, 6).unwrap(),
+            _ => c.set_drop_plan(0.15, 0.05, 30, 1_000, 5_000),
+        }
+        let mut rng = SplitMix64::new(7000 + seed);
+        let w = c.spawn_process(0, 0);
+        let fd = c.create(w, "/v").unwrap();
+        c.pwrite(w, fd, 0, Payload::bytes(encode(1))).unwrap();
+        c.fsync(w, fd).unwrap();
+        c.digest_log(w).unwrap();
+
+        let readers = [c.spawn_process(0, 0), c.spawn_process(1, 0), c.spawn_process(2, 0)];
+        let mut rfds = Vec::new();
+        for &r in readers.iter() {
+            c.set_now(r, c.now(w));
+            rfds.push(c.open(r, "/v").unwrap());
+        }
+
+        let mut latest = 1u64;
+        let mut committed = 1u64;
+        let mut last_seen = [1u64; 3];
+        for _ in 0..50 {
+            match rng.below(4) {
+                0 => {
+                    latest += 1;
+                    c.pwrite(w, fd, 0, Payload::bytes(encode(latest))).unwrap();
+                }
+                1 => {
+                    c.fsync(w, fd).unwrap();
+                }
+                2 => {
+                    c.fsync(w, fd).unwrap();
+                    c.digest_log(w).unwrap();
+                    committed = latest;
+                }
+                _ => {
+                    let i = rng.below(3) as usize;
+                    let r = readers[i];
+                    c.set_now(r, c.now(r).max(c.now(w)));
+                    let got = decode(&c.pread(r, rfds[i], 0, 8).unwrap().materialize());
+                    assert!(got >= committed, "seed {seed}: stale read {got} < {committed}");
+                    assert!(got <= latest, "seed {seed}: torn read {got} > {latest}");
+                    assert!(got >= last_seen[i], "seed {seed}: reader {i} went backwards");
+                    last_seen[i] = got;
+                }
+            }
+        }
+        let own = decode(&c.pread(w, fd, 0, 8).unwrap().materialize());
+        assert_eq!(own, latest, "seed {seed}: writer must read its own write");
+    }
+}
+
+// ================================================== bad ids
+
+#[test]
+fn bad_ids_surface_invalid_argument_not_panics() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+    let pid = c.spawn_process(0, 0);
+    c.create(pid, "/f").unwrap();
+    assert!(matches!(c.kill_node(99, 0), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.kill_process(99), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.restart_process(99, 0), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.failover_process(99, 0, 0, 0), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.failover_process(pid, 99, 0, 0), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.recover_node(99, 0), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.os_failover(99, 0), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.partition(0, 99), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.partition_oneway(99, 0), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.isolate_node(99), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.straggle_nvm(99, 10), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.straggle_nic(99, 10), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.skew_clock(99, 5), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.flap_node(99, 0, 1), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.flap_node(0, 10, 5), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(c.suspect_partitioned_node(99, 0), Err(FsError::InvalidArgument(_))));
+    assert!(matches!(
+        c.migrate_chain("/f", vec![99], vec![], 0),
+        Err(FsError::InvalidArgument(_))
+    ));
+    // the cluster is untouched: the real node still serves
+    assert!(c.stat(pid, "/f").is_ok());
+}

@@ -223,7 +223,7 @@ fn prop_failover_recovers_exact_prefix() {
             }
         }
         let t = c.now(pid);
-        c.kill_node(0, t);
+        c.kill_node(0, t).unwrap();
         let (np, _) = c.failover_process(pid, 1, 0, t).unwrap();
         let st = c.stat(np, "/f").unwrap();
         assert_eq!(st.size, fsynced_len, "seed {seed}: backup size != fsync'd prefix");
@@ -246,7 +246,7 @@ fn prop_local_restart_total_recovery() {
                 len += chunk;
             }
             let t = c.now(pid);
-            c.kill_process(pid);
+            c.kill_process(pid).unwrap();
             c.restart_process(pid, t).unwrap();
             let fd2 = c.open(pid, "/f").unwrap();
             let st = c.stat(pid, "/f").unwrap();

@@ -61,7 +61,7 @@ fn live_migration_loses_no_acked_write_and_keeps_reads_flowing() {
 
     // the writer's node dies; fail over onto the NEW chain's member
     let t = c.now(pid);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, report) = c.failover_process(pid, 2, 0, t).unwrap();
     assert_eq!(report.lost_entries, 0, "every write was fsync-acked");
     let fd2 = c.open(np, "/hot/f").unwrap();
@@ -82,7 +82,7 @@ fn reads_survive_retired_chain_loss_after_catchup() {
     c.digest_log(pid).unwrap();
     let t = c.now(pid);
     let rep = c.migrate_chain("/hot", vec![2], vec![], t).unwrap();
-    c.kill_node(1, rep.catchup_at);
+    c.kill_node(1, rep.catchup_at).unwrap();
     let r = c.spawn_process(3, 0);
     c.set_now(r, rep.catchup_at + 1_000_000);
     let rfd = c.open(r, "/hot/f").unwrap();
@@ -141,7 +141,7 @@ fn failure_during_migration_property() {
             }
             if k == kill_at && !head_dead {
                 // the old head dies with replication windows in flight
-                c.kill_node(1, c.now(pid));
+                c.kill_node(1, c.now(pid)).unwrap();
                 head_dead = true;
             }
         }
@@ -169,7 +169,7 @@ fn failure_during_migration_property() {
 
         // writer dies; replacement lands on the new chain's node
         let t2 = c.now(pid).max(c.now(r));
-        c.kill_node(0, t2);
+        c.kill_node(0, t2).unwrap();
         let (np, report) = c.failover_process(pid, 3, 0, t2).unwrap();
         assert_eq!(report.lost_entries, 0, "seed {seed}: every write was fsync-acked");
         for f in 0..files as usize {
@@ -216,7 +216,7 @@ fn cross_chain_rename_recoverable_on_each_chain() {
 
     // writer dies before any digest: fail over and recover
     let t = c.now(pid);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, report) = c.failover_process(pid, 2, 0, t).unwrap();
     assert_eq!(report.lost_entries, 0);
     // the move is visible: destination exists with the data, source gone
@@ -281,7 +281,7 @@ fn migration_survives_rerouted_cross_chain_rename() {
     let t = c.now(pid);
     c.migrate_chain("/b", vec![3], vec![], t).unwrap();
 
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, report) = c.failover_process(pid, 3, 0, t).unwrap();
     assert_eq!(report.lost_entries, 0);
     let fd2 = c.open(np, "/b/y").unwrap();

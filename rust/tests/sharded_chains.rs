@@ -34,7 +34,7 @@ fn mixed_fsync_batch_recoverable_on_each_subtree_chain() {
     c.write(pid, fa, Payload::bytes(b"UNSYNCED".to_vec())).unwrap();
 
     let t = c.now(pid);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
     assert_eq!(report.lost_entries, 1, "exactly the unsynced write is lost");
 
@@ -72,7 +72,7 @@ fn uneven_chain_acks_lose_only_their_own_chains_suffix() {
     c.write(pid, fg, Payload::bytes(vec![3u8; 128])).unwrap();
 
     let t = c.now(pid);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
     assert_eq!(report.lost_entries, 2, "create + write of /b/g");
 
@@ -106,7 +106,7 @@ fn interleaved_fsyncs_keep_per_chain_cursors_exact() {
         c.fsync(pid, if round % 2 == 0 { fa } else { fb }).unwrap();
     }
     let t = c.now(pid);
-    c.kill_node(0, t);
+    c.kill_node(0, t).unwrap();
     let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
     assert_eq!(report.lost_entries, 0, "every round ended fsync'd");
     assert_eq!(c.stat(np, "/a/f").unwrap().size, alen);
