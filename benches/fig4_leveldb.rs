@@ -1,6 +1,9 @@
 //! `cargo bench` wrapper regenerating the paper's fig4.
 //! Scale via `ASSISE_BENCH_SCALE` (default 0.2 to keep bench runs quick;
 //! use `assise bench fig4 --scale 1` for the full run).
+// Bench harnesses are the sanctioned wall-clock users (see clippy.toml's
+// disallowed-methods and the assise-lint determinism rule).
+#![allow(clippy::disallowed_methods)]
 fn main() {
     let scale = std::env::var("ASSISE_BENCH_SCALE")
         .ok()

@@ -1,6 +1,9 @@
 //! `cargo bench` wrapper for the hot-path microbenchmarks
 //! (`assise bench perf`). Scale via `ASSISE_BENCH_SCALE` (default 0.2);
 //! writes `BENCH_perf.json` (see PERF.md for the schema).
+// Bench harnesses are the sanctioned wall-clock users (see clippy.toml's
+// disallowed-methods and the assise-lint determinism rule).
+#![allow(clippy::disallowed_methods)]
 fn main() {
     let scale = std::env::var("ASSISE_BENCH_SCALE")
         .ok()

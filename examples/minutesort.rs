@@ -12,7 +12,9 @@
 //!   for global order and completeness (the paper runs valsort).
 //!
 //! Run: `make artifacts && cargo run --release --example minutesort`
-
+// Bench harnesses are the sanctioned wall-clock users (see clippy.toml's
+// disallowed-methods and the assise-lint determinism rule).
+#![allow(clippy::disallowed_methods)]
 use assise::baselines::NfsLike;
 use assise::runtime::PartitionExec;
 use assise::sim::{Cluster, ClusterConfig, DistFs};

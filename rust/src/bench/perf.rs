@@ -16,6 +16,11 @@
 //! (`BENCH_perf.json`, schema documented in `PERF.md`) so runs can be
 //! diffed across commits.
 
+// Wall-clock timing is this module's whole point; the determinism lint
+// (and clippy's disallowed-methods cross-check) ban `Instant` everywhere
+// else in the crate.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use crate::fs::{payload::stats, Cred, ExtentMap, FileStore, Mode, Payload, Tier};
@@ -587,6 +592,38 @@ pub fn to_json(rows: &[PerfRow], scale: f64) -> String {
     out
 }
 
+/// Registry of every row name `run_rows` emits into `BENCH_perf.json`,
+/// in emission order. `assise-lint`'s registration rule reads this list
+/// and cross-checks it against the ids CI greps out of the JSON, so a
+/// new benchmark that is not wired into CI (or a CI grep for a row that
+/// no longer exists) fails the lint. The in-crate `perf_row_registry`
+/// test keeps this list honest against `run_rows` itself.
+pub const PERF_ROW_IDS: &[&str] = &[
+    "payload_slice_1mb",
+    "payload_concat_16x4k",
+    "extent_overlay_write_4k",
+    "extent_read_gather_64k",
+    "store_write_at_4k",
+    "store_read_at_16k",
+    "resolve_hot_1024_files",
+    "rename_dir_64_of_4160",
+    "coalesce_varmail_2048ops",
+    "digest_apply_576ops",
+    "fig2a_e2e_scale0.2",
+    "repl_scaling_1chains",
+    "repl_scaling_2chains",
+    "repl_scaling_4chains",
+    "read_scaling_1replica",
+    "read_scaling_2replicas",
+    "read_scaling_3replicas",
+    "submit_perop_4k",
+    "submit_batch_4k_x64",
+    "rebalance_steady_4k",
+    "rebalance_drain_4k",
+    "failover_clean_kill",
+    "failover_partition",
+];
+
 /// Run every microbenchmark. `scale` multiplies the iteration counts
 /// (wall-clock budget), not the structure sizes.
 pub fn run_rows(scale: Scale) -> Vec<PerfRow> {
@@ -773,6 +810,14 @@ mod tests {
         );
         assert_eq!(bat.copied_bytes, 0, "batch path must stay zero-copy");
         assert_eq!(seq.copied_bytes, 0);
+    }
+
+    #[test]
+    fn perf_row_registry_matches_run_rows() {
+        // the registration lint trusts PERF_ROW_IDS; this test makes the
+        // registry load-bearing by diffing it against an actual tiny run
+        let names: Vec<String> = run_rows(Scale(0.02)).into_iter().map(|r| r.name).collect();
+        assert_eq!(names, PERF_ROW_IDS, "PERF_ROW_IDS must mirror run_rows emission order");
     }
 
     #[test]

@@ -279,13 +279,16 @@ impl ClusterManager {
         self.generation
     }
 
-    /// The chain id routing `path` (most specific subtree match).
+    /// The chain id routing `path` (most specific subtree match). The
+    /// `"/"` catch-all route is installed in `new()` and never removed,
+    /// so the lookup cannot miss; falling back to `ChainId(0)` (the
+    /// catch-all's id) keeps this total without a panic path.
     pub fn chain_id_for(&self, path: &str) -> ChainId {
         self.routes
             .iter()
             .find(|(s, _)| is_subtree_of(path, s))
             .map(|&(_, id)| id)
-            .expect("catch-all route exists")
+            .unwrap_or(ChainId(0))
     }
 
     /// Membership of chain `id`, if it was ever registered.
@@ -564,35 +567,34 @@ mod tests {
     }
 
     #[test]
-    fn chain_lookup_most_specific() {
+    fn chain_lookup_most_specific() -> Result<()> {
         let mut m = mgr();
-        m.set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![] })
-            .unwrap();
+        m.set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![] })?;
         assert_eq!(m.chain_for("/maildir/u1").cache_replicas, vec![2, 0]);
         assert_eq!(m.chain_for("/other").cache_replicas, vec![0, 1]);
+        Ok(())
     }
 
     #[test]
-    fn chain_siblings_follow_configured_membership() {
+    fn chain_siblings_follow_configured_membership() -> Result<()> {
         let mut m = mgr(); // default: cache [0,1], reserve [2]
         assert_eq!(m.chain_siblings(0), vec![1, 2]);
-        m.set_chain("/shard", Chain { cache_replicas: vec![2], reserve_replicas: vec![] })
-            .unwrap();
+        m.set_chain("/shard", Chain { cache_replicas: vec![2], reserve_replicas: vec![] })?;
         // node 2's siblings come from every chain it serves
         assert_eq!(m.chain_siblings(2), vec![0, 1]);
         // a node in no chain has no siblings
-        m.set_chain("/", Chain { cache_replicas: vec![1], reserve_replicas: vec![] }).unwrap();
+        m.set_chain("/", Chain { cache_replicas: vec![1], reserve_replicas: vec![] })?;
         assert!(m.chain_siblings(0).is_empty());
+        Ok(())
     }
 
     #[test]
-    fn chain_identity_is_stable_and_first_class() {
+    fn chain_identity_is_stable_and_first_class() -> Result<()> {
         let mut m = mgr();
         let id_root = m.chain_id_for("/other");
         assert_eq!(id_root, ChainId(0));
-        let id_mail = m
-            .set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![1] })
-            .unwrap();
+        let mail = Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![1] };
+        let id_mail = m.set_chain("/maildir", mail.clone())?;
         assert_eq!(m.chain_id_for("/maildir/u1"), id_mail);
         assert_ne!(id_mail, id_root);
         // the id tracks the route, not liveness
@@ -601,19 +603,17 @@ mod tests {
         assert_eq!(m.chain_id_for("/maildir/u1"), id_mail);
         // re-registering identical membership is a no-op (same id)
         let g = m.generation();
-        let again = m
-            .set_chain("/maildir", Chain { cache_replicas: vec![2, 0], reserve_replicas: vec![1] })
-            .unwrap();
+        let again = m.set_chain("/maildir", mail)?;
         assert_eq!(again, id_mail);
         assert_eq!(m.generation(), g);
         // a membership change mints a fresh id and bumps the generation
-        let id2 = m
-            .set_chain("/maildir", Chain { cache_replicas: vec![1], reserve_replicas: vec![] })
-            .unwrap();
+        let id2 =
+            m.set_chain("/maildir", Chain { cache_replicas: vec![1], reserve_replicas: vec![] })?;
         assert_ne!(id2, id_mail);
         assert_eq!(m.generation(), g + 1);
         // the retired id's membership stays queryable (stale cursors)
-        assert_eq!(m.chain(id_mail).unwrap().cache_replicas, vec![2, 0]);
+        assert_eq!(m.chain(id_mail).map(|c| c.cache_replicas.clone()), Some(vec![2, 0]));
+        Ok(())
     }
 
     #[test]
@@ -637,12 +637,11 @@ mod tests {
     }
 
     #[test]
-    fn migrate_route_mints_fresh_id_and_bumps_generation() {
+    fn migrate_route_mints_fresh_id_and_bumps_generation() -> Result<()> {
         let mut m = mgr();
         let g0 = m.generation();
-        let (old, new) = m
-            .migrate_route("/hot", Chain { cache_replicas: vec![2], reserve_replicas: vec![] })
-            .unwrap();
+        let (old, new) =
+            m.migrate_route("/hot", Chain { cache_replicas: vec![2], reserve_replicas: vec![] })?;
         assert_eq!(old, ChainId(0), "inherited from the catch-all route");
         assert_ne!(new, old);
         assert_eq!(m.generation(), g0 + 1);
@@ -652,16 +651,16 @@ mod tests {
             m.migrate_route("/hot", Chain { cache_replicas: vec![7], reserve_replicas: vec![] }),
             Err(FsError::InvalidArgument(_))
         ));
+        Ok(())
     }
 
     #[test]
-    fn retired_members_trail_read_candidates_until_catchup() {
+    fn retired_members_trail_read_candidates_until_catchup() -> Result<()> {
         let mut m = ClusterManager::new(
             4,
             Chain { cache_replicas: vec![0, 1], reserve_replicas: vec![] },
         );
-        m.migrate_route("/d", Chain { cache_replicas: vec![2, 3], reserve_replicas: vec![] })
-            .unwrap();
+        m.migrate_route("/d", Chain { cache_replicas: vec![2, 3], reserve_replicas: vec![] })?;
         m.begin_retirement("/d", vec![0, 1], 1_000);
         // the record pins the post-flip generation it was created under
         assert_eq!(m.retiring[0].generation, m.generation());
@@ -675,20 +674,21 @@ mod tests {
         assert_eq!(m.read_candidates_at("/other", 2, 500), vec![1, 0]);
         m.retire_expired(1_000);
         assert_eq!(m.read_candidates_for("/d/f", 0), vec![3, 2]);
+        Ok(())
     }
 
     #[test]
-    fn retired_members_exclude_current_chain_overlap() {
+    fn retired_members_exclude_current_chain_overlap() -> Result<()> {
         let mut m = ClusterManager::new(
             3,
             Chain { cache_replicas: vec![0, 1], reserve_replicas: vec![] },
         );
-        m.migrate_route("/d", Chain { cache_replicas: vec![1, 2], reserve_replicas: vec![] })
-            .unwrap();
+        m.migrate_route("/d", Chain { cache_replicas: vec![1, 2], reserve_replicas: vec![] })?;
         m.begin_retirement("/d", vec![0, 1], 1_000);
         // node 1 is in the NEW chain too: only node 0 is truly retired
         assert_eq!(m.retired_members_covering("/d/f"), vec![0]);
         assert!(m.retired_members_covering("/other").is_empty());
+        Ok(())
     }
 
     #[test]
@@ -703,7 +703,7 @@ mod tests {
         // a non-member reader spreads over non-head peers before the head
         let c3 = m.read_candidates_for("/x", 3);
         assert_eq!(c3.len(), 3);
-        assert_eq!(*c3.last().unwrap(), 0, "head is the last resort");
+        assert_eq!(c3.last(), Some(&0), "head is the last resort");
         assert!(c3[..2].contains(&1) && c3[..2].contains(&2));
         // down members drop out; an empty chain yields no candidates
         let p = HwParams::default();

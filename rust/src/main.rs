@@ -7,11 +7,16 @@
 //! - `selfcheck` — load the AOT PJRT artifacts and validate the L1
 //!   kernels against the in-crate oracles (end-to-end three-layer
 //!   smoke test);
-//! - `demo` — tiny end-to-end cluster walkthrough.
+//! - `demo` — tiny end-to-end cluster walkthrough;
+//! - `lint` — run the repo's invariant linter (same engine as the
+//!   `assise-lint` bin; see `tools/lint/`).
 
 use assise::bench::{self, Scale};
 use assise::fs::Payload;
 use assise::sim::{Cluster, ClusterConfig, DistFs};
+
+#[path = "../../tools/lint/core/mod.rs"]
+mod lintcore;
 
 fn usage() -> ! {
     eprintln!(
@@ -22,7 +27,9 @@ fn usage() -> ! {
            bench perf [--scale F]                     hot-path microbenchmarks -> BENCH_perf.json\n\
            list                                       list experiments\n\
            selfcheck                                  validate AOT kernels (PJRT)\n\
-           demo                                       2-node write/replicate/failover demo"
+           demo                                       2-node write/replicate/failover demo\n\
+           lint [--root DIR] [--write-baseline]       invariant lints (fault routing,\n\
+                                                      determinism, panic ratchet, drift)"
     );
     std::process::exit(2);
 }
@@ -77,12 +84,21 @@ fn main() {
                 }
             }
             if let Some(path) = out {
-                std::fs::write(&path, rendered).expect("write --out file");
+                if let Err(e) = std::fs::write(&path, rendered) {
+                    eprintln!("failed to write {path}: {e}");
+                    std::process::exit(2);
+                }
                 eprintln!("wrote {path}");
             }
         }
         Some("selfcheck") => selfcheck(),
-        Some("demo") => demo(),
+        Some("demo") => {
+            if let Err(e) = demo() {
+                eprintln!("demo failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        Some("lint") => std::process::exit(lintcore::run_cli(&args[1..])),
         _ => usage(),
     }
 }
@@ -151,28 +167,29 @@ fn selfcheck() {
 }
 
 /// Small 2-node demo: write, replicate, digest, fail over, read back.
-fn demo() {
+fn demo() -> assise::fs::Result<()> {
     let mut c = Cluster::new(ClusterConfig::default().nodes(2));
     let pid = c.spawn_process(0, 0);
-    let fd = c.create(pid, "/demo").unwrap();
-    c.write(pid, fd, Payload::bytes(b"colocated NVM!".to_vec())).unwrap();
+    let fd = c.create(pid, "/demo")?;
+    c.write(pid, fd, Payload::bytes(b"colocated NVM!".to_vec()))?;
     println!("write latency: {} ns (process-local NVM log)", c.last_latency(pid));
-    c.fsync(pid, fd).unwrap();
+    c.fsync(pid, fd)?;
     println!("fsync latency: {} ns (chain-replicated to node 1)", c.last_latency(pid));
-    c.digest_log(pid).unwrap();
+    c.digest_log(pid)?;
 
     let t = c.now(pid);
-    c.kill_node(0, t).unwrap();
-    let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
+    c.kill_node(0, t)?;
+    let (np, report) = c.failover_process(pid, 1, 0, t)?;
     println!(
         "node 0 killed at t={} ms; detected {} ms later; fail-over work took {} us",
         t / 1_000_000,
         (report.detected_at - report.failed_at) / 1_000_000,
         (report.first_op_at - report.detected_at) / 1_000,
     );
-    let fd2 = c.open(np, "/demo").unwrap();
-    let data = c.pread(np, fd2, 0, 14).unwrap();
+    let fd2 = c.open(np, "/demo")?;
+    let data = c.pread(np, fd2, 0, 14)?;
     println!("read back on backup: {:?}", String::from_utf8_lossy(&data.materialize()));
     assert_eq!(data.materialize(), b"colocated NVM!");
     println!("demo OK");
+    Ok(())
 }

@@ -40,8 +40,8 @@ pub fn fanout_bandwidth_factor(replicas: usize) -> u64 {
 /// Split a chain into (cache replicas, reserve replicas) given the
 /// configured counts — mirrors `ClusterManager::set_chain` defaults.
 pub fn split_chain(nodes: &[NodeId], cache: usize) -> (Vec<NodeId>, Vec<NodeId>) {
-    let c = cache.min(nodes.len());
-    (nodes[..c].to_vec(), nodes[c..].to_vec())
+    let (cache, reserve) = nodes.split_at(cache.min(nodes.len()));
+    (cache.to_vec(), reserve.to_vec())
 }
 
 // ===================================================== chain partitioning
@@ -212,7 +212,7 @@ where
     route
         .into_iter()
         .map(|(t, idx)| {
-            let refs: Vec<&ChainPartition> = idx.iter().map(|&i| &parts[i]).collect();
+            let refs: Vec<&ChainPartition> = idx.iter().filter_map(|&i| parts.get(i)).collect();
             (t, merge_for_target(&refs))
         })
         .collect()

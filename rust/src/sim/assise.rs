@@ -275,30 +275,36 @@ impl Cluster {
         let t0 = self.procs[pid].clock.now;
         let old = self.procs[pid].log.capacity();
 
-        // phase 1: PREPARE — each replica reserves log space in its NVM
+        // phase 1: PREPARE — each replica reserves log space in its NVM.
+        // Remote hops ride the fault-aware fabric (`fault_rpc`), so a
+        // replica the coordinator cannot reach — partition or exhausted
+        // drop-retry budget — votes Deny: 2PC's safe default, the resize
+        // simply aborts, and the hop is charged to the fault counters.
         let mut votes = Vec::new();
         let mut t_prepare = t0;
         for &r in &chain {
             let sock = 0usize;
-            // a replica the coordinator cannot reach votes Deny — 2PC's
-            // safe default under partition (the resize simply aborts)
-            if r != pnode && !self.fault.bidirectional(pnode, r) {
-                self.fault_stats.partitioned_sends_refused += 1;
-                votes.push(Vote::Deny);
-                continue;
+            if r != pnode {
+                match self.fault_rpc(t0, pnode, r, 64, 64, p.rpc_overhead) {
+                    Ok(t) => t_prepare = t_prepare.max(t),
+                    Err(_) => {
+                        votes.push(Vote::Deny);
+                        continue;
+                    }
+                }
             }
             let ok = self.nodes[r].sockets[sock].nvm.alloc(new_size.saturating_sub(old));
             votes.push(if ok { Vote::Accept } else { Vote::Deny });
-            if r != pnode {
-                t_prepare = t_prepare.max(self.fabric.rpc(t0, pnode, r, 64, 64, p.rpc_overhead, &p));
-            }
         }
-        // phase 2: COMMIT / ABORT
+        // phase 2: COMMIT / ABORT — an unreachable replica is skipped
+        // (its reservation was never made; the abort path below frees
+        // only what Accept voters reserved)
         let mut t_commit = t_prepare;
         for &r in &chain {
-            if r != pnode && self.fault.bidirectional(pnode, r) {
-                t_commit =
-                    t_commit.max(self.fabric.rpc(t_prepare, pnode, r, 64, 64, p.rpc_overhead, &p));
+            if r != pnode {
+                if let Ok(t) = self.fault_rpc(t_prepare, pnode, r, 64, 64, p.rpc_overhead) {
+                    t_commit = t_commit.max(t);
+                }
             }
         }
         let outcome = resize::decide(&votes, new_size, t_commit);
@@ -646,6 +652,7 @@ impl Cluster {
         if t_issue > t_start {
             // the window was full with unacked batches: the wire issue is
             // deferred until the oldest ack frees a slot
+            // assise-lint: allow(nanos-sub) — guarded by t_issue > t_start
             self.repl_window_stats.record_stall(t_issue - t_start);
         }
         let (ack, chains) = self.replicate_suffix_at(pid, t_issue)?;
@@ -1451,10 +1458,10 @@ impl Cluster {
         let now = self.procs[pid].clock.now;
 
         if store_node != pnode {
-            // 3'. remote replica read (Assise-RMT): RPC + RDMA reply
-            let done = self
-                .fabric
-                .rpc(now, pnode, store_node, 64, len.max(64), p.rpc_overhead, &p);
+            // 3'. remote replica read (Assise-RMT): RPC + RDMA reply,
+            // routed through the fault layer — a partitioned replica
+            // cannot serve the read
+            let done = self.fault_rpc(now, pnode, store_node, 64, len.max(64), p.rpc_overhead)?;
             self.procs[pid].clock.advance_to(done);
             // cache remotely-read data in DRAM (4 KB prefetch granularity)
             self.install_read_cache(pid, cache_key, off, len, &data);
@@ -1595,11 +1602,11 @@ impl Cluster {
             p.libfs_op_lat
         };
         self.procs[pid].clock.tick(lat);
-        Ok(self.procs[pid].clock.now - lat)
+        Ok(self.procs[pid].clock.now.saturating_sub(lat))
     }
 
     fn end_op(&mut self, pid: ProcId, t0: Nanos) {
-        let l = self.procs[pid].clock.now - t0;
+        let l = self.procs[pid].clock.now.saturating_sub(t0);
         self.procs[pid].last_latency = l;
         self.procs[pid].ops += 1;
     }
@@ -1821,7 +1828,7 @@ impl DistFs for Cluster {
         for op in ops {
             let t0 = if live { self.procs[pid].clock.now } else { 0 };
             let result = self.exec_op(pid, op);
-            let latency = if live { self.procs[pid].clock.now - t0 } else { 0 };
+            let latency = if live { self.procs[pid].clock.now.saturating_sub(t0) } else { 0 };
             out.push(FsCompletion { result, latency });
         }
         // batch-level stall sample: one aggregate per completed ring
@@ -1830,6 +1837,7 @@ impl DistFs for Cluster {
         self.repl_window_stats.record_ring(RingStallSample {
             windows: self.repl_window_stats.windows - w0,
             stalls: self.repl_window_stats.stalls - s0,
+            // assise-lint: allow(nanos-sub) — monotone counter delta
             stalled_ns: self.repl_window_stats.stalled_ns - ns0,
         });
         // any unconsumed reservation (ops that failed validation before
@@ -2196,15 +2204,28 @@ impl Cluster {
                         }
                         if plan.node != pnode {
                             // remote metadata lookup (RMT case); reply
-                            // scales with the listing
+                            // scales with the listing — routed through
+                            // the fault layer: an unreachable replica
+                            // cannot serve the shared half of the union
                             let now = self.procs[pid].clock.now;
                             let reply = 128 + 32 * v.len() as u64;
-                            let done = self
-                                .fabric
-                                .rpc(now, pnode, plan.node, 64, reply, p.rpc_overhead, &p);
-                            self.procs[pid].clock.advance_to(done);
+                            let rpc =
+                                self.fault_rpc(now, pnode, plan.node, 64, reply, p.rpc_overhead);
+                            match rpc {
+                                Ok(done) => {
+                                    self.procs[pid].clock.advance_to(done);
+                                    names.extend(v);
+                                }
+                                Err(e) => {
+                                    if !found_dir {
+                                        self.end_op(pid, t0);
+                                        return Err(e);
+                                    }
+                                }
+                            }
+                        } else {
+                            names.extend(v);
                         }
-                        names.extend(v);
                     }
                     Err(e) => {
                         if !found_dir {

@@ -88,7 +88,7 @@ impl Cluster {
         let detected =
             at + self.cfg.heartbeat_interval + self.cfg.suspect_timeout;
         self.mgr.node_failed_at(node, detected);
-        self.fault_stats.detection_latency.record(detected - at);
+        self.fault_stats.detection_latency.record(detected.saturating_sub(at));
         // lease management fails over to the chain successor (§3.4)
         if let Some(&succ) = self.mgr.up_nodes().first() {
             self.mgr.fail_over_lease_management(node, (succ, 0));

@@ -317,7 +317,7 @@ impl Cluster {
         let detected =
             at + self.cfg.heartbeat_interval + 2 * self.cfg.suspect_timeout;
         self.mgr.node_failed_at(node, detected);
-        self.fault_stats.detection_latency.record(detected - at);
+        self.fault_stats.detection_latency.record(detected.saturating_sub(at));
         if let Some(&succ) = self.mgr.up_nodes().first() {
             self.mgr.fail_over_lease_management(node, (succ, 0));
         }
@@ -389,6 +389,7 @@ impl Cluster {
             ));
         }
         let declare_after = self.cfg.heartbeat_interval + self.cfg.suspect_timeout;
+        // assise-lint: allow(nanos-sub) — up_at >= down_at is validated above
         if up_at - down_at < declare_after {
             // missed beats within the suspicion window: absorbed
             return Ok(None);

@@ -151,7 +151,7 @@ impl Cluster {
                     drained += 1;
                     if w.ack_at > at {
                         deferred += 1;
-                        deferred_ns += w.ack_at - at;
+                        deferred_ns += w.ack_at.saturating_sub(at);
                     }
                     drain_done = drain_done.max(w.ack_at);
                 }

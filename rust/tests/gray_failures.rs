@@ -378,6 +378,38 @@ fn prop_read_invariants_hold_under_fault_mix() {
     }
 }
 
+// ================================================== resize-log 2PC
+
+#[test]
+fn partitioned_2pc_participant_vetoes_resize() {
+    use assise::oplog::ResizeOutcome;
+    let (mut c, w, _fd) = seeded_cluster();
+    let old = c.procs[w].log.capacity();
+
+    // cut the coordinator (node 0) off from chain replica 2: the PREPARE
+    // hop must be refused by the fault layer and become a Deny vote —
+    // never costed as a reachable round trip
+    c.partition(0, 2).unwrap();
+    let refused_before = c.fault_stats.partitioned_sends_refused;
+    match c.resize_log(w, old * 2) {
+        ResizeOutcome::Aborted { denier, .. } => assert_eq!(denier, 2),
+        o => panic!("partitioned participant must veto the resize, got {o:?}"),
+    }
+    assert!(
+        c.fault_stats.partitioned_sends_refused > refused_before,
+        "the refused PREPARE hop must be visible in the fault counters"
+    );
+    assert_eq!(c.procs[w].log.capacity(), old, "abort keeps the old size");
+
+    // heal: the same resize commits (the aborted round released its
+    // phase-1 reservations on the Accept voters)
+    c.heal_all_partitions();
+    match c.resize_log(w, old * 2) {
+        ResizeOutcome::Committed { new_size, .. } => assert_eq!(new_size, old * 2),
+        o => panic!("healed resize must commit, got {o:?}"),
+    }
+}
+
 // ================================================== bad ids
 
 #[test]

@@ -1,0 +1,336 @@
+//! assise-lint's own tests: lexer unit tests, fixture-driven rule tests,
+//! an end-to-end run over the seeded fixture tree (which must fail), and
+//! a dogfood run over this repository (which must be clean).
+
+#![allow(dead_code)] // the #[path]-included lint core exceeds what any one test uses
+
+#[path = "../../tools/lint/core/mod.rs"]
+mod lintcore;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::lintcore::lexer::{self, Kind};
+use crate::lintcore::rules::{determinism, fault_routing, panic_ratchet};
+use crate::lintcore::{Allowlist, Baseline, Diag, SourceFile};
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tools/lint/fixtures")
+        .join(name);
+    match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => panic!("read {}: {e}", path.display()),
+    }
+}
+
+fn tree_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tools/lint/fixtures/tree")
+}
+
+/// Run the per-file rules the same way the real walker does, with an
+/// empty allowlist.
+fn check_file(rel: &str, src: &str) -> Vec<Diag> {
+    let file = SourceFile::load(rel, src, &Allowlist::new());
+    let mut diags = Vec::new();
+    fault_routing::check(&file, &mut diags);
+    determinism::check(&file, &mut diags);
+    diags
+}
+
+fn counts_of(unwrap: u64, index: u64) -> panic_ratchet::Counts {
+    let mut c = panic_ratchet::Counts::new();
+    c.insert("unwrap", unwrap);
+    c.insert("index", index);
+    c
+}
+
+// ================================================================ lexer
+
+#[test]
+fn comments_and_strings_yield_no_rule_tokens() {
+    let src = "// fabric.rpc( in a line comment\n\
+               /* outer /* nested fabric.rpc( */ closed */\n\
+               let s = \"fabric.rpc(\\\" escaped\";\n";
+    let toks = lexer::lex(src);
+    assert!(
+        !toks.iter().any(|t| t.kind == Kind::Ident && t.text == "fabric"),
+        "{toks:?}"
+    );
+    let strs: Vec<&lexer::Token> = toks.iter().filter(|t| t.kind == Kind::Str).collect();
+    assert_eq!(strs.len(), 1);
+    assert_eq!(strs[0].text, "fabric.rpc(\\\" escaped");
+}
+
+#[test]
+fn raw_strings_swallow_quotes_and_calls() {
+    let src = "let r = r#\"quote \" and unwrap() inside\"#;\n\
+               let b = br\"bytes\";\n\
+               let n = r##\"uses \"# inside\"##;\n";
+    let toks = lexer::lex(src);
+    assert!(!toks.iter().any(|t| t.kind == Kind::Ident && t.text == "unwrap"));
+    let strs: Vec<String> = toks
+        .iter()
+        .filter(|t| t.kind == Kind::Str)
+        .map(|t| t.text.clone())
+        .collect();
+    assert_eq!(strs, ["quote \" and unwrap() inside", "bytes", "uses \"# inside"]);
+}
+
+#[test]
+fn char_literals_are_not_lifetimes() {
+    let src = "fn f<'a>(x: &'a str) -> char { let c = 'a'; let n = '\\n'; let b = b'x'; c }";
+    let toks = lexer::lex(src);
+    let lifetimes: Vec<&str> = toks
+        .iter()
+        .filter(|t| t.kind == Kind::Lifetime)
+        .map(|t| t.text.as_str())
+        .collect();
+    assert_eq!(lifetimes, ["a", "a"]);
+    let chars: Vec<&str> = toks
+        .iter()
+        .filter(|t| t.kind == Kind::Char)
+        .map(|t| t.text.as_str())
+        .collect();
+    assert_eq!(chars, ["a", "\\n", "x"]);
+}
+
+#[test]
+fn token_lines_survive_multiline_literals() {
+    let src = "let a = \"line\nbreak\";\nlet t0 = 7;";
+    let toks = lexer::lex(src);
+    let t0 = toks.iter().find(|t| t.text == "t0").unwrap();
+    assert_eq!(t0.line, 3);
+    let s = toks.iter().find(|t| t.kind == Kind::Str).unwrap();
+    assert_eq!(s.line, 1);
+}
+
+#[test]
+fn cfg_test_regions_are_tracked() {
+    let src = "fn prod(x: Option<u8>) { x.unwrap(); }\n\n\
+               #[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}\n";
+    let toks = lexer::lex(src);
+    let regions = lexer::test_regions(&toks);
+    assert_eq!(regions.len(), 1, "{regions:?}");
+    let unwraps: Vec<usize> = toks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.text == "unwrap")
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(unwraps.len(), 2);
+    assert!(!lexer::in_regions(&regions, unwraps[0]), "prod unwrap is outside");
+    assert!(lexer::in_regions(&regions, unwraps[1]), "test unwrap is inside");
+}
+
+// =============================================================== config
+
+#[test]
+fn config_subset_parses_sections_ints_and_arrays() {
+    let doc = lintcore::config::parse(
+        "# comment\n[module.sim]\nunwrap = 3 # trailing\n\n\
+         [fault-routing]\nallow = [\n  \"rust/src/hw/\",\n  \"rust/src/baselines/\",\n]\n",
+    )
+    .unwrap();
+    assert_eq!(doc["module.sim"]["unwrap"], lintcore::config::Value::Int(3));
+    assert_eq!(
+        doc["fault-routing"]["allow"],
+        lintcore::config::Value::List(vec![
+            "rust/src/hw/".to_string(),
+            "rust/src/baselines/".to_string()
+        ])
+    );
+}
+
+#[test]
+fn config_rejects_constructs_outside_the_subset() {
+    let (line, _) = lintcore::config::parse("[s]\nkey value\n").unwrap_err();
+    assert_eq!(line, 2);
+}
+
+#[test]
+fn allowlist_and_baseline_load_from_parsed_docs() {
+    let doc = lintcore::config::parse(
+        "[determinism]\nallow = [\"rust/src/bench/\"]\n[module.sim]\nunwrap = 7\n",
+    )
+    .unwrap();
+    let allow = lintcore::load_allowlist(&doc);
+    assert_eq!(allow["determinism"], vec!["rust/src/bench/".to_string()]);
+    let base = lintcore::load_baseline(&doc);
+    assert_eq!(base["sim"]["unwrap"], 7);
+}
+
+// ======================================================== fault-routing
+
+#[test]
+fn fault_routing_flags_raw_fabric_and_chain_ship() {
+    let src = fixture("fault_routing_violation.rs");
+    let diags = check_file("rust/src/cluster/demo.rs", &src);
+    assert_eq!(diags.len(), 2, "{diags:?}");
+    assert!(diags.iter().all(|d| d.rule == "fault-routing"));
+
+    // under sim/ the chain_ship_cost call is legitimate; fabric.rpc is not
+    let diags = check_file("rust/src/sim/demo.rs", &src);
+    assert_eq!(diags.len(), 1, "{diags:?}");
+    assert_eq!(diags[0].rule, "fault-routing");
+}
+
+#[test]
+fn fault_routing_ignores_comments_and_strings() {
+    let diags = check_file("rust/src/cluster/demo.rs", &fixture("fault_routing_clean.rs"));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+// ========================================================== determinism
+
+#[test]
+fn determinism_flags_wall_clocks_and_threads() {
+    let diags = check_file("rust/src/sim/demo.rs", &fixture("determinism_violation.rs"));
+    assert!(diags.len() >= 5, "{diags:?}");
+    assert!(diags.iter().all(|d| d.rule == "determinism"), "{diags:?}");
+}
+
+#[test]
+fn determinism_ignores_comments_and_strings() {
+    let diags = check_file("rust/src/sim/demo.rs", &fixture("determinism_clean.rs"));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn nanos_sub_fires_only_under_sim_and_hw() {
+    let src = fixture("nanos_sub_violation.rs");
+    let sim = check_file("rust/src/sim/demo.rs", &src);
+    assert_eq!(sim.iter().filter(|d| d.rule == "nanos-sub").count(), 2, "{sim:?}");
+    let bench = check_file("rust/src/bench/demo.rs", &src);
+    assert!(bench.is_empty(), "{bench:?}");
+}
+
+#[test]
+fn nanos_sub_accepts_saturating_waived_and_plain_arithmetic() {
+    let diags = check_file("rust/src/sim/demo.rs", &fixture("nanos_sub_clean.rs"));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn waiver_covers_its_own_line_and_the_next() {
+    let src = "fn f(now: u64, sent_at: u64) -> u64 {\n\
+               // assise-lint: allow(nanos-sub) — safe\n\
+               now - sent_at\n}\n";
+    let diags = check_file("rust/src/sim/demo.rs", src);
+    assert!(diags.is_empty(), "{diags:?}");
+
+    let unrelated = "fn f(now: u64, sent_at: u64) -> u64 {\n\
+                     // assise-lint: allow(fault-routing) — wrong rule\n\
+                     now - sent_at\n}\n";
+    let diags = check_file("rust/src/sim/demo.rs", unrelated);
+    assert_eq!(diags.len(), 1, "a waiver for a different rule must not suppress");
+}
+
+#[test]
+fn allowlist_silences_a_rule_by_path_prefix() {
+    let mut allow = Allowlist::new();
+    allow.insert("nanos-sub".to_string(), vec!["rust/src/sim/".to_string()]);
+    let src = fixture("nanos_sub_violation.rs");
+    let file = SourceFile::load("rust/src/sim/demo.rs", &src, &allow);
+    let mut diags = Vec::new();
+    determinism::check(&file, &mut diags);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+// ======================================================== panic-ratchet
+
+#[test]
+fn panic_counter_matches_fixture_inventory() {
+    let toks = lexer::lex(&fixture("panic_sites.rs"));
+    let c = panic_ratchet::count_tokens(&toks);
+    let want = [
+        ("unwrap", 2),
+        ("expect", 1),
+        ("panic", 1),
+        ("unreachable", 1),
+        ("todo", 1),
+        ("index", 1),
+    ];
+    for (cat, n) in want {
+        assert_eq!(c.get(cat), Some(&n), "category {cat}: {c:?}");
+    }
+}
+
+#[test]
+fn module_key_is_first_component_under_src() {
+    assert_eq!(panic_ratchet::module_of("rust/src/sim/assise.rs").as_deref(), Some("sim"));
+    assert_eq!(panic_ratchet::module_of("rust/src/lib.rs").as_deref(), Some("lib"));
+    assert_eq!(panic_ratchet::module_of("rust/tests/integration.rs"), None);
+}
+
+#[test]
+fn ratchet_blocks_increases_and_suggests_decreases() {
+    let current: BTreeMap<String, panic_ratchet::Counts> =
+        [("sim".to_string(), counts_of(3, 0))].into_iter().collect();
+
+    let mut over: Baseline = BTreeMap::new();
+    over.insert("sim".to_string(), [("unwrap".to_string(), 2)].into_iter().collect());
+    let mut diags = Vec::new();
+    let sugg = panic_ratchet::check_modules(&current, &over, &mut diags);
+    assert_eq!(diags.len(), 1, "3 unwraps over a ceiling of 2 is a regression: {diags:?}");
+    assert!(sugg.is_empty(), "{sugg:?}");
+
+    let mut under: Baseline = BTreeMap::new();
+    under.insert("sim".to_string(), [("unwrap".to_string(), 5)].into_iter().collect());
+    let mut diags = Vec::new();
+    let sugg = panic_ratchet::check_modules(&current, &under, &mut diags);
+    assert!(diags.is_empty(), "below the ceiling is not a violation: {diags:?}");
+    assert_eq!(sugg.len(), 1, "ratchet-down suggestion expected: {sugg:?}");
+}
+
+#[test]
+fn stale_baseline_module_is_flagged_for_rewrite() {
+    let current: BTreeMap<String, panic_ratchet::Counts> = BTreeMap::new();
+    let mut base: Baseline = BTreeMap::new();
+    base.insert("gone".to_string(), BTreeMap::new());
+    let mut diags = Vec::new();
+    let sugg = panic_ratchet::check_modules(&current, &base, &mut diags);
+    assert!(diags.is_empty(), "{diags:?}");
+    assert!(sugg.iter().any(|s| s.contains("`gone`")), "{sugg:?}");
+}
+
+#[test]
+fn baseline_render_roundtrips_through_the_parser() {
+    let mut counts = BTreeMap::new();
+    counts.insert("sim".to_string(), counts_of(3, 1));
+    let rendered = panic_ratchet::render_baseline(&counts);
+    let doc = lintcore::config::parse(&rendered).unwrap();
+    let base = lintcore::load_baseline(&doc);
+    assert_eq!(base["sim"]["unwrap"], 3);
+    assert_eq!(base["sim"]["index"], 1);
+    assert_eq!(base["sim"]["todo"], 0);
+}
+
+// =========================================================== end to end
+
+#[test]
+fn seeded_tree_trips_every_rule() {
+    let outcome = lintcore::run(&tree_root(), &Allowlist::new(), &Baseline::new()).unwrap();
+    let rules: Vec<&str> = outcome.diags.iter().map(|d| d.rule).collect();
+    for rule in ["fault-routing", "determinism", "nanos-sub", "panic-ratchet", "registration"] {
+        assert!(rules.contains(&rule), "seeded tree must trip `{rule}`, got {rules:?}");
+    }
+}
+
+#[test]
+fn cli_exits_nonzero_on_seeded_tree() {
+    let code = lintcore::run_cli(&["--root".to_string(), tree_root().display().to_string()]);
+    assert_eq!(code, 1, "seeded violations must exit 1");
+}
+
+#[test]
+fn cli_rejects_unknown_arguments() {
+    assert_eq!(lintcore::run_cli(&["--bogus".to_string()]), 2);
+}
+
+#[test]
+fn repo_is_lint_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let code = lintcore::run_cli(&["--root".to_string(), root.display().to_string()]);
+    assert_eq!(code, 0, "the committed tree must be assise-lint clean");
+}

@@ -1,0 +1,113 @@
+//! A tiny TOML-subset reader for the linter's two config files
+//! (`allowlist.toml`, `baseline.toml`). Std-only by design — the crate's
+//! offline-build contract forbids pulling a real TOML crate.
+//!
+//! Supported subset: `[section]` / `[a.b]` headers, `key = <integer>`,
+//! `key = "string"`, `key = ["a", "b", ...]` (arrays may span lines),
+//! full-line and trailing `#` comments. That is exactly what the two
+//! config files use; anything else is a parse error.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Value {
+    Int(i64),
+    Str(String),
+    List(Vec<String>),
+}
+
+/// Parsed document: section name -> (key -> value), in section order.
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse the supported TOML subset. Returns `Err(line, message)` on the
+/// first construct outside the subset.
+pub fn parse(src: &str) -> Result<Doc, (u32, String)> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    let mut lines = src.lines().enumerate();
+    while let Some((idx, raw)) = lines.next() {
+        let lineno = idx as u32 + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = header_name(&line) {
+            section = name;
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err((lineno, format!("expected `key = value`, got `{line}`")));
+        };
+        let key = line[..eq].trim().to_string();
+        let mut val = line[eq + 1..].trim().to_string();
+        // arrays may span lines: keep consuming until the closing bracket
+        if val.starts_with('[') {
+            while !val.contains(']') {
+                match lines.next() {
+                    Some((_, cont)) => {
+                        val.push(' ');
+                        val.push_str(strip_comment(cont).trim());
+                    }
+                    None => return Err((lineno, "unterminated array".to_string())),
+                }
+            }
+        }
+        let value = parse_value(&val).map_err(|e| (lineno, e))?;
+        doc.entry(section.clone()).or_default().insert(key, value);
+    }
+    Ok(doc)
+}
+
+/// `[name]` / `[[name]]` -> `name` (the linter does not need the
+/// array-of-tables distinction).
+fn header_name(line: &str) -> Option<String> {
+    if !line.starts_with('[') || !line.ends_with(']') {
+        return None;
+    }
+    let inner = line.trim_start_matches('[').trim_end_matches(']').trim();
+    if inner.is_empty() || inner.contains('"') {
+        return None;
+    }
+    Some(inner.to_string())
+}
+
+fn parse_value(val: &str) -> Result<Value, String> {
+    if let Some(rest) = val.strip_prefix('[') {
+        let body = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        for piece in body.split(',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            items.push(parse_string(piece)?);
+        }
+        return Ok(Value::List(items));
+    }
+    if val.starts_with('"') {
+        return Ok(Value::Str(parse_string(val)?));
+    }
+    val.parse::<i64>()
+        .map(Value::Int)
+        .map_err(|_| format!("unsupported value `{val}`"))
+}
+
+fn parse_string(piece: &str) -> Result<String, String> {
+    let inner = piece
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| format!("expected quoted string, got `{piece}`"))?;
+    Ok(inner.to_string())
+}
+
+/// Drop a trailing `#` comment (the subset never puts `#` inside strings
+/// on the same line as a value — enforced by review of the two configs).
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(pos) => &line[..pos],
+        None => line,
+    }
+}

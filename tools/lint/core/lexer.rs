@@ -1,0 +1,378 @@
+//! A small Rust lexer — just enough structure for the lint rules.
+//!
+//! The point of lexing (rather than grepping) is that rule patterns must
+//! not fire inside comments, string/raw-string/byte-string literals, or
+//! char literals, and must be able to tell a lifetime (`'a`) from a char
+//! literal (`'a'`). The lexer is deliberately loose everywhere precision
+//! does not matter to a rule: numeric literals are "a run of alphanumerics
+//! after a digit", and all punctuation is emitted one byte at a time
+//! (`::` is two `:` tokens; rules match multi-byte operators by peeking).
+
+/// Token classes the rules discriminate on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`fabric`, `unwrap`, `mod`, `r#async`).
+    Ident,
+    /// One byte of punctuation (`.`, `(`, `-`, `#`, ...).
+    Punct,
+    /// String literal of any flavor; `text` holds the unquoted contents.
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    Char,
+    /// Numeric literal (loose: includes suffixes, hex digits, `1e10`).
+    Num,
+    /// Lifetime (`'a`, `'static`, `'_`); `text` excludes the quote.
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Tokenize `src`. Comments and whitespace produce no tokens; every token
+/// carries the 1-based line it starts on.
+pub fn lex(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            let start_line = line;
+            let (text, ni, nl) = lex_quoted(b, i, line);
+            out.push(Token { kind: Kind::Str, text, line: start_line });
+            i = ni;
+            line = nl;
+        } else if c == b'\'' {
+            let start_line = line;
+            let (kind, text, ni, nl) = lex_tick(b, i, line);
+            out.push(Token { kind, text, line: start_line });
+            i = ni;
+            line = nl;
+        } else if (c == b'r' || c == b'b') && literal_prefix_len(b, i) > 0 {
+            let start_line = line;
+            let (kind, text, ni, nl) = lex_prefixed_literal(b, i, line);
+            out.push(Token { kind, text, line: start_line });
+            i = ni;
+            line = nl;
+        } else if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            out.push(Token {
+                kind: Kind::Ident,
+                text: src[start..i].to_string(),
+                line,
+            });
+        } else if c.is_ascii_digit() {
+            let start = i;
+            loop {
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                // fractional part: `1.5` but not `1..5` or `x.0.abs()` ranges
+                if i + 1 < n && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            out.push(Token {
+                kind: Kind::Num,
+                text: src[start..i].to_string(),
+                line,
+            });
+        } else {
+            out.push(Token {
+                kind: Kind::Punct,
+                text: (c as char).to_string(),
+                line,
+            });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// How many bytes of raw/byte-literal prefix start at `i` (0 = plain
+/// identifier). Recognizes `r"`, `r#..#"`, `b"`, `b'`, `br"`, `br#..#"`.
+/// `r#ident` (raw identifier) returns 0 — it lexes as an ident.
+fn literal_prefix_len(b: &[u8], i: usize) -> usize {
+    let n = b.len();
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+        if j < n && (b[j] == b'"' || b[j] == b'\'') {
+            return j - i;
+        }
+        if j < n && b[j] == b'r' {
+            j += 1;
+        } else {
+            return 0;
+        }
+    } else {
+        // b[i] == b'r'
+        j += 1;
+    }
+    while j < n && b[j] == b'#' {
+        j += 1;
+    }
+    if j < n && b[j] == b'"' {
+        return j - i;
+    }
+    // `r#ident` / `br#ident`-alikes: not a literal prefix
+    0
+}
+
+/// Lex a literal starting with an `r`/`b`/`br` prefix at `i`.
+fn lex_prefixed_literal(b: &[u8], i: usize, line: u32) -> (Kind, String, usize, u32) {
+    let n = b.len();
+    let mut j = i;
+    let mut raw = false;
+    if b[j] == b'b' {
+        j += 1;
+        if b[j] == b'\'' {
+            // byte char literal: never a lifetime
+            let mut k = j + 1;
+            let start = k;
+            while k < n && b[k] != b'\'' {
+                if b[k] == b'\\' {
+                    k += 2;
+                } else {
+                    k += 1;
+                }
+            }
+            let text = String::from_utf8_lossy(&b[start..k.min(n)]).into_owned();
+            return (Kind::Char, text, (k + 1).min(n), line);
+        }
+        if b[j] == b'r' {
+            raw = true;
+            j += 1;
+        }
+    } else if b[j] == b'r' {
+        raw = true;
+        j += 1;
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while j < n && b[j] == b'#' {
+            hashes += 1;
+            j += 1;
+        }
+        // b[j] == b'"' guaranteed by literal_prefix_len
+        let mut k = j + 1;
+        let start = k;
+        let mut nl = line;
+        while k < n {
+            if b[k] == b'\n' {
+                nl += 1;
+                k += 1;
+            } else if b[k] == b'"' && closes_raw(b, k + 1, hashes) {
+                let text = String::from_utf8_lossy(&b[start..k]).into_owned();
+                return (Kind::Str, text, k + 1 + hashes, nl);
+            } else {
+                k += 1;
+            }
+        }
+        (Kind::Str, String::from_utf8_lossy(&b[start..n]).into_owned(), n, nl)
+    } else {
+        // b"..."
+        let (text, ni, nl) = lex_quoted(b, j, line);
+        (Kind::Str, text, ni, nl)
+    }
+}
+
+/// True if the `hashes` bytes at `b[from..]` are all `#` (closes a raw
+/// string opened with that many hashes).
+fn closes_raw(b: &[u8], from: usize, hashes: usize) -> bool {
+    if from + hashes > b.len() {
+        return false;
+    }
+    b[from..from + hashes].iter().all(|&h| h == b'#')
+}
+
+/// Lex a normal (escaped) string literal whose opening `"` is at `i`.
+/// Returns (contents, index-after-closing-quote, line-after).
+fn lex_quoted(b: &[u8], i: usize, line: u32) -> (String, usize, u32) {
+    let n = b.len();
+    let mut k = i + 1;
+    let start = k;
+    let mut nl = line;
+    while k < n {
+        match b[k] {
+            b'"' => {
+                let text = String::from_utf8_lossy(&b[start..k]).into_owned();
+                return (text, k + 1, nl);
+            }
+            b'\\' => k += 2,
+            b'\n' => {
+                nl += 1;
+                k += 1;
+            }
+            _ => k += 1,
+        }
+    }
+    (String::from_utf8_lossy(&b[start..n]).into_owned(), n, nl)
+}
+
+/// Lex at a `'`: either a lifetime or a char literal.
+fn lex_tick(b: &[u8], i: usize, line: u32) -> (Kind, String, usize, u32) {
+    let n = b.len();
+    let p1 = b.get(i + 1).copied();
+    match p1 {
+        Some(b'\\') => {
+            // escaped char literal: '\n', '\'', '\u{1F600}'
+            let mut k = i + 1;
+            let start = k;
+            while k < n && b[k] != b'\'' {
+                if b[k] == b'\\' {
+                    k += 2;
+                } else {
+                    k += 1;
+                }
+            }
+            let text = String::from_utf8_lossy(&b[start..k.min(n)]).into_owned();
+            (Kind::Char, text, (k + 1).min(n), line)
+        }
+        Some(c) if is_ident_start(c) => {
+            if b.get(i + 2).copied() == Some(b'\'') {
+                // 'a'
+                let text = (c as char).to_string();
+                (Kind::Char, text, i + 3, line)
+            } else {
+                // lifetime: 'a, 'static, '_
+                let mut k = i + 1;
+                let start = k;
+                while k < n && is_ident_cont(b[k]) {
+                    k += 1;
+                }
+                let text = String::from_utf8_lossy(&b[start..k]).into_owned();
+                (Kind::Lifetime, text, k, line)
+            }
+        }
+        Some(_) => {
+            // char literal starting with a non-ident byte: '0', '-', 'é'
+            let mut k = i + 1;
+            let start = k;
+            while k < n && b[k] != b'\'' {
+                k += 1;
+            }
+            let text = String::from_utf8_lossy(&b[start..k.min(n)]).into_owned();
+            (Kind::Char, text, (k + 1).min(n), line)
+        }
+        None => (Kind::Punct, "'".to_string(), i + 1, line),
+    }
+}
+
+/// Find `#[cfg(test)]`-gated regions (token index ranges, end exclusive).
+/// The attribute must be followed — within a few tokens, to step over
+/// doc attrs — by `mod` or `fn`; the region extends over the matching
+/// brace-balanced body.
+pub fn test_regions(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < tokens.len() {
+        let is_cfg_test = tokens[i].kind == Kind::Punct
+            && tokens[i].text == "#"
+            && tokens[i + 1].text == "["
+            && tokens[i + 2].text == "cfg"
+            && tokens[i + 3].text == "("
+            && tokens[i + 4].text == "test"
+            && tokens[i + 5].text == ")"
+            && tokens[i + 6].text == "]";
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // scan ahead for the gated item's opening brace
+        let mut j = i + 7;
+        let mut found_item = false;
+        let limit = (i + 47).min(tokens.len());
+        while j < limit {
+            if tokens[j].kind == Kind::Ident && (tokens[j].text == "mod" || tokens[j].text == "fn") {
+                found_item = true;
+                break;
+            }
+            j += 1;
+        }
+        if !found_item {
+            i += 7;
+            continue;
+        }
+        // find the opening brace of the item body
+        while j < tokens.len() && tokens[j].text != "{" {
+            // `mod foo;` — external file, no body to skip
+            if tokens[j].text == ";" {
+                break;
+            }
+            j += 1;
+        }
+        if j >= tokens.len() || tokens[j].text != "{" {
+            i = j;
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut k = j;
+        while k < tokens.len() {
+            if tokens[k].kind == Kind::Punct {
+                if tokens[k].text == "{" {
+                    depth += 1;
+                } else if tokens[k].text == "}" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+            }
+            k += 1;
+        }
+        out.push((i, (k + 1).min(tokens.len())));
+        i = (k + 1).min(tokens.len());
+    }
+    out
+}
+
+/// True if token index `idx` falls inside any of `regions`.
+pub fn in_regions(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(s, e)| idx >= s && idx < e)
+}

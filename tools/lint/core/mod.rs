@@ -1,0 +1,341 @@
+//! assise-lint core: repo-specific invariant rules the compiler cannot
+//! see, as a zero-dependency library shared by the `assise-lint` bin, the
+//! `assise lint` subcommand, and the `lint_rules` integration test (all
+//! three include this tree via `#[path]`).
+//!
+//! Rules (ids as used in diagnostics, allowlist.toml sections, and
+//! `// assise-lint: allow(<rule>)` waivers):
+//!   fault-routing  — no raw `fabric.rpc(` outside the fault layer
+//!   determinism    — no wall clocks / OS threads / OS randomness
+//!   nanos-sub      — no non-saturating timestamp subtraction in sim//hw/
+//!   panic-ratchet  — per-module panic-site counts vs baseline.toml
+//!   registration   — tests/benches registered, bench rows documented
+//!
+//! Exit codes: 0 clean, 1 violations, 2 usage or config error.
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use self::rules::panic_ratchet::Counts;
+
+/// One diagnostic. `line == 0` means the finding is file-level.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Diag {
+    pub fn render(&self) -> String {
+        if self.line == 0 {
+            format!("{}: [{}] {}", self.file, self.rule, self.msg)
+        } else {
+            format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+        }
+    }
+}
+
+/// rule id -> path prefixes where the rule is off.
+pub type Allowlist = BTreeMap<String, Vec<String>>;
+/// module -> category -> ceiling.
+pub type Baseline = BTreeMap<String, BTreeMap<String, i64>>;
+
+/// A lexed source file plus everything `diag()` needs to filter.
+pub struct SourceFile {
+    pub rel: String,
+    pub tokens: Vec<lexer::Token>,
+    pub test_regions: Vec<(usize, usize)>,
+    waivers: HashMap<u32, Vec<String>>,
+    allowed_rules: BTreeSet<String>,
+}
+
+impl SourceFile {
+    pub fn load(rel: &str, src: &str, allowlist: &Allowlist) -> SourceFile {
+        let tokens = lexer::lex(src);
+        let test_regions = lexer::test_regions(&tokens);
+        let waivers = parse_waivers(src);
+        let allowed_rules = allowlist
+            .iter()
+            .filter(|(_, prefixes)| prefixes.iter().any(|p| rel.starts_with(p.as_str())))
+            .map(|(rule, _)| rule.clone())
+            .collect();
+        SourceFile {
+            rel: rel.to_string(),
+            tokens,
+            test_regions,
+            waivers,
+            allowed_rules,
+        }
+    }
+
+    /// Test-support constructor: bare tokens, no waivers or allowlist.
+    #[allow(dead_code)] // used by the lint_rules integration test only
+    pub fn from_tokens(rel: &str, tokens: Vec<lexer::Token>) -> SourceFile {
+        SourceFile {
+            rel: rel.to_string(),
+            test_regions: lexer::test_regions(&tokens),
+            tokens,
+            waivers: HashMap::new(),
+            allowed_rules: BTreeSet::new(),
+        }
+    }
+
+    /// Record a diagnostic unless this file is allowlisted for `rule` or
+    /// the line carries (or follows) an inline waiver.
+    pub fn diag(&self, diags: &mut Vec<Diag>, rule: &'static str, line: u32, msg: &str) {
+        if self.allowed_rules.contains(rule) || self.waived(rule, line) {
+            return;
+        }
+        diags.push(Diag {
+            file: self.rel.clone(),
+            line,
+            rule,
+            msg: msg.to_string(),
+        });
+    }
+
+    fn waived(&self, rule: &str, line: u32) -> bool {
+        let hit = |l: u32| {
+            self.waivers
+                .get(&l)
+                .is_some_and(|rs| rs.iter().any(|r| r == rule || r == "all"))
+        };
+        hit(line) || (line > 1 && hit(line - 1))
+    }
+}
+
+/// `// assise-lint: allow(rule-a, rule-b) — justification` waivers, by
+/// 1-based line. A waiver covers its own line and the line below it.
+fn parse_waivers(src: &str) -> HashMap<u32, Vec<String>> {
+    const MARK: &str = "assise-lint: allow(";
+    let mut out = HashMap::new();
+    for (idx, line) in src.lines().enumerate() {
+        let Some(pos) = line.find(MARK) else { continue };
+        let rest = &line[pos + MARK.len()..];
+        let Some(end) = rest.find(')') else { continue };
+        let rules: Vec<String> = rest[..end]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if !rules.is_empty() {
+            out.insert(idx as u32 + 1, rules);
+        }
+    }
+    out
+}
+
+pub struct LintOutcome {
+    pub diags: Vec<Diag>,
+    pub suggestions: Vec<String>,
+    pub files_scanned: usize,
+    pub module_counts: BTreeMap<String, Counts>,
+}
+
+/// Directories scanned for `.rs` sources, relative to the repo root.
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "benches", "examples", "tools"];
+/// Subtree excluded from scanning: rule fixtures violate rules on purpose.
+const EXCLUDE_PREFIX: &str = "tools/lint/fixtures";
+
+/// Run every rule over the tree rooted at `root`.
+pub fn run(root: &Path, allowlist: &Allowlist, baseline: &Baseline) -> Result<LintOutcome, String> {
+    let mut diags = Vec::new();
+    let mut module_counts: BTreeMap<String, Counts> = BTreeMap::new();
+    let mut perf_tokens: Vec<lexer::Token> = Vec::new();
+    let mut files_scanned = 0usize;
+
+    for rel in collect_rs(root)? {
+        let src = fs::read_to_string(root.join(&rel))
+            .map_err(|e| format!("failed to read {rel}: {e}"))?;
+        let file = SourceFile::load(&rel, &src, allowlist);
+        files_scanned += 1;
+
+        rules::fault_routing::check(&file, &mut diags);
+        rules::determinism::check(&file, &mut diags);
+
+        if let Some(module) = rules::panic_ratchet::module_of(&rel) {
+            let counts = rules::panic_ratchet::count_file(&file);
+            let agg = module_counts.entry(module).or_default();
+            for (cat, n) in counts {
+                *agg.entry(cat).or_insert(0) += n;
+            }
+        }
+        if rel == "rust/src/bench/perf.rs" {
+            perf_tokens = file.tokens.clone();
+        }
+    }
+
+    let suggestions = rules::panic_ratchet::check_modules(&module_counts, baseline, &mut diags);
+    rules::registration::check(root, &perf_tokens, &mut diags);
+
+    diags.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(LintOutcome {
+        diags,
+        suggestions,
+        files_scanned,
+        module_counts,
+    })
+}
+
+/// All `.rs` files under the scan dirs, as sorted root-relative paths.
+fn collect_rs(root: &Path) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    for dir in SCAN_DIRS {
+        let abs = root.join(dir);
+        if abs.is_dir() {
+            walk(&abs, root, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let rel = rel_path(&path, root);
+        if rel.starts_with(EXCLUDE_PREFIX) {
+            continue;
+        }
+        if path.is_dir() {
+            walk(&path, root, out)?;
+        } else if rel.ends_with(".rs") {
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(path: &Path, root: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    // normalize separators so allowlist prefixes are portable
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// allowlist.toml: `[rule-id]` sections with an `allow = [...]` key.
+pub fn load_allowlist(doc: &config::Doc) -> Allowlist {
+    let mut out = Allowlist::new();
+    for (section, keys) in doc {
+        if let Some(config::Value::List(paths)) = keys.get("allow") {
+            out.insert(section.clone(), paths.clone());
+        }
+    }
+    out
+}
+
+/// baseline.toml: `[module.<name>]` sections with `<category> = <count>`.
+pub fn load_baseline(doc: &config::Doc) -> Baseline {
+    let mut out = Baseline::new();
+    for (section, keys) in doc {
+        let Some(module) = section.strip_prefix("module.") else {
+            continue;
+        };
+        let mut counts = BTreeMap::new();
+        for (key, value) in keys {
+            if let config::Value::Int(n) = value {
+                counts.insert(key.clone(), *n);
+            }
+        }
+        out.insert(module.to_string(), counts);
+    }
+    out
+}
+
+const USAGE: &str = "usage: assise-lint [--root DIR] [--write-baseline]\n\
+  --root DIR         repo root to lint (default: .)\n\
+  --write-baseline   rewrite tools/lint/baseline.toml with current counts";
+
+/// CLI entry point shared by both binaries. Returns the process exit code.
+pub fn run_cli(args: &[String]) -> i32 {
+    let mut root = PathBuf::from(".");
+    let mut write_baseline = false;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => match it.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("--root needs a directory\n{USAGE}");
+                    return 2;
+                }
+            },
+            "--write-baseline" => write_baseline = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return 0;
+            }
+            other => {
+                eprintln!("unknown argument `{other}`\n{USAGE}");
+                return 2;
+            }
+        }
+    }
+
+    let allowlist_path = root.join("tools/lint/allowlist.toml");
+    let baseline_path = root.join("tools/lint/baseline.toml");
+    let allowlist = match load_config_file(&allowlist_path) {
+        Ok(doc) => load_allowlist(&doc),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let baseline = match load_config_file(&baseline_path) {
+        Ok(doc) => load_baseline(&doc),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
+    let outcome = match run(&root, &allowlist, &baseline) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("assise-lint: {e}");
+            return 2;
+        }
+    };
+
+    for d in &outcome.diags {
+        println!("{}", d.render());
+    }
+    if write_baseline {
+        let rendered = rules::panic_ratchet::render_baseline(&outcome.module_counts);
+        if let Err(e) = fs::write(&baseline_path, rendered) {
+            eprintln!("assise-lint: failed to write baseline: {e}");
+            return 2;
+        }
+        println!("wrote {}", baseline_path.display());
+    } else {
+        for s in &outcome.suggestions {
+            println!("note: {s}");
+        }
+    }
+    if outcome.diags.is_empty() {
+        println!(
+            "assise-lint: clean ({} files, {} modules ratcheted)",
+            outcome.files_scanned,
+            outcome.module_counts.len()
+        );
+        0
+    } else {
+        eprintln!("assise-lint: {} violation(s)", outcome.diags.len());
+        1
+    }
+}
+
+fn load_config_file(path: &Path) -> Result<config::Doc, String> {
+    let src = fs::read_to_string(path)
+        .map_err(|e| format!("assise-lint: cannot read {}: {e}", path.display()))?;
+    config::parse(&src)
+        .map_err(|(line, msg)| format!("assise-lint: {}:{line}: {msg}", path.display()))
+}

@@ -1,0 +1,195 @@
+//! Rule `determinism`: simulator code must be a pure function of its
+//! inputs and seeds, and rule `nanos-sub`: virtual-time arithmetic in
+//! `sim/`/`hw/` must not underflow.
+//!
+//! The whole test/bench story rests on virtual-time traces being
+//! bit-identical across runs: wall clocks (`Instant`, `SystemTime`), OS
+//! threads, and OS randomness anywhere in the model breaks that silently.
+//! Only the bench harness (`bench/`, `benches/`, `examples/`) and the CLI
+//! may measure host time — mirrored by clippy.toml's `disallowed-methods`.
+//!
+//! `nanos-sub` is a heuristic companion: `Nanos` is a plain `u64`, so
+//! `a - b` on two timestamps panics in debug (and wraps in release) the
+//! moment clock skew or reordering makes `b > a`. Subtraction where
+//! either operand *looks* like a timestamp (`now`, `t0`, `*_at`, `*_ns`,
+//! ...) must be `saturating_sub` or carry a waiver explaining why
+//! causality makes underflow impossible.
+
+use super::super::lexer::{in_regions, Kind, Token};
+use super::super::{Diag, SourceFile};
+
+pub const NAME: &str = "determinism";
+pub const NAME_NANOS: &str = "nanos-sub";
+
+/// Identifiers that are banned outright in deterministic code.
+const BANNED_IDENTS: &[(&str, &str)] = &[
+    ("Instant", "std::time::Instant is wall-clock; use the virtual clock (hw::clock)"),
+    ("SystemTime", "std::time::SystemTime is wall-clock; use the virtual clock (hw::clock)"),
+    ("RandomState", "RandomState seeds from the OS; use the seeded SplitMix64 in sim/fault.rs"),
+    ("getrandom", "OS randomness breaks seed-determinism; use the seeded SplitMix64"),
+    ("from_entropy", "OS-entropy seeding breaks seed-determinism; derive seeds from the config"),
+];
+
+pub fn check(file: &SourceFile, diags: &mut Vec<Diag>) {
+    let toks = &file.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        for &(name, why) in BANNED_IDENTS {
+            if t.text == name {
+                file.diag(diags, NAME, t.line, why);
+            }
+        }
+        // `std :: thread` (any use, including `use std::thread;`) and
+        // bare `thread :: spawn` / `thread :: sleep`
+        if t.text == "thread" {
+            let prev_is_std = i >= 3
+                && toks[i - 3].kind == Kind::Ident
+                && toks[i - 3].text == "std"
+                && path_sep(toks, i - 2);
+            let next = toks.get(i + 3).map(|t| t.text.as_str());
+            let spawns =
+                path_sep(toks, i + 1) && matches!(next, Some("spawn") | Some("sleep"));
+            if prev_is_std || spawns {
+                file.diag(
+                    diags,
+                    NAME,
+                    t.line,
+                    "OS threads are nondeterministic; model concurrency in virtual time \
+                     (submit rings / the sim scheduler)",
+                );
+            }
+        }
+    }
+    if file.rel.starts_with("rust/src/sim/") || file.rel.starts_with("rust/src/hw/") {
+        check_nanos_sub(file, diags);
+    }
+}
+
+/// `::` at token index `i` (two `:` puncts)?
+fn path_sep(toks: &[Token], i: usize) -> bool {
+    i + 1 < toks.len() && toks[i].text == ":" && toks[i + 1].text == ":"
+}
+
+/// Flag binary `-` where either operand looks like a timestamp. Test
+/// regions are exempt (tests construct times they control).
+fn check_nanos_sub(file: &SourceFile, diags: &mut Vec<Diag>) {
+    let toks = &file.tokens;
+    for i in 0..toks.len() {
+        if toks[i].kind != Kind::Punct || toks[i].text != "-" {
+            continue;
+        }
+        if in_regions(&file.test_regions, i) {
+            continue;
+        }
+        // `->` and `-=` are not subtraction
+        if let Some(next) = toks.get(i + 1) {
+            if next.kind == Kind::Punct && (next.text == ">" || next.text == "=") {
+                continue;
+            }
+        }
+        // binary iff the previous token can end an expression
+        let Some(prev) = i.checked_sub(1).map(|p| &toks[p]) else {
+            continue;
+        };
+        let binary = prev.kind == Kind::Ident
+            || prev.kind == Kind::Num
+            || (prev.kind == Kind::Punct && (prev.text == ")" || prev.text == "]"));
+        if !binary {
+            continue;
+        }
+        let left = left_operand_name(toks, i);
+        let right = right_operand_name(toks, i);
+        let timey = |n: &Option<String>| n.as_deref().is_some_and(is_time_name);
+        if timey(&left) || timey(&right) {
+            let which = left.or(right).unwrap_or_default();
+            file.diag(
+                diags,
+                NAME_NANOS,
+                toks[i].line,
+                &format!(
+                    "`{which}` looks like a Nanos timestamp; plain `-` underflows when \
+                     skew/reorder inverts the operands — use saturating_sub (or waive \
+                     with a causality argument)"
+                ),
+            );
+        }
+    }
+}
+
+/// Name of the expression ending just before the `-` at index `i`.
+fn left_operand_name(toks: &[Token], i: usize) -> Option<String> {
+    let prev = &toks[i - 1];
+    match prev.kind {
+        Kind::Ident => Some(prev.text.clone()),
+        Kind::Punct if prev.text == ")" || prev.text == "]" => {
+            let open = if prev.text == ")" { "(" } else { "[" };
+            let close = &prev.text;
+            let mut depth = 0i32;
+            let mut j = i - 1;
+            loop {
+                if toks[j].kind == Kind::Punct {
+                    if toks[j].text == *close {
+                        depth += 1;
+                    } else if toks[j].text == open {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                }
+                j = j.checked_sub(1)?;
+            }
+            // token before the opening bracket: callee or indexed base
+            let k = j.checked_sub(1)?;
+            if toks[k].kind == Kind::Ident {
+                Some(toks[k].text.clone())
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// First meaningful identifier after the `-` at index `i` (skips `(` and
+/// a leading `self .`).
+fn right_operand_name(toks: &[Token], i: usize) -> Option<String> {
+    let mut j = i + 1;
+    while j < toks.len() && toks[j].kind == Kind::Punct && toks[j].text == "(" {
+        j += 1;
+    }
+    let t = toks.get(j)?;
+    if t.kind != Kind::Ident {
+        return None;
+    }
+    if t.text == "self" && toks.get(j + 1).map(|p| p.text.as_str()) == Some(".") {
+        let t2 = toks.get(j + 2)?;
+        if t2.kind == Kind::Ident {
+            return Some(t2.text.clone());
+        }
+        return None;
+    }
+    Some(t.text.clone())
+}
+
+/// Does `name` look like a virtual-time value?
+fn is_time_name(name: &str) -> bool {
+    if matches!(name, "now" | "at" | "t" | "detected" | "deadline" | "elapsed") {
+        return true;
+    }
+    if name.ends_with("_at") || name.ends_with("_ns") || name.ends_with("_ts") {
+        return true;
+    }
+    if name.starts_with("t_") && name.len() > 2 {
+        return true;
+    }
+    // t0, t1, ... t99
+    if let Some(rest) = name.strip_prefix('t') {
+        if !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()) {
+            return true;
+        }
+    }
+    false
+}

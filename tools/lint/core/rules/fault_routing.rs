@@ -1,0 +1,81 @@
+//! Rule `fault-routing`: every simulated network hop must ride the
+//! fault-injection layer.
+//!
+//! PR 6 funneled all RPC costing through `Cluster::fault_rpc`, which is
+//! the only place partitions, stragglers, drop/retry budgets, and reorder
+//! delays are applied. A raw `fabric.rpc(` call is therefore a message
+//! that faults can never touch — the resize-log 2PC hops at
+//! `sim/assise.rs:293,301` were exactly this bug. Likewise a direct
+//! `.chain_ship_cost(` call outside `sim/` would cost a chain send
+//! without the fault plan seeing it.
+//!
+//! Allowlisted: `sim/fault.rs` (the funnel itself), `hw/` (the fabric
+//! model), and `baselines/` (foreign systems cost their own wire).
+
+use super::super::lexer::{Kind, Token};
+use super::super::{Diag, SourceFile};
+
+pub const NAME: &str = "fault-routing";
+
+pub fn check(file: &SourceFile, diags: &mut Vec<Diag>) {
+    let toks = &file.tokens;
+    // chain_ship_cost is the sim layer's own costing helper — legitimate
+    // anywhere under sim/, a bypass anywhere else.
+    let in_sim = file.rel.starts_with("rust/src/sim/");
+    for i in 0..toks.len() {
+        if let Some(line) = raw_fabric_rpc(toks, i) {
+            file.diag(
+                diags,
+                NAME,
+                line,
+                "raw `fabric.rpc(` bypasses Cluster::fault_rpc — partitions, stragglers, \
+                 and drop/reorder never see this hop; route it through the fault layer",
+            );
+        }
+        if !in_sim {
+            if let Some(line) = unchecked_chain_send(toks, i) {
+                file.diag(
+                    diags,
+                    NAME,
+                    line,
+                    "direct `.chain_ship_cost(` outside sim/ costs a chain send invisibly \
+                     to the fault plan; use the sim-layer send paths",
+                );
+            }
+        }
+    }
+}
+
+/// `fabric . rpc (` with token kinds ident/punct/ident/punct.
+fn raw_fabric_rpc(toks: &[Token], i: usize) -> Option<u32> {
+    if i + 3 >= toks.len() {
+        return None;
+    }
+    let hit = toks[i].kind == Kind::Ident
+        && toks[i].text == "fabric"
+        && toks[i + 1].text == "."
+        && toks[i + 2].text == "rpc"
+        && toks[i + 3].text == "(";
+    if hit {
+        Some(toks[i].line)
+    } else {
+        None
+    }
+}
+
+/// `. chain_ship_cost (` — flagged per-file; the allowlist (sim/) carves
+/// out the legitimate callers.
+fn unchecked_chain_send(toks: &[Token], i: usize) -> Option<u32> {
+    if i + 2 >= toks.len() {
+        return None;
+    }
+    let hit = toks[i].text == "."
+        && toks[i + 1].kind == Kind::Ident
+        && toks[i + 1].text == "chain_ship_cost"
+        && toks[i + 2].text == "(";
+    if hit {
+        Some(toks[i + 1].line)
+    } else {
+        None
+    }
+}

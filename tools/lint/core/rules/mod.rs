@@ -1,0 +1,10 @@
+//! The lint rules. Each per-file rule exposes `NAME` (the id used in
+//! diagnostics, allowlists, and `// assise-lint: allow(...)` waivers) and
+//! a `check(&SourceFile, &mut Vec<Diag>)`; `panic_ratchet` and
+//! `registration` work over the whole tree and are driven directly by the
+//! runner in `core/mod.rs`.
+
+pub mod determinism;
+pub mod fault_routing;
+pub mod panic_ratchet;
+pub mod registration;

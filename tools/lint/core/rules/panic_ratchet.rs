@@ -1,0 +1,150 @@
+//! Rule `panic-ratchet`: the number of panic-capable sites per module may
+//! only go down.
+//!
+//! `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!` and bare slice
+//! indexing are counted per top-level module under `rust/src/` and
+//! compared against the committed `tools/lint/baseline.toml`. A count
+//! above baseline is a hard failure; a count below baseline is reported
+//! as a suggestion (run with `--write-baseline` to ratchet it down).
+//! Test code is counted too — a panicking test helper still aborts the
+//! process — which is why the baseline numbers are honest, not zero.
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+
+use super::super::lexer::{Kind, Token};
+use super::super::{Diag, SourceFile};
+
+pub const NAME: &str = "panic-ratchet";
+
+pub const CATEGORIES: &[&str] = &["unwrap", "expect", "panic", "unreachable", "todo", "index"];
+
+/// Per-module (or per-file) counts, keyed by category name.
+pub type Counts = BTreeMap<&'static str, u64>;
+
+/// Count panic-capable sites in one file.
+pub fn count_file(file: &SourceFile) -> Counts {
+    let mut c: Counts = CATEGORIES.iter().map(|&k| (k, 0u64)).collect();
+    let toks = &file.tokens;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        match t.kind {
+            Kind::Ident => {
+                // `.unwrap(` / `.expect(` — method calls only, so
+                // `unwrap_or` and friends never match (exact ident).
+                if (t.text == "unwrap" || t.text == "expect")
+                    && i >= 1
+                    && toks[i - 1].text == "."
+                    && toks.get(i + 1).map(|n| n.text.as_str()) == Some("(")
+                {
+                    let key = if t.text == "unwrap" { "unwrap" } else { "expect" };
+                    if let Some(v) = c.get_mut(key) {
+                        *v += 1;
+                    }
+                }
+                // `panic!` / `unreachable!` / `todo!`
+                if matches!(t.text.as_str(), "panic" | "unreachable" | "todo")
+                    && toks.get(i + 1).map(|n| n.text.as_str()) == Some("!")
+                {
+                    if let Some(v) = c.get_mut(t.text.as_str()) {
+                        *v += 1;
+                    }
+                }
+            }
+            Kind::Punct if t.text == "[" && i >= 1 => {
+                // indexing: `expr[...]` — previous token ends an
+                // expression. Attributes (`#[`, `#![`) and macro brackets
+                // (`vec![`) have `#`/`!` before them and never match.
+                let p = &toks[i - 1];
+                let indexes = p.kind == Kind::Ident
+                    || (p.kind == Kind::Punct && (p.text == ")" || p.text == "]"));
+                if indexes {
+                    if let Some(v) = c.get_mut("index") {
+                        *v += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    c
+}
+
+/// First path component under `rust/src/` (or the file stem for root
+/// files): `rust/src/sim/assise.rs` -> `sim`, `rust/src/lib.rs` -> `lib`.
+pub fn module_of(rel: &str) -> Option<String> {
+    let rest = rel.strip_prefix("rust/src/")?;
+    let first = rest.split('/').next()?;
+    Some(first.strip_suffix(".rs").unwrap_or(first).to_string())
+}
+
+/// Compare aggregated per-module counts against the baseline. Returns
+/// ratchet-down suggestions (module, category, baseline, current) for
+/// modules now strictly below their recorded ceiling.
+pub fn check_modules(
+    current: &BTreeMap<String, Counts>,
+    baseline: &BTreeMap<String, BTreeMap<String, i64>>,
+    diags: &mut Vec<Diag>,
+) -> Vec<String> {
+    let mut suggestions = Vec::new();
+    for (module, counts) in current {
+        let base = baseline.get(module);
+        for &cat in CATEGORIES {
+            let cur = *counts.get(cat).unwrap_or(&0) as i64;
+            let ceil = base.and_then(|b| b.get(cat)).copied().unwrap_or(0);
+            match cur.cmp(&ceil) {
+                Ordering::Greater => diags.push(Diag {
+                    file: format!("rust/src/{module}"),
+                    line: 0,
+                    rule: NAME,
+                    msg: format!(
+                        "module `{module}` has {cur} `{cat}` sites, baseline allows {ceil} — \
+                         convert the new sites to Result/FsError (or get the baseline raised \
+                         in review)"
+                    ),
+                }),
+                Ordering::Less => suggestions.push(format!(
+                    "module `{module}`: {cat} {ceil} -> {cur} (ratchet down; rerun with \
+                     --write-baseline)"
+                )),
+                Ordering::Equal => {}
+            }
+        }
+    }
+    // a module present in the baseline but absent from the tree is stale
+    for module in baseline.keys() {
+        if !current.contains_key(module) {
+            suggestions.push(format!(
+                "module `{module}` is in baseline.toml but no longer in the tree \
+                 (rerun with --write-baseline)"
+            ));
+        }
+    }
+    suggestions
+}
+
+/// Serialize counts in baseline.toml format.
+pub fn render_baseline(current: &BTreeMap<String, Counts>) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# Panic-freedom ratchet — maintained by `assise-lint --write-baseline`.\n\
+         # Counts may only decrease; assise-lint fails CI if any module exceeds\n\
+         # its ceiling. Test code is included (a panicking helper still aborts).\n",
+    );
+    for (module, counts) in current {
+        out.push_str(&format!("\n[module.{module}]\n"));
+        for &cat in CATEGORIES {
+            let v = counts.get(cat).unwrap_or(&0);
+            out.push_str(&format!("{cat} = {v}\n"));
+        }
+    }
+    out
+}
+
+/// Shared by `count_file` callers that need a token slice without a full
+/// `SourceFile` (unit tests).
+#[allow(dead_code)] // used by the lint_rules integration test only
+pub fn count_tokens(tokens: &[Token]) -> Counts {
+    let file = SourceFile::from_tokens("test.rs", tokens.to_vec());
+    count_file(&file)
+}

@@ -1,0 +1,288 @@
+//! Rule `registration`: nothing runs (or is asserted on) by accident of
+//! memory.
+//!
+//! `Cargo.toml` sets `autotests = false` / `autobenches = false`, so a
+//! test or bench file without an explicit `[[test]]`/`[[bench]]` stanza
+//! silently never runs — a drift every PR so far has had to guard by
+//! hand. The same goes for the bench schema: CI greps row ids out of
+//! `BENCH_perf.json`, and a renamed row turns a hard assertion into a
+//! no-op. This rule closes the loop in all four directions:
+//!
+//!   rust/tests/*.rs  ->  [[test]] stanza        (file runs)
+//!   [[test]] name    ->  some CI job            (file runs *in CI*)
+//!   benches/*.rs     ->  [[bench]] stanza       (bench runs)
+//!   PERF_ROW_IDS     ->  PERF.md                (row is documented)
+//!   CI-grepped ids   ->  PERF_ROW_IDS           (assertion can fire)
+//!
+//! `PERF_ROW_IDS` in `rust/src/bench/perf.rs` is the source of truth for
+//! emitted rows (row names are format!-built, so an in-crate test binds
+//! the registry to what `run_rows` actually emits).
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::Path;
+
+use super::super::lexer::{Kind, Token};
+use super::super::Diag;
+
+pub const NAME: &str = "registration";
+
+/// JSON schema field names that CI legitimately greps for but that are
+/// not bench row ids.
+const SCHEMA_FIELDS: &[&str] = &[
+    "name",
+    "ops",
+    "total_ns",
+    "ns_per_op",
+    "copied_bytes",
+    "materializations",
+    "wire_bytes",
+    "virtual_ns",
+    "virtual_gbps",
+    "results",
+    "schema",
+    "scale",
+    "kernel_backend",
+];
+
+pub fn check(root: &Path, perf_tokens: &[Token], diags: &mut Vec<Diag>) {
+    let cargo = match fs::read_to_string(root.join("Cargo.toml")) {
+        Ok(s) => s,
+        Err(e) => {
+            push(diags, "Cargo.toml", 0, &format!("unreadable: {e}"));
+            return;
+        }
+    };
+    let ci = fs::read_to_string(root.join(".github/workflows/ci.yml")).unwrap_or_default();
+    let perf_md = fs::read_to_string(root.join("PERF.md")).unwrap_or_default();
+
+    let (test_targets, bench_targets) = cargo_targets(&cargo);
+
+    // every rust/tests/*.rs file has a [[test]] stanza
+    for file in rs_files(&root.join("rust/tests")) {
+        let want = format!("rust/tests/{file}");
+        if !test_targets.iter().any(|(_, p)| *p == want) {
+            push(
+                diags,
+                "Cargo.toml",
+                0,
+                &format!(
+                    "`{want}` has no [[test]] stanza — with autotests = false it \
+                     silently never runs"
+                ),
+            );
+        }
+    }
+
+    // every benches/*.rs file has a [[bench]] stanza
+    for file in rs_files(&root.join("benches")) {
+        let want = format!("benches/{file}");
+        if !bench_targets.iter().any(|(_, p)| *p == want) {
+            push(
+                diags,
+                "Cargo.toml",
+                0,
+                &format!(
+                    "`{want}` has no [[bench]] stanza — with autobenches = false it \
+                     silently never runs"
+                ),
+            );
+        }
+    }
+
+    // every test target is exercised by some CI job: either an unfiltered
+    // `cargo test` step exists, or the target is named with `--test`
+    let unfiltered = ci
+        .lines()
+        .any(|l| l.contains("cargo test") && !l.contains("--test"));
+    if !unfiltered {
+        for (name, _) in &test_targets {
+            if !ci.contains(&format!("--test {name}")) {
+                push(
+                    diags,
+                    ".github/workflows/ci.yml",
+                    0,
+                    &format!("test target `{name}` is not run by any CI job"),
+                );
+            }
+        }
+    }
+
+    // bench row registry: every id documented, every CI grep satisfiable
+    match registry_ids(perf_tokens) {
+        Some(ids) => {
+            for id in &ids {
+                if !perf_md.contains(id.as_str()) {
+                    push(
+                        diags,
+                        "PERF.md",
+                        0,
+                        &format!("bench row `{id}` (PERF_ROW_IDS) is not documented in PERF.md"),
+                    );
+                }
+            }
+            for (line_no, id) in ci_row_ids(&ci) {
+                if !ids.contains(&id) {
+                    push(
+                        diags,
+                        ".github/workflows/ci.yml",
+                        line_no,
+                        &format!(
+                            "CI asserts on bench row `{id}` but rust/src/bench/perf.rs \
+                             never emits it (not in PERF_ROW_IDS)"
+                        ),
+                    );
+                }
+            }
+        }
+        None => push(
+            diags,
+            "rust/src/bench/perf.rs",
+            0,
+            "PERF_ROW_IDS registry const not found — the registration rule needs it \
+             to bind CI assertions to emitted rows",
+        ),
+    }
+}
+
+fn push(diags: &mut Vec<Diag>, file: &str, line: u32, msg: &str) {
+    diags.push(Diag {
+        file: file.to_string(),
+        line,
+        rule: NAME,
+        msg: msg.to_string(),
+    });
+}
+
+/// `.rs` file names (not paths) directly under `dir`, sorted.
+fn rs_files(dir: &Path) -> Vec<String> {
+    let mut out = Vec::new();
+    if let Ok(rd) = fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".rs") {
+                out.push(name);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// (name, path) pairs from `[[test]]` and `[[bench]]` stanzas. Line-based
+/// on purpose: Cargo.toml is full TOML, outside the config-file subset.
+fn cargo_targets(cargo: &str) -> (Vec<(String, String)>, Vec<(String, String)>) {
+    let mut tests: Vec<(String, String)> = Vec::new();
+    let mut benches: Vec<(String, String)> = Vec::new();
+    #[derive(PartialEq)]
+    enum Sec {
+        Test,
+        Bench,
+        Other,
+    }
+    let mut sec = Sec::Other;
+    for line in cargo.lines() {
+        let line = line.trim();
+        if line.starts_with('[') {
+            sec = match line {
+                "[[test]]" => {
+                    tests.push((String::new(), String::new()));
+                    Sec::Test
+                }
+                "[[bench]]" => {
+                    benches.push((String::new(), String::new()));
+                    Sec::Bench
+                }
+                _ => Sec::Other,
+            };
+            continue;
+        }
+        let target = match sec {
+            Sec::Test => tests.last_mut(),
+            Sec::Bench => benches.last_mut(),
+            Sec::Other => None,
+        };
+        let Some(target) = target else { continue };
+        if let Some(v) = line.strip_prefix("name").map(str::trim_start) {
+            if let Some(v) = v.strip_prefix('=') {
+                target.0 = unquote(v);
+            }
+        } else if let Some(v) = line.strip_prefix("path").map(str::trim_start) {
+            if let Some(v) = v.strip_prefix('=') {
+                target.1 = unquote(v);
+            }
+        }
+    }
+    (tests, benches)
+}
+
+fn unquote(v: &str) -> String {
+    v.trim().trim_matches('"').to_string()
+}
+
+/// String literals of the `PERF_ROW_IDS` const: from the ident, skip to
+/// `=`, then collect `Str` tokens inside the following bracket pair.
+fn registry_ids(toks: &[Token]) -> Option<BTreeSet<String>> {
+    let at = toks
+        .iter()
+        .position(|t| t.kind == Kind::Ident && t.text == "PERF_ROW_IDS")?;
+    let eq = (at..toks.len()).find(|&i| toks[i].text == "=")?;
+    let open = (eq..toks.len()).find(|&i| toks[i].text == "[")?;
+    let mut ids = BTreeSet::new();
+    let mut depth = 0i32;
+    for t in &toks[open..] {
+        if t.kind == Kind::Punct {
+            if t.text == "[" {
+                depth += 1;
+            } else if t.text == "]" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+        } else if t.kind == Kind::Str {
+            ids.insert(t.text.clone());
+        }
+    }
+    Some(ids)
+}
+
+/// Row ids CI greps out of BENCH_perf.json: jq `.name=="<id>"` selectors
+/// and shell-quoted `'"<id>"'` grep patterns, minus known schema fields.
+fn ci_row_ids(ci: &str) -> Vec<(u32, String)> {
+    let mut out = Vec::new();
+    for (idx, line) in ci.lines().enumerate() {
+        if !line.contains("BENCH_perf.json") {
+            continue;
+        }
+        let line_no = idx as u32 + 1;
+        for id in find_between(line, ".name==\"", "\"") {
+            if !SCHEMA_FIELDS.contains(&id.as_str()) {
+                out.push((line_no, id));
+            }
+        }
+        for id in find_between(line, "'\"", "\"'") {
+            if !SCHEMA_FIELDS.contains(&id.as_str()) {
+                out.push((line_no, id));
+            }
+        }
+    }
+    out
+}
+
+/// All non-overlapping substrings of `line` delimited by `open`..`close`.
+fn find_between(line: &str, open: &str, close: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(s) = rest.find(open) {
+        let tail = &rest[s + open.len()..];
+        match tail.find(close) {
+            Some(e) => {
+                out.push(tail[..e].to_string());
+                rest = &tail[e + close.len()..];
+            }
+            None => break,
+        }
+    }
+    out
+}

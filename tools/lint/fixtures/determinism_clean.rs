@@ -1,0 +1,7 @@
+// Fixture: Instant::now() and std::thread::spawn in comments or strings
+// never fire; virtual-clock code is fine.
+fn tick(clock: &mut VClock) -> u64 {
+    let banner = "Instant and SystemTime and std::thread are banned here";
+    clock.advance(banner.len() as u64);
+    clock.now()
+}

@@ -1,0 +1,12 @@
+// Fixture: every banned wall-clock / OS-thread construct in one file.
+// Loaded with rel = "rust/src/sim/demo.rs".
+use std::thread;
+use std::time::{Instant, SystemTime};
+
+fn wall_clock_work() -> u128 {
+    let t0 = Instant::now();
+    let _epoch = SystemTime::now();
+    thread::spawn(|| {});
+    thread::sleep(std::time::Duration::from_millis(1));
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,12 @@
+// Fixture: the same hop routed through the fault layer. Mentions of
+// fabric.rpc( in comments and strings must NOT fire — that is the whole
+// point of lexing instead of grepping.
+fn ship(c: &mut Cluster, now: u64) -> u64 {
+    let doc = "a raw fabric.rpc( call would bypass the fault plan";
+    let t = match c.fault_rpc(now, 0, 1, 64, 64, 500) {
+        Ok(t) => t,
+        Err(_) => now,
+    };
+    /* even /* nested */ comments mentioning fabric.rpc( stay silent */
+    t + doc.len() as u64
+}

@@ -1,0 +1,8 @@
+// Fixture: raw fabric hops the fault plan can never see. The lint_rules
+// test loads this with rel = "rust/src/cluster/demo.rs", so BOTH sites
+// below must fire (chain_ship_cost is only legitimate under sim/).
+fn ship(fabric: &mut Fabric, nic: &Nic, now: u64) -> u64 {
+    let t = fabric.rpc(now, 0, 1, 64, 64, 500);
+    let wire = nic.chain_ship_cost(4096);
+    t + wire
+}

@@ -1,0 +1,15 @@
+// Fixture: the three legitimate shapes — saturating_sub, a waived
+// causally-safe subtraction, and non-time arithmetic. Loaded with
+// rel = "rust/src/sim/demo.rs"; none may fire.
+fn lag(now: u64, sent_at: u64) -> u64 {
+    now.saturating_sub(sent_at)
+}
+
+fn outage(up_at: u64, down_at: u64) -> u64 {
+    // assise-lint: allow(nanos-sub) — up_at >= down_at by construction
+    up_at - down_at
+}
+
+fn last_column(width: usize) -> usize {
+    width - 1
+}

@@ -1,0 +1,10 @@
+// Fixture: plain `-` on timestamp-looking operands. Fires when loaded
+// with rel = "rust/src/sim/demo.rs", and must stay silent when loaded
+// with a non-sim rel (the rule is scoped to sim/ and hw/).
+fn lag(now: u64, sent_at: u64) -> u64 {
+    now - sent_at
+}
+
+fn tail(samples: &[u64], t9: u64) -> u64 {
+    samples.len() as u64 + t9 - base_ns(t9)
+}

@@ -1,0 +1,25 @@
+// Fixture: exactly-known panic-site counts for the ratchet counter.
+// Expected: unwrap 2, expect 1, panic 1, unreachable 1, todo 1, index 1.
+// The unwrap in the #[cfg(test)] region below IS counted — a panicking
+// test helper still aborts the process. The words unwrap( and xs[0] in
+// this comment are not.
+fn panicky(xs: &[u64], maybe: Option<u64>) -> u64 {
+    let a = maybe.unwrap();
+    let b = xs[0];
+    let c = xs.first().expect("non-empty");
+    if a > b {
+        panic!("boom");
+    }
+    match c {
+        0 => unreachable!(),
+        _ => todo!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn counted_too() {
+        Some(1).unwrap();
+    }
+}

@@ -1,0 +1,4 @@
+// Seeded violations, registration rule: `real_row_4k` is emitted but
+// undocumented (this tree has no PERF.md), and the tree's ci.yml asserts
+// on `ghost_row_4k`, which is not in the registry.
+pub const PERF_ROW_IDS: &[&str] = &["real_row_4k"];

@@ -1,0 +1,15 @@
+// Seeded violations: fault-routing (raw fabric.rpc), determinism
+// (Instant), nanos-sub (now - sent_at), panic-ratchet (unwrap + index
+// over a zero baseline).
+use std::time::Instant;
+
+fn hop(fabric: &mut Fabric, now: u64, sent_at: u64) -> u64 {
+    let t0 = Instant::now();
+    let t = fabric.rpc(now, 0, 1, 64, 64, 500);
+    let lag = now - sent_at;
+    t + lag + t0.elapsed().as_nanos() as u64
+}
+
+fn pick(xs: &[u64]) -> u64 {
+    xs.first().unwrap() + xs[0]
+}

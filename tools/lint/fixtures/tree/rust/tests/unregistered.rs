@@ -1,0 +1,4 @@
+// Seeded violation: no [[test]] stanza in this tree's Cargo.toml, so
+// with autotests = false this file would silently never run.
+#[test]
+fn never_runs() {}

@@ -1,0 +1,12 @@
+//! `assise-lint` — standalone entry point for the repo's invariant
+//! linter. Same engine as `assise lint`; registered as a second `[[bin]]`
+//! so CI can run it without building a subcommand dispatcher into the
+//! check (`cargo run --bin assise-lint`).
+
+#[path = "core/mod.rs"]
+mod lintcore;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(lintcore::run_cli(&args));
+}
