@@ -558,6 +558,166 @@ fn bench_failover(partition: bool, total_ops: usize) -> PerfRow {
     }
 }
 
+/// Multi-core namespace scaling (the concurrent-namespace tentpole's
+/// acceptance rows): the IDENTICAL stream of namespace-read-heavy rings
+/// (3/4 stat, 1/8 readdir, 1/8 truncate over 16 directories) is driven
+/// through `submit_mc` at 1, 4, and 16 virtual cores, plus once through
+/// the plain serialized ring (`ns_scaling_16threads_lockns` — the
+/// fig. 8-style lock-namespace baseline). Reads overlap on per-core
+/// clocks against per-socket namespace replicas at epoch-snapshot
+/// semantics; mutations flat-combine into ONE shared-log reservation
+/// per ring. Modeled ops/s must rise monotonically with cores, 16 cores
+/// must clear >=2x single-core, and every row must report zero copied
+/// payload bytes (namespace ops carry none) — the in-crate tests and
+/// the CI `ns-scaling-smoke` job enforce all of it from
+/// `BENCH_perf.json`.
+fn bench_ns_scaling(cores: usize, serialize: bool, rings: usize) -> PerfRow {
+    use crate::sim::api::FsOp;
+    use crate::sim::{Cluster, ClusterConfig, DistFs};
+    const DIRS: u64 = 16;
+    const RING_OPS: u64 = 64;
+    let mut c = Cluster::new(ClusterConfig::default());
+    let pid = c.spawn_process(0, 0);
+    for t in 0..DIRS {
+        c.mkdir(pid, &format!("/t{t}")).unwrap();
+        c.create(pid, &format!("/t{t}/f")).unwrap();
+    }
+    // namespace lives in the SharedFS store: replicas refresh once per
+    // (core socket, authority socket) pair, then hit at local cost
+    c.digest_log(pid).unwrap();
+    stats::reset();
+    let t_host = Instant::now();
+    let t0 = c.now(pid);
+    for r in 0..rings as u64 {
+        let ops: Vec<FsOp> = (0..RING_OPS)
+            .map(|i| {
+                let t = (r * RING_OPS + i) % DIRS;
+                match i % 8 {
+                    7 => FsOp::Truncate {
+                        path: format!("/t{t}/f"),
+                        size: ((r + i) % 4) * 1024,
+                    },
+                    3 => FsOp::Readdir { path: format!("/t{t}") },
+                    _ => FsOp::Stat { path: format!("/t{t}/f") },
+                }
+            })
+            .collect();
+        let cqs = if serialize {
+            c.submit(pid, ops)
+        } else {
+            c.submit_mc(pid, cores, 0x5EED ^ r, ops)
+        };
+        for cq in cqs {
+            cq.result.unwrap();
+        }
+    }
+    let virtual_ns = c.now(pid) - t0;
+    PerfRow {
+        name: if serialize {
+            format!("ns_scaling_{cores}threads_lockns")
+        } else {
+            format!("ns_scaling_{cores}threads")
+        },
+        ops: rings as u64 * RING_OPS,
+        total_ns: t_host.elapsed().as_nanos(),
+        copied_bytes: stats::copied_bytes(),
+        materializations: stats::materializations(),
+        wire_bytes: Some(c.replicated_bytes),
+        virtual_ns: Some(virtual_ns),
+    }
+}
+
+/// Bursty writer under the BDP/AIMD replication-window controller
+/// (`repl_window_adaptive`): alternating phases of small-append
+/// submission rings (ack latency >> issue gap — a small fixed window
+/// serializes the whole pipe into the ring-closing fsync) and large
+/// per-op writes against a finite replica staging capacity (one bulk
+/// window's wire bytes alone overrun it, so ANY fixed window >= 2 eats
+/// a NACK round-trip per issue). `fixed = Some(w)` pins the window for
+/// the sweep the in-crate test runs; `None` lets the controller re-size
+/// between rings from the measured ack/issue EWMAs. The controller must
+/// beat EVERY fixed window in {1, 2, 4, 8, 16} on modeled ops/s: no
+/// single bound serves both phases.
+fn bench_repl_window_adaptive(fixed: Option<usize>, cycles: usize) -> PerfRow {
+    use crate::sim::api::FsOp;
+    use crate::sim::{Cluster, ClusterConfig, DistFs};
+    const SMALL: u64 = 1 << 10;
+    const BULK: u64 = 64 << 10;
+    const BURST_RINGS: usize = 16;
+    const BURST_OPS: u64 = 16;
+    const BULK_OPS: u64 = 80;
+    let mut cfg = ClusterConfig::default()
+        .log_capacity(512 << 10)
+        .stage_capacity(24 << 10);
+    // digest (and with it one replication window) every ~500 staged
+    // bytes: each small append issues its own window, so the window
+    // bound IS the burst phase's pipe depth
+    cfg.digest_threshold = 0.001;
+    // deep pipe, painful NACK: the chain ack dwarfs the issue gap in
+    // the burst phase, and every staging overrun costs a round trip
+    cfg.params.rpc_overhead = 8_000;
+    cfg = match fixed {
+        Some(w) => cfg.repl_window(w),
+        None => cfg.adaptive_window(true),
+    };
+    let mut c = Cluster::new(cfg);
+    let pid = c.spawn_process(0, 0);
+    let fd = c.create(pid, "/f").unwrap();
+    let small = Payload::zero(SMALL);
+    let bulk = Payload::zero(BULK);
+    stats::reset();
+    let t_host = Instant::now();
+    let t0 = c.now(pid);
+    let mut ops_done = 0u64;
+    let mut off = 0u64;
+    for _ in 0..cycles {
+        // burst: small-append rings, fsync closing each ring (drains
+        // the in-flight windows, so the between-rings resize gate opens
+        // and the ring absorbs the serialized-issue cost at small w)
+        for _ in 0..BURST_RINGS {
+            let mut ops: Vec<FsOp> = (0..BURST_OPS)
+                .map(|_| {
+                    let o = off;
+                    off += SMALL;
+                    FsOp::Pwrite { fd, off: o, data: small.clone() }
+                })
+                .collect();
+            ops.push(FsOp::Fsync { fd });
+            ops_done += ops.len() as u64;
+            for cq in c.submit(pid, ops) {
+                cq.result.unwrap();
+            }
+        }
+        // bulk: large per-op writes — every window's wire bytes exceed
+        // the staging capacity on their own, so any in-flight window
+        // NACKs the next issue; the periodic fsync opens the resize
+        // gate so the controller consumes the accumulated overruns
+        for k in 0..BULK_OPS {
+            c.pwrite(pid, fd, off, bulk.clone()).unwrap();
+            off += BULK;
+            ops_done += 1;
+            if k % 4 == 3 {
+                c.fsync(pid, fd).unwrap();
+                ops_done += 1;
+            }
+        }
+    }
+    c.fsync(pid, fd).unwrap();
+    let virtual_ns = c.now(pid) - t0;
+    PerfRow {
+        name: match fixed {
+            Some(w) => format!("repl_window_fixed{w}"),
+            None => "repl_window_adaptive".to_string(),
+        },
+        ops: ops_done,
+        total_ns: t_host.elapsed().as_nanos(),
+        copied_bytes: stats::copied_bytes(),
+        materializations: stats::materializations(),
+        wire_bytes: Some(c.replicated_bytes),
+        virtual_ns: Some(virtual_ns),
+    }
+}
+
 /// Render the rows as the machine-readable `BENCH_perf.json` document.
 pub fn to_json(rows: &[PerfRow], scale: f64) -> String {
     let mut out = String::from("{\n");
@@ -622,6 +782,11 @@ pub const PERF_ROW_IDS: &[&str] = &[
     "rebalance_drain_4k",
     "failover_clean_kill",
     "failover_partition",
+    "ns_scaling_1threads",
+    "ns_scaling_4threads",
+    "ns_scaling_16threads",
+    "ns_scaling_16threads_lockns",
+    "repl_window_adaptive",
 ];
 
 /// Run every microbenchmark. `scale` multiplies the iteration counts
@@ -662,6 +827,16 @@ pub fn run_rows(scale: Scale) -> Vec<PerfRow> {
         // the extra suspicion round but must stay ≤ 3× the clean kill
         bench_failover(false, scale.ops(128).clamp(32, 512)),
         bench_failover(true, scale.ops(128).clamp(32, 512)),
+        // multi-core namespace scaling: the identical ring stream at
+        // 1/4/16 virtual cores plus the serialized lock-style baseline
+        // (16 cores >= 2x single-core, CI-enforced)
+        bench_ns_scaling(1, false, scale.ops(96).clamp(24, 192)),
+        bench_ns_scaling(4, false, scale.ops(96).clamp(24, 192)),
+        bench_ns_scaling(16, false, scale.ops(96).clamp(24, 192)),
+        bench_ns_scaling(16, true, scale.ops(96).clamp(24, 192)),
+        // bursty writer under the BDP/AIMD window controller (the fixed
+        // {1,2,4,8,16} sweep it must beat runs in the in-crate test)
+        bench_repl_window_adaptive(None, scale.ops(3).clamp(2, 4)),
     ]
 }
 
@@ -709,6 +884,8 @@ pub fn run(scale: Scale) -> Table {
     t.note("submit_batch_4k_x64 must run >=1.3x the modeled ops/s of submit_perop_4k at copied_bytes == 0");
     t.note("rebalance_drain_4k must hold >=0.5x the modeled ops/s of rebalance_steady_4k (zero lost acks)");
     t.note("failover_partition must finish within 3x failover_clean_kill virtual time (zero lost acks in both)");
+    t.note("ns_scaling_* rows: modeled ops/s monotone in cores, 16 threads >=2x 1 thread, copied_bytes == 0");
+    t.note("repl_window_adaptive must beat every fixed repl_window in {1,2,4,8,16} on modeled ops/s (in-crate sweep)");
     t
 }
 
@@ -844,6 +1021,71 @@ mod tests {
             d >= 0.5 * s,
             "drain {d:.3e} ops/ns must hold >=0.5x steady {s:.3e} ops/ns"
         );
+    }
+
+    #[test]
+    fn ns_scaling_is_monotone_and_parallel() {
+        // the concurrent-namespace tentpole's acceptance: the identical
+        // op stream must speed up monotonically with virtual cores, 16
+        // cores clearing >=2x single-core, with zero payload copies
+        let r1 = bench_ns_scaling(1, false, 24);
+        let r4 = bench_ns_scaling(4, false, 24);
+        let r16 = bench_ns_scaling(16, false, 24);
+        assert_eq!(r1.name, "ns_scaling_1threads");
+        assert_eq!(r16.name, "ns_scaling_16threads");
+        assert_eq!(r1.ops, r16.ops, "identical op streams");
+        for r in [&r1, &r4, &r16] {
+            assert_eq!(r.copied_bytes, 0, "{} copied payload bytes", r.name);
+        }
+        let t1 = r1.ops as f64 / r1.virtual_ns.unwrap() as f64;
+        let t4 = r4.ops as f64 / r4.virtual_ns.unwrap() as f64;
+        let t16 = r16.ops as f64 / r16.virtual_ns.unwrap() as f64;
+        assert!(t4 > t1, "4-core {t4:.3e} ops/ns !> 1-core {t1:.3e}");
+        assert!(t16 > t4, "16-core {t16:.3e} ops/ns !> 4-core {t4:.3e}");
+        assert!(t16 >= 2.0 * t1, "16-core {t16:.3e} ops/ns !>= 2x 1-core {t1:.3e}");
+    }
+
+    #[test]
+    fn ns_scaling_same_seed_is_byte_identical() {
+        // every scheduling decision comes from the seeded interleaver:
+        // the same (seed, ops) input must reproduce virtual time exactly
+        let a = bench_ns_scaling(16, false, 12);
+        let b = bench_ns_scaling(16, false, 12);
+        assert_eq!(a.virtual_ns, b.virtual_ns, "seeded schedule must be deterministic");
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.wire_bytes, b.wire_bytes);
+    }
+
+    #[test]
+    fn lockns_baseline_serializes() {
+        // fig. 8 shape: the serialized lock-namespace baseline must lose
+        // to the concurrent ring on the identical op stream
+        let lock = bench_ns_scaling(16, true, 12);
+        let mc = bench_ns_scaling(16, false, 12);
+        assert_eq!(lock.name, "ns_scaling_16threads_lockns");
+        assert_eq!(lock.ops, mc.ops, "identical op streams");
+        let l = lock.ops as f64 / lock.virtual_ns.unwrap() as f64;
+        let m = mc.ops as f64 / mc.virtual_ns.unwrap() as f64;
+        assert!(m > l, "concurrent {m:.3e} ops/ns must beat serialized {l:.3e}");
+    }
+
+    #[test]
+    fn adaptive_window_beats_every_fixed() {
+        // the controller satellite's acceptance: on the bursty two-phase
+        // workload, no fixed window serves both phases — the adaptive
+        // bound must beat the whole sweep on modeled ops/s
+        let ad = bench_repl_window_adaptive(None, 2);
+        assert_eq!(ad.name, "repl_window_adaptive");
+        let a = ad.ops as f64 / ad.virtual_ns.unwrap() as f64;
+        for w in [1usize, 2, 4, 8, 16] {
+            let f = bench_repl_window_adaptive(Some(w), 2);
+            assert_eq!(ad.ops, f.ops, "identical op streams at w={w}");
+            let fw = f.ops as f64 / f.virtual_ns.unwrap() as f64;
+            assert!(
+                a > fw,
+                "adaptive {a:.3e} ops/ns must beat fixed window {w} at {fw:.3e}"
+            );
+        }
     }
 
     #[test]

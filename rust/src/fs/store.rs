@@ -85,6 +85,13 @@ pub struct FileStore {
     /// updated by diffing each inode's extent-map snapshot around every
     /// data mutation
     tier_bytes: [u64; TIER_COUNT],
+    /// Seqlock-style store version for epoch-snapshot reads. Even =
+    /// stable snapshot; odd = a digest batch is mid-apply
+    /// ([`FileStore::begin_apply`]..[`FileStore::end_apply`]). Every
+    /// successful mutation bumps by 2 (parity-preserving), so the value
+    /// doubles as the change counter per-socket namespace replicas
+    /// compare against to decide hit vs refresh.
+    epoch: u64,
 }
 
 impl Default for FileStore {
@@ -122,7 +129,47 @@ impl FileStore {
             by_path,
             dentries: FastMap::default(),
             tier_bytes: [0; TIER_COUNT],
+            epoch: 0,
         }
+    }
+
+    // ------------------------------------------------- epoch snapshots
+
+    /// Current store epoch. Even values are stable snapshots; an odd
+    /// value means a digest batch is being applied and a modeled
+    /// lock-free reader must retry rather than observe half-applied
+    /// namespace state.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Whether a digest apply window is open (odd epoch).
+    pub fn mid_apply(&self) -> bool {
+        self.epoch & 1 == 1
+    }
+
+    /// Open a digest apply window: flips the epoch odd (the seqlock
+    /// "write lock"). Mutations inside the window bump by 2 each, so
+    /// parity is preserved until [`FileStore::end_apply`] flips it back
+    /// to even.
+    pub fn begin_apply(&mut self) {
+        debug_assert!(!self.mid_apply(), "nested digest apply window");
+        self.epoch += 1;
+    }
+
+    /// Close the window opened by [`FileStore::begin_apply`]. Callers
+    /// must invoke this even when the apply fails midway, otherwise
+    /// readers would spin on an odd epoch forever.
+    pub fn end_apply(&mut self) {
+        debug_assert!(self.mid_apply(), "end_apply without begin_apply");
+        self.epoch += 1;
+    }
+
+    /// Parity-preserving mutation tick (+2): called by every successful
+    /// namespace/data mutator so snapshot readers and per-socket
+    /// replicas can detect change without diffing state.
+    fn note_mutation(&mut self) {
+        self.epoch += 2;
     }
 
     // ---------------------------------------------------- index upkeep
@@ -238,17 +285,24 @@ impl FileStore {
         }
         let parent = self.resolve(&dirname(&path))?;
         let name = basename(&path).to_string();
-        let pnode = self.inodes.get_mut(&parent).unwrap();
-        if pnode.kind != Kind::Dir {
-            return Err(FsError::NotADirectory(dirname(&path)));
-        }
-        if pnode.entries.contains_key(&name) {
-            return Err(FsError::AlreadyExists(path));
+        {
+            let pnode = self
+                .inodes
+                .get(&parent)
+                .ok_or_else(|| FsError::NotFound(dirname(&path)))?;
+            if pnode.kind != Kind::Dir {
+                return Err(FsError::NotADirectory(dirname(&path)));
+            }
+            if pnode.entries.contains_key(&name) {
+                return Err(FsError::AlreadyExists(path));
+            }
         }
         let ino = self.next_ino;
         self.next_ino += 1;
-        self.inodes.get_mut(&parent).unwrap().entries.insert(name.clone(), ino);
-        self.inodes.get_mut(&parent).unwrap().mtime = now;
+        if let Some(pnode) = self.inodes.get_mut(&parent) {
+            pnode.entries.insert(name.clone(), ino);
+            pnode.mtime = now;
+        }
         self.inodes.insert(
             ino,
             Inode {
@@ -265,6 +319,7 @@ impl FileStore {
             },
         );
         self.link_indices(parent, &name, ino, path);
+        self.note_mutation();
         Ok(ino)
     }
 
@@ -276,7 +331,10 @@ impl FileStore {
         let parent = self.resolve(&dirname(&path))?;
         let name = basename(&path).to_string();
         {
-            let pnode = self.inodes.get(&parent).unwrap();
+            let pnode = self
+                .inodes
+                .get(&parent)
+                .ok_or_else(|| FsError::NotFound(dirname(&path)))?;
             if pnode.kind != Kind::Dir {
                 return Err(FsError::NotADirectory(dirname(&path)));
             }
@@ -286,8 +344,10 @@ impl FileStore {
         }
         let ino = self.next_ino;
         self.next_ino += 1;
-        self.inodes.get_mut(&parent).unwrap().entries.insert(name.clone(), ino);
-        self.inodes.get_mut(&parent).unwrap().mtime = now;
+        if let Some(pnode) = self.inodes.get_mut(&parent) {
+            pnode.entries.insert(name.clone(), ino);
+            pnode.mtime = now;
+        }
         self.inodes.insert(
             ino,
             Inode {
@@ -304,6 +364,7 @@ impl FileStore {
             },
         );
         self.link_indices(parent, &name, ino, path);
+        self.note_mutation();
         Ok(ino)
     }
 
@@ -331,14 +392,14 @@ impl FileStore {
             return Err(FsError::IsADirectory(path));
         }
         let parent = self.resolve(&dirname(&path))?;
-        self.inodes
-            .get_mut(&parent)
-            .unwrap()
-            .entries
-            .remove(basename(&path));
-        self.inodes.get_mut(&parent).unwrap().mtime = now;
+        if let Some(pnode) = self.inodes.get_mut(&parent) {
+            pnode.entries.remove(basename(&path));
+            pnode.mtime = now;
+        }
         self.unlink_indices(parent, basename(&path), &path);
-        let node = self.inodes.get_mut(&ino).unwrap();
+        let Some(node) = self.inodes.get_mut(&ino) else {
+            return Err(FsError::NotFound(path));
+        };
         node.nlink -= 1;
         if node.nlink == 0 {
             let gone = node.extents.tier_snapshot();
@@ -346,6 +407,7 @@ impl FileStore {
             self.inodes.remove(&ino);
             self.paths.remove(&ino);
         }
+        self.note_mutation();
         Ok(ino)
     }
 
@@ -360,15 +422,14 @@ impl FileStore {
             return Err(FsError::NotEmpty(path));
         }
         let parent = self.resolve(&dirname(&path))?;
-        self.inodes
-            .get_mut(&parent)
-            .unwrap()
-            .entries
-            .remove(basename(&path));
-        self.inodes.get_mut(&parent).unwrap().mtime = now;
+        if let Some(pnode) = self.inodes.get_mut(&parent) {
+            pnode.entries.remove(basename(&path));
+            pnode.mtime = now;
+        }
         self.unlink_indices(parent, basename(&path), &path);
         self.inodes.remove(&ino);
         self.paths.remove(&ino);
+        self.note_mutation();
         Ok(())
     }
 
@@ -407,20 +468,18 @@ impl FileStore {
             }
         }
         let from_parent = self.resolve(&dirname(&from))?;
-        self.inodes
-            .get_mut(&from_parent)
-            .unwrap()
-            .entries
-            .remove(basename(&from));
-        self.inodes.get_mut(&from_parent).unwrap().mtime = now;
+        if let Some(fp) = self.inodes.get_mut(&from_parent) {
+            fp.entries.remove(basename(&from));
+            fp.mtime = now;
+        }
         self.unlink_indices(from_parent, basename(&from), &from);
-        self.inodes
-            .get_mut(&to_parent)
-            .unwrap()
-            .entries
-            .insert(basename(&to).to_string(), ino);
-        self.inodes.get_mut(&to_parent).unwrap().mtime = now;
-        self.inodes.get_mut(&ino).unwrap().ctime = now;
+        if let Some(tp) = self.inodes.get_mut(&to_parent) {
+            tp.entries.insert(basename(&to).to_string(), ino);
+            tp.mtime = now;
+        }
+        if let Some(moved) = self.inodes.get_mut(&ino) {
+            moved.ctime = now;
+        }
         self.dentry_insert(to_parent, basename(&to), ino);
         // Re-path ONLY the moved subtree: walk the moved inode's entries
         // tree (its size, not the whole namespace) and rewrite each
@@ -442,6 +501,7 @@ impl FileStore {
             self.by_path.insert(new.clone(), i);
             self.paths.insert(i, new);
         }
+        self.note_mutation();
         Ok(())
     }
 
@@ -490,6 +550,7 @@ impl FileStore {
         node.size = node.size.max(end);
         node.mtime = now;
         self.apply_tier_delta(before, after);
+        self.note_mutation();
         Ok(())
     }
 
@@ -529,6 +590,7 @@ impl FileStore {
             node.mtime = now;
             node.ctime = now;
         }
+        self.note_mutation();
         Ok(())
     }
 
@@ -688,6 +750,69 @@ mod tests {
         assert!(!st.is_dir);
         assert_eq!(st.size, 0);
         assert_eq!(st.ctime, 1);
+    }
+
+    #[test]
+    fn epoch_stays_even_outside_apply_and_counts_mutations() {
+        let mut s = store();
+        let e0 = s.epoch();
+        assert_eq!(e0 & 1, 0);
+        assert!(!s.mid_apply());
+        assert!(s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 1).is_ok());
+        assert!(s.epoch() > e0, "create must bump the epoch");
+        assert_eq!(s.epoch() & 1, 0, "epoch stays even outside a window");
+        let e1 = s.epoch();
+        assert!(s.mkdir("/d", Mode::DEFAULT_DIR, Cred::ROOT, 1).is_ok());
+        assert!(s.rename("/f", "/d/f", 2).is_ok());
+        assert!(s.unlink("/d/f", 3).is_ok());
+        assert!(s.rmdir("/d", 4).is_ok());
+        assert_eq!(s.epoch(), e1 + 8, "each mutation ticks by exactly 2");
+        assert_eq!(s.epoch() & 1, 0);
+    }
+
+    #[test]
+    fn epoch_unchanged_by_failed_mutations_and_reads() {
+        let mut s = store();
+        assert!(s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).is_ok());
+        let e = s.epoch();
+        assert!(s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0).is_err());
+        assert!(s.mkdir("/no/parent", Mode::DEFAULT_DIR, Cred::ROOT, 0).is_err());
+        assert!(s.unlink("/missing", 0).is_err());
+        assert!(s.stat("/f").is_ok());
+        assert!(s.resolve("/f").is_ok());
+        assert_eq!(s.epoch(), e, "failed mutations and reads do not tick");
+    }
+
+    #[test]
+    fn apply_window_flips_parity_and_mutations_keep_it() {
+        let mut s = store();
+        let e0 = s.epoch();
+        s.begin_apply();
+        assert!(s.mid_apply());
+        assert_eq!(s.epoch(), e0 + 1);
+        // mutations inside the window preserve odd parity (the window
+        // stays observable to snapshot readers until end_apply)
+        assert!(s.create("/mid", Mode::DEFAULT_FILE, Cred::ROOT, 1).is_ok());
+        assert!(s.mid_apply());
+        s.end_apply();
+        assert!(!s.mid_apply());
+        assert_eq!(s.epoch() & 1, 0);
+        assert!(s.epoch() >= e0 + 4);
+    }
+
+    #[test]
+    fn write_and_truncate_tick_epoch() {
+        let mut s = store();
+        let created = s.create("/f", Mode::DEFAULT_FILE, Cred::ROOT, 0);
+        assert!(created.is_ok());
+        let ino = created.unwrap_or(ROOT_INO);
+        let e = s.epoch();
+        assert!(s
+            .write_at(ino, 0, Payload::bytes(b"abc".to_vec()), Tier::Hot, 1)
+            .is_ok());
+        assert_eq!(s.epoch(), e + 2);
+        assert!(s.truncate(ino, 1, 2).is_ok());
+        assert_eq!(s.epoch(), e + 4);
     }
 
     #[test]

@@ -113,6 +113,28 @@ pub struct HwParams {
     /// table update) — the daemon is a single process, so lease ops
     /// serialize per SharedFS instance.
     pub lease_service: Nanos,
+
+    // ------------------------------------ multi-core LibFS (NrFS-style)
+    // Flat-combining cost model for N app threads sharing one update
+    // log: each core publishes its op to a per-core slot (a cache-line
+    // hand-off), one combiner walks the slots and issues a single NVM
+    // append for the whole batch.
+    /// Per-op cost of publishing into the core's combining slot
+    /// (cache-line transfer to the combiner, ~2 coherence misses).
+    pub core_publish_lat: Nanos,
+    /// Fixed per-batch cost paid by the combiner thread (slot scan +
+    /// reservation CAS on the shared log tail).
+    pub combine_batch_lat: Nanos,
+    /// Per-op marginal cost inside a combined batch (copy descriptor,
+    /// bump cursor) — paid serially by the combiner.
+    pub combine_op_lat: Nanos,
+    /// Namespace lookup served from the reader socket's own replica
+    /// (epoch check + index probe, all local DRAM).
+    pub ns_replica_hit_lat: Nanos,
+    /// Bytes pulled across the interconnect when a per-socket namespace
+    /// replica refreshes against the authority (dentry + inode deltas;
+    /// charged at `numa_read_bw` on top of `numa_lat`).
+    pub ns_replica_refresh_bytes: u64,
 }
 
 impl Default for HwParams {
@@ -166,6 +188,12 @@ impl Default for HwParams {
             lease_manager_expiry: 5_000_000_000,
             lease_timeout: 10_000_000_000,
             lease_service: 700,
+
+            core_publish_lat: 40,
+            combine_batch_lat: 150,
+            combine_op_lat: 20,
+            ns_replica_hit_lat: 90,
+            ns_replica_refresh_bytes: 256,
         }
     }
 }

@@ -152,6 +152,10 @@ pub struct ReplWindowStats {
     pub stalls: u64,
     /// total virtual ns of issue deferral across all stalls
     pub stalled_ns: Nanos,
+    /// windows whose staged bytes overran `ClusterConfig::stage_capacity`
+    /// and were NACKed back to the oldest in-flight ack (the adaptive
+    /// controller's multiplicative-decrease signal)
+    pub overruns: u64,
     /// batch-level samples: one per completed submit ring that issued
     /// at least one window, plus one per migration drain. Bounded to
     /// the most recent [`Self::RING_SAMPLE_CAP`] — the controller only
@@ -171,6 +175,13 @@ impl ReplWindowStats {
     pub fn record_stall(&mut self, deferred_ns: Nanos) {
         self.stalls += 1;
         self.stalled_ns += deferred_ns;
+    }
+
+    /// A window's staged bytes exceeded the stage capacity and its
+    /// issue was pushed past the oldest in-flight ack (plus a NACK
+    /// round-trip).
+    pub fn record_overrun(&mut self) {
+        self.overruns += 1;
     }
 
     /// Record one completed ring's aggregate (skips empty rings — a
@@ -197,6 +208,27 @@ impl ReplWindowStats {
         }
         self.stalls as f64 / self.windows as f64
     }
+}
+
+/// Concurrent-namespace counters (multi-core LibFS): flat-combining
+/// batch economics, per-socket namespace replica coherence, and
+/// epoch-snapshot read retries. All are modeled in virtual time by the
+/// seeded core interleaver in `sim/cores.rs` — no OS threads exist.
+#[derive(Debug, Clone, Default)]
+pub struct NsStats {
+    /// combined flushes: one shared-log reservation per batch
+    pub combined_batches: u64,
+    /// ops that rode a combined batch (vs. paying their own reservation)
+    pub combined_ops: u64,
+    /// namespace lookups served by the reader socket's replica at its
+    /// current epoch (local-DRAM cost only)
+    pub replica_hits: u64,
+    /// lookups that found the replica stale and paid the modeled NUMA
+    /// refresh (latency + `ns_replica_refresh_bytes` at `numa_read_bw`)
+    pub replica_refreshes: u64,
+    /// snapshot reads that landed inside a digest apply window (odd
+    /// epoch) and retried at the window's close
+    pub snapshot_retries: u64,
 }
 
 /// CRAQ apportioned-read counters: how reads were served once the
@@ -333,6 +365,18 @@ mod tests {
         assert_eq!(s.stalls, 2);
         assert_eq!(s.stalled_ns, 2_000);
         assert!((s.stall_ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overruns_count_independently_of_stalls() {
+        let mut s = ReplWindowStats::default();
+        s.record_issue();
+        s.record_overrun();
+        s.record_overrun();
+        assert_eq!(s.overruns, 2);
+        assert_eq!(s.stalls, 0, "overruns are not stalls");
+        let ns = NsStats::default();
+        assert_eq!(ns.combined_batches + ns.replica_hits + ns.snapshot_retries, 0);
     }
 
     #[test]

@@ -97,6 +97,38 @@ impl SharedFs {
         pid: ProcId,
         entries: &[LogEntry],
         now: u64,
+        chain_of: F,
+    ) -> Result<DigestStats>
+    where
+        F: FnMut(&str) -> ChainId,
+    {
+        // Seqlock bracket: the store's epoch stays odd for the whole
+        // batch, so modeled lock-free readers retry instead of observing
+        // a half-applied digest. The window is closed on the error path
+        // too — a wedged odd epoch would stall every snapshot reader.
+        self.store.begin_apply();
+        let res = self.digest_groups(pid, entries, now, chain_of);
+        self.store.end_apply();
+        let total = res?;
+        self.digests += 1;
+        self.digested_bytes += total.data_bytes;
+        self.sfs_log_bytes += 64; // digest record
+        // freshly digested data supersedes stale marks for those inodes
+        for e in entries {
+            if let Ok(ino) = self.store.resolve(e.op.path()) {
+                self.stale.remove(&ino);
+            }
+        }
+        Ok(total)
+    }
+
+    /// Per-chain grouping + apply body of [`SharedFs::digest`]; always
+    /// runs inside the store's apply window.
+    fn digest_groups<F>(
+        &mut self,
+        pid: ProcId,
+        entries: &[LogEntry],
+        now: u64,
         mut chain_of: F,
     ) -> Result<DigestStats>
     where
@@ -132,15 +164,6 @@ impl SharedFs {
                     total.skipped += stats.skipped;
                     total.data_bytes += stats.data_bytes;
                 }
-            }
-        }
-        self.digests += 1;
-        self.digested_bytes += total.data_bytes;
-        self.sfs_log_bytes += 64; // digest record
-        // freshly digested data supersedes stale marks for those inodes
-        for e in entries {
-            if let Ok(ino) = self.store.resolve(e.op.path()) {
-                self.stale.remove(&ino);
             }
         }
         Ok(total)
@@ -341,6 +364,22 @@ mod tests {
         assert_eq!(st2.applied, 0);
         assert_eq!(st2.skipped, 2);
         assert!(s.store.exists("/f"));
+    }
+
+    #[test]
+    fn digest_closes_apply_window_and_ticks_epoch() {
+        let mut s = SharedFs::new(0, 0, 1 << 30);
+        let e0 = s.store.epoch();
+        assert_eq!(e0 & 1, 0, "store starts on an even epoch");
+        assert!(s.digest(7, &entries(), 1, one_chain).is_ok());
+        let e1 = s.store.epoch();
+        assert_eq!(e1 & 1, 0, "apply window closed after digest");
+        assert!(e1 > e0, "digest must advance the snapshot epoch");
+        // an all-skipped re-digest still opens+closes the window (+2)
+        // but applies nothing
+        assert!(s.digest(7, &entries(), 2, one_chain).is_ok());
+        assert_eq!(s.store.epoch() & 1, 0);
+        assert!(!s.store.mid_apply());
     }
 
     #[test]

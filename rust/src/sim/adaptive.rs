@@ -1,0 +1,238 @@
+//! Adaptive replication-window controller (BDP-style AIMD).
+//!
+//! `ClusterConfig::repl_window` bounds how many background replication
+//! windows may be in flight. A fixed bound loses both ways: too small
+//! and a bursty writer stalls waiting for acks (issue deferral), too
+//! large and big-payload phases overrun the replicas' staging capacity
+//! (`ClusterConfig::stage_capacity`) and eat NACK round-trips. The
+//! controller re-sizes the bound *between rings, only when no ack is in
+//! flight* (`pending_repl` empty — resizing mid-flight would re-order
+//! issue decisions already made), from two measured signals:
+//!
+//! - chain ack latency: EWMA over `ack_at - issued_at` of every window
+//!   popped acked ([`ReplWindow`]'s `issued_at` exists for this);
+//! - window issue gap: EWMA of virtual time between consecutive wire
+//!   issues ([`Self::observe_issue`], fed from `replicate_window`).
+//!
+//! Their ratio is the bandwidth-delay product in windows — the pipe
+//! depth that keeps the chain busy without queueing. Decisions read the
+//! cluster's cumulative [`ReplWindowStats`] and diff against the
+//! counters seen at the previous decision, so pressure that builds
+//! while the resize gate is closed (acks in flight) is not lost — it is
+//! consumed in full at the next eligible ring boundary:
+//!
+//! - staging overruns halve the bound, or drop it straight to
+//!   [`WIN_MIN`] when every slot of the current bound overran
+//!   (multiplicative decrease, TCP-timeout style);
+//! - stalls grow the bound, jumping directly to the measured BDP when
+//!   the per-stall deferral is a large fraction of the ack latency
+//!   (the pipe is starved, not merely rippling);
+//! - a quiet interval drifts an oversized bound down toward the BDP.
+//!
+//! Stall *magnitude* gates growth: a window that defers by nearly a
+//! full ack round-trip means the bound is the bottleneck; a deferral
+//! that is small relative to the ack EWMA means issue and ack rates are
+//! already matched (BDP ≈ current bound) and growing would only buy
+//! staging overruns.
+
+use crate::hw::Nanos;
+use crate::metrics::ReplWindowStats;
+
+/// Hard bounds on the adapted window (matches the fixed-sweep range).
+pub const WIN_MIN: usize = 1;
+pub const WIN_MAX: usize = 16;
+
+/// EWMA weight for new samples (1/8, the classic srtt gain).
+const GAIN: f64 = 0.125;
+
+/// Per-stall deferral above this fraction of the ack EWMA means the
+/// window bound is starving the pipe (grow); below it the deferral is
+/// ordinary pipelining ripple (hold).
+const STARVED_FRACTION: f64 = 0.5;
+
+#[derive(Debug, Clone, Default)]
+pub struct WindowController {
+    /// smoothed window ack latency (ns); 0.0 until the first sample
+    ack_ewma: f64,
+    /// smoothed gap between consecutive window wire issues (ns)
+    gap_ewma: f64,
+    last_issue: Option<Nanos>,
+    /// cumulative counters consumed by the previous `adjust` decision
+    seen_windows: u64,
+    seen_stalls: u64,
+    seen_stalled_ns: Nanos,
+    seen_overruns: u64,
+    /// resize decisions taken (observability)
+    pub adjustments: u64,
+}
+
+impl WindowController {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one acked window's measured latency.
+    pub fn observe_ack(&mut self, issued_at: Nanos, ack_at: Nanos) {
+        let lat = ack_at.saturating_sub(issued_at) as f64;
+        if lat <= 0.0 {
+            return;
+        }
+        if self.ack_ewma == 0.0 {
+            self.ack_ewma = lat;
+        } else {
+            self.ack_ewma += GAIN * (lat - self.ack_ewma);
+        }
+    }
+
+    /// Feed one window's wire-issue time (offered-load signal).
+    pub fn observe_issue(&mut self, at: Nanos) {
+        if let Some(prev) = self.last_issue {
+            let gap = at.saturating_sub(prev) as f64;
+            if gap > 0.0 {
+                if self.gap_ewma == 0.0 {
+                    self.gap_ewma = gap;
+                } else {
+                    self.gap_ewma += GAIN * (gap - self.gap_ewma);
+                }
+            }
+        }
+        self.last_issue = Some(at);
+    }
+
+    /// Bandwidth-delay product in windows: how many windows fit in one
+    /// ack round-trip at the measured issue rate. 0 until both EWMAs
+    /// have samples.
+    pub fn bdp_windows(&self) -> usize {
+        if self.ack_ewma <= 0.0 || self.gap_ewma <= 0.0 {
+            return 0;
+        }
+        (self.ack_ewma / self.gap_ewma).ceil() as usize
+    }
+
+    /// Decide the next window bound from the backpressure accumulated
+    /// since the previous decision (`stats` is the cluster's cumulative
+    /// counter block). Call only between rings with no ack in flight.
+    pub fn adjust(&mut self, cur: usize, stats: &ReplWindowStats) -> usize {
+        let d_stalls = stats.stalls.saturating_sub(self.seen_stalls);
+        let d_stalled_ns = stats.stalled_ns.saturating_sub(self.seen_stalled_ns);
+        let d_overruns = stats.overruns.saturating_sub(self.seen_overruns);
+        self.seen_windows = stats.windows;
+        self.seen_stalls = stats.stalls;
+        self.seen_stalled_ns = stats.stalled_ns;
+        self.seen_overruns = stats.overruns;
+
+        let mut next = cur.clamp(WIN_MIN, WIN_MAX);
+        if d_overruns > 0 {
+            // staging overran: halve; collapse to the floor when the
+            // overruns filled the whole bound (every slot was NACKed)
+            next = if d_overruns as usize >= next {
+                WIN_MIN
+            } else {
+                (next / 2).max(WIN_MIN)
+            };
+        } else if d_stalls > 0 {
+            let per_stall = (d_stalled_ns / d_stalls) as f64;
+            if self.ack_ewma <= 0.0 || per_stall > self.ack_ewma * STARVED_FRACTION {
+                // issues starved for most of an ack round-trip: the
+                // bound is the pipe bottleneck — jump to the measured
+                // BDP (at least one more slot when the estimate lags)
+                next = self.bdp_windows().max(next + 1).min(WIN_MAX);
+            }
+            // small deferrals: issue and ack rates already matched
+        } else {
+            // no pressure either way: drift down toward the BDP so a
+            // quiet phase sheds slack capacity
+            let bdp = self.bdp_windows();
+            if bdp > 0 && next > bdp {
+                next -= 1;
+            }
+        }
+        let next = next.clamp(WIN_MIN, WIN_MAX);
+        if next != cur {
+            self.adjustments += 1;
+        }
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(windows: u64, stalls: u64, stalled_ns: Nanos, overruns: u64) -> ReplWindowStats {
+        ReplWindowStats { windows, stalls, stalled_ns, overruns, ..Default::default() }
+    }
+
+    #[test]
+    fn overrun_halves_or_floors() {
+        let mut c = WindowController::new();
+        assert_eq!(c.adjust(8, &stats(8, 0, 0, 2)), 4, "partial overrun halves");
+        // deltas: 2 already consumed, 8 more overruns >= bound 4 -> floor
+        assert_eq!(c.adjust(4, &stats(16, 0, 0, 10)), WIN_MIN, "saturated overrun floors");
+        assert_eq!(c.adjust(1, &stats(20, 0, 0, 12)), 1, "floor holds");
+    }
+
+    #[test]
+    fn starved_stalls_jump_to_bdp() {
+        let mut c = WindowController::new();
+        // ack ~8000 ns, issues every ~1000 ns -> BDP 8
+        c.observe_ack(0, 8_000);
+        for t in 1..=16u64 {
+            c.observe_issue(t * 1_000);
+        }
+        assert_eq!(c.bdp_windows(), 8);
+        // per-stall deferral ~7000 ns >> ack/2: starved, jump to BDP
+        assert_eq!(c.adjust(1, &stats(4, 4, 28_000, 0)), 8);
+        // already at BDP, still starved: probe one past the estimate
+        assert_eq!(c.adjust(8, &stats(8, 8, 56_000, 0)), 9);
+        assert_eq!(c.adjust(16, &stats(12, 12, 84_000, 0)), 16, "ceiling holds");
+    }
+
+    #[test]
+    fn small_stalls_hold_and_quiet_drifts_to_bdp() {
+        let mut c = WindowController::new();
+        c.observe_ack(0, 8_000);
+        c.observe_issue(4_000);
+        c.observe_issue(8_000);
+        assert_eq!(c.bdp_windows(), 2);
+        // per-stall deferral 500 ns << ack/2 = 4000: pipelining ripple
+        assert_eq!(c.adjust(4, &stats(3, 2, 1_000, 0)), 4, "ripple holds the bound");
+        // idle interval drifts an oversized window back down toward BDP
+        assert_eq!(c.adjust(6, &stats(3, 2, 1_000, 0)), 5);
+    }
+
+    #[test]
+    fn deltas_accumulate_across_gated_rings() {
+        let mut c = WindowController::new();
+        c.observe_ack(0, 8_000);
+        // first decision consumes the overruns seen so far
+        assert_eq!(c.adjust(8, &stats(8, 0, 0, 3)), 4);
+        // no NEW overruns since: same cumulative block is now quiet
+        // (gap EWMA empty -> bdp 0 -> no drift either)
+        assert_eq!(c.adjust(4, &stats(8, 0, 0, 3)), 4);
+        // pressure built while the gate was closed: consumed in full
+        assert_eq!(c.adjust(4, &stats(12, 0, 0, 7)), 1, "4 new overruns >= bound");
+    }
+
+    #[test]
+    fn no_signal_no_drift() {
+        let mut c = WindowController::new();
+        // no EWMA samples yet: quiet interval leaves the window alone
+        assert_eq!(c.adjust(4, &stats(2, 0, 0, 0)), 4);
+        assert_eq!(c.adjustments, 0);
+    }
+
+    #[test]
+    fn ewmas_smooth_and_ignore_degenerate_samples() {
+        let mut c = WindowController::new();
+        c.observe_ack(100, 100); // zero latency: ignored
+        assert_eq!(c.bdp_windows(), 0);
+        c.observe_ack(0, 1_000);
+        c.observe_ack(0, 2_000);
+        assert!(c.ack_ewma > 1_000.0 && c.ack_ewma < 2_000.0);
+        c.observe_issue(500);
+        assert_eq!(c.bdp_windows(), 0, "one issue is not a gap yet");
+        c.observe_issue(1_000);
+        assert!(c.bdp_windows() >= 1);
+    }
+}

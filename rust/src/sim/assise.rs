@@ -30,11 +30,13 @@ use crate::hw::params::HwParams;
 use crate::hw::rdma::Fabric;
 use crate::hw::ssd::SsdDevice;
 use crate::libfs::{LibFs, ReplWindow};
-use crate::metrics::{CraqStats, FaultStats, ReplWindowStats, RingStallSample};
+use crate::metrics::{CraqStats, FaultStats, NsStats, ReplWindowStats, RingStallSample};
 use crate::oplog::{coalesce, LogEntry, LogOp};
 use crate::replication::{partition_by_chain, route_partitions, ChainId, ReadVersion};
 use crate::sharedfs::SharedFs;
+use crate::sim::adaptive::WindowController;
 use crate::sim::api::{DistFs, FsCompletion, FsOp, FsOut};
+use crate::sim::cores::{CoreInterleaver, CoreSlots};
 use crate::sim::fault::FaultPlan;
 use crate::sim::{ClusterConfig, CrashMode};
 use crate::Nanos;
@@ -98,13 +100,31 @@ pub struct Cluster {
     /// counters the fault layer maintains (refused sends, rerouted
     /// straggler reads, detection latencies)
     pub fault_stats: FaultStats,
+    /// concurrent-namespace counters: flat-combining batches, per-socket
+    /// replica hits/refreshes, epoch-snapshot read retries
+    pub ns_stats: NsStats,
+    /// adaptive replication-window controller state (consulted between
+    /// rings only when `cfg.adaptive_window` is set)
+    pub win_ctl: WindowController,
+    /// open digest apply window per (node, shared-area socket) in
+    /// virtual time: `(begin, end)` of the last `digest_log_at` apply on
+    /// that SharedFS. A core-clock snapshot read landing inside the
+    /// window retries at `end` (odd-epoch seqlock retry, charged in
+    /// virtual time)
+    apply_windows: HashMap<(NodeId, SocketId), (Nanos, Nanos)>,
+    /// per-socket namespace replica epochs: (reader node, reader socket,
+    /// authority socket) -> store epoch the replica last refreshed at.
+    /// A hit costs `ns_replica_hit_lat`; a stale replica pays the NUMA
+    /// refresh charge (`numa_lat` + refresh bytes at `numa_read_bw`)
+    ns_replicas: HashMap<(NodeId, SocketId, SocketId), u64>,
 
     // ---- submission-batch amortization state (live only inside one
     // ---- `submit` call; see `DistFs::submit` below)
-    /// NVM log-append bytes pre-charged by the current batch's single
-    /// reservation; `append_op` consumes its slice instead of paying a
-    /// fixed per-append device latency
-    prepaid_log: u64,
+    /// NVM log-append bytes pre-charged per virtual core by the current
+    /// batch's combined reservations; `append_op` consumes the active
+    /// core's slice instead of paying a fixed per-append device latency
+    /// (single-core rings use slot 0 — the old `prepaid_log` idiom)
+    core_slots: CoreSlots,
     /// ops remaining in the current batch that entered through the
     /// already-open submission (they pay only the SQE bookkeeping slice
     /// of the per-op shim cost)
@@ -158,7 +178,11 @@ impl Cluster {
             reads_served_by: vec![0; node_count],
             fault: FaultPlan::default(),
             fault_stats: FaultStats::default(),
-            prepaid_log: 0,
+            ns_stats: NsStats::default(),
+            win_ctl: WindowController::new(),
+            apply_windows: HashMap::new(),
+            ns_replicas: HashMap::new(),
+            core_slots: CoreSlots::new(),
             batch_tail: 0,
             batch_first: false,
             batch_leases: None,
@@ -540,10 +564,10 @@ impl Cluster {
 
     fn append_op(&mut self, pid: ProcId, op: LogOp) -> Result<()> {
         let bytes = crate::oplog::ENTRY_HEADER_BYTES + op.payload_bytes();
-        if self.prepaid_log >= bytes {
-            // the batch submission pre-charged ONE NVM append (one log
-            // reservation) covering this entry — consume its slice
-            self.prepaid_log -= bytes;
+        if self.core_slots.consume(bytes) {
+            // a combined flush pre-charged ONE NVM append (one log
+            // reservation) covering this entry — its slice was drawn
+            // from the active core's prepaid slot
         } else {
             // persistent append into the socket-local NVM log
             // (store + CLWB)
@@ -626,7 +650,7 @@ impl Cluster {
             ack = ack.max(w.ack_at);
         }
         let t0 = self.procs[pid].clock.now;
-        let (residual, _) = self.replicate_suffix_at(pid, t0)?;
+        let (residual, _, _) = self.replicate_suffix_at(pid, t0)?;
         self.procs[pid].clock.advance_to(ack.max(residual));
         Ok(())
     }
@@ -639,28 +663,54 @@ impl Cluster {
     /// queue backs up (§A.1). Returns the new window's ack time.
     fn replicate_window(&mut self, pid: ProcId, t_start: Nanos) -> Result<Nanos> {
         let cap = self.cfg.repl_window.max(1);
-        // acked windows free their slots
+        // acked windows free their slots (and feed the controller's
+        // ack-latency EWMA)
         while matches!(self.procs[pid].pending_repl.front(), Some(w) if w.ack_at <= t_start) {
-            self.procs[pid].pending_repl.pop_front();
+            if let Some(w) = self.procs[pid].pending_repl.pop_front() {
+                self.win_ctl.observe_ack(w.issued_at, w.ack_at);
+            }
         }
         let mut t_issue = t_start;
         while self.procs[pid].pending_repl.len() >= cap {
-            let w = self.procs[pid].pending_repl.pop_front().unwrap();
-            t_issue = t_issue.max(w.ack_at);
+            if let Some(w) = self.procs[pid].pending_repl.pop_front() {
+                t_issue = t_issue.max(w.ack_at);
+                self.win_ctl.observe_ack(w.issued_at, w.ack_at);
+            }
+        }
+        // replica staging capacity: if the bytes already staged in
+        // flight exceed the cap, the receivers NACK the new batch — it
+        // waits for the oldest in-flight ack to free staging space and
+        // pays a NACK round trip on top (the adaptive controller's
+        // multiplicative-decrease signal)
+        if self.cfg.stage_capacity < u64::MAX {
+            let p = self.p();
+            while self.procs[pid].pending_repl.iter().map(|w| w.wire).sum::<u64>()
+                > self.cfg.stage_capacity
+            {
+                let Some(w) = self.procs[pid].pending_repl.pop_front() else {
+                    break;
+                };
+                t_issue = t_issue.max(w.ack_at) + 2 * p.rpc_overhead;
+                self.win_ctl.observe_ack(w.issued_at, w.ack_at);
+                self.repl_window_stats.record_overrun();
+            }
         }
         self.repl_window_stats.record_issue();
+        self.win_ctl.observe_issue(t_issue);
         if t_issue > t_start {
             // the window was full with unacked batches: the wire issue is
             // deferred until the oldest ack frees a slot
             // assise-lint: allow(nanos-sub) — guarded by t_issue > t_start
             self.repl_window_stats.record_stall(t_issue - t_start);
         }
-        let (ack, chains) = self.replicate_suffix_at(pid, t_issue)?;
+        let (ack, chains, wire) = self.replicate_suffix_at(pid, t_issue)?;
         let tail = self.procs[pid].log.tail_seq();
         if ack > t_issue {
             self.procs[pid].pending_repl.push_back(ReplWindow {
                 upto: tail,
+                issued_at: t_issue,
                 ack_at: ack,
+                wire,
                 chains,
                 generation: self.mgr.generation(),
             });
@@ -683,23 +733,28 @@ impl Cluster {
     /// advances once every partition is acked. Entries a chain already
     /// acked (cursor ≥ seq — e.g. shipped ahead of time by a live
     /// migration) are not re-sent.
-    fn replicate_suffix_at(&mut self, pid: ProcId, t_start: Nanos) -> Result<(Nanos, Vec<ChainId>)> {
+    fn replicate_suffix_at(
+        &mut self,
+        pid: ProcId,
+        t_start: Nanos,
+    ) -> Result<(Nanos, Vec<ChainId>, u64)> {
         let pnode = self.procs[pid].node;
         let tail = self.procs[pid].log.tail_seq();
         let from = self.procs[pid].log.replicated_upto;
         if from >= tail {
-            return Ok((t_start, Vec::new()));
+            return Ok((t_start, Vec::new(), 0));
         }
         let entries: Vec<LogEntry> = self.procs[pid].log.unreplicated().cloned().collect();
         if entries.is_empty() {
             self.procs[pid].log.mark_replicated(tail);
-            return Ok((t_start, Vec::new()));
+            return Ok((t_start, Vec::new(), 0));
         }
         let parts = partition_by_chain(&entries, |path| {
             (self.mgr.chain_id_for(path), self.area_socket(path))
         });
         let mut ack_max = t_start;
         let mut chains_hit: Vec<ChainId> = Vec::new();
+        let mut wire_total = 0u64;
         for part in parts {
             // entries this chain already acked (a migration may have
             // shipped the suffix ahead of the global watermark)
@@ -762,11 +817,12 @@ impl Cluster {
             let ack = self.chain_ship_cost(Some(pnode), &hops, wire_bytes, t_start)?;
             ack_max = ack_max.max(ack);
             self.replicated_bytes += wire_bytes * full_chain.len() as u64;
+            wire_total += wire_bytes;
             self.procs[pid].log.mark_chain_replicated(part.key, max_seq);
         }
         // every partition is acked on its own chain: the prefix is whole
         self.procs[pid].log.mark_replicated(tail);
-        Ok((ack_max, chains_hit))
+        Ok((ack_max, chains_hit, wire_total))
     }
 
     /// Digest `pid`'s replicated-but-undigested entries on every chain
@@ -882,6 +938,10 @@ impl Cluster {
             sfs.digest(pid, batch, done, |path| {
                 key_of.get(path).copied().unwrap_or_default()
             })?;
+            // the store's seqlock epoch was odd for the whole apply;
+            // record the window in virtual time so core-clock snapshot
+            // readers landing inside it retry at `done`
+            self.apply_windows.insert((r, sock), (t0, done));
             done_at.insert((r, sock), done);
             done_max = done_max.max(done);
         }
@@ -1813,7 +1873,8 @@ impl DistFs for Cluster {
                 let now = self.procs[pid].clock.now;
                 let done = self.nodes[node].sockets[socket].nvm.write_log(now, log_bytes, &p);
                 self.procs[pid].clock.advance_to(done);
-                self.prepaid_log = log_bytes;
+                self.core_slots.reset(1);
+                self.core_slots.credit(0, log_bytes);
             }
             self.batch_tail = n - 1;
             self.batch_first = true;
@@ -1834,18 +1895,28 @@ impl DistFs for Cluster {
         // batch-level stall sample: one aggregate per completed ring
         // that issued replication windows — the control signal adaptive
         // window sizing feeds on (per-op samples would chase noise)
-        self.repl_window_stats.record_ring(RingStallSample {
+        let ring_sample = RingStallSample {
             windows: self.repl_window_stats.windows - w0,
             stalls: self.repl_window_stats.stalls - s0,
             // assise-lint: allow(nanos-sub) — monotone counter delta
             stalled_ns: self.repl_window_stats.stalled_ns - ns0,
-        });
+        };
+        self.repl_window_stats.record_ring(ring_sample);
         // any unconsumed reservation (ops that failed validation before
         // appending) is discarded — the time was already charged
-        self.prepaid_log = 0;
+        self.core_slots.clear();
         self.batch_tail = 0;
         self.batch_first = false;
         self.batch_leases = None;
+        // adaptive window resize: between rings only, and only where no
+        // ack is in flight (a live window was sized under the old bound).
+        // The controller diffs the cumulative counters itself, so
+        // pressure from rings where this gate was closed is consumed at
+        // the next eligible boundary rather than lost
+        if self.cfg.adaptive_window && live && self.procs[pid].pending_repl.is_empty() {
+            self.cfg.repl_window =
+                self.win_ctl.adjust(self.cfg.repl_window, &self.repl_window_stats);
+        }
         out
     }
 }
@@ -1878,6 +1949,216 @@ fn batched_log_bytes(op: &FsOp) -> u64 {
         | FsOp::Dsync { .. }
         | FsOp::Stat { .. }
         | FsOp::Readdir { .. } => 0,
+    }
+}
+
+// ========================================= multi-core submission ring
+//
+// NrFS/CNR idiom on the existing log-structured design: N virtual app
+// threads per LibFS share the one update log. Mutations publish to
+// per-core combining slots and are applied on the shared-log timeline
+// (the combiner's clock = the process clock) after ONE batched NVM
+// reservation credits every core's prepaid slot. Namespace reads run
+// on per-core clocks against epoch-snapshot state: a per-socket
+// namespace replica absorbs repeat lookups at local cost, pays the
+// modeled NUMA charge only when its epoch is stale, and retries when
+// it lands inside a digest apply window (odd store epoch). The
+// determinism lint bans OS threads — all interleaving comes from the
+// seeded `CoreInterleaver`, so a fixed (seed, ops) input is
+// byte-identical across runs.
+
+impl Cluster {
+    /// Multi-core submission ring: `ops[i]` runs on virtual core
+    /// `i % cores` (core clocks start at the proc clock), interleaved
+    /// by a scheduler seeded with `seed`. State effects and error
+    /// classes are identical to running each core's ops in order —
+    /// only virtual time differs (`rust/tests/ns_concurrency.rs` pins
+    /// the equivalence against a sequential per-thread reference).
+    pub fn submit_mc(
+        &mut self,
+        pid: ProcId,
+        cores: usize,
+        seed: u64,
+        ops: Vec<FsOp>,
+    ) -> Vec<FsCompletion> {
+        let n = ops.len();
+        if cores <= 1 || n <= 1 || self.check_alive(pid).is_err() {
+            return self.submit(pid, ops);
+        }
+        let p = self.p();
+        let pnode = self.procs[pid].node;
+        let psock = self.procs[pid].socket;
+        let nsock = self.nodes[pnode].sockets.len();
+        let t_ring0 = self.procs[pid].clock.now;
+
+        // ---- flat-combining flush: ONE NVM reservation for the whole
+        // ring's mutating log bytes, credited to per-core prepaid slots
+        let mut per_core_bytes = vec![0u64; cores];
+        let mut mut_ops = 0u64;
+        for (i, op) in ops.iter().enumerate() {
+            let b = batched_log_bytes(op);
+            if b > 0 {
+                per_core_bytes[i % cores] += b;
+                mut_ops += 1;
+            }
+        }
+        let total_bytes: u64 = per_core_bytes.iter().sum();
+        self.core_slots.reset(cores);
+        if total_bytes > 0 {
+            let done = self.nodes[pnode].sockets[psock]
+                .nvm
+                .write_log(t_ring0, total_bytes, &p);
+            self.procs[pid].clock.advance_to(done);
+            // combiner serial section: slot scan + log-tail CAS, then a
+            // per-op descriptor walk
+            self.procs[pid].clock.tick(p.combine_batch_lat + p.combine_op_lat * mut_ops);
+            for (c, b) in per_core_bytes.iter().enumerate() {
+                self.core_slots.credit(c, *b);
+            }
+            self.ns_stats.combined_batches += 1;
+            self.ns_stats.combined_ops += mut_ops;
+        }
+        self.batch_tail = n - 1;
+        self.batch_first = true;
+        self.batch_leases = Some(Default::default());
+        let (w0, s0, ns0) = (
+            self.repl_window_stats.windows,
+            self.repl_window_stats.stalls,
+            self.repl_window_stats.stalled_ns,
+        );
+
+        // ---- seeded interleaved execution on per-core virtual clocks
+        let mut core_clocks: Vec<crate::hw::clock::Clock> =
+            (0..cores).map(|_| crate::hw::clock::Clock { now: t_ring0 }).collect();
+        // core c owns ops c, c+cores, c+2*cores, ...
+        let counts: Vec<usize> = (0..cores).map(|c| n.saturating_sub(c).div_ceil(cores)).collect();
+        let mut cursors: Vec<usize> = (0..cores).collect();
+        let mut pending: Vec<Option<FsOp>> = ops.into_iter().map(Some).collect();
+        let mut out: Vec<Option<FsCompletion>> = (0..n).map(|_| None).collect();
+        let mut il = CoreInterleaver::new(seed, counts);
+        while let Some(c) = il.next_core() {
+            let i = cursors[c];
+            cursors[c] = i + cores;
+            let Some(op) = pending.get_mut(i).and_then(|s| s.take()) else {
+                continue;
+            };
+            let is_read = matches!(
+                op,
+                FsOp::Stat { .. } | FsOp::Readdir { .. } | FsOp::Read { .. } | FsOp::Pread { .. }
+            );
+            if !is_read {
+                // publish to the combiner on the core's clock; the op is
+                // applied on the shared-log timeline (which cannot run
+                // ahead of the publish)
+                core_clocks[c].tick(p.core_publish_lat);
+                self.procs[pid].clock.advance_to(core_clocks[c].now);
+                self.core_slots.set_active(c);
+                let t0 = self.procs[pid].clock.now;
+                let result = self.exec_op(pid, op);
+                let latency = self.procs[pid].clock.now.saturating_sub(t0);
+                if let Some(slot) = out.get_mut(i) {
+                    *slot = Some(FsCompletion { result, latency });
+                }
+                continue;
+            }
+            // reads run concurrently on the core's own clock; namespace
+            // reads charge the per-socket replica / snapshot model first
+            let csock = if nsock > 1 { c % nsock } else { 0 };
+            let ns_target = match &op {
+                FsOp::Stat { path } | FsOp::Readdir { path } => Some(path.clone()),
+                _ => None,
+            };
+            if let Some(path) = ns_target {
+                let mut ck = core_clocks[c];
+                self.charge_ns_snapshot(pid, csock, &path, &mut ck);
+                core_clocks[c] = ck;
+            }
+            // clock swap: the op's authoritative body executes with the
+            // core's clock, so per-core read time overlaps in virtual
+            // time; the shared-log timeline is untouched
+            let saved_now = self.procs[pid].clock.now;
+            self.procs[pid].clock.now = core_clocks[c].now;
+            let t0 = core_clocks[c].now;
+            let result = self.exec_op(pid, op);
+            core_clocks[c].advance_to(self.procs[pid].clock.now);
+            self.procs[pid].clock.now = saved_now;
+            let latency = core_clocks[c].now.saturating_sub(t0);
+            if let Some(slot) = out.get_mut(i) {
+                *slot = Some(FsCompletion { result, latency });
+            }
+        }
+        // the ring completes when the slowest core drains AND the
+        // shared-log timeline quiesces
+        let t_end = core_clocks
+            .iter()
+            .map(|ck| ck.now)
+            .fold(self.procs[pid].clock.now, Nanos::max);
+        self.procs[pid].clock.advance_to(t_end);
+
+        // ---- ring bookkeeping, identical to the single-core ring
+        let ring_sample = RingStallSample {
+            windows: self.repl_window_stats.windows - w0,
+            stalls: self.repl_window_stats.stalls - s0,
+            // assise-lint: allow(nanos-sub) — monotone counter delta
+            stalled_ns: self.repl_window_stats.stalled_ns - ns0,
+        };
+        self.repl_window_stats.record_ring(ring_sample);
+        self.core_slots.clear();
+        self.batch_tail = 0;
+        self.batch_first = false;
+        self.batch_leases = None;
+        if self.cfg.adaptive_window && self.procs[pid].pending_repl.is_empty() {
+            self.cfg.repl_window =
+                self.win_ctl.adjust(self.cfg.repl_window, &self.repl_window_stats);
+        }
+        out.into_iter()
+            .map(|slot| {
+                slot.unwrap_or(FsCompletion {
+                    result: Err(FsError::InvalidArgument("op not scheduled".into())),
+                    latency: 0,
+                })
+            })
+            .collect()
+    }
+
+    /// Charge one namespace snapshot read on a core clock: seqlock
+    /// retry if it lands inside the authority's digest apply window,
+    /// then per-socket replica hit (local cost) or NUMA-priced refresh
+    /// (epoch went stale). Results stay authoritative — leases already
+    /// serialize conflicting namespace writers, so the replica model
+    /// charges time without forking state.
+    fn charge_ns_snapshot(&mut self, pid: ProcId, csock: SocketId, path: &str, ck: &mut crate::hw::clock::Clock) {
+        let p = self.p();
+        let pnode = self.procs[pid].node;
+        let asock = self.clamped_sock(pnode, self.area_socket(path));
+        if let Some(&(begin, end)) = self.apply_windows.get(&(pnode, asock)) {
+            if ck.now >= begin && ck.now < end {
+                // odd epoch observed mid-apply: retry at window close
+                self.ns_stats.snapshot_retries += 1;
+                ck.advance_to(end);
+            }
+        }
+        let epoch = self.nodes[pnode].sockets[asock].sharedfs.store.epoch();
+        let key = (pnode, csock, asock);
+        match self.ns_replicas.get(&key) {
+            Some(&seen) if seen == epoch => {
+                self.ns_stats.replica_hits += 1;
+                ck.tick(p.ns_replica_hit_lat);
+            }
+            _ => {
+                self.ns_stats.replica_refreshes += 1;
+                if csock == asock {
+                    // same socket: the "replica" IS the authority index
+                    ck.tick(p.ns_replica_hit_lat);
+                } else {
+                    // cross-socket: NUMA distance + refresh delta bytes
+                    // at the interconnect read bandwidth (1 GB/s = 1 B/ns)
+                    let xfer = (p.ns_replica_refresh_bytes as f64 / p.numa_read_bw) as Nanos;
+                    ck.tick(p.numa_lat + xfer);
+                }
+                self.ns_replicas.insert(key, epoch);
+            }
+        }
     }
 }
 

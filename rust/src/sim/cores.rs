@@ -1,0 +1,196 @@
+//! Virtual cores for the multi-core LibFS model (NrFS/CNR idiom).
+//!
+//! The determinism lint bans OS threads outside bench dirs, so "N app
+//! threads per LibFS" is modeled as N virtual cores driven by a seeded
+//! interleaver: every scheduling decision comes from a `SplitMix64`
+//! stream, so the same seed yields a byte-identical trace. Two pieces
+//! live here:
+//!
+//! - [`CoreSlots`]: the per-core generalization of the old single
+//!   `prepaid_log` counter. A flat-combining flush makes ONE shared-log
+//!   NVM reservation for a whole batch and credits each core's slot;
+//!   `append_op` then consumes from the active core's slot instead of
+//!   paying its own media write.
+//! - [`CoreInterleaver`]: the seeded scheduler that picks which core
+//!   advances next. Contention and combining costs are charged in
+//!   virtual time by the caller (`Cluster::submit_mc`).
+
+use crate::util::SplitMix64;
+
+/// Per-core prepaid shared-log reservation slots.
+///
+/// Invariant: credits are granted by exactly one combiner flush per
+/// batch (one `write_log` for the sum), so the slot total never exceeds
+/// what was actually reserved against the log tail.
+#[derive(Debug, Clone)]
+pub struct CoreSlots {
+    slots: Vec<u64>,
+    active: usize,
+}
+
+impl Default for CoreSlots {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoreSlots {
+    /// One slot: the single-threaded submit path degenerates to the old
+    /// `prepaid_log` behavior exactly.
+    pub fn new() -> Self {
+        Self { slots: vec![0], active: 0 }
+    }
+
+    /// Re-shape for a ring with `cores` virtual cores, dropping any
+    /// stale credit from a previous ring.
+    pub fn reset(&mut self, cores: usize) {
+        self.slots.clear();
+        self.slots.resize(cores.max(1), 0);
+        self.active = 0;
+    }
+
+    /// Select the core whose slot subsequent `consume` calls draw from.
+    pub fn set_active(&mut self, core: usize) {
+        if core < self.slots.len() {
+            self.active = core;
+        }
+    }
+
+    /// Credit `bytes` of prepaid reservation to `core`'s slot.
+    pub fn credit(&mut self, core: usize, bytes: u64) {
+        if let Some(s) = self.slots.get_mut(core) {
+            *s += bytes;
+        }
+    }
+
+    /// Try to consume `bytes` from the active core's slot; `false`
+    /// means the caller must pay the media write itself.
+    pub fn consume(&mut self, bytes: u64) -> bool {
+        match self.slots.get_mut(self.active) {
+            Some(s) if *s >= bytes => {
+                *s -= bytes;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drop all remaining credit (end of ring; the reservation's unused
+    /// tail is returned to the log tail, costing nothing).
+    pub fn clear(&mut self) {
+        for s in &mut self.slots {
+            *s = 0;
+        }
+        self.active = 0;
+    }
+
+    /// Outstanding prepaid bytes across all slots.
+    pub fn total(&self) -> u64 {
+        self.slots.iter().sum()
+    }
+}
+
+/// Seeded round scheduler: repeatedly picks a core that still has ops
+/// left, uniformly at random from the seeded stream. Deterministic for
+/// a fixed (seed, per-core op counts) input.
+#[derive(Debug)]
+pub struct CoreInterleaver {
+    rng: SplitMix64,
+    remaining: Vec<usize>,
+    live: usize,
+}
+
+impl CoreInterleaver {
+    pub fn new(seed: u64, per_core_ops: Vec<usize>) -> Self {
+        let live = per_core_ops.iter().filter(|&&n| n > 0).count();
+        Self { rng: SplitMix64::new(seed), remaining: per_core_ops, live }
+    }
+
+    /// Next core to advance, or `None` when every core has drained.
+    pub fn next_core(&mut self) -> Option<usize> {
+        if self.live == 0 {
+            return None;
+        }
+        // draw among live cores only: the k-th live core, k seeded
+        let k = self.rng.below(self.live as u64) as usize;
+        let mut seen = 0usize;
+        for (core, rem) in self.remaining.iter_mut().enumerate() {
+            if *rem == 0 {
+                continue;
+            }
+            if seen == k {
+                *rem -= 1;
+                if *rem == 0 {
+                    self.live -= 1;
+                }
+                return Some(core);
+            }
+            seen += 1;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_credit_consume_roundtrip() {
+        let mut s = CoreSlots::new();
+        s.reset(4);
+        s.credit(2, 100);
+        s.set_active(2);
+        assert!(s.consume(60));
+        assert!(s.consume(40));
+        assert!(!s.consume(1), "slot exhausted");
+        s.set_active(0);
+        assert!(!s.consume(1), "credit is per-core, not shared");
+        assert_eq!(s.total(), 0);
+    }
+
+    #[test]
+    fn slots_reset_drops_stale_credit() {
+        let mut s = CoreSlots::new();
+        s.reset(2);
+        s.credit(1, 500);
+        s.reset(8);
+        assert_eq!(s.total(), 0);
+        s.credit(7, 9);
+        s.clear();
+        assert_eq!(s.total(), 0);
+    }
+
+    #[test]
+    fn single_slot_matches_prepaid_log_idiom() {
+        let mut s = CoreSlots::new();
+        s.reset(1);
+        s.credit(0, 128);
+        assert!(s.consume(64));
+        assert!(s.consume(64));
+        assert!(!s.consume(64));
+    }
+
+    #[test]
+    fn interleaver_is_deterministic_and_exhaustive() {
+        let counts = vec![3usize, 0, 2, 5];
+        let trace = |seed: u64| -> Vec<usize> {
+            let mut it = CoreInterleaver::new(seed, counts.clone());
+            let mut out = Vec::new();
+            while let Some(c) = it.next_core() {
+                out.push(c);
+            }
+            out
+        };
+        let a = trace(42);
+        let b = trace(42);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(a.len(), 10, "every op scheduled exactly once");
+        assert_eq!(a.iter().filter(|&&c| c == 0).count(), 3);
+        assert_eq!(a.iter().filter(|&&c| c == 1).count(), 0);
+        assert_eq!(a.iter().filter(|&&c| c == 2).count(), 2);
+        assert_eq!(a.iter().filter(|&&c| c == 3).count(), 5);
+        let c = trace(7);
+        assert_eq!(c.len(), 10);
+    }
+}

@@ -237,7 +237,9 @@ impl Cluster {
                 let generation = self.mgr.generation();
                 self.procs[pid].pending_repl.push_back(ReplWindow {
                     upto: tail,
+                    issued_at: drain_done,
                     ack_at: ack,
+                    wire: wire_bytes,
                     chains: vec![new_id],
                     generation,
                 });

@@ -2,14 +2,18 @@
 //! hardware, plus the common file-system API ([`api::DistFs`]) that the
 //! baselines also implement, and failure injection ([`failure`]).
 
+pub mod adaptive;
 pub mod api;
 pub mod assise;
+pub mod cores;
 pub mod failure;
 pub mod fault;
 pub mod migrate;
 
+pub use adaptive::WindowController;
 pub use api::{DistFs, FsCompletion, FsOp, FsOut};
 pub use assise::{Cluster, Node, SocketUnit};
+pub use cores::{CoreInterleaver, CoreSlots};
 pub use fault::FaultPlan;
 pub use migrate::MigrationReport;
 
@@ -52,6 +56,17 @@ pub struct ClusterConfig {
     /// (§A.1 async replication): a full window defers the next batch's
     /// wire issue until the oldest ack frees a slot.
     pub repl_window: usize,
+    /// adapt `repl_window` between rings with the BDP/AIMD controller
+    /// ([`adaptive::WindowController`]); the fixed value above becomes
+    /// the starting point. Resizes happen only where no ack is in
+    /// flight.
+    pub adaptive_window: bool,
+    /// replica staging capacity in wire bytes: in-flight replication
+    /// windows whose staged bytes exceed this are NACKed back to the
+    /// oldest ack plus a round-trip (u64::MAX = unlimited, the
+    /// pre-existing behavior). The adaptive controller's
+    /// multiplicative-decrease signal.
+    pub stage_capacity: u64,
     /// use the I/OAT DMA engine for cross-socket digestion (§3.2).
     pub numa_dma: bool,
     /// cluster-manager heartbeat period (§3.1): a missed beat starts the
@@ -88,6 +103,8 @@ impl Default for ClusterConfig {
             manager_policy: ManagerPolicy::PerProcess,
             digest_threshold: 0.30,
             repl_window: 4,
+            adaptive_window: false,
+            stage_capacity: u64::MAX,
             numa_dma: false,
             heartbeat_interval: 500_000_000,
             suspect_timeout: 500_000_000,
@@ -136,6 +153,16 @@ impl ClusterConfig {
 
     pub fn repl_window(mut self, w: usize) -> Self {
         self.repl_window = w.max(1);
+        self
+    }
+
+    pub fn adaptive_window(mut self, on: bool) -> Self {
+        self.adaptive_window = on;
+        self
+    }
+
+    pub fn stage_capacity(mut self, bytes: u64) -> Self {
+        self.stage_capacity = bytes.max(1);
         self
     }
 

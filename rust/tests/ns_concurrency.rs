@@ -1,0 +1,219 @@
+//! Multi-core namespace concurrency (`Cluster::submit_mc`), the
+//! concurrent-namespace tentpole's semantic contract:
+//!
+//! - the seeded interleaved ring is state- and error-class-equivalent
+//!   to a sequential per-thread reference — for every seed, because
+//!   every scheduling decision comes from the seeded interleaver;
+//! - epoch-snapshot reads never observe a half-applied digest: the
+//!   store's apply seqlock always quiesces to an even epoch, and
+//!   namespace reads go through the per-socket replica model;
+//! - the ring-sample history feeding the adaptive window controller
+//!   stays bounded at `ReplWindowStats::RING_SAMPLE_CAP`.
+
+use std::mem::discriminant;
+
+use assise::fs::{Fd, FsError, Payload};
+use assise::metrics::ReplWindowStats;
+use assise::sim::{Cluster, ClusterConfig, DistFs, FsOp};
+use assise::util::SplitMix64;
+
+/// A cluster with one process and `cores` disjoint per-core subtrees
+/// `/t{c}` (each holding an open file `/t{c}/f`). Identical setups
+/// allocate identical fds, so generated op streams transfer verbatim.
+fn setup(cores: usize) -> (Cluster, usize, Vec<Fd>) {
+    let mut c = Cluster::new(ClusterConfig::default());
+    let pid = c.spawn_process(0, 0);
+    let mut fds = Vec::new();
+    for t in 0..cores {
+        c.mkdir(pid, &format!("/t{t}")).unwrap();
+        fds.push(c.create(pid, &format!("/t{t}/f")).unwrap());
+    }
+    (c, pid, fds)
+}
+
+/// Seeded op stream where op `i` belongs to core `i % cores` and
+/// touches ONLY that core's subtree — so any interleaving must be
+/// equivalent to replaying each core's ops in program order. The mix
+/// deliberately includes error-producing ops (duplicate creates,
+/// unlinks of absent files, stats of missing paths): error classes are
+/// part of the contract.
+fn gen_ops(seed: u64, cores: usize, per_core: usize, fds: &[Fd]) -> Vec<FsOp> {
+    let mut rng = SplitMix64::new(seed);
+    (0..cores * per_core)
+        .map(|i| {
+            let t = i % cores;
+            match rng.below(8) {
+                0 => FsOp::Pwrite {
+                    fd: fds[t],
+                    off: rng.below(1 << 14),
+                    data: Payload::bytes(vec![t as u8; 64]),
+                },
+                1 => FsOp::Truncate { path: format!("/t{t}/f"), size: rng.below(1 << 14) },
+                2 => FsOp::Readdir { path: format!("/t{t}") },
+                3 => FsOp::Create { path: format!("/t{t}/g{}", rng.below(3)) },
+                4 => FsOp::Unlink { path: format!("/t{t}/g{}", rng.below(3)) },
+                5 => FsOp::Stat { path: format!("/t{t}/missing") },
+                6 => FsOp::Pread { fd: fds[t], off: rng.below(1 << 14), len: 64 },
+                _ => FsOp::Stat { path: format!("/t{t}/f") },
+            }
+        })
+        .collect()
+}
+
+type OpClass = Result<(), std::mem::Discriminant<FsError>>;
+
+fn class_of(r: Result<assise::sim::FsOut, FsError>) -> OpClass {
+    r.map(|_| ()).map_err(|e| discriminant(&e))
+}
+
+/// API-observable namespace state: per subtree, the sorted listing and
+/// each entry's size (mtime is virtual-time-dependent and excluded —
+/// the contract is state equivalence, not timing equivalence).
+fn observe(c: &mut Cluster, pid: usize, cores: usize) -> Vec<(String, Vec<(String, u64)>)> {
+    (0..cores)
+        .map(|t| {
+            let dir = format!("/t{t}");
+            let mut names = c.readdir(pid, &dir).unwrap();
+            names.sort();
+            let files = names
+                .iter()
+                .map(|n| (n.clone(), c.stat(pid, &format!("{dir}/{n}")).unwrap().size))
+                .collect();
+            (dir, files)
+        })
+        .collect()
+}
+
+#[test]
+fn interleaved_matches_sequential_reference_over_seeds() {
+    for cores in [2usize, 4, 8] {
+        for seed in 0..6u64 {
+            let (mut ca, pid_a, fds_a) = setup(cores);
+            let (mut cb, pid_b, fds_b) = setup(cores);
+            assert_eq!(fds_a, fds_b, "identical setups must allocate identical fds");
+            let ops = gen_ops(seed, cores, 24, &fds_a);
+
+            let inter: Vec<OpClass> = ca
+                .submit_mc(pid_a, cores, seed, ops.clone())
+                .into_iter()
+                .map(|cq| class_of(cq.result))
+                .collect();
+
+            // sequential per-thread reference: each core's ops in
+            // program order, one core after another
+            let mut seq: Vec<Option<OpClass>> = vec![None; ops.len()];
+            for core in 0..cores {
+                for (i, op) in ops.iter().enumerate() {
+                    if i % cores == core {
+                        let cq = cb.submit(pid_b, vec![op.clone()]).remove(0);
+                        seq[i] = Some(class_of(cq.result));
+                    }
+                }
+            }
+            let seq: Vec<OpClass> = seq.into_iter().map(|s| s.unwrap()).collect();
+
+            assert_eq!(
+                inter, seq,
+                "cores={cores} seed={seed}: per-op error classes diverge"
+            );
+            assert_eq!(
+                observe(&mut ca, pid_a, cores),
+                observe(&mut cb, pid_b, cores),
+                "cores={cores} seed={seed}: final namespace state diverges"
+            );
+        }
+    }
+}
+
+#[test]
+fn interleaved_ring_is_seed_deterministic() {
+    let cores = 8;
+    let (mut ca, pid_a, fds_a) = setup(cores);
+    let (mut cb, pid_b, _fds_b) = setup(cores);
+    let ops = gen_ops(99, cores, 32, &fds_a);
+    let a: Vec<_> = ca
+        .submit_mc(pid_a, cores, 7, ops.clone())
+        .into_iter()
+        .map(|cq| (class_of(cq.result), cq.latency))
+        .collect();
+    let b: Vec<_> = cb
+        .submit_mc(pid_b, cores, 7, ops)
+        .into_iter()
+        .map(|cq| (class_of(cq.result), cq.latency))
+        .collect();
+    assert_eq!(a, b, "same seed must reproduce completions AND latencies exactly");
+    assert_eq!(ca.now(pid_a), cb.now(pid_b), "virtual clocks must agree");
+}
+
+#[test]
+fn snapshot_reads_never_observe_mid_apply() {
+    let cores = 8;
+    let (mut c, pid, _fds) = setup(cores);
+    // seed the namespace into the SharedFS store, then interleave
+    // stat-heavy rings with digests that reopen the apply seqlock
+    c.digest_log(pid).unwrap();
+    for r in 0..10u64 {
+        let ops: Vec<FsOp> = (0..64usize)
+            .map(|i| {
+                let t = i % cores;
+                if i % 8 == 7 {
+                    FsOp::Truncate { path: format!("/t{t}/f"), size: (i as u64 % 4) * 512 }
+                } else {
+                    FsOp::Stat { path: format!("/t{t}/f") }
+                }
+            })
+            .collect();
+        for cq in c.submit_mc(pid, cores, r, ops) {
+            cq.result.unwrap();
+        }
+        c.digest_log(pid).unwrap();
+        // the apply seqlock must quiesce even: no reader can be left
+        // inside (or observing) a half-applied digest
+        for node in &c.nodes {
+            for s in &node.sockets {
+                assert!(!s.sharedfs.store.mid_apply(), "store left mid-apply");
+                assert_eq!(s.sharedfs.store.epoch() % 2, 0, "odd epoch after quiesce");
+            }
+        }
+    }
+    let ns = &c.ns_stats;
+    assert!(
+        ns.replica_hits + ns.replica_refreshes > 0,
+        "namespace reads must go through the per-socket replica model"
+    );
+    assert!(
+        ns.replica_refreshes > 0,
+        "digest epoch bumps must force replica refreshes"
+    );
+    assert!(ns.combined_batches > 0, "mutations must flat-combine");
+}
+
+#[test]
+fn ring_history_is_bounded() {
+    // satellite: ReplWindowStats::rings must not grow one sample per
+    // ring forever on a long-lived cluster
+    let mut cfg = ClusterConfig::default().log_capacity(256 << 10);
+    cfg.digest_threshold = 0.001; // every ring crosses the digest bar
+    let mut c = Cluster::new(cfg);
+    let pid = c.spawn_process(0, 0);
+    let fd = c.create(pid, "/f").unwrap();
+    let rings = ReplWindowStats::RING_SAMPLE_CAP + 40;
+    for k in 0..rings as u64 {
+        let ops = vec![
+            FsOp::Pwrite { fd, off: k * 1024, data: Payload::zero(1024) },
+            FsOp::Fsync { fd },
+        ];
+        for cq in c.submit(pid, ops) {
+            cq.result.unwrap();
+        }
+    }
+    assert!(
+        c.repl_window_stats.windows >= rings as u64,
+        "every ring should have issued at least one replication window"
+    );
+    assert_eq!(
+        c.repl_window_stats.rings.len(),
+        ReplWindowStats::RING_SAMPLE_CAP,
+        "ring-sample history must stay bounded"
+    );
+}
