@@ -231,6 +231,41 @@ pub struct NsStats {
     pub snapshot_retries: u64,
 }
 
+/// assise-san sanitizer counters (`sim/san`): shadow-event volume and
+/// per-checker verdict counts. All zero when `SanMode::Off` — the
+/// sanitizer's no-op contract is observable here too.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SanStats {
+    /// shadow events pushed into the bounded ring
+    pub events_recorded: u64,
+    /// events (or violations) dropped at the ring/report caps
+    pub events_dropped: u64,
+    /// accesses run through the happens-before race checker
+    pub accesses_checked: u64,
+    /// lease acquisitions observed (memo hits included)
+    pub lease_acquires: u64,
+    /// replication windows issued through the funnel
+    pub windows_issued: u64,
+    /// replication window acks drained back into the issue path
+    pub window_acks: u64,
+    /// digest applies mirrored into the torn-read window map
+    pub digest_applies: u64,
+    /// stale-copy reads observed (refetch-before-serve path)
+    pub stale_refetches: u64,
+    /// RPCs routed through the `fault_rpc` funnel
+    pub rpcs_traced: u64,
+    /// crash points examined (ack-time copies + kill-time sweeps)
+    pub crash_points_checked: u64,
+    /// confirmed happens-before races
+    pub race_reports: u64,
+    /// confirmed ack-before-durable / crash-point losses
+    pub crash_reports: u64,
+    /// confirmed stale-serve violations
+    pub stale_serve_reports: u64,
+    /// confirmed torn mid-epoch snapshot reads
+    pub torn_reports: u64,
+}
+
 /// CRAQ apportioned-read counters: how reads were served once the
 /// read-from-any-replica policy picked a chain member.
 #[derive(Debug, Clone, Copy, Default)]

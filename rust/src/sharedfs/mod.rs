@@ -265,8 +265,9 @@ impl SharedFs {
                             .find(|(&s, _)| s == off)
                             .map(|(_, e)| e.last_access)
                             .unwrap_or(0);
-                        if best.is_none() || age < best.unwrap().3 {
-                            best = Some((n.ino, off, len, age));
+                        match best {
+                            Some((_, _, _, best_age)) if age >= best_age => {}
+                            _ => best = Some((n.ino, off, len, age)),
                         }
                     }
                 }

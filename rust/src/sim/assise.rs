@@ -38,6 +38,7 @@ use crate::sim::adaptive::WindowController;
 use crate::sim::api::{DistFs, FsCompletion, FsOp, FsOut};
 use crate::sim::cores::{CoreInterleaver, CoreSlots};
 use crate::sim::fault::FaultPlan;
+use crate::sim::san::SanState;
 use crate::sim::{ClusterConfig, CrashMode};
 use crate::Nanos;
 
@@ -136,6 +137,10 @@ pub struct Cluster {
     /// ([`lease_bit`]) — one lease acquisition per (subtree, batch);
     /// keyed by `String` so the hot-path probe borrows the unit
     batch_leases: Option<std::collections::HashMap<String, u8>>,
+
+    /// assise-san shadow sanitizer (`ClusterConfig::sanitize`);
+    /// `SanMode::Off` makes every `san.*` call an inert early return
+    pub san: SanState,
 }
 
 impl Cluster {
@@ -163,6 +168,7 @@ impl Cluster {
             })
             .collect();
         let node_count = cfg.nodes;
+        let san = SanState::new(cfg.sanitize);
         Self {
             cfg,
             mgr,
@@ -186,6 +192,7 @@ impl Cluster {
             batch_tail: 0,
             batch_first: false,
             batch_leases: None,
+            san,
         }
     }
 
@@ -366,10 +373,14 @@ impl Cluster {
     fn acquire_lease_unit(&mut self, pid: ProcId, unit: &str, mode: LeaseMode) -> Result<()> {
         if let Some(memo) = &self.batch_leases {
             if memo.get(unit).is_some_and(|b| b & lease_bit(mode) != 0) {
+                // memo hits still join the unit's shadow clock: every
+                // op's accesses must observe prior holders' publishes
+                self.san.lease_acquire(pid, unit);
                 return Ok(());
             }
         }
         self.acquire_lease_unit_slow(pid, unit, mode)?;
+        self.san.lease_acquire(pid, unit);
         if let Some(memo) = &mut self.batch_leases {
             *memo.entry(unit.to_string()).or_insert(0) |= lease_bit(mode);
         }
@@ -548,6 +559,7 @@ impl Cluster {
         self.nodes[mnode].sockets[msock].sharedfs.leases.revoke(unit, holder);
         // lease transfer is logged + replicated in the SharedFS log
         self.nodes[mnode].sockets[msock].sharedfs.sfs_log_bytes += 64;
+        self.san.lease_release(holder, unit);
         Ok(())
     }
 
@@ -578,7 +590,27 @@ impl Cluster {
             self.procs[pid].clock.advance_to(done);
         }
         let done = self.procs[pid].clock.now;
-        self.procs[pid].log_append(op, done);
+        // shadow-write emission: capture the namespace object(s) before
+        // the op moves into the log (rename touches both names)
+        let san_paths = if self.san.is_off() {
+            None
+        } else {
+            let second = match &op {
+                LogOp::Rename { to, .. } => Some(to.clone()),
+                _ => None,
+            };
+            Some((op.path().to_string(), second))
+        };
+        let (seq, _) = self.procs[pid].log_append(op, done);
+        if let Some((path, second)) = san_paths {
+            self.san.write_access(pid, &path);
+            if let Some(p2) = second {
+                self.san.write_access(pid, &p2);
+            }
+            // the append is store+CLWB into socket-local NVM: the
+            // writer's own durable copy extends to `seq`
+            self.san.local_persist(pid, seq);
+        }
         self.procs[pid].bytes_written += bytes;
 
         // background digest (§A.1): when the log fills beyond the
@@ -668,6 +700,7 @@ impl Cluster {
         while matches!(self.procs[pid].pending_repl.front(), Some(w) if w.ack_at <= t_start) {
             if let Some(w) = self.procs[pid].pending_repl.pop_front() {
                 self.win_ctl.observe_ack(w.issued_at, w.ack_at);
+                self.san.window_ack(pid);
             }
         }
         let mut t_issue = t_start;
@@ -675,6 +708,7 @@ impl Cluster {
             if let Some(w) = self.procs[pid].pending_repl.pop_front() {
                 t_issue = t_issue.max(w.ack_at);
                 self.win_ctl.observe_ack(w.issued_at, w.ack_at);
+                self.san.window_ack(pid);
             }
         }
         // replica staging capacity: if the bytes already staged in
@@ -692,10 +726,12 @@ impl Cluster {
                 };
                 t_issue = t_issue.max(w.ack_at) + 2 * p.rpc_overhead;
                 self.win_ctl.observe_ack(w.issued_at, w.ack_at);
+                self.san.window_ack(pid);
                 self.repl_window_stats.record_overrun();
             }
         }
         self.repl_window_stats.record_issue();
+        self.san.window_issue(pid);
         self.win_ctl.observe_issue(t_issue);
         if t_issue > t_start {
             // the window was full with unacked batches: the wire issue is
@@ -796,6 +832,7 @@ impl Cluster {
                 // no remote replica (factor 1, or the writer IS the
                 // chain): local NVM persistence is all the ack there is
                 self.procs[pid].log.mark_chain_replicated(part.key, max_seq);
+                self.san.chain_ack(pid, part.key, max_seq, &[], pnode);
                 continue;
             }
 
@@ -813,12 +850,15 @@ impl Cluster {
                 self.nodes[r].sockets[rsock]
                     .sharedfs
                     .note_replicated(pid, part.key, raw_bytes);
+                // shadow durability: the hop's NVM now covers the suffix
+                self.san.replica_durable(r, pid, part.key, max_seq);
             }
             let ack = self.chain_ship_cost(Some(pnode), &hops, wire_bytes, t_start)?;
             ack_max = ack_max.max(ack);
             self.replicated_bytes += wire_bytes * full_chain.len() as u64;
             wire_total += wire_bytes;
             self.procs[pid].log.mark_chain_replicated(part.key, max_seq);
+            self.san.chain_ack(pid, part.key, max_seq, &full_chain, pnode);
         }
         // every partition is acked on its own chain: the prefix is whole
         self.procs[pid].log.mark_replicated(tail);
@@ -942,6 +982,7 @@ impl Cluster {
             // record the window in virtual time so core-clock snapshot
             // readers landing inside it retry at `done`
             self.apply_windows.insert((r, sock), (t0, done));
+            self.san.digest_apply(pid, r, sock, t0, done);
             done_at.insert((r, sock), done);
             done_max = done_max.max(done);
         }
@@ -1322,6 +1363,7 @@ impl Cluster {
                 if !self.nodes[m].alive {
                     continue;
                 }
+                self.san.replica_retired(m, part.key);
                 let msock = self.clamped_sock(m, part.sock);
                 let inos: std::collections::HashSet<crate::fs::Ino> = part
                     .entries
@@ -1386,21 +1428,20 @@ impl Cluster {
 
         // 1. process-private log view (own recent writes): serve the
         // present segments, fill gaps below
-        let mut have_all_in_view = false;
+        let mut view_ino = None;
         if let Some(vst) = view_stat.as_ref() {
-            if let Some(vino) = self.procs[pid].log_view.resolve(path).ok() {
+            if let Ok(vino) = self.procs[pid].log_view.resolve(path) {
                 let covered: u64 = self.procs[pid]
                     .log_view
                     .inode(vino)
                     .map(|n| n.extents.tiers_in(off, len).iter().map(|&(_, l, _)| l).sum())
                     .unwrap_or(0);
                 if covered >= len && vst.size >= off + len {
-                    have_all_in_view = true;
+                    view_ino = Some(vino);
                 }
             }
         }
-        if have_all_in_view {
-            let vino = self.procs[pid].log_view.resolve(path).unwrap();
+        if let Some(vino) = view_ino {
             let (data, extents) = self.procs[pid].log_view.read_at(vino, off, len)?;
             // log lives in NVM; index in DRAM
             let now = self.procs[pid].clock.now;
@@ -1475,6 +1516,10 @@ impl Cluster {
         if self.nodes[store_node].sockets[sock].sharedfs.is_stale(ino) {
             self.procs[pid].read_cache.invalidate_ino(cache_key);
             self.refetch_stale_to(pid, store_node, path, ino, sock)?;
+            // the stale copy was refetched BEFORE serving — the clean
+            // protocol path (serving without the refetch is a violation
+            // the planted-bug fixtures exercise)
+            self.san.stale_serve(store_node, path, true);
         }
 
         // 2. private DRAM read cache, keyed per serving replica
@@ -1832,6 +1877,7 @@ impl DistFs for Cluster {
             self.cfg.log_capacity,
             self.cfg.read_cache_capacity,
         ));
+        self.san.register_proc(id, node);
         id
     }
 
@@ -1981,6 +2027,32 @@ impl Cluster {
         seed: u64,
         ops: Vec<FsOp>,
     ) -> Vec<FsCompletion> {
+        self.submit_mc_sched(pid, cores, ops, None, seed)
+    }
+
+    /// Explicit-schedule ring: identical to [`Self::submit_mc`] except
+    /// the interleaver replays `schedule` (core id per step) instead of
+    /// drawing from the seeded stream. The exhaustive small-scope
+    /// explorer ([`crate::sim::san::explore`]) drives every enumerated
+    /// schedule through here.
+    pub fn submit_mc_scripted(
+        &mut self,
+        pid: ProcId,
+        cores: usize,
+        schedule: &[usize],
+        ops: Vec<FsOp>,
+    ) -> Vec<FsCompletion> {
+        self.submit_mc_sched(pid, cores, ops, Some(schedule.to_vec()), 0)
+    }
+
+    fn submit_mc_sched(
+        &mut self,
+        pid: ProcId,
+        cores: usize,
+        ops: Vec<FsOp>,
+        script: Option<Vec<usize>>,
+        seed: u64,
+    ) -> Vec<FsCompletion> {
         let n = ops.len();
         if cores <= 1 || n <= 1 || self.check_alive(pid).is_err() {
             return self.submit(pid, ops);
@@ -2021,6 +2093,7 @@ impl Cluster {
         self.batch_tail = n - 1;
         self.batch_first = true;
         self.batch_leases = Some(Default::default());
+        self.san.ring_begin(pid, cores);
         let (w0, s0, ns0) = (
             self.repl_window_stats.windows,
             self.repl_window_stats.stalls,
@@ -2035,7 +2108,10 @@ impl Cluster {
         let mut cursors: Vec<usize> = (0..cores).collect();
         let mut pending: Vec<Option<FsOp>> = ops.into_iter().map(Some).collect();
         let mut out: Vec<Option<FsCompletion>> = (0..n).map(|_| None).collect();
-        let mut il = CoreInterleaver::new(seed, counts);
+        let mut il = match script {
+            Some(s) => CoreInterleaver::scripted(s, counts),
+            None => CoreInterleaver::new(seed, counts),
+        };
         while let Some(c) = il.next_core() {
             let i = cursors[c];
             cursors[c] = i + cores;
@@ -2053,6 +2129,7 @@ impl Cluster {
                 core_clocks[c].tick(p.core_publish_lat);
                 self.procs[pid].clock.advance_to(core_clocks[c].now);
                 self.core_slots.set_active(c);
+                self.san.core_publish(pid, c);
                 let t0 = self.procs[pid].clock.now;
                 let result = self.exec_op(pid, op);
                 let latency = self.procs[pid].clock.now.saturating_sub(t0);
@@ -2063,6 +2140,7 @@ impl Cluster {
             }
             // reads run concurrently on the core's own clock; namespace
             // reads charge the per-socket replica / snapshot model first
+            self.san.set_core(pid, Some(c));
             let csock = if nsock > 1 { c % nsock } else { 0 };
             let ns_target = match &op {
                 FsOp::Stat { path } | FsOp::Readdir { path } => Some(path.clone()),
@@ -2082,6 +2160,7 @@ impl Cluster {
             let result = self.exec_op(pid, op);
             core_clocks[c].advance_to(self.procs[pid].clock.now);
             self.procs[pid].clock.now = saved_now;
+            self.san.set_core(pid, None);
             let latency = core_clocks[c].now.saturating_sub(t0);
             if let Some(slot) = out.get_mut(i) {
                 *slot = Some(FsCompletion { result, latency });
@@ -2094,6 +2173,7 @@ impl Cluster {
             .map(|ck| ck.now)
             .fold(self.procs[pid].clock.now, Nanos::max);
         self.procs[pid].clock.advance_to(t_end);
+        self.san.ring_end(pid, cores);
 
         // ---- ring bookkeeping, identical to the single-core ring
         let ring_sample = RingStallSample {
@@ -2138,6 +2218,9 @@ impl Cluster {
                 ck.advance_to(end);
             }
         }
+        // post-retry: the snapshot's read point is outside any apply
+        // window by construction — the torn-read checker verifies it
+        self.san.snapshot_read(pid, pnode, asock, ck.now);
         let epoch = self.nodes[pnode].sockets[asock].sharedfs.store.epoch();
         let key = (pnode, csock, asock);
         match self.ns_replicas.get(&key) {
@@ -2283,6 +2366,7 @@ impl Cluster {
         let path = self.procs[pid].fd(fd)?.path.clone();
         let t0 = self.begin_op(pid)?;
         self.acquire_lease_unit(pid, &path, LeaseMode::Read)?;
+        self.san.read_access(pid, &path);
         let out = self.read_gather(pid, &path, off, len)?;
         self.end_op(pid, t0);
         Ok(out)
@@ -2424,6 +2508,7 @@ impl Cluster {
         let path = normalize(path)?;
         let t0 = self.begin_op(pid)?;
         self.acquire_lease_unit(pid, &path, LeaseMode::Read)?;
+        self.san.read_access(pid, &path);
 
         let mut names: Vec<String> = Vec::new();
         let mut found_dir = false;

@@ -92,23 +92,68 @@ impl CoreSlots {
 
 /// Seeded round scheduler: repeatedly picks a core that still has ops
 /// left, uniformly at random from the seeded stream. Deterministic for
-/// a fixed (seed, per-core op counts) input.
+/// a fixed (seed, per-core op counts) input. A *scripted* interleaver
+/// ([`Self::scripted`]) walks an explicit schedule instead — the
+/// exhaustive small-scope explorer (`sim::san::explore`) uses it to
+/// replay every enumerated interleaving.
 #[derive(Debug)]
 pub struct CoreInterleaver {
     rng: SplitMix64,
     remaining: Vec<usize>,
     live: usize,
+    /// explicit schedule (core id per step); empty in seeded mode
+    script: Vec<usize>,
+    cursor: usize,
+    scripted: bool,
 }
 
 impl CoreInterleaver {
     pub fn new(seed: u64, per_core_ops: Vec<usize>) -> Self {
         let live = per_core_ops.iter().filter(|&&n| n > 0).count();
-        Self { rng: SplitMix64::new(seed), remaining: per_core_ops, live }
+        Self {
+            rng: SplitMix64::new(seed),
+            remaining: per_core_ops,
+            live,
+            script: Vec::new(),
+            cursor: 0,
+            scripted: false,
+        }
+    }
+
+    /// Deterministic schedule playback: each step advances the next
+    /// core named in `script`. Script entries for drained (or unknown)
+    /// cores are skipped, and a script shorter than the op count simply
+    /// ends the ring early — no panic paths.
+    pub fn scripted(script: Vec<usize>, per_core_ops: Vec<usize>) -> Self {
+        let live = per_core_ops.iter().filter(|&&n| n > 0).count();
+        Self {
+            rng: SplitMix64::new(0),
+            remaining: per_core_ops,
+            live,
+            script,
+            cursor: 0,
+            scripted: true,
+        }
     }
 
     /// Next core to advance, or `None` when every core has drained.
     pub fn next_core(&mut self) -> Option<usize> {
         if self.live == 0 {
+            return None;
+        }
+        if self.scripted {
+            while let Some(&c) = self.script.get(self.cursor) {
+                self.cursor += 1;
+                if let Some(rem) = self.remaining.get_mut(c) {
+                    if *rem > 0 {
+                        *rem -= 1;
+                        if *rem == 0 {
+                            self.live -= 1;
+                        }
+                        return Some(c);
+                    }
+                }
+            }
             return None;
         }
         // draw among live cores only: the k-th live core, k seeded
@@ -192,5 +237,26 @@ mod tests {
         assert_eq!(a.iter().filter(|&&c| c == 3).count(), 5);
         let c = trace(7);
         assert_eq!(c.len(), 10);
+    }
+
+    #[test]
+    fn scripted_interleaver_replays_the_schedule_exactly() {
+        let script = vec![1usize, 0, 0, 1, 1, 0];
+        let mut it = CoreInterleaver::scripted(script.clone(), vec![3, 3]);
+        let mut out = Vec::new();
+        while let Some(c) = it.next_core() {
+            out.push(c);
+        }
+        assert_eq!(out, script);
+    }
+
+    #[test]
+    fn scripted_interleaver_skips_drained_and_unknown_cores() {
+        // core 0 has only 1 op; extra 0-entries and a bogus core 9 are
+        // skipped, a short script ends the ring early
+        let mut it = CoreInterleaver::scripted(vec![0, 9, 0, 1], vec![1, 2]);
+        assert_eq!(it.next_core(), Some(0));
+        assert_eq!(it.next_core(), Some(1));
+        assert_eq!(it.next_core(), None, "script exhausted");
     }
 }

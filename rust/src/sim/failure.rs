@@ -30,6 +30,7 @@ impl Cluster {
     pub fn kill_process(&mut self, pid: ProcId) -> Result<()> {
         self.check_pid(pid)?;
         self.procs[pid].crash_volatile();
+        self.san.proc_crash(pid);
         Ok(())
     }
 
@@ -83,8 +84,12 @@ impl Cluster {
         for pid in 0..self.procs.len() {
             if self.procs[pid].node == node {
                 self.procs[pid].crash_volatile();
+                self.san.proc_crash(pid);
             }
         }
+        // crash point: every acked prefix must still be recoverable
+        // from a live valid copy (the sanitizer's sweep)
+        self.san.node_down(node);
         let detected =
             at + self.cfg.heartbeat_interval + self.cfg.suspect_timeout;
         self.mgr.node_failed_at(node, detected);
@@ -243,6 +248,7 @@ impl Cluster {
         }
         let p = self.p();
         self.nodes[node].alive = true;
+        self.san.node_up(node);
         for s in 0..self.nodes[node].sockets.len() {
             self.nodes[node].sockets[s].nvm.reboot();
         }

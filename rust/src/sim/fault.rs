@@ -450,6 +450,7 @@ impl Cluster {
         resp_bytes: u64,
         handler_ns: Nanos,
     ) -> Result<Nanos> {
+        self.san.rpc_traced(src, dst);
         let p = self.p();
         if self.fault.is_noop() {
             return Ok(self.fabric.rpc(now, src, dst, req_bytes, resp_bytes, handler_ns, &p));

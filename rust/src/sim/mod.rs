@@ -9,6 +9,7 @@ pub mod cores;
 pub mod failure;
 pub mod fault;
 pub mod migrate;
+pub mod san;
 
 pub use adaptive::WindowController;
 pub use api::{DistFs, FsCompletion, FsOp, FsOut};
@@ -16,6 +17,7 @@ pub use assise::{Cluster, Node, SocketUnit};
 pub use cores::{CoreInterleaver, CoreSlots};
 pub use fault::FaultPlan;
 pub use migrate::MigrationReport;
+pub use san::{SanMode, SanReport};
 
 use crate::coherence::ManagerPolicy;
 use crate::hw::params::HwParams;
@@ -83,6 +85,12 @@ pub struct ClusterConfig {
     /// verify digest batches with the AOT checksum kernel (costs real
     /// wall-clock; enabled in examples/tests, off in big sweeps).
     pub verify_digests: bool,
+    /// arm the assise-san shadow sanitizer ([`san::SanState`]).
+    /// `SanMode::Off` emits nothing, allocates nothing, and leaves
+    /// every virtual-time trace byte-identical (the `FaultPlan::is_noop`
+    /// contract). Default reads `ASSISE_SAN` (race/crash/full), so CI
+    /// can run whole existing suites under the sanitizer unmodified.
+    pub sanitize: san::SanMode,
     pub params: HwParams,
 }
 
@@ -109,6 +117,7 @@ impl Default for ClusterConfig {
             heartbeat_interval: 500_000_000,
             suspect_timeout: 500_000_000,
             verify_digests: false,
+            sanitize: san::SanMode::from_env(),
             params: HwParams::default(),
         }
     }
@@ -188,6 +197,11 @@ impl ClusterConfig {
 
     pub fn verify(mut self, on: bool) -> Self {
         self.verify_digests = on;
+        self
+    }
+
+    pub fn sanitize(mut self, mode: san::SanMode) -> Self {
+        self.sanitize = mode;
         self
     }
 }

@@ -1,0 +1,264 @@
+//! Crash-consistency checker (PMTest-style, specialized to Assise's
+//! chain-replicated update logs).
+//!
+//! Shadow state tracks, per (process, chain): the highest **acked**
+//! log seq, and per replica node the highest seq **durable** there.
+//! The invariant checked at every ack and at every crash point the
+//! simulator generates (node kill / fail-over):
+//!
+//! - an ack with remote chain members requires the writer's NVM AND at
+//!   least one live, non-retired remote member to already hold the
+//!   acked prefix durably (ack-before-durable otherwise);
+//! - after any single-node kill, some live holder must still cover
+//!   every acked prefix (prefix-closure is free: watermarks are seqs);
+//! - a retired or stale member's copy never satisfies the invariant
+//!   until a later durable write re-validates it.
+//!
+//! Chains with no remote members (replication factor 1, or the writer
+//! is the whole chain) are exempt by configuration: local NVM
+//! persistence is all the durability there is.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::fs::{NodeId, ProcId};
+use crate::replication::ChainId;
+
+/// Last ack per (process, chain).
+#[derive(Debug, Clone)]
+pub struct AckRecord {
+    pub seq: u64,
+    pub writer: NodeId,
+    pub holders: Vec<NodeId>,
+}
+
+/// A crash-invariant violation found by [`CrashState`].
+#[derive(Debug, Clone)]
+pub enum CrashFault {
+    /// ack issued before the prefix was durable on writer + one live
+    /// non-retired remote member (the two copies that make any SINGLE
+    /// node kill at ack time survivable)
+    AckBeforeDurable { pid: ProcId, chain: ChainId, seq: u64 },
+    /// after the crash point at `node`, no live holder covers the
+    /// acked prefix
+    PointLoss { pid: ProcId, chain: ChainId, seq: u64, node: NodeId },
+}
+
+#[derive(Debug, Default)]
+pub struct CrashState {
+    /// (node, pid, chain) -> highest seq durable on that replica
+    durable: HashMap<(NodeId, ProcId, ChainId), u64>,
+    /// pid -> highest seq persisted in the writer's own NVM log
+    local_tail: HashMap<ProcId, u64>,
+    /// pid -> home node (registered at spawn)
+    proc_node: HashMap<ProcId, NodeId>,
+    /// last ack per (pid, chain)
+    acked: HashMap<(ProcId, ChainId), AckRecord>,
+    /// members retired from a chain: their copies are disqualified
+    /// until a later durable write re-validates them
+    retired: HashSet<(NodeId, ChainId)>,
+    /// nodes currently killed
+    down: HashSet<NodeId>,
+}
+
+impl CrashState {
+    pub fn register_proc(&mut self, pid: ProcId, node: NodeId) {
+        self.proc_node.insert(pid, node);
+    }
+
+    pub fn node_of(&self, pid: ProcId) -> Option<NodeId> {
+        self.proc_node.get(&pid).copied()
+    }
+
+    pub fn local_persist(&mut self, pid: ProcId, seq: u64) {
+        let t = self.local_tail.entry(pid).or_insert(0);
+        if *t < seq {
+            *t = seq;
+        }
+    }
+
+    /// A chain hop landed `pid`'s suffix up to `seq` on `node`'s NVM.
+    /// Durability re-validates a previously retired copy.
+    pub fn replica_durable(&mut self, node: NodeId, pid: ProcId, chain: ChainId, seq: u64) {
+        let w = self.durable.entry((node, pid, chain)).or_insert(0);
+        if *w < seq {
+            *w = seq;
+        }
+        self.retired.remove(&(node, chain));
+    }
+
+    pub fn replica_retired(&mut self, node: NodeId, chain: ChainId) {
+        self.retired.insert((node, chain));
+    }
+
+    pub fn node_down(&mut self, node: NodeId) {
+        self.down.insert(node);
+    }
+
+    pub fn node_up(&mut self, node: NodeId) {
+        self.down.remove(&node);
+    }
+
+    /// Does `node` hold `pid`/`chain` durably up to `seq`, counting as
+    /// a valid live copy?
+    fn valid_holder(&self, node: NodeId, pid: ProcId, chain: ChainId, seq: u64) -> bool {
+        if self.down.contains(&node) || self.retired.contains(&(node, chain)) {
+            return false;
+        }
+        self.durable.get(&(node, pid, chain)).copied().unwrap_or(0) >= seq
+    }
+
+    /// Writer durability: its own NVM log tail (persisted at append).
+    fn writer_durable(&self, pid: ProcId, writer: NodeId, seq: u64) -> bool {
+        if self.down.contains(&writer) {
+            return false;
+        }
+        self.local_tail.get(&pid).copied().unwrap_or(0) >= seq
+    }
+
+    /// Record a chain ack and check it. `holders` is the remote member
+    /// list the ack claims (empty = local-only chain, exempt).
+    pub fn chain_ack(
+        &mut self,
+        pid: ProcId,
+        chain: ChainId,
+        seq: u64,
+        holders: &[NodeId],
+        writer: NodeId,
+    ) -> Vec<CrashFault> {
+        let mut faults = Vec::new();
+        if !holders.is_empty() {
+            let remote_ok =
+                holders.iter().any(|&r| self.valid_holder(r, pid, chain, seq));
+            let writer_ok = self.writer_durable(pid, writer, seq);
+            if !remote_ok || !writer_ok {
+                faults.push(CrashFault::AckBeforeDurable { pid, chain, seq });
+            }
+        }
+        let rec = self.acked.entry((pid, chain)).or_insert(AckRecord {
+            seq: 0,
+            writer,
+            holders: Vec::new(),
+        });
+        if rec.seq <= seq {
+            rec.seq = seq.max(rec.seq);
+            rec.writer = writer;
+            rec.holders = holders.to_vec();
+        }
+        faults
+    }
+
+    /// Crash-point sweep, run at every crash point the simulator
+    /// generates (node kill, fail-over): every tracked acked prefix
+    /// must still be covered by SOME live valid copy — the writer's
+    /// surviving NVM log or a live non-retired chain member. The
+    /// hypothetical single-kill case needs no enumeration: the ack-time
+    /// check above requires TWO live copies, which any single kill
+    /// leaves one of. `point` attributes the faults to the node whose
+    /// crash triggered the sweep.
+    pub fn sweep(&self, point: NodeId) -> Vec<CrashFault> {
+        let mut faults = Vec::new();
+        for ((pid, chain), rec) in &self.acked {
+            if rec.holders.is_empty() {
+                continue; // local-only chain: exempt by configuration
+            }
+            let writer_live = self.writer_durable(*pid, rec.writer, rec.seq);
+            let remote_live = rec
+                .holders
+                .iter()
+                .any(|&r| self.valid_holder(r, *pid, *chain, rec.seq));
+            if !writer_live && !remote_live {
+                faults.push(CrashFault::PointLoss {
+                    pid: *pid,
+                    chain: *chain,
+                    seq: rec.seq,
+                    node: point,
+                });
+            }
+        }
+        faults
+    }
+
+    /// Crash points examined by one [`sweep`](Self::sweep) pass.
+    pub fn sweep_points(&self) -> u64 {
+        self.acked
+            .values()
+            .filter(|r| !r.holders.is_empty())
+            .map(|r| r.holders.len() as u64 + 1)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const C: ChainId = ChainId(0);
+
+    #[test]
+    fn durable_then_ack_is_clean() {
+        let mut s = CrashState::default();
+        s.register_proc(0, 0);
+        s.local_persist(0, 5);
+        s.replica_durable(1, 0, C, 5);
+        assert!(s.chain_ack(0, C, 5, &[1], 0).is_empty());
+    }
+
+    #[test]
+    fn ack_before_durable_fires() {
+        let mut s = CrashState::default();
+        s.register_proc(0, 0);
+        s.local_persist(0, 5);
+        let faults = s.chain_ack(0, C, 5, &[1], 0);
+        assert!(
+            faults.iter().any(|f| matches!(f, CrashFault::AckBeforeDurable { seq: 5, .. })),
+            "no durable note on node 1: {faults:?}"
+        );
+    }
+
+    #[test]
+    fn retired_copy_never_satisfies() {
+        let mut s = CrashState::default();
+        s.register_proc(0, 0);
+        s.local_persist(0, 3);
+        s.replica_durable(1, 0, C, 3);
+        s.replica_retired(1, C);
+        let faults = s.chain_ack(0, C, 3, &[1], 0);
+        assert!(!faults.is_empty(), "retired member must not satisfy the ack");
+        // a later durable write re-validates the copy
+        s.replica_durable(1, 0, C, 4);
+        s.local_persist(0, 4);
+        assert!(s.chain_ack(0, C, 4, &[1], 0).is_empty());
+    }
+
+    #[test]
+    fn kill_sweep_finds_unrecoverable_prefix() {
+        let mut s = CrashState::default();
+        s.register_proc(0, 0);
+        s.local_persist(0, 2);
+        s.replica_durable(1, 0, C, 2);
+        assert!(s.chain_ack(0, C, 2, &[1], 0).is_empty());
+        assert_eq!(s.sweep_points(), 2, "writer copy + one remote copy");
+        // one node down: the other copy still covers the prefix
+        s.node_down(1);
+        assert!(s.sweep(1).is_empty(), "writer NVM survives");
+        // both copies gone: the acked prefix is unrecoverable
+        s.node_down(0);
+        let faults = s.sweep(0);
+        assert!(
+            faults.iter().any(|f| matches!(f, CrashFault::PointLoss { node: 0, seq: 2, .. })),
+            "{faults:?}"
+        );
+        // NVM is persistent: recovery restores the copy
+        s.node_up(1);
+        assert!(s.sweep(0).is_empty());
+    }
+
+    #[test]
+    fn local_only_chain_is_exempt() {
+        let mut s = CrashState::default();
+        s.register_proc(0, 0);
+        s.local_persist(0, 9);
+        assert!(s.chain_ack(0, C, 9, &[], 0).is_empty());
+        assert_eq!(s.sweep_points(), 0);
+    }
+}

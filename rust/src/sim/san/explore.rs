@@ -1,0 +1,212 @@
+//! Exhaustive small-scope schedule exploration (loom idiom, sized for
+//! the seeded `CoreInterleaver`).
+//!
+//! PR 8 made every multi-core ring a pure function of (seed, ops) —
+//! which means the scheduler's whole nondeterminism is the interleaving
+//! sequence, and for small configs we can enumerate it *completely*
+//! instead of sampling seeds. [`enumerate_schedules`] runs a DFS over
+//! all interleavings of the per-core op lists, pruning schedules that
+//! differ from an already-explored one only by swapping an adjacent
+//! *commuting* pair (two reads commute; anything touching the shared
+//! log does not). [`explore`] then replays every surviving schedule on
+//! a fresh cluster under [`SanMode::Full`] and pools the reports.
+//!
+//! Small-scope bounds (enforced): ≤ 3 cores, ≤ 8 ops total. Beyond
+//! that the schedule count explodes and seeds are the better tool.
+
+use super::{SanMode, SanViolation};
+use crate::sim::api::{DistFs, FsOp};
+use crate::sim::{Cluster, ClusterConfig};
+
+/// A small-scope exploration workload: `prep` runs once sequentially
+/// (fixture setup), then `per_core[c]` is core `c`'s op list for the
+/// explored ring. Per-core lists must be equal length (the ring stripes
+/// ops across cores round-robin).
+#[derive(Debug, Clone, Default)]
+pub struct ExploreConfig {
+    pub prep: Vec<FsOp>,
+    pub per_core: Vec<Vec<FsOp>>,
+}
+
+/// Outcome of an exhaustive exploration.
+#[derive(Debug, Clone, Default)]
+pub struct ExploreReport {
+    /// schedules actually replayed on a cluster
+    pub schedules_run: u64,
+    /// DFS branches cut by the commutative-prefix pruning (each branch
+    /// covers every schedule extending it)
+    pub schedules_pruned: u64,
+    /// pooled violations across all schedules (deterministic: schedule
+    /// enumeration order is lexicographic)
+    pub violations: Vec<SanViolation>,
+}
+
+/// Does this op commute with other commuting ops? Reads of namespace
+/// state commute with each other; anything that appends to the shared
+/// log (or moves an fd cursor) does not.
+fn op_commutes(op: &FsOp) -> bool {
+    matches!(op, FsOp::Stat { .. } | FsOp::Readdir { .. })
+}
+
+/// Enumerate every interleaving of `counts[c]` ops per core, in
+/// lexicographic core order, pruning non-canonical orders of adjacent
+/// commuting pairs: if the previous op (core `p`, its `k_p`-th) and the
+/// candidate op (core `c < p`, its `k_c`-th) both commute, the swapped
+/// schedule is the canonical representative and this branch is cut.
+/// Returns (schedules, pruned branch count).
+pub fn enumerate_schedules(counts: &[usize], commutes: &[Vec<bool>]) -> (Vec<Vec<usize>>, u64) {
+    fn dfs(
+        counts: &[usize],
+        commutes: &[Vec<bool>],
+        total: usize,
+        taken: &mut Vec<usize>,
+        sched: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+        pruned: &mut u64,
+    ) {
+        if sched.len() == total {
+            out.push(sched.clone());
+            return;
+        }
+        for c in 0..counts.len() {
+            let t_c = taken.get(c).copied().unwrap_or(0);
+            if t_c >= counts.get(c).copied().unwrap_or(0) {
+                continue;
+            }
+            if let Some(&p) = sched.last() {
+                if p > c {
+                    // the op just executed on p, and the one c would run
+                    let k_p = taken.get(p).copied().unwrap_or(0).saturating_sub(1);
+                    let p_comm =
+                        commutes.get(p).and_then(|v| v.get(k_p)).copied().unwrap_or(false);
+                    let c_comm =
+                        commutes.get(c).and_then(|v| v.get(t_c)).copied().unwrap_or(false);
+                    if p_comm && c_comm {
+                        *pruned += 1;
+                        continue; // swapped order is the canonical rep
+                    }
+                }
+            }
+            if let Some(t) = taken.get_mut(c) {
+                *t += 1;
+            }
+            sched.push(c);
+            dfs(counts, commutes, total, taken, sched, out, pruned);
+            sched.pop();
+            if let Some(t) = taken.get_mut(c) {
+                *t -= 1;
+            }
+        }
+    }
+
+    let total: usize = counts.iter().sum();
+    let mut out = Vec::new();
+    let mut pruned = 0u64;
+    let mut taken = vec![0usize; counts.len()];
+    let mut sched = Vec::with_capacity(total);
+    dfs(counts, commutes, total, &mut taken, &mut sched, &mut out, &mut pruned);
+    (out, pruned)
+}
+
+/// Replay every canonical schedule of `x` on a fresh cluster built from
+/// `cfg` (forced to [`SanMode::Full`]), pooling the sanitizer reports.
+pub fn explore(cfg: &ClusterConfig, x: &ExploreConfig) -> ExploreReport {
+    let cores = x.per_core.len();
+    assert!((1..=3).contains(&cores), "explore: small-scope bound is 1..=3 cores");
+    let len0 = x.per_core.first().map(|v| v.len()).unwrap_or(0);
+    assert!(
+        x.per_core.iter().all(|v| v.len() == len0),
+        "explore: per-core op lists must be equal length (round-robin striping)"
+    );
+    let total = cores * len0;
+    assert!(total <= 8, "explore: small-scope bound is <= 8 ops total");
+
+    let counts: Vec<usize> = x.per_core.iter().map(|v| v.len()).collect();
+    let commutes: Vec<Vec<bool>> =
+        x.per_core.iter().map(|v| v.iter().map(op_commutes).collect()).collect();
+    let (schedules, schedules_pruned) = enumerate_schedules(&counts, &commutes);
+
+    // ops[i] runs on core i % cores: un-stripe the per-core lists
+    let flat: Vec<FsOp> = (0..total)
+        .filter_map(|i| x.per_core.get(i % cores).and_then(|v| v.get(i / cores)).cloned())
+        .collect();
+
+    let mut report =
+        ExploreReport { schedules_run: 0, schedules_pruned, violations: Vec::new() };
+    for sched in &schedules {
+        let mut cc = cfg.clone();
+        cc.sanitize = SanMode::Full;
+        let mut cl = Cluster::new(cc);
+        let pid = cl.spawn_process(0, 0);
+        if !x.prep.is_empty() {
+            let _ = cl.submit(pid, x.prep.clone());
+        }
+        let _ = cl.submit_mc_scripted(pid, cores, sched, flat.clone());
+        report.schedules_run += 1;
+        report.violations.extend(cl.san.report().violations);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_core_six_op_all_mutation_enumeration_is_exhaustive() {
+        // nothing commutes: all C(6,3) = 20 interleavings survive
+        let counts = vec![3usize, 3];
+        let commutes = vec![vec![false; 3], vec![false; 3]];
+        let (scheds, pruned) = enumerate_schedules(&counts, &commutes);
+        assert_eq!(scheds.len(), 20);
+        assert_eq!(pruned, 0);
+        // every schedule is a distinct valid interleaving
+        for s in &scheds {
+            assert_eq!(s.iter().filter(|&&c| c == 0).count(), 3);
+            assert_eq!(s.iter().filter(|&&c| c == 1).count(), 3);
+        }
+    }
+
+    #[test]
+    fn commuting_reads_collapse_to_one_canonical_schedule() {
+        let counts = vec![3usize, 3];
+        let commutes = vec![vec![true; 3], vec![true; 3]];
+        let (scheds, pruned) = enumerate_schedules(&counts, &commutes);
+        assert_eq!(scheds.len(), 1, "all-read ring has one canonical order");
+        assert_eq!(scheds.first().cloned(), Some(vec![0, 0, 0, 1, 1, 1]));
+        assert!(pruned > 0);
+    }
+
+    #[test]
+    fn mixed_commutes_prune_only_read_read_swaps() {
+        // core 0: [write, read]; core 1: [read, read]
+        let counts = vec![2usize, 2];
+        let commutes = vec![vec![false, true], vec![true, true]];
+        let (scheds, pruned) = enumerate_schedules(&counts, &commutes);
+        let total = scheds.len() as u64;
+        assert!(total < 6, "C(4,2)=6 minus pruned read-read swaps, got {total}");
+        assert!(pruned > 0);
+        // no schedule ends with a descending adjacent commuting pair
+        for s in &scheds {
+            let mut k = vec![0usize; 2];
+            let mut prev: Option<(usize, usize)> = None;
+            for &c in s {
+                let kc = k.get(c).copied().unwrap_or(0);
+                if let Some((p, kp)) = prev {
+                    if p > c {
+                        let pc = commutes.get(p).and_then(|v| v.get(kp)).copied();
+                        let cc = commutes.get(c).and_then(|v| v.get(kc)).copied();
+                        assert!(
+                            !(pc == Some(true) && cc == Some(true)),
+                            "non-canonical schedule {s:?} survived"
+                        );
+                    }
+                }
+                prev = Some((c, kc));
+                if let Some(x) = k.get_mut(c) {
+                    *x += 1;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,747 @@
+//! assise-san: a shadow-event sanitizer over the deterministic
+//! simulator.
+//!
+//! The protocol funnels (`CoreSlots` publish/combine, `UpdateLog`
+//! append and cursor advance, `SharedFs::digest` apply, lease
+//! acquire/release/revoke, replication window issue/ack, `fault_rpc`,
+//! kill/fail-over) emit typed [`SanEvent`]s carrying per-(proc, core,
+//! node) vector clocks into a bounded ring. Three checkers consume the
+//! shadow state:
+//!
+//! - **race** ([`race`]): two accesses to the same namespace object
+//!   unordered by happens-before (lease edges, combined-order edges,
+//!   digest edges, ack edges) with at least one write;
+//! - **crash** ([`crash`]): every ack needs the acked prefix durable on
+//!   the writer plus a live non-retired remote member, and every crash
+//!   point the simulator generates must leave a live copy;
+//! - **explore** ([`explore`]): loom-style exhaustive enumeration of
+//!   `CoreInterleaver` schedules for small configs, running the other
+//!   two checkers on every schedule.
+//!
+//! Contract (same as `FaultPlan::is_noop`): [`SanMode::Off`] emits
+//! nothing, allocates nothing, and never touches a clock or an RNG —
+//! every existing virtual-time trace is byte-identical. The armed
+//! modes never touch clocks or RNG either (traces stay identical; the
+//! sanitizer only observes), so `Off` vs `Full` same-seed equality is
+//! testable directly.
+
+pub mod crash;
+pub mod explore;
+pub mod race;
+pub mod vc;
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::fs::{NodeId, ProcId, SocketId};
+use crate::hw::Nanos;
+use crate::metrics::SanStats;
+use crate::replication::ChainId;
+
+pub use explore::{enumerate_schedules, explore, ExploreConfig, ExploreReport};
+pub use vc::SanActor;
+
+/// Sanitizer arming level (`ClusterConfig::sanitize`). The default is
+/// read from the `ASSISE_SAN` environment variable (values `race`,
+/// `crash`, `full`; anything else = `Off`) so whole existing suites run
+/// under the sanitizer without touching their source — the CI
+/// `sanitizer-smoke` job does exactly that.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SanMode {
+    #[default]
+    Off,
+    Race,
+    Crash,
+    Full,
+}
+
+impl SanMode {
+    pub fn from_env() -> SanMode {
+        match std::env::var("ASSISE_SAN") {
+            Ok(v) => SanMode::parse(&v),
+            Err(_) => SanMode::Off,
+        }
+    }
+
+    pub fn parse(s: &str) -> SanMode {
+        match s.to_ascii_lowercase().as_str() {
+            "race" => SanMode::Race,
+            "crash" => SanMode::Crash,
+            "full" | "on" | "1" => SanMode::Full,
+            _ => SanMode::Off,
+        }
+    }
+
+    pub fn is_off(self) -> bool {
+        self == SanMode::Off
+    }
+
+    fn races(self) -> bool {
+        matches!(self, SanMode::Race | SanMode::Full)
+    }
+
+    fn crashes(self) -> bool {
+        matches!(self, SanMode::Crash | SanMode::Full)
+    }
+}
+
+/// Event taxonomy. One variant per instrumented funnel edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SanEventKind {
+    LeaseAcquire,
+    LeaseRelease,
+    Write,
+    Read,
+    LocalPersist,
+    ReplicaDurable,
+    ChainAck,
+    WindowIssue,
+    WindowAck,
+    DigestApply,
+    SnapshotRead,
+    StaleServe,
+    Retired,
+    RingBegin,
+    CorePublish,
+    RingEnd,
+    NodeDown,
+    NodeUp,
+    ProcCrash,
+    Rpc,
+}
+
+/// One shadow event in the bounded ring.
+#[derive(Debug, Clone)]
+pub struct SanEvent {
+    pub kind: SanEventKind,
+    pub actor: SanActor,
+    /// the actor's own vector-clock component after the event — its
+    /// position in the happens-before order
+    pub epoch: u64,
+    /// object / lease unit / detail ("" when not applicable)
+    pub object: String,
+    /// log seq / virtual time / core id, per kind
+    pub seq: u64,
+}
+
+/// Violation classes, ranked for deterministic report ordering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SanViolationKind {
+    Race,
+    AckBeforeDurable,
+    CrashPointLoss,
+    StaleServe,
+    TornRead,
+}
+
+#[derive(Debug, Clone)]
+pub struct SanViolation {
+    pub kind: SanViolationKind,
+    pub object: String,
+    /// race: both access op ids; crash: acked seq in `first_op`
+    pub first_op: u64,
+    pub second_op: u64,
+    pub detail: String,
+}
+
+impl SanViolation {
+    fn sort_key(&self) -> (SanViolationKind, String, u64, u64, String) {
+        (self.kind, self.object.clone(), self.first_op, self.second_op, self.detail.clone())
+    }
+}
+
+/// Deterministically ordered violation report (stable for CI diffs).
+#[derive(Debug, Clone, Default)]
+pub struct SanReport {
+    pub violations: Vec<SanViolation>,
+}
+
+impl SanReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn count(&self, kind: SanViolationKind) -> usize {
+        self.violations.iter().filter(|v| v.kind == kind).count()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!(
+                "{:?} {} ops({},{}) {}\n",
+                v.kind, v.object, v.first_op, v.second_op, v.detail
+            ));
+        }
+        out
+    }
+}
+
+/// Bounded event-ring capacity: old events drop first (counted).
+const EVENT_RING_CAP: usize = 4096;
+/// Report cap: a hopelessly broken run should not OOM the checker.
+const REPORT_CAP: usize = 1024;
+
+/// The sanitizer's whole shadow state, owned by `Cluster`.
+#[derive(Debug, Default)]
+pub struct SanState {
+    mode: SanMode,
+    /// fail fast (assert) on the first violation — set when the mode
+    /// was armed via `ASSISE_SAN`, so existing suites become hard
+    /// gates without editing their assertions
+    strict: bool,
+    clocks: vc::ClockTable,
+    race: race::RaceState,
+    crash: crash::CrashState,
+    /// mirror of the digest apply windows, for the torn-read rule
+    windows: HashMap<(NodeId, SocketId), (Nanos, Nanos)>,
+    /// read attribution inside a `submit_mc` ring
+    active_core: Option<(ProcId, usize)>,
+    events: VecDeque<SanEvent>,
+    violations: Vec<SanViolation>,
+    next_op: u64,
+    pub stats: SanStats,
+}
+
+impl SanState {
+    pub fn new(mode: SanMode) -> Self {
+        let strict = !mode.is_off() && std::env::var_os("ASSISE_SAN").is_some();
+        Self { mode, strict, ..Default::default() }
+    }
+
+    #[inline]
+    pub fn is_off(&self) -> bool {
+        self.mode.is_off()
+    }
+
+    pub fn mode(&self) -> SanMode {
+        self.mode
+    }
+
+    /// The deterministic report: violations sorted by (kind, object,
+    /// op ids, detail).
+    pub fn report(&self) -> SanReport {
+        let mut violations = self.violations.clone();
+        violations.sort_by(|a, b| a.sort_key().cmp(&b.sort_key()));
+        SanReport { violations }
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &SanEvent> {
+        self.events.iter()
+    }
+
+    // ------------------------------------------------- internal plumbing
+
+    fn record(&mut self, kind: SanEventKind, actor: SanActor, epoch: u64, object: &str, seq: u64) {
+        if self.events.len() >= EVENT_RING_CAP {
+            self.events.pop_front();
+            self.stats.events_dropped += 1;
+        }
+        self.events.push_back(SanEvent {
+            kind,
+            actor,
+            epoch,
+            object: object.to_string(),
+            seq,
+        });
+        self.stats.events_recorded += 1;
+    }
+
+    fn violate(&mut self, v: SanViolation) {
+        match v.kind {
+            SanViolationKind::Race => self.stats.race_reports += 1,
+            SanViolationKind::AckBeforeDurable | SanViolationKind::CrashPointLoss => {
+                self.stats.crash_reports += 1
+            }
+            SanViolationKind::StaleServe => self.stats.stale_serve_reports += 1,
+            SanViolationKind::TornRead => self.stats.torn_reports += 1,
+        }
+        // strict mode (armed via ASSISE_SAN): fail the run on the spot,
+        // with the violation in the panic message
+        assert!(
+            !self.strict,
+            "assise-san: {:?} on `{}` ops({},{}) — {}",
+            v.kind, v.object, v.first_op, v.second_op, v.detail
+        );
+        if self.violations.len() < REPORT_CAP {
+            self.violations.push(v);
+        } else {
+            self.stats.events_dropped += 1;
+        }
+    }
+
+    /// The actor accesses are attributed to: the active virtual core
+    /// inside a `submit_mc` ring, the process otherwise.
+    fn actor_for(&self, pid: ProcId) -> SanActor {
+        match self.active_core {
+            Some((p, c)) if p == pid => SanActor::Core(p, c),
+            _ => SanActor::Proc(pid),
+        }
+    }
+
+    fn crash_faults(&mut self, faults: Vec<crash::CrashFault>) {
+        for f in faults {
+            match f {
+                crash::CrashFault::AckBeforeDurable { pid, chain, seq } => {
+                    self.violate(SanViolation {
+                        kind: SanViolationKind::AckBeforeDurable,
+                        object: format!("proc{pid}/chain{}", chain.0),
+                        first_op: seq,
+                        second_op: 0,
+                        detail: "ack issued before the prefix was durable on writer + a \
+                                 live non-retired remote member"
+                            .to_string(),
+                    });
+                }
+                crash::CrashFault::PointLoss { pid, chain, seq, node } => {
+                    self.violate(SanViolation {
+                        kind: SanViolationKind::CrashPointLoss,
+                        object: format!("proc{pid}/chain{}", chain.0),
+                        first_op: seq,
+                        second_op: node as u64,
+                        detail: format!(
+                            "crash point at node{node}: no live replica covers the acked prefix"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // ----------------------------------------------- lifecycle emission
+
+    /// A LibFS process spawned on `node` (also re-registration after
+    /// fail-over replacement).
+    pub fn register_proc(&mut self, pid: ProcId, node: NodeId) {
+        if self.is_off() {
+            return;
+        }
+        self.clocks.idx(SanActor::Proc(pid));
+        self.crash.register_proc(pid, node);
+    }
+
+    /// Attribute subsequent read accesses to `core` (None = back to the
+    /// process timeline).
+    pub fn set_core(&mut self, pid: ProcId, core: Option<usize>) {
+        if self.is_off() {
+            return;
+        }
+        self.active_core = core.map(|c| (pid, c));
+    }
+
+    /// Ring entry barrier: every core clock starts at the proc clock.
+    pub fn ring_begin(&mut self, pid: ProcId, cores: usize) {
+        if self.is_off() {
+            return;
+        }
+        let p = self.clocks.idx(SanActor::Proc(pid));
+        let epoch = self.clocks.tick(p);
+        for c in 0..cores {
+            let k = self.clocks.idx(SanActor::Core(pid, c));
+            self.clocks.join_from(k, p);
+        }
+        self.record(SanEventKind::RingBegin, SanActor::Proc(pid), epoch, "", cores as u64);
+    }
+
+    /// A core published a mutation to the combiner: the shared-log
+    /// timeline observes everything the core had (combined-order edge).
+    pub fn core_publish(&mut self, pid: ProcId, core: usize) {
+        if self.is_off() {
+            return;
+        }
+        let k = self.clocks.idx(SanActor::Core(pid, core));
+        let epoch = self.clocks.tick(k);
+        let p = self.clocks.idx(SanActor::Proc(pid));
+        self.clocks.join_from(p, k);
+        self.record(SanEventKind::CorePublish, SanActor::Core(pid, core), epoch, "", core as u64);
+    }
+
+    /// Ring exit barrier: the proc observes every core's events.
+    pub fn ring_end(&mut self, pid: ProcId, cores: usize) {
+        if self.is_off() {
+            return;
+        }
+        let p = self.clocks.idx(SanActor::Proc(pid));
+        for c in 0..cores {
+            let k = self.clocks.idx(SanActor::Core(pid, c));
+            self.clocks.join_from(p, k);
+        }
+        let epoch = self.clocks.tick(p);
+        self.active_core = None;
+        self.record(SanEventKind::RingEnd, SanActor::Proc(pid), epoch, "", cores as u64);
+    }
+
+    // --------------------------------------------------- lease emission
+
+    /// Lease acquired on `unit` (memo hits included: every op's lease
+    /// entry joins the unit's clock).
+    pub fn lease_acquire(&mut self, pid: ProcId, unit: &str) {
+        if self.is_off() {
+            return;
+        }
+        self.stats.lease_acquires += 1;
+        let actor = self.actor_for(pid);
+        let a = self.clocks.idx(actor);
+        if self.mode.races() {
+            self.race.acquire(&mut self.clocks, a, unit);
+        }
+        let epoch = self.clocks.tick(a);
+        self.record(SanEventKind::LeaseAcquire, actor, epoch, unit, 0);
+    }
+
+    /// Lease revoked/transferred away from `holder`: its effects become
+    /// visible to the next acquirer.
+    pub fn lease_release(&mut self, holder: ProcId, unit: &str) {
+        if self.is_off() {
+            return;
+        }
+        let h = self.clocks.idx(SanActor::Proc(holder));
+        if self.mode.races() {
+            self.race.release(&self.clocks, h, unit);
+        }
+        let epoch = self.clocks.tick(h);
+        self.record(SanEventKind::LeaseRelease, SanActor::Proc(holder), epoch, unit, 0);
+    }
+
+    // -------------------------------------------------- access emission
+
+    /// A namespace write (log append) on `path`. Returns the op id.
+    pub fn write_access(&mut self, pid: ProcId, path: &str) -> u64 {
+        self.access(pid, path, true)
+    }
+
+    /// A leased read on `path` (pread / readdir bodies).
+    pub fn read_access(&mut self, pid: ProcId, path: &str) -> u64 {
+        self.access(pid, path, false)
+    }
+
+    fn access(&mut self, pid: ProcId, path: &str, write: bool) -> u64 {
+        if self.is_off() {
+            return 0;
+        }
+        self.next_op += 1;
+        let op = self.next_op;
+        let actor = self.actor_for(pid);
+        let a = self.clocks.idx(actor);
+        let epoch = self.clocks.tick(a);
+        let kind = if write { SanEventKind::Write } else { SanEventKind::Read };
+        self.record(kind, actor, epoch, path, op);
+        if self.mode.races() {
+            self.stats.accesses_checked += 1;
+            let races = self.race.access(&self.clocks, a, path, write, epoch, op);
+            for r in races {
+                let first = self.clocks.actor_of(r.first.actor).map(|x| x.describe());
+                let second = self.clocks.actor_of(r.second.actor).map(|x| x.describe());
+                self.violate(SanViolation {
+                    kind: SanViolationKind::Race,
+                    object: r.object,
+                    first_op: r.first.op,
+                    second_op: r.second.op,
+                    detail: format!(
+                        "{} {} unordered with {} {}",
+                        first.unwrap_or_default(),
+                        if r.first.write { "write" } else { "read" },
+                        second.unwrap_or_default(),
+                        if r.second.write { "write" } else { "read" },
+                    ),
+                });
+            }
+        }
+        op
+    }
+
+    // --------------------------------------------- durability emission
+
+    /// `pid`'s log appended through `seq` into its node's NVM (the
+    /// writer's own durable copy).
+    pub fn local_persist(&mut self, pid: ProcId, seq: u64) {
+        if self.is_off() {
+            return;
+        }
+        if self.mode.crashes() {
+            self.crash.local_persist(pid, seq);
+        }
+        let a = self.clocks.idx(SanActor::Proc(pid));
+        let epoch = self.clocks.tick(a);
+        self.record(SanEventKind::LocalPersist, SanActor::Proc(pid), epoch, "", seq);
+    }
+
+    /// A chain hop landed `pid`'s suffix up to `seq` durably on `node`.
+    pub fn replica_durable(&mut self, node: NodeId, pid: ProcId, chain: ChainId, seq: u64) {
+        if self.is_off() {
+            return;
+        }
+        if self.mode.crashes() {
+            self.crash.replica_durable(node, pid, chain, seq);
+        }
+        let a = self.clocks.idx(SanActor::Proc(pid));
+        let epoch = self.clocks.tick(a);
+        self.record(
+            SanEventKind::ReplicaDurable,
+            SanActor::Proc(pid),
+            epoch,
+            &format!("node{node}/chain{}", chain.0),
+            seq,
+        );
+    }
+
+    /// The chain acked `pid`'s suffix up to `seq`. `holders` is the
+    /// remote member list (empty = local-only, exempt); `writer` the
+    /// writer's node. Checks ack-before-durable and counts the ack's
+    /// crash points (writer + each holder).
+    pub fn chain_ack(
+        &mut self,
+        pid: ProcId,
+        chain: ChainId,
+        seq: u64,
+        holders: &[NodeId],
+        writer: NodeId,
+    ) {
+        if self.is_off() {
+            return;
+        }
+        let a = self.clocks.idx(SanActor::Proc(pid));
+        let epoch = self.clocks.tick(a);
+        self.record(
+            SanEventKind::ChainAck,
+            SanActor::Proc(pid),
+            epoch,
+            &format!("chain{}", chain.0),
+            seq,
+        );
+        if self.mode.crashes() {
+            if !holders.is_empty() {
+                self.stats.crash_points_checked += holders.len() as u64 + 1;
+            }
+            let faults = self.crash.chain_ack(pid, chain, seq, holders, writer);
+            self.crash_faults(faults);
+        }
+    }
+
+    /// Replication window issued (counter; the window is itself an ack
+    /// boundary checked by [`chain_ack`](Self::chain_ack)).
+    pub fn window_issue(&mut self, pid: ProcId) {
+        if self.is_off() {
+            return;
+        }
+        self.stats.windows_issued += 1;
+        let a = self.clocks.idx(SanActor::Proc(pid));
+        let epoch = self.clocks.tick(a);
+        self.record(SanEventKind::WindowIssue, SanActor::Proc(pid), epoch, "", 0);
+    }
+
+    /// An in-flight window's ack drained back into the issue path.
+    pub fn window_ack(&mut self, pid: ProcId) {
+        if self.is_off() {
+            return;
+        }
+        self.stats.window_acks += 1;
+        let a = self.clocks.idx(SanActor::Proc(pid));
+        let epoch = self.clocks.tick(a);
+        self.record(SanEventKind::WindowAck, SanActor::Proc(pid), epoch, "", 0);
+    }
+
+    // ----------------------------------------------- digest / snapshot
+
+    /// `SharedFs::digest` applied `pid`'s batch on (`node`, `sock`)
+    /// over the virtual window [`begin`, `end`) (odd seqlock epoch).
+    pub fn digest_apply(
+        &mut self,
+        pid: ProcId,
+        node: NodeId,
+        sock: SocketId,
+        begin: Nanos,
+        end: Nanos,
+    ) {
+        if self.is_off() {
+            return;
+        }
+        self.stats.digest_applies += 1;
+        let p = self.clocks.idx(SanActor::Proc(pid));
+        let s = self.clocks.idx(SanActor::Sfs(node, sock));
+        // digest edge: the daemon observes everything the digesting
+        // process had
+        self.clocks.join_from(s, p);
+        let epoch = self.clocks.tick(s);
+        self.windows.insert((node, sock), (begin, end));
+        self.record(SanEventKind::DigestApply, SanActor::Sfs(node, sock), epoch, "", end);
+    }
+
+    /// A core-clock namespace snapshot read against (`node`, `sock`)
+    /// at virtual time `t` — must land OUTSIDE the apply window (the
+    /// seqlock retry already moved real readers past `end`).
+    pub fn snapshot_read(&mut self, pid: ProcId, node: NodeId, sock: SocketId, t: Nanos) {
+        if self.is_off() {
+            return;
+        }
+        let actor = self.actor_for(pid);
+        let a = self.clocks.idx(actor);
+        let s = self.clocks.idx(SanActor::Sfs(node, sock));
+        self.clocks.join_from(a, s);
+        let epoch = self.clocks.tick(a);
+        self.record(SanEventKind::SnapshotRead, actor, epoch, "", t);
+        if let Some(&(begin, end)) = self.windows.get(&(node, sock)) {
+            if t >= begin && t < end {
+                self.violate(SanViolation {
+                    kind: SanViolationKind::TornRead,
+                    object: format!("sfs{node}.{sock}"),
+                    first_op: t,
+                    second_op: end,
+                    detail: format!(
+                        "snapshot read at t={t} inside digest apply window [{begin},{end})"
+                    ),
+                });
+            }
+        }
+    }
+
+    /// A read was served from a replica marked stale. Real paths always
+    /// refetch first (`refetched = true`, clean); serving the stale
+    /// bytes themselves is a violation.
+    pub fn stale_serve(&mut self, node: NodeId, path: &str, refetched: bool) {
+        if self.is_off() {
+            return;
+        }
+        self.stats.stale_refetches += 1;
+        let s = self.clocks.idx(SanActor::Sfs(node, 0));
+        let epoch = self.clocks.tick(s);
+        self.record(SanEventKind::StaleServe, SanActor::Sfs(node, 0), epoch, path, refetched as u64);
+        if !refetched {
+            self.violate(SanViolation {
+                kind: SanViolationKind::StaleServe,
+                object: path.to_string(),
+                first_op: node as u64,
+                second_op: 0,
+                detail: format!("stale/retired copy on node{node} served without refetch"),
+            });
+        }
+    }
+
+    /// `node` was retired from `chain` (live migration): its copies are
+    /// disqualified until a later durable write re-validates them.
+    pub fn replica_retired(&mut self, node: NodeId, chain: ChainId) {
+        if self.is_off() {
+            return;
+        }
+        if self.mode.crashes() {
+            self.crash.replica_retired(node, chain);
+        }
+        let s = self.clocks.idx(SanActor::Sfs(node, 0));
+        let epoch = self.clocks.tick(s);
+        self.record(
+            SanEventKind::Retired,
+            SanActor::Sfs(node, 0),
+            epoch,
+            &format!("chain{}", chain.0),
+            0,
+        );
+    }
+
+    // ------------------------------------------------- failure emission
+
+    /// `node` was killed: run the crash-point sweep over every tracked
+    /// acked prefix.
+    pub fn node_down(&mut self, node: NodeId) {
+        if self.is_off() {
+            return;
+        }
+        let s = self.clocks.idx(SanActor::Sfs(node, 0));
+        let epoch = self.clocks.tick(s);
+        self.record(SanEventKind::NodeDown, SanActor::Sfs(node, 0), epoch, "", 0);
+        if self.mode.crashes() {
+            self.crash.node_down(node);
+            self.stats.crash_points_checked += self.crash.sweep_points();
+            let faults = self.crash.sweep(node);
+            self.crash_faults(faults);
+        }
+    }
+
+    /// `node` rebooted (NVM contents survive).
+    pub fn node_up(&mut self, node: NodeId) {
+        if self.is_off() {
+            return;
+        }
+        if self.mode.crashes() {
+            self.crash.node_up(node);
+        }
+        let s = self.clocks.idx(SanActor::Sfs(node, 0));
+        let epoch = self.clocks.tick(s);
+        self.record(SanEventKind::NodeUp, SanActor::Sfs(node, 0), epoch, "", 0);
+    }
+
+    /// A process crashed (volatile state lost; its NVM log survives on
+    /// its node).
+    pub fn proc_crash(&mut self, pid: ProcId) {
+        if self.is_off() {
+            return;
+        }
+        let a = self.clocks.idx(SanActor::Proc(pid));
+        let epoch = self.clocks.tick(a);
+        self.record(SanEventKind::ProcCrash, SanActor::Proc(pid), epoch, "", 0);
+    }
+
+    /// One RPC routed through the fault funnel (trace counter).
+    pub fn rpc_traced(&mut self, src: NodeId, dst: NodeId) {
+        if self.is_off() {
+            return;
+        }
+        self.stats.rpcs_traced += 1;
+        let s = self.clocks.idx(SanActor::Sfs(src, 0));
+        let epoch = self.clocks.tick(s);
+        self.record(SanEventKind::Rpc, SanActor::Sfs(src, 0), epoch, "", dst as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_mode_emits_nothing() {
+        let mut s = SanState::new(SanMode::Off);
+        s.register_proc(0, 0);
+        s.lease_acquire(0, "/d");
+        s.write_access(0, "/d/f");
+        s.chain_ack(0, ChainId(0), 5, &[1], 0);
+        s.node_down(0);
+        assert_eq!(s.stats.events_recorded, 0);
+        assert!(s.report().is_clean());
+        assert_eq!(s.events().count(), 0);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(SanMode::parse("race"), SanMode::Race);
+        assert_eq!(SanMode::parse("crash"), SanMode::Crash);
+        assert_eq!(SanMode::parse("FULL"), SanMode::Full);
+        assert_eq!(SanMode::parse("nope"), SanMode::Off);
+    }
+
+    #[test]
+    fn report_ordering_is_deterministic() {
+        let mut s = SanState::new(SanMode::Full);
+        s.register_proc(0, 0);
+        s.register_proc(1, 1);
+        // two bypass writes → one race; one bad ack → one crash report
+        s.lease_acquire(0, "/d");
+        s.write_access(0, "/d/f");
+        s.write_access(1, "/d/f");
+        s.chain_ack(0, ChainId(7), 3, &[1], 0);
+        let r1 = s.report();
+        let r2 = s.report();
+        assert_eq!(r1.violations.len(), 2);
+        assert_eq!(r1.render(), r2.render());
+        assert_eq!(r1.violations.first().map(|v| v.kind), Some(SanViolationKind::Race));
+    }
+
+    #[test]
+    fn event_ring_is_bounded() {
+        let mut s = SanState::new(SanMode::Full);
+        s.register_proc(0, 0);
+        s.lease_acquire(0, "/d");
+        for i in 0..(super::EVENT_RING_CAP as u64 + 100) {
+            s.local_persist(0, i);
+        }
+        assert!(s.events().count() <= super::EVENT_RING_CAP);
+        assert!(s.stats.events_dropped > 0);
+    }
+}

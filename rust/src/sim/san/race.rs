@@ -1,0 +1,213 @@
+//! Happens-before race checker (TSan lock-semantics adapted to Assise's
+//! hierarchical leases).
+//!
+//! Every lease unit carries a vector clock. Acquiring a unit joins the
+//! clocks of all *overlapping* units (ancestor or descendant subtrees —
+//! exactly the hierarchy `managers_overlapping` consults) into the
+//! acquiring actor; every access made **under** a held unit publishes
+//! the actor's clock back into the overlapping units at access time.
+//! Publishing at access time (not release time) is what makes lease
+//! *expiry* sound: an expired read lease is never revoked, but its
+//! reads are already visible to the next acquirer's join.
+//!
+//! An access NOT covered by any held unit publishes nothing — so a
+//! lease-bypass write is unordered with every later (or earlier)
+//! access by another actor, and the epoch test reports the pair. Two
+//! accesses to the same namespace object where at least one is a write
+//! and neither is HB-ordered before the other is a race.
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::vc::ClockTable;
+use crate::fs::path::is_subtree_of;
+
+/// Do two subtree units overlap (equal, ancestor, or descendant)?
+pub fn units_overlap(a: &str, b: &str) -> bool {
+    is_subtree_of(a, b) || is_subtree_of(b, a)
+}
+
+/// One recorded access on a namespace object's shadow state.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    /// interned actor index
+    pub actor: usize,
+    /// the actor's own clock component right after the access
+    pub epoch: u64,
+    /// global op id (monotone; reported on both sides of a race)
+    pub op: u64,
+    pub write: bool,
+}
+
+/// Shadow state per namespace object (path): the last write plus every
+/// read since that write, per actor.
+#[derive(Debug, Default)]
+pub struct ObjectState {
+    pub last_write: Option<Access>,
+    pub reads: HashMap<usize, Access>,
+}
+
+/// A detected unordered conflicting pair.
+#[derive(Debug, Clone)]
+pub struct RacePair {
+    pub object: String,
+    pub first: Access,
+    pub second: Access,
+}
+
+#[derive(Debug, Default)]
+pub struct RaceState {
+    /// lease-unit subtree -> clock of everything published under it
+    lease_vcs: HashMap<String, super::vc::VClock>,
+    /// units each actor has acquired (leases are re-acquired per op, so
+    /// membership here means "covered", not "currently unexpired")
+    held: HashMap<usize, BTreeSet<String>>,
+    objects: HashMap<String, ObjectState>,
+}
+
+impl RaceState {
+    /// Actor acquires `unit`: join every overlapping unit's clock.
+    pub fn acquire(&mut self, clocks: &mut ClockTable, actor: usize, unit: &str) {
+        for (u, vc) in &self.lease_vcs {
+            if units_overlap(u, unit) {
+                clocks.join_clock(actor, vc);
+            }
+        }
+        self.lease_vcs.entry(unit.to_string()).or_default();
+        self.held.entry(actor).or_default().insert(unit.to_string());
+    }
+
+    /// A lease transfer away from `actor` (revocation): publish its
+    /// clock into the unit — belt and braces on top of the access-time
+    /// publish, covering flush effects that are not accesses.
+    pub fn release(&mut self, clocks: &ClockTable, actor: usize, unit: &str) {
+        let snapshot = match clocks.clock(actor) {
+            Some(c) => c.clone(),
+            None => return,
+        };
+        for (u, vc) in self.lease_vcs.iter_mut() {
+            if units_overlap(u, unit) {
+                vc.join(&snapshot);
+            }
+        }
+    }
+
+    /// Record an access and return any race pairs it completes. The
+    /// caller ticks the actor clock and passes the resulting epoch.
+    pub fn access(
+        &mut self,
+        clocks: &ClockTable,
+        actor: usize,
+        path: &str,
+        write: bool,
+        epoch: u64,
+        op: u64,
+    ) -> Vec<RacePair> {
+        // protected iff some held unit covers the path; publish the
+        // actor's post-access clock into every overlapping unit
+        let covered = self
+            .held
+            .get(&actor)
+            .is_some_and(|units| units.iter().any(|u| is_subtree_of(path, u)));
+        if covered {
+            if let Some(snapshot) = clocks.clock(actor).cloned() {
+                for (u, vc) in self.lease_vcs.iter_mut() {
+                    if units_overlap(u, path) {
+                        vc.join(&snapshot);
+                    }
+                }
+            }
+        }
+
+        let cur = Access { actor, epoch, op, write };
+        let mut races = Vec::new();
+        let obj = self.objects.entry(path.to_string()).or_default();
+        let unordered = |prior: &Access| {
+            prior.actor != actor && !clocks.ordered(prior.actor, prior.epoch, actor)
+        };
+        if write {
+            if let Some(w) = &obj.last_write {
+                if unordered(w) {
+                    races.push(RacePair { object: path.to_string(), first: *w, second: cur });
+                }
+            }
+            for r in obj.reads.values() {
+                if unordered(r) {
+                    races.push(RacePair { object: path.to_string(), first: *r, second: cur });
+                }
+            }
+            obj.reads.clear();
+            obj.last_write = Some(cur);
+        } else {
+            if let Some(w) = &obj.last_write {
+                if unordered(w) {
+                    races.push(RacePair { object: path.to_string(), first: *w, second: cur });
+                }
+            }
+            obj.reads.insert(actor, cur);
+        }
+        races
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::vc::{ClockTable, SanActor};
+    use super::*;
+
+    fn setup() -> (ClockTable, RaceState, usize, usize) {
+        let mut t = ClockTable::default();
+        let a = t.idx(SanActor::Proc(0));
+        let b = t.idx(SanActor::Proc(1));
+        (t, RaceState::default(), a, b)
+    }
+
+    #[test]
+    fn leased_writes_are_ordered() {
+        let (mut t, mut r, a, b) = setup();
+        r.acquire(&mut t, a, "/d");
+        let e = t.tick(a);
+        assert!(r.access(&mut t, a, "/d/f", true, e, 1).is_empty());
+        // b acquires the same unit: joins a's published clock
+        r.acquire(&mut t, b, "/d");
+        let e = t.tick(b);
+        assert!(r.access(&mut t, b, "/d/f", true, e, 2).is_empty());
+    }
+
+    #[test]
+    fn bypass_write_races() {
+        let (mut t, mut r, a, b) = setup();
+        r.acquire(&mut t, a, "/d");
+        let e = t.tick(a);
+        assert!(r.access(&mut t, a, "/d/f", true, e, 1).is_empty());
+        // b writes WITHOUT acquiring: no join, no publish
+        let e = t.tick(b);
+        let races = r.access(&mut t, b, "/d/f", true, e, 2);
+        assert_eq!(races.len(), 1);
+        assert_eq!(races.first().map(|p| (p.first.op, p.second.op)), Some((1, 2)));
+    }
+
+    #[test]
+    fn overlapping_units_order_hierarchically() {
+        let (mut t, mut r, a, b) = setup();
+        r.acquire(&mut t, a, "/d/sub");
+        let e = t.tick(a);
+        assert!(r.access(&mut t, a, "/d/sub/f", true, e, 1).is_empty());
+        // ancestor unit overlaps the descendant: still ordered
+        r.acquire(&mut t, b, "/d");
+        let e = t.tick(b);
+        assert!(r.access(&mut t, b, "/d/sub/f", false, e, 2).is_empty());
+    }
+
+    #[test]
+    fn expired_read_lease_still_orders_via_access_publish() {
+        let (mut t, mut r, a, b) = setup();
+        r.acquire(&mut t, a, "/f");
+        let e = t.tick(a);
+        assert!(r.access(&mut t, a, "/f", false, e, 1).is_empty());
+        // no revocation ever happens (expiry); the writer still joins
+        // the read a published at access time
+        r.acquire(&mut t, b, "/f");
+        let e = t.tick(b);
+        assert!(r.access(&mut t, b, "/f", true, e, 2).is_empty());
+    }
+}

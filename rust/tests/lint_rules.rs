@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use crate::lintcore::lexer::{self, Kind};
-use crate::lintcore::rules::{determinism, fault_routing, panic_ratchet};
+use crate::lintcore::rules::{determinism, fault_routing, panic_ratchet, san_funnel};
 use crate::lintcore::{Allowlist, Baseline, Diag, SourceFile};
 
 fn fixture(name: &str) -> String {
@@ -35,6 +35,7 @@ fn check_file(rel: &str, src: &str) -> Vec<Diag> {
     let mut diags = Vec::new();
     fault_routing::check(&file, &mut diags);
     determinism::check(&file, &mut diags);
+    san_funnel::check(&file, &mut diags);
     diags
 }
 
@@ -181,6 +182,35 @@ fn fault_routing_ignores_comments_and_strings() {
     assert!(diags.is_empty(), "{diags:?}");
 }
 
+// =========================================================== san-funnel
+
+#[test]
+fn san_funnel_flags_direct_funnel_state_mutation() {
+    let src = fixture("san_funnel_violation.rs");
+    let diags = check_file("rust/src/cluster/demo.rs", &src);
+    let hits: Vec<&Diag> = diags.iter().filter(|d| d.rule == "san-funnel").collect();
+    assert_eq!(hits.len(), 4, "versions.bump, leases.acquire, and both cursor advances: {diags:?}");
+}
+
+#[test]
+fn san_funnel_skips_test_regions_comments_and_strings() {
+    // the violation fixture's #[cfg(test)] poke must be among the 4 above,
+    // and the clean fixture (funnel calls + mentions in strings) is silent
+    let diags = check_file("rust/src/cluster/demo.rs", &fixture("san_funnel_clean.rs"));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn san_funnel_is_silent_under_the_owning_modules() {
+    let src = fixture("san_funnel_violation.rs");
+    let mut allow = Allowlist::new();
+    allow.insert("san-funnel".to_string(), vec!["rust/src/sim/".to_string()]);
+    let file = SourceFile::load("rust/src/sim/demo.rs", &src, &allow);
+    let mut diags = Vec::new();
+    san_funnel::check(&file, &mut diags);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
 // ========================================================== determinism
 
 #[test]
@@ -312,7 +342,14 @@ fn baseline_render_roundtrips_through_the_parser() {
 fn seeded_tree_trips_every_rule() {
     let outcome = lintcore::run(&tree_root(), &Allowlist::new(), &Baseline::new()).unwrap();
     let rules: Vec<&str> = outcome.diags.iter().map(|d| d.rule).collect();
-    for rule in ["fault-routing", "determinism", "nanos-sub", "panic-ratchet", "registration"] {
+    for rule in [
+        "fault-routing",
+        "determinism",
+        "nanos-sub",
+        "panic-ratchet",
+        "registration",
+        "san-funnel",
+    ] {
         assert!(rules.contains(&rule), "seeded tree must trip `{rule}`, got {rules:?}");
     }
 }

@@ -10,6 +10,8 @@
 //!   nanos-sub      — no non-saturating timestamp subtraction in sim//hw/
 //!   panic-ratchet  — per-module panic-site counts vs baseline.toml
 //!   registration   — tests/benches registered, bench rows documented
+//!   san-funnel     — no direct lease/version/log-cursor mutation outside
+//!                    the sanitizer-instrumented funnels
 //!
 //! Exit codes: 0 clean, 1 violations, 2 usage or config error.
 
@@ -159,6 +161,7 @@ pub fn run(root: &Path, allowlist: &Allowlist, baseline: &Baseline) -> Result<Li
 
         rules::fault_routing::check(&file, &mut diags);
         rules::determinism::check(&file, &mut diags);
+        rules::san_funnel::check(&file, &mut diags);
 
         if let Some(module) = rules::panic_ratchet::module_of(&rel) {
             let counts = rules::panic_ratchet::count_file(&file);

@@ -8,3 +8,4 @@ pub mod determinism;
 pub mod fault_routing;
 pub mod panic_ratchet;
 pub mod registration;
+pub mod san_funnel;

@@ -1,0 +1,99 @@
+//! Rule `san-funnel`: shared coherence state must be mutated through the
+//! sanitizer-instrumented funnels.
+//!
+//! PR 9 threaded `sim::san` shadow events through every protocol funnel:
+//! lease acquire/release, update-log cursor advances
+//! (`mark_replicated` / `mark_chain_replicated` / `mark_digested`), and
+//! `VersionTable` transitions (`versions.bump` / `versions.promote`).
+//! The happens-before and crash checkers are only sound if those are the
+//! ONLY mutation paths — a direct cursor or lease-table poke from
+//! elsewhere changes durable state the sanitizer never observes, so
+//! races and lost-ack windows through it are silently missed.
+//!
+//! Allowlisted: `sim/` (the instrumented funnels themselves), `oplog/`,
+//! `sharedfs/`, and `coherence/` (the owning modules and their internal
+//! helpers). `#[cfg(test)]` regions are skipped everywhere: unit tests
+//! legitimately drive the structures they own.
+
+use super::super::lexer::{in_regions, Kind, Token};
+use super::super::{Diag, SourceFile};
+
+pub const NAME: &str = "san-funnel";
+
+/// `.versions.bump(` / `.versions.promote(` receivers.
+const VERSION_TABLE: &[&str] = &["bump", "promote"];
+/// `.leases.acquire(` / `.leases.revoke(` / `.leases.revoke_all(`.
+const LEASE_TABLE: &[&str] = &["acquire", "revoke", "revoke_all"];
+/// Bare update-log cursor advances: `.mark_replicated(` etc.
+const LOG_CURSORS: &[&str] = &["mark_replicated", "mark_chain_replicated", "mark_digested"];
+
+pub fn check(file: &SourceFile, diags: &mut Vec<Diag>) {
+    let toks = &file.tokens;
+    for i in 0..toks.len() {
+        if in_regions(&file.test_regions, i) {
+            continue;
+        }
+        if let Some((line, field, method)) = field_method_call(toks, i) {
+            let hit = (field == "versions" && VERSION_TABLE.contains(&method))
+                || (field == "leases" && LEASE_TABLE.contains(&method));
+            if hit {
+                file.diag(
+                    diags,
+                    NAME,
+                    line,
+                    &format!(
+                        "direct `.{field}.{method}(` outside the instrumented funnels — the \
+                         sanitizer never sees this mutation, so races and lost-durability \
+                         windows through it go undetected; route it through the sim layer"
+                    ),
+                );
+            }
+        }
+        if let Some((line, method)) = cursor_advance(toks, i) {
+            file.diag(
+                diags,
+                NAME,
+                line,
+                &format!(
+                    "direct `.{method}(` advances an update-log cursor invisibly to the \
+                     crash-consistency checker; use the replication/digest funnels"
+                ),
+            );
+        }
+    }
+}
+
+/// `. <field> . <method> (` — returns (line, field, method).
+fn field_method_call<'t>(toks: &'t [Token], i: usize) -> Option<(u32, &'t str, &'t str)> {
+    let dot0 = toks.get(i)?;
+    let field = toks.get(i + 1)?;
+    let dot1 = toks.get(i + 2)?;
+    let method = toks.get(i + 3)?;
+    let paren = toks.get(i + 4)?;
+    let hit = dot0.text == "."
+        && field.kind == Kind::Ident
+        && dot1.text == "."
+        && method.kind == Kind::Ident
+        && paren.text == "(";
+    if hit {
+        Some((method.line, field.text.as_str(), method.text.as_str()))
+    } else {
+        None
+    }
+}
+
+/// `. mark_* (` — returns (line, method).
+fn cursor_advance<'t>(toks: &'t [Token], i: usize) -> Option<(u32, &'t str)> {
+    let dot = toks.get(i)?;
+    let method = toks.get(i + 1)?;
+    let paren = toks.get(i + 2)?;
+    let hit = dot.text == "."
+        && method.kind == Kind::Ident
+        && LOG_CURSORS.contains(&method.text.as_str())
+        && paren.text == "(";
+    if hit {
+        Some((method.line, method.text.as_str()))
+    } else {
+        None
+    }
+}

@@ -1,0 +1,10 @@
+// Fixture: the same effects routed through the sim-layer funnels, plus
+// mentions in comments/strings that must stay silent — a doc saying
+// "call .versions.bump( here" or ".mark_digested(" is not a mutation.
+fn route(c: &mut Cluster, pid: usize, now: u64) -> u64 {
+    let doc = "never call .leases.acquire( or .mark_chain_replicated( directly";
+    let t = c.acquire_lease_unit(pid, "/a", LeaseMode::Write, now);
+    /* .versions.promote( in a comment stays silent */
+    let t = c.replicate_window(pid, t);
+    c.digest_log_at(pid, t) + doc.len() as u64
+}

@@ -1,0 +1,18 @@
+// Fixture: direct mutations of sanitizer-funneled state. The lint_rules
+// test loads this with rel = "rust/src/cluster/demo.rs", so all FOUR
+// production sites below must fire; the #[cfg(test)] poke must not.
+fn poke(sfs: &mut SharedFs, log: &mut UpdateLog, pid: usize, now: u64) {
+    sfs.versions.bump(7, now, now);
+    sfs.leases.acquire("/a", LeaseMode::Write, pid, now, 1_000);
+    log.mark_chain_replicated(ChainId(0), 3);
+    log.mark_digested(2);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unit_tests_may_drive_owned_structures() {
+        let mut l = UpdateLog::new();
+        l.mark_replicated(1); // test region: skipped
+    }
+}

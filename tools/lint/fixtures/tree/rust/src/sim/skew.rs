@@ -1,6 +1,7 @@
 // Seeded violations: fault-routing (raw fabric.rpc), determinism
 // (Instant), nanos-sub (now - sent_at), panic-ratchet (unwrap + index
-// over a zero baseline).
+// over a zero baseline), san-funnel (direct log-cursor advance; the
+// tree's allowlist is empty, so sim/ is not carved out here).
 use std::time::Instant;
 
 fn hop(fabric: &mut Fabric, now: u64, sent_at: u64) -> u64 {
@@ -12,4 +13,8 @@ fn hop(fabric: &mut Fabric, now: u64, sent_at: u64) -> u64 {
 
 fn pick(xs: &[u64]) -> u64 {
     xs.first().unwrap() + xs[0]
+}
+
+fn advance(log: &mut UpdateLog) {
+    log.mark_digested(2);
 }
