@@ -718,6 +718,157 @@ fn bench_repl_window_adaptive(fixed: Option<usize>, cycles: usize) -> PerfRow {
     }
 }
 
+/// Capacity-pressure tiering acceptance rows: the IDENTICAL Zipfian
+/// read stream (10% of the files take 90% of the reads) is driven
+/// against a fileset sized at 10× the NVM hot tier
+/// (`tier_pressure_zipf_read_p99` — the background daemon must keep NVM
+/// bounded by demoting cold, clean extents to SSD and the modeled
+/// capacity tier, and promotion-on-read must pull the hot set back into
+/// NVM) and against an uncapped hot tier (`tier_pressure_control` — the
+/// daemon must be provably free when the working set fits: zero
+/// migrations, zero accounting churn). `virtual_ns` on these rows is
+/// the **p99 modeled read latency**, not a duration; the in-crate test
+/// and the CI `tier-pressure-smoke` job enforce the pressure/control
+/// p99 ratio from `BENCH_perf.json`. The function itself asserts
+/// bounded NVM under pressure (`hot_overflow == 0` after the last
+/// digest) and daemon quiescence in the control.
+fn bench_tier_pressure(pressure: bool, reads: usize) -> PerfRow {
+    use crate::sim::{Cluster, ClusterConfig, DistFs};
+    const FILES: u64 = 80;
+    const FILE_SZ: u64 = 256 << 10; // fileset: 80 × 256 KiB = 20 MiB
+    const NVM: u64 = 2 << 20; // hot tier holds 1/10 of the fileset
+    const READ_CHUNK: u64 = 64 << 10;
+    let mut cfg = ClusterConfig::default().nodes(2).read_cache(4096);
+    if pressure {
+        cfg = cfg
+            .hot_capacity(NVM)
+            .ssd(4 * NVM)
+            .capacity_tier(64 << 20)
+            // virtual read gaps are tens of µs: a 1 ms anti-thrash
+            // window still lets the hot set promote within the run
+            .promote_hysteresis(1_000_000);
+    }
+    let mut c = Cluster::new(cfg);
+    let pid = c.spawn_process(0, 0);
+    let mut fds = Vec::new();
+    for f in 0..FILES {
+        let fd = c.create(pid, &format!("/z{f}")).unwrap();
+        c.pwrite(pid, fd, 0, Payload::zero(FILE_SZ)).unwrap();
+        fds.push(fd);
+        // fsync flushes the whole process log, so every prior write is
+        // replicated (hence evictable) before each digest sweeps
+        if f % 8 == 7 {
+            c.fsync(pid, fd).unwrap();
+            c.digest_log(pid).unwrap();
+        }
+    }
+    let mut rng = SplitMix64::new(41);
+    let mut lat = crate::metrics::Hist::new();
+    let mut read_bytes = 0u64;
+    stats::reset();
+    let t_host = Instant::now();
+    for _ in 0..reads {
+        let f = rng.skewed(FILES, 0.1, 0.9) as usize;
+        let off = rng.below(FILE_SZ / READ_CHUNK) * READ_CHUNK;
+        let t0 = c.now(pid);
+        let out = c.pread(pid, fds[f], off, READ_CHUNK).unwrap();
+        std::hint::black_box(out.len());
+        read_bytes += READ_CHUNK;
+        lat.record(c.now(pid).saturating_sub(t0));
+    }
+    let total_ns = t_host.elapsed().as_nanos();
+    if pressure {
+        assert!(
+            c.tiering.stats.demotions > 0,
+            "a 10x working set never crossed the NVM watermark"
+        );
+        assert_eq!(
+            c.nodes[0].sockets[0].sharedfs.hot_overflow(),
+            0,
+            "NVM occupancy unbounded under capacity pressure"
+        );
+    } else {
+        assert!(c.tiering.inert(), "uncapped hot tier must leave the daemon inert");
+        assert!(c.tiering.stats.is_quiescent(), "inert daemon did tiering work");
+    }
+    PerfRow {
+        name: if pressure {
+            "tier_pressure_zipf_read_p99".to_string()
+        } else {
+            "tier_pressure_control".to_string()
+        },
+        ops: reads as u64,
+        total_ns,
+        copied_bytes: stats::copied_bytes(),
+        materializations: stats::materializations(),
+        wire_bytes: Some(read_bytes),
+        virtual_ns: Some(lat.p99()),
+    }
+}
+
+/// Write hammer at 4× the NVM hot tier with every write fsync-acked and
+/// periodic digests forcing the eviction daemon to demote mid-stream —
+/// then a node kill + failover. Zero acknowledged writes may be lost:
+/// eviction only ever touches clean, replicated extents, so the backup
+/// must serve every acked byte, including ones its own daemon demoted
+/// to SSD or the capacity tier (refetched through the demoted-read
+/// path). `virtual_ns` is the modeled duration of the write phase under
+/// eviction pressure.
+fn bench_tier_evict_storm(total_ops: usize) -> PerfRow {
+    use crate::sim::{Cluster, ClusterConfig, DistFs};
+    const CHUNK: u64 = 16 << 10;
+    const NVM: u64 = 1 << 20;
+    let mut c = Cluster::new(
+        ClusterConfig::default()
+            .nodes(3)
+            .replication(3)
+            .hot_capacity(NVM)
+            .ssd(4 * NVM)
+            .capacity_tier(64 << 20),
+    );
+    let pid = c.spawn_process(0, 0);
+    let fd = c.create(pid, "/f").unwrap();
+    let chunk = Payload::zero(CHUNK);
+    stats::reset();
+    let t_host = Instant::now();
+    let t0 = c.now(pid);
+    for k in 0..total_ops as u64 {
+        c.pwrite(pid, fd, k * CHUNK, chunk.clone()).unwrap();
+        c.fsync(pid, fd).unwrap(); // every write acked before the fault
+        if k % 32 == 31 {
+            c.digest_log(pid).unwrap();
+        }
+    }
+    c.digest_log(pid).unwrap();
+    let virtual_ns = c.now(pid).saturating_sub(t0);
+    let total_ns = t_host.elapsed().as_nanos();
+    assert!(c.tiering.stats.demotions > 0, "storm never triggered eviction");
+    // the fault: kill the writer's node mid-pressure and require every
+    // acknowledged byte back from a backup, demoted tiers included
+    let t_fail = c.now(pid);
+    c.kill_node(0, t_fail).unwrap();
+    let (np, report) = c.failover_process(pid, 1, 0, t_fail).unwrap();
+    assert_eq!(report.lost_entries, 0, "acked write lost under eviction pressure");
+    let size = c.stat(np, "/f").unwrap().size;
+    assert_eq!(size, total_ops as u64 * CHUNK, "backup serves short file after eviction");
+    let fd2 = c.open(np, "/f").unwrap();
+    let mut rng = SplitMix64::new(43);
+    for _ in 0..16 {
+        let off = rng.below(total_ops as u64) * CHUNK;
+        let out = c.pread(np, fd2, off, CHUNK).unwrap();
+        assert_eq!(out.len() as u64, CHUNK, "demoted byte unreadable after failover");
+    }
+    PerfRow {
+        name: "tier_pressure_zipf_evict_storm".to_string(),
+        ops: total_ops as u64,
+        total_ns,
+        copied_bytes: stats::copied_bytes(),
+        materializations: stats::materializations(),
+        wire_bytes: Some(total_ops as u64 * CHUNK),
+        virtual_ns: Some(virtual_ns),
+    }
+}
+
 /// Render the rows as the machine-readable `BENCH_perf.json` document.
 pub fn to_json(rows: &[PerfRow], scale: f64) -> String {
     let mut out = String::from("{\n");
@@ -787,6 +938,9 @@ pub const PERF_ROW_IDS: &[&str] = &[
     "ns_scaling_16threads",
     "ns_scaling_16threads_lockns",
     "repl_window_adaptive",
+    "tier_pressure_zipf_read_p99",
+    "tier_pressure_zipf_evict_storm",
+    "tier_pressure_control",
 ];
 
 /// Run every microbenchmark. `scale` multiplies the iteration counts
@@ -837,6 +991,12 @@ pub fn run_rows(scale: Scale) -> Vec<PerfRow> {
         // bursty writer under the BDP/AIMD window controller (the fixed
         // {1,2,4,8,16} sweep it must beat runs in the in-crate test)
         bench_repl_window_adaptive(None, scale.ops(3).clamp(2, 4)),
+        // capacity-pressure tiering: the Zipfian read stream over a
+        // fileset 10x the NVM tier, its eviction-storm kill/failover
+        // twin, and the uncapped control the p99 is judged against
+        bench_tier_pressure(true, scale.ops(384).clamp(96, 1024)),
+        bench_tier_evict_storm(scale.ops(256).clamp(96, 512)),
+        bench_tier_pressure(false, scale.ops(384).clamp(96, 1024)),
     ]
 }
 
@@ -886,6 +1046,7 @@ pub fn run(scale: Scale) -> Table {
     t.note("failover_partition must finish within 3x failover_clean_kill virtual time (zero lost acks in both)");
     t.note("ns_scaling_* rows: modeled ops/s monotone in cores, 16 threads >=2x 1 thread, copied_bytes == 0");
     t.note("repl_window_adaptive must beat every fixed repl_window in {1,2,4,8,16} on modeled ops/s (in-crate sweep)");
+    t.note("tier_pressure_zipf_read_p99 (virtual_ns = p99 read latency) must stay within the CI-enforced multiple of tier_pressure_control; the control's daemon must be quiescent");
     t
 }
 
@@ -1086,6 +1247,38 @@ mod tests {
                 "adaptive {a:.3e} ops/ns must beat fixed window {w} at {fw:.3e}"
             );
         }
+    }
+
+    #[test]
+    fn tier_pressure_p99_within_bound_of_control() {
+        // the tiering tentpole's acceptance: the identical Zipfian read
+        // stream over a fileset 10x the NVM tier may pay for SSD and
+        // capacity round trips at the tail, but the promotion path must
+        // keep the p99 within a bounded multiple of the uncapped
+        // control (the bench functions themselves assert bounded NVM
+        // occupancy and a quiescent control daemon)
+        let hot = bench_tier_pressure(true, 96);
+        let ctl = bench_tier_pressure(false, 96);
+        assert_eq!(hot.name, "tier_pressure_zipf_read_p99");
+        assert_eq!(ctl.name, "tier_pressure_control");
+        assert_eq!(hot.ops, ctl.ops, "identical read streams");
+        let h = hot.virtual_ns.unwrap();
+        let c = ctl.virtual_ns.unwrap().max(1);
+        assert!(h >= c, "capacity pressure cannot make the tail faster");
+        assert!(
+            h <= 300 * c,
+            "pressure p99 {h}ns blows past 300x control p99 {c}ns"
+        );
+    }
+
+    #[test]
+    fn evict_storm_loses_no_acked_writes() {
+        // the bench function itself asserts the load-bearing parts:
+        // eviction actually fired, the failover report lost zero acked
+        // entries, and every demoted byte is still readable
+        let r = bench_tier_evict_storm(96);
+        assert_eq!(r.name, "tier_pressure_zipf_evict_storm");
+        assert!(r.virtual_ns.unwrap() > 0);
     }
 
     #[test]

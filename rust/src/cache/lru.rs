@@ -45,18 +45,37 @@ impl<K: Eq + Hash + Clone> Lru<K> {
         self.used += bytes;
         let mut victims = Vec::new();
         while self.used > self.capacity && self.entries.len() > 1 {
-            let (&oldest, _) = self.order.iter().next().unwrap();
-            let vk = self.order.remove(&oldest).unwrap();
+            let Some((&oldest, _)) = self.order.iter().next() else { break };
+            let Some(vk) = self.order.remove(&oldest) else { break };
             if vk == key {
                 // shouldn't happen (len > 1 guard + fresh stamp), but be safe
                 self.order.insert(oldest, vk);
                 break;
             }
-            let (_, vb) = self.entries.remove(&vk).unwrap();
+            let Some((_, vb)) = self.entries.remove(&vk) else { break };
             self.used -= vb;
             victims.push((vk, vb));
         }
         victims
+    }
+
+    /// Pop the coldest entries until at least `bytes` have been freed (or
+    /// the map is empty), oldest first. Caller-driven, independent of the
+    /// configured capacity: the tiering daemon drains toward a watermark
+    /// target even when this index itself is unbounded.
+    pub fn drain_coldest(&mut self, bytes: u64) -> Vec<(K, u64)> {
+        let mut out = Vec::new();
+        let mut freed = 0u64;
+        while freed < bytes {
+            let Some((&oldest, k)) = self.order.iter().next() else { break };
+            let k = k.clone();
+            self.order.remove(&oldest);
+            let Some((_, b)) = self.entries.remove(&k) else { break };
+            self.used -= b;
+            freed += b;
+            out.push((k, b));
+        }
+        out
     }
 
     /// Refresh recency; true if present.
@@ -175,6 +194,25 @@ mod tests {
         let freed = l.remove_matching(|k| k.0 == 1);
         assert_eq!(freed, 20);
         assert_eq!(l.len(), 1);
+    }
+
+    #[test]
+    fn drain_coldest_pops_oldest_first_and_is_budget_independent() {
+        let mut l = Lru::new(u64::MAX); // unbounded index
+        l.insert("a", 10);
+        l.insert("b", 20);
+        l.insert("c", 30);
+        l.touch(&"a"); // order now b, c, a
+        let drained = l.drain_coldest(25);
+        assert_eq!(drained, vec![("b", 20), ("c", 30)]);
+        assert_eq!(l.used(), 10);
+        assert!(l.contains(&"a"));
+        // draining more than remains empties the index without panicking
+        let rest = l.drain_coldest(u64::MAX);
+        assert_eq!(rest, vec![("a", 10)]);
+        assert!(l.is_empty());
+        assert_eq!(l.used(), 0);
+        assert!(l.drain_coldest(1).is_empty());
     }
 
     #[test]

@@ -25,10 +25,13 @@ pub enum Tier {
     Reserve,
     /// SSD cold shared area.
     Cold,
+    /// Modeled disaggregated capacity tier beyond the local SSD
+    /// (object-store-style; reached over the fabric).
+    Capacity,
 }
 
 /// Number of [`Tier`] variants (size of per-tier counter arrays).
-pub const TIER_COUNT: usize = 3;
+pub const TIER_COUNT: usize = 4;
 
 impl Tier {
     /// Dense index for per-tier counter arrays.
@@ -38,6 +41,7 @@ impl Tier {
             Tier::Hot => 0,
             Tier::Reserve => 1,
             Tier::Cold => 2,
+            Tier::Capacity => 3,
         }
     }
 }
@@ -221,6 +225,32 @@ impl ExtentMap {
             let seg = data.slice(s - off, l);
             self.write(s, seg, tier, now);
         }
+    }
+
+    /// Move every extent currently tagged `from` to `to` (whole-file
+    /// demote/promote step for the tiering daemon). Zero-copy: extents
+    /// move wholesale, no split, no payload bytes touched. Returns the
+    /// bytes moved.
+    pub fn retier_matching(&mut self, from: Tier, to: Tier, now: u64) -> u64 {
+        if from == to {
+            return 0;
+        }
+        let keys: Vec<u64> = self
+            .map
+            .iter()
+            .filter(|(_, e)| e.tier == from)
+            .map(|(&s, _)| s)
+            .collect();
+        let mut moved = 0u64;
+        for s in keys {
+            if let Some(mut e) = self.take(s) {
+                e.tier = to;
+                e.last_access = now;
+                moved += e.len();
+                self.put(s, e);
+            }
+        }
+        moved
     }
 
     /// Truncate the file to `size` bytes.
@@ -424,6 +454,66 @@ mod tests {
         let (p, _) = m.read(gb / 2, 16);
         assert_eq!(p.len(), 16);
         assert_eq!(p.materialize(), Payload::synthetic(1, gb).slice(gb / 2, 16).materialize());
+    }
+
+    #[test]
+    fn retier_partial_overlap_is_zero_copy() {
+        let mut m = ExtentMap::new();
+        m.write(0, Payload::bytes(vec![1u8; 4096]), Tier::Hot, 0);
+        // hole 4096..8192, then a second extent
+        m.write(8192, Payload::bytes(vec![2u8; 4096]), Tier::Hot, 0);
+        crate::fs::payload::stats::reset();
+        // range straddles both extents partially and spans the hole
+        m.retier(2048, 8192, Tier::Cold, 1);
+        assert_eq!(crate::fs::payload::stats::copied_bytes(), 0, "retier must be zero-copy");
+        assert_eq!(
+            m.tiers_in(0, 16384),
+            vec![
+                (0, 2048, Tier::Hot),
+                (2048, 2048, Tier::Cold),
+                (8192, 2048, Tier::Cold),
+                (10240, 2048, Tier::Hot),
+            ]
+        );
+        assert_eq!(m.tier_snapshot(), recount(&m));
+    }
+
+    #[test]
+    fn retier_zero_length_and_hole_only_are_noops() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"abcd"), Tier::Hot, 0);
+        crate::fs::payload::stats::reset();
+        m.retier(0, 0, Tier::Cold, 1); // zero-length range
+        m.retier(100, 50, Tier::Cold, 1); // hole-only range
+        assert_eq!(crate::fs::payload::stats::copied_bytes(), 0);
+        assert_eq!(m.tiers_in(0, 4), vec![(0, 4, Tier::Hot)]);
+        assert_eq!(m.bytes_in_tier(Tier::Cold), 0);
+        assert_eq!(m.tier_snapshot(), recount(&m));
+    }
+
+    #[test]
+    fn tiers_in_zero_length_is_empty() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"abcd"), Tier::Hot, 0);
+        assert!(m.tiers_in(2, 0).is_empty());
+        assert!(m.tiers_in(100, 4).is_empty());
+    }
+
+    #[test]
+    fn retier_matching_moves_only_source_tier() {
+        let mut m = ExtentMap::new();
+        m.write(0, b(b"hot!"), Tier::Hot, 0);
+        m.write(4, b(b"cold"), Tier::Cold, 0);
+        m.write(8, b(b"capa"), Tier::Capacity, 0);
+        crate::fs::payload::stats::reset();
+        let moved = m.retier_matching(Tier::Cold, Tier::Capacity, 7);
+        assert_eq!(moved, 4);
+        assert_eq!(crate::fs::payload::stats::copied_bytes(), 0, "retier_matching must be zero-copy");
+        assert_eq!(m.bytes_in_tier(Tier::Hot), 4);
+        assert_eq!(m.bytes_in_tier(Tier::Cold), 0);
+        assert_eq!(m.bytes_in_tier(Tier::Capacity), 8);
+        assert_eq!(m.retier_matching(Tier::Hot, Tier::Hot, 9), 0, "same-tier move is a no-op");
+        assert_eq!(m.tier_snapshot(), recount(&m));
     }
 
     #[test]

@@ -609,6 +609,21 @@ impl FileStore {
         Ok(())
     }
 
+    /// Migrate every extent of `ino` currently in `from` to `to`
+    /// (whole-file tiering-daemon demote/promote; zero-copy, counter
+    /// exact). Returns the bytes moved.
+    pub fn retier_all(&mut self, ino: Ino, from: Tier, to: Tier, now: u64) -> Result<u64> {
+        let node = self
+            .inodes
+            .get_mut(&ino)
+            .ok_or(FsError::NotFound(format!("ino {ino}")))?;
+        let before = node.extents.tier_snapshot();
+        let moved = node.extents.retier_matching(from, to, now);
+        let after = node.extents.tier_snapshot();
+        self.apply_tier_delta(before, after);
+        Ok(moved)
+    }
+
     pub fn stat_ino(&self, ino: Ino) -> Result<Stat> {
         let n = self
             .inodes
@@ -902,7 +917,7 @@ mod tests {
         let (p, _) = s.read_at(s.resolve("/b").unwrap(), 0, 3).unwrap();
         assert_eq!(p.materialize(), b"src");
         // replaced destination's bytes no longer counted
-        assert_eq!(s.recount_tier_bytes(), [3, 0, 0]);
+        assert_eq!(s.recount_tier_bytes(), [3, 0, 0, 0]);
         assert_eq!(s.bytes_in_tier(Tier::Hot), 3);
     }
 
@@ -979,7 +994,7 @@ mod tests {
         s.invalidate_ino(ino);
         assert_eq!(s.bytes_in_tier(Tier::Hot), 0);
         assert_eq!(s.bytes_in_tier(Tier::Cold), 0);
-        assert_eq!(s.recount_tier_bytes(), [0, 0, 0]);
+        assert_eq!(s.recount_tier_bytes(), [0, 0, 0, 0]);
     }
 
     #[test]

@@ -68,6 +68,15 @@ pub struct HwParams {
     /// SSD IO granularity (bytes) — sub-block IO is amplified.
     pub ssd_block: u64,
 
+    // ------------------------------------------- disaggregated capacity
+    /// Per-access latency of the modeled disaggregated capacity tier
+    /// (object-store request path; well above NVMe-oF SSD).
+    pub cap_lat: Nanos,
+    /// Capacity-tier sequential read bandwidth (GB/s).
+    pub cap_read_bw: f64,
+    /// Capacity-tier sequential write bandwidth (GB/s).
+    pub cap_write_bw: f64,
+
     // ------------------------------------------------ software overheads
     /// FUSE user-kernel-user crossing (§5.2: "around 10 µs").
     pub fuse_lat: Nanos,
@@ -170,6 +179,10 @@ impl Default for HwParams {
             ssd_read_bw: 2.4,
             ssd_write_bw: 2.0,
             ssd_block: 4096,
+
+            cap_lat: 100_000,
+            cap_read_bw: 1.2,
+            cap_write_bw: 1.0,
 
             fuse_lat: 10_000,
             page_size: 4096,

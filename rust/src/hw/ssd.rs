@@ -45,12 +45,99 @@ impl SsdDevice {
         true
     }
 
-    pub fn free(&mut self, bytes: u64) {
-        self.used = self.used.saturating_sub(bytes);
+    /// Release `bytes` of capacity accounting. Strict: freeing more than
+    /// is allocated means a double-free somewhere in tier accounting — it
+    /// debug-asserts, and in release builds clamps to zero and returns
+    /// `false` so the caller can count the underflow
+    /// (`metrics::TierStats::free_underflows`).
+    #[must_use]
+    pub fn free(&mut self, bytes: u64) -> bool {
+        debug_assert!(
+            bytes <= self.used,
+            "SsdDevice::free underflow: freeing {bytes} with only {} allocated",
+            self.used
+        );
+        if bytes > self.used {
+            self.used = 0;
+            return false;
+        }
+        self.used -= bytes;
+        true
     }
 
     pub fn used(&self) -> u64 {
         self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn reboot(&mut self) {
+        self.queue.reset(); // contents persist
+    }
+}
+
+/// Modeled disaggregated capacity tier (paper §A.1's cold shared area
+/// generalized past the local SSD, per the PM-survey taxonomy): an
+/// object-store-style device reached over the fabric. No block
+/// granularity — transfers are charged at the raw byte count, with a
+/// fixed per-access latency standing in for the store's request path.
+/// Like the SSD, contents survive reboot.
+#[derive(Debug, Clone)]
+pub struct CapacityDevice {
+    pub queue: BwQueue,
+    capacity: u64,
+    used: u64,
+}
+
+impl CapacityDevice {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            queue: BwQueue::new(),
+            capacity,
+            used: 0,
+        }
+    }
+
+    pub fn write(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        self.queue.access(now, bytes, p.cap_lat, p.cap_write_bw)
+    }
+
+    pub fn read(&mut self, now: Nanos, bytes: u64, p: &HwParams) -> Nanos {
+        self.queue.access(now, bytes, p.cap_lat, p.cap_read_bw)
+    }
+
+    pub fn alloc(&mut self, bytes: u64) -> bool {
+        if self.used + bytes > self.capacity {
+            return false;
+        }
+        self.used += bytes;
+        true
+    }
+
+    /// Strict free — same contract as [`SsdDevice::free`].
+    #[must_use]
+    pub fn free(&mut self, bytes: u64) -> bool {
+        debug_assert!(
+            bytes <= self.used,
+            "CapacityDevice::free underflow: freeing {bytes} with only {} allocated",
+            self.used
+        );
+        if bytes > self.used {
+            self.used = 0;
+            return false;
+        }
+        self.used -= bytes;
+        true
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
     }
 
     pub fn reboot(&mut self) {
@@ -79,5 +166,36 @@ mod tests {
         let t = ssd.read(0, 4096, &p);
         // 10us latency + ~1.7us service ≫ NVM's sub-us
         assert!(t > 10_000);
+    }
+
+    #[test]
+    fn capacity_tier_slower_than_ssd() {
+        let p = HwParams::default();
+        let mut ssd = SsdDevice::new(1 << 30);
+        let mut cap = CapacityDevice::new(1 << 30);
+        assert!(cap.read(0, 1 << 20, &p) > ssd.read(0, 1 << 20, &p));
+    }
+
+    #[test]
+    fn alloc_free_balanced_accounting() {
+        let mut ssd = SsdDevice::new(100);
+        assert!(ssd.alloc(60));
+        assert!(!ssd.alloc(60), "over-capacity alloc must fail");
+        assert!(ssd.free(60), "balanced free succeeds");
+        assert_eq!(ssd.used(), 0);
+        let mut cap = CapacityDevice::new(100);
+        assert!(cap.alloc(100));
+        assert!(!cap.alloc(1));
+        assert!(cap.free(100));
+        assert_eq!(cap.used(), 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "free underflow")]
+    fn free_underflow_asserts_in_debug() {
+        let mut ssd = SsdDevice::new(100);
+        assert!(ssd.alloc(10));
+        let _ = ssd.free(11);
     }
 }

@@ -264,6 +264,67 @@ pub struct SanStats {
     pub stale_serve_reports: u64,
     /// confirmed torn mid-epoch snapshot reads
     pub torn_reports: u64,
+    /// extent demotions run through the eviction funnel
+    pub evictions_checked: u64,
+    /// confirmed dirty / sole-durable-copy / retired-member demotions
+    pub evict_unreplicated_reports: u64,
+    /// confirmed pre-eviction bytes served from a retired member
+    pub evicted_byte_served_reports: u64,
+}
+
+/// Capacity-pressure tiering counters (`sim/tiering.rs`): what the
+/// background migration daemon demoted/promoted, what it refused to
+/// touch, and the per-tier byte occupancy over virtual time. The
+/// no-pressure contract is observable here: with tiers under their
+/// watermarks every counter but the time series stays zero.
+#[derive(Debug, Clone, Default)]
+pub struct TierStats {
+    /// extents demoted out of NVM (Hot→Cold)
+    pub demotions: u64,
+    /// bytes those demotions moved
+    pub demoted_bytes: u64,
+    /// demotions that continued SSD→capacity tier (Cold→Capacity)
+    pub demotions_to_capacity: u64,
+    /// extents promoted back into NVM on read
+    pub promotions: u64,
+    /// bytes those promotions moved
+    pub promoted_bytes: u64,
+    /// promotions suppressed by the anti-thrash hysteresis or by NVM
+    /// admission control (tier already at its high-watermark)
+    pub promotion_suppressed: u64,
+    /// sweeps that could not reach the low-watermark because every
+    /// remaining resident was pinned (dirty/unreplicated) or the
+    /// downstream device was full
+    pub eviction_stalls: u64,
+    /// strict device-accounting underflows observed in release builds
+    /// ([`crate::hw::ssd::SsdDevice::free`] contract); debug builds
+    /// assert instead
+    pub free_underflows: u64,
+    /// eviction candidates skipped because `VersionTable` said dirty
+    /// (unreplicated bytes are pinned to NVM)
+    pub pinned_skips: u64,
+    /// NVM hot-area occupancy over virtual time (bytes as the y-value)
+    pub nvm_bytes: TimeSeries,
+    /// SSD cold-area occupancy over virtual time
+    pub ssd_bytes: TimeSeries,
+    /// capacity-tier occupancy over virtual time
+    pub cap_bytes: TimeSeries,
+}
+
+impl TierStats {
+    /// True when the daemon never moved or refused anything — the
+    /// no-pressure control row's "the daemon is free" assertion.
+    pub fn is_quiescent(&self) -> bool {
+        self.demotions == 0
+            && self.demoted_bytes == 0
+            && self.demotions_to_capacity == 0
+            && self.promotions == 0
+            && self.promoted_bytes == 0
+            && self.promotion_suppressed == 0
+            && self.eviction_stalls == 0
+            && self.free_underflows == 0
+            && self.pinned_skips == 0
+    }
 }
 
 /// CRAQ apportioned-read counters: how reads were served once the
@@ -442,6 +503,19 @@ mod tests {
         // oldest evicted, newest retained
         assert_eq!(s.rings[0].windows, 11);
         assert_eq!(s.last_ring().unwrap().windows, (ReplWindowStats::RING_SAMPLE_CAP + 10) as u64);
+    }
+
+    #[test]
+    fn tier_stats_quiescent_until_touched() {
+        let mut t = TierStats::default();
+        t.nvm_bytes.record(10, 4096); // occupancy samples don't break quiescence
+        assert!(t.is_quiescent());
+        t.pinned_skips += 1;
+        assert!(!t.is_quiescent());
+        t = TierStats::default();
+        t.demotions += 1;
+        t.demoted_bytes += 4096;
+        assert!(!t.is_quiescent());
     }
 
     #[test]

@@ -10,10 +10,11 @@
 
 use std::collections::{HashMap, HashSet};
 
+use crate::cache::Lru;
 use crate::coherence::LeaseTable;
 use crate::fs::{FileStore, Ino, NodeId, ProcId, Result, SocketId, Tier};
 use crate::oplog::{apply_entries, DigestStats, LogEntry};
-use crate::replication::{ChainId, VersionTable};
+use crate::replication::{ChainId, ReadVersion, VersionTable};
 
 /// Per-socket SharedFS daemon state.
 #[derive(Debug, Clone)]
@@ -50,6 +51,9 @@ pub struct SharedFs {
     pub stale: HashSet<Ino>,
     /// NVM budget for the hot area (beyond it, LRU-migrate to cold)
     pub hot_capacity: u64,
+    /// coldest-first index over hot inodes (unbounded — the tiering
+    /// daemon drains it toward watermark targets, not a capacity)
+    pub hot_lru: Lru<Ino>,
     /// cumulative digest stats
     pub digests: u64,
     pub digested_bytes: u64,
@@ -72,6 +76,7 @@ impl SharedFs {
             sfs_log_bytes: 0,
             stale: HashSet::new(),
             hot_capacity,
+            hot_lru: Lru::new(u64::MAX),
             digests: 0,
             digested_bytes: 0,
             lease_busy_until: 0,
@@ -113,10 +118,13 @@ impl SharedFs {
         self.digests += 1;
         self.digested_bytes += total.data_bytes;
         self.sfs_log_bytes += 64; // digest record
-        // freshly digested data supersedes stale marks for those inodes
+        // freshly digested data supersedes stale marks for those inodes,
+        // and the digest is the hot-area admission point: index the
+        // touched inodes for the tiering daemon's coldest-first drain
         for e in entries {
             if let Ok(ino) = self.store.resolve(e.op.path()) {
                 self.stale.remove(&ino);
+                self.note_hot(ino);
             }
         }
         Ok(total)
@@ -287,12 +295,147 @@ impl SharedFs {
         (migrated, segments)
     }
 
+    // ------------------------------------------ capacity-pressure tiering
+
+    /// (Re)index `ino` in the coldest-first hot index if it holds hot
+    /// bytes (called at digest admission and after promotion).
+    pub fn note_hot(&mut self, ino: Ino) {
+        let bytes = self
+            .store
+            .inode(ino)
+            .map(|n| n.extents.bytes_in_tier(Tier::Hot))
+            .unwrap_or(0);
+        if bytes > 0 {
+            // max(1): a zero-weight entry would wedge drain_coldest
+            self.hot_lru.insert(ino, bytes.max(1));
+        }
+    }
+
+    /// Refresh `ino`'s recency on read (protects it from the next drain).
+    pub fn touch_hot(&mut self, ino: Ino) {
+        self.hot_lru.touch(&ino);
+    }
+
+    /// Demote whole inodes `from` → `to`, coldest-first, until at least
+    /// `target` bytes have moved or no eligible resident remains. The
+    /// eviction-eligibility rule lives here: an inode whose
+    /// `VersionTable` entry is not `Clean` at `now` still has
+    /// unreplicated (un-acked) bytes and is **pinned** to its tier.
+    /// Returns `(bytes moved, per-inode victims, pinned skips)` — the
+    /// caller owns device accounting, wire charges, and the sanitizer
+    /// funnel per victim.
+    pub fn demote_eligible(
+        &mut self,
+        from: Tier,
+        to: Tier,
+        target: u64,
+        now: u64,
+    ) -> (u64, Vec<(Ino, u64)>, u64) {
+        let mut moved_total = 0u64;
+        let mut victims: Vec<(Ino, u64)> = Vec::new();
+        let mut pinned = 0u64;
+        let mut repin: Vec<Ino> = Vec::new();
+        let mut seen: HashSet<Ino> = HashSet::new();
+        while moved_total < target {
+            // coldest-first: drain the hot index for Hot (O(log n)),
+            // age-scan for tiers the index doesn't cover; `seen` keeps
+            // pinned/stale candidates from looping forever
+            let next = if from == Tier::Hot {
+                self.hot_lru
+                    .drain_coldest(1)
+                    .pop()
+                    .map(|(ino, _)| ino)
+                    .filter(|ino| !seen.contains(ino))
+                    .or_else(|| self.coldest_unseen(from, &seen))
+            } else {
+                self.coldest_unseen(from, &seen)
+            };
+            let Some(ino) = next else { break };
+            seen.insert(ino);
+            let resident = self
+                .store
+                .inode(ino)
+                .map(|n| n.extents.bytes_in_tier(from))
+                .unwrap_or(0);
+            if resident == 0 {
+                continue; // stale index entry (digested away / truncated)
+            }
+            if !matches!(self.versions.query(ino, now), ReadVersion::Clean(_)) {
+                // dirty/unreplicated bytes are pinned; keep them indexed
+                // so a later sweep (post-ack) can still find them
+                pinned += 1;
+                if from == Tier::Hot {
+                    repin.push(ino);
+                }
+                continue;
+            }
+            let moved = self.store.retier_all(ino, from, to, now).unwrap_or(0);
+            if moved == 0 {
+                continue;
+            }
+            moved_total += moved;
+            victims.push((ino, moved));
+        }
+        for ino in repin {
+            self.note_hot(ino);
+        }
+        (moved_total, victims, pinned)
+    }
+
+    /// Coldest inode holding bytes in `tier` not yet in `seen` (LRU age
+    /// scan, the non-indexed fallback).
+    fn coldest_unseen(&self, tier: Tier, seen: &HashSet<Ino>) -> Option<Ino> {
+        let mut best: Option<(Ino, u64)> = None;
+        for n in self.store.inodes_iter() {
+            if seen.contains(&n.ino) || n.extents.bytes_in_tier(tier) == 0 {
+                continue;
+            }
+            if let Some((off, _)) = n.extents.oldest_access(tier) {
+                let age = n
+                    .extents
+                    .iter()
+                    .find(|(&s, _)| s == off)
+                    .map(|(_, e)| e.last_access)
+                    .unwrap_or(0);
+                match best {
+                    Some((_, best_age)) if age >= best_age => {}
+                    _ => best = Some((n.ino, age)),
+                }
+            }
+        }
+        best.map(|(ino, _)| ino)
+    }
+
+    /// Promote the demoted bytes of `[off, off+len)` back into NVM on
+    /// read. Returns `(bytes leaving the SSD, bytes leaving the capacity
+    /// tier)` so the caller can release device accounting and charge the
+    /// NVM landing cost.
+    pub fn promote_range(&mut self, ino: Ino, off: u64, len: u64, now: u64) -> (u64, u64) {
+        let Some(n) = self.store.inode(ino) else { return (0, 0) };
+        let mut cold = 0u64;
+        let mut cap = 0u64;
+        for (_, l, t) in n.extents.tiers_in(off, len) {
+            match t {
+                Tier::Cold => cold += l,
+                Tier::Capacity => cap += l,
+                Tier::Hot | Tier::Reserve => {}
+            }
+        }
+        if cold + cap == 0 {
+            return (0, 0);
+        }
+        let _ = self.store.retier(ino, off, len, Tier::Hot, now);
+        self.note_hot(ino);
+        (cold, cap)
+    }
+
     /// Epoch recovery: mark `inos` stale (must refetch before serving).
     pub fn invalidate_inos(&mut self, inos: &HashSet<Ino>) {
         for &ino in inos {
             if self.store.inode(ino).is_some() {
                 self.store.invalidate_ino(ino);
                 self.stale.insert(ino);
+                self.hot_lru.remove(&ino);
             }
         }
     }
@@ -410,7 +553,7 @@ mod tests {
         assert!(migrated >= 2048);
         assert_eq!(s.hot_overflow(), 0);
         // contents intact
-        let ino = s.store.resolve("/f").unwrap();
+        let ino = s.store.resolve("/f").unwrap_or_default();
         assert_eq!(
             s.store.read_at(ino, 0, 4096).unwrap().0.materialize(),
             vec![9u8; 4096]
@@ -454,6 +597,57 @@ mod tests {
             seq,
             op: LogOp::Create { path: path.into(), mode: Mode::DEFAULT_FILE, owner: Cred::ROOT },
         }
+    }
+
+    #[test]
+    fn demote_eligible_pins_dirty_and_takes_coldest_first() {
+        let mut s = SharedFs::new(0, 0, 1 << 30);
+        let batch =
+            vec![create_at(1, "/a"), w(2, "/a", 1), create_at(3, "/b"), w(4, "/b", 2)];
+        assert!(s.digest(1, &batch, 1, one_chain).is_ok());
+        let a = s.store.resolve("/a").unwrap_or_default();
+        let b = s.store.resolve("/b").unwrap_or_default();
+        // /b is mid-replication: its tail ack lands far in the future
+        s.versions.bump(b, 2, u64::MAX);
+        let (moved, victims, pinned) = s.demote_eligible(Tier::Hot, Tier::Cold, u64::MAX, 2);
+        assert_eq!(victims, vec![(a, 64)], "only the clean file moves");
+        assert_eq!(moved, 64);
+        assert_eq!(pinned, 1, "the dirty file is pinned to NVM");
+        assert_eq!(s.store.bytes_in_tier(Tier::Cold), 64);
+        assert_eq!(s.store.bytes_in_tier(Tier::Hot), 64, "/b stays hot");
+        // once the ack arrives (clean at query time), /b becomes eligible
+        let mut s2 = SharedFs::new(0, 0, 1 << 30);
+        assert!(s2.digest(1, &batch, 1, one_chain).is_ok());
+        let b2 = s2.store.resolve("/b").unwrap_or_default();
+        s2.versions.bump(b2, 2, 3);
+        let (moved2, _, pinned2) = s2.demote_eligible(Tier::Hot, Tier::Cold, u64::MAX, 10);
+        assert_eq!((moved2, pinned2), (128, 0), "both files eligible after the ack");
+    }
+
+    #[test]
+    fn demote_eligible_stops_at_target_and_promote_restores_hot() {
+        let mut s = SharedFs::new(0, 0, 1 << 30);
+        let batch =
+            vec![create_at(1, "/a"), w(2, "/a", 1), create_at(3, "/b"), w(4, "/b", 2)];
+        assert!(s.digest(1, &batch, 1, one_chain).is_ok());
+        // target 1 byte: coldest inode alone satisfies it
+        let (moved, victims, _) = s.demote_eligible(Tier::Hot, Tier::Cold, 1, 2);
+        assert_eq!(moved, 64);
+        assert_eq!(victims.len(), 1, "drain stops once the target is met");
+        let (ino, _) = victims.first().copied().unwrap_or_default();
+        // second hop: Cold → Capacity
+        let (moved_cap, victims_cap, _) =
+            s.demote_eligible(Tier::Cold, Tier::Capacity, u64::MAX, 3);
+        assert_eq!((moved_cap, victims_cap.len()), (64, 1));
+        assert_eq!(s.store.bytes_in_tier(Tier::Capacity), 64);
+        // promotion on read pulls it all back into NVM and reports the
+        // per-device split for accounting
+        let (from_ssd, from_cap) = s.promote_range(ino, 0, 64, 4);
+        assert_eq!((from_ssd, from_cap), (0, 64));
+        assert_eq!(s.store.bytes_in_tier(Tier::Hot), 128);
+        assert_eq!(s.store.bytes_in_tier(Tier::Capacity), 0);
+        // promoting an all-hot range is a no-op
+        assert_eq!(s.promote_range(ino, 0, 64, 5), (0, 0));
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::hw::numa::{Interconnect, XSocketMode};
 use crate::hw::nvm::{DramDevice, NvmDevice, Pattern};
 use crate::hw::params::HwParams;
 use crate::hw::rdma::Fabric;
-use crate::hw::ssd::SsdDevice;
+use crate::hw::ssd::{CapacityDevice, SsdDevice};
 use crate::libfs::{LibFs, ReplWindow};
 use crate::metrics::{CraqStats, FaultStats, NsStats, ReplWindowStats, RingStallSample};
 use crate::oplog::{coalesce, LogEntry, LogOp};
@@ -39,6 +39,7 @@ use crate::sim::api::{DistFs, FsCompletion, FsOp, FsOut};
 use crate::sim::cores::{CoreInterleaver, CoreSlots};
 use crate::sim::fault::FaultPlan;
 use crate::sim::san::SanState;
+use crate::sim::tiering::{demote_target, TieringDaemon};
 use crate::sim::{ClusterConfig, CrashMode};
 use crate::Nanos;
 
@@ -55,6 +56,9 @@ pub struct Node {
     pub sockets: Vec<SocketUnit>,
     pub dram: DramDevice,
     pub ssd: SsdDevice,
+    /// modeled disaggregated capacity tier behind the local SSD
+    /// (object-store-style; reached over the fabric)
+    pub cap: CapacityDevice,
     pub interconnect: Interconnect,
     pub alive: bool,
 }
@@ -141,6 +145,12 @@ pub struct Cluster {
     /// assise-san shadow sanitizer (`ClusterConfig::sanitize`);
     /// `SanMode::Off` makes every `san.*` call an inert early return
     pub san: SanState,
+
+    /// background capacity-pressure migration daemon (watermark policy,
+    /// promotion hysteresis, sweep schedule, counters) — driven from the
+    /// simulator clock via [`Self::tier_sweep`]; inert by construction
+    /// when the hot tier is uncapped
+    pub tiering: TieringDaemon,
 }
 
 impl Cluster {
@@ -163,12 +173,14 @@ impl Cluster {
                     .collect(),
                 dram: DramDevice::new(cfg.dram_per_node),
                 ssd: SsdDevice::new(cfg.ssd_per_node),
+                cap: CapacityDevice::new(cfg.capacity_per_node),
                 interconnect: Interconnect::new(),
                 alive: true,
             })
             .collect();
         let node_count = cfg.nodes;
         let san = SanState::new(cfg.sanitize);
+        let tiering = TieringDaemon::new(&cfg);
         Self {
             cfg,
             mgr,
@@ -193,6 +205,7 @@ impl Cluster {
             batch_first: false,
             batch_leases: None,
             san,
+            tiering,
         }
     }
 
@@ -668,6 +681,15 @@ impl Cluster {
                 }
             }
         }
+        // background daemon tick: at most one watermark sweep per node
+        // per sweep interval, riding the append path's clock but off the
+        // critical path (the sweep's completion does not advance the
+        // proc clock — inert configs skip in O(1))
+        let now = self.procs[pid].clock.now;
+        let (node, socket) = (self.procs[pid].node, self.procs[pid].socket);
+        if self.tiering.due(node, now) {
+            let _ = self.tier_sweep(node, socket, now);
+        }
         Ok(())
     }
 
@@ -1038,9 +1060,14 @@ impl Cluster {
 
         self.procs[pid].log.mark_digested(upto);
 
-        // hot-area LRU migration on every replica (§A.1), once per
-        // distinct (node, socket): cache replicas evict to cold SSD;
-        // reserve replicas keep a reserve tier in NVM
+        // hot-area eviction on every replica (§A.1), once per distinct
+        // (node, socket): cache replicas run the capacity-pressure
+        // watermark sweep (clean+replicated extents demote
+        // NVM→SSD→capacity, keeping digest headroom free), then the
+        // hard-budget LRU fallback for anything the sweep could not move
+        // — digestion must always be able to reclaim NVM, even when the
+        // version table pins every sweep candidate. Reserve replicas
+        // keep a reserve tier in NVM instead.
         let mut end = done_max;
         let mut migrated: Vec<(NodeId, SocketId)> = Vec::new();
         for part in &parts {
@@ -1052,16 +1079,21 @@ impl Cluster {
                     continue;
                 }
                 migrated.push((r, sock));
+                let swept = self.tier_sweep(r, sock, done_max);
                 let (moved, _) =
                     self.nodes[r].sockets[sock].sharedfs.migrate_lru(Tier::Cold, done_max);
+                let mut done = swept;
                 if moved > 0 {
-                    let done = self.nodes[r].ssd.write(done_max, moved, &p);
-                    // eviction is off the critical path for remote
-                    // replicas; local eviction extends the digest
-                    // (backpressure)
-                    if r == pnode {
-                        end = end.max(done);
+                    done = done.max(self.nodes[r].ssd.write(done_max, moved, &p));
+                    if !self.tiering.inert() {
+                        self.reconcile_tier_devices(r);
                     }
+                }
+                // eviction is off the critical path for remote
+                // replicas; local eviction extends the digest
+                // (backpressure)
+                if r == pnode {
+                    end = end.max(done);
                 }
             }
             for &r in reserves.iter() {
@@ -1391,6 +1423,160 @@ impl Cluster {
         self.procs[pid].pending_digest.pop_front();
     }
 
+    // ========================================== capacity-pressure tiering
+
+    /// Re-derive `node`'s SSD and capacity-tier byte accounting from its
+    /// stores' O(1) per-tier counters (diff-based: alloc the deficit,
+    /// free the excess). Keeps the strict device accounting in sync with
+    /// extent movement from sweeps, the hard-budget migration fallback,
+    /// promotions, and recovery state copies — a diff that would
+    /// underflow a device counts into
+    /// [`crate::metrics::TierStats::free_underflows`].
+    pub(crate) fn reconcile_tier_devices(&mut self, node: NodeId) {
+        let mut cold = 0u64;
+        let mut cap = 0u64;
+        for s in &self.nodes[node].sockets {
+            cold += s.sharedfs.store.bytes_in_tier(Tier::Cold);
+            cap += s.sharedfs.store.bytes_in_tier(Tier::Capacity);
+        }
+        let have = self.nodes[node].ssd.used();
+        if cold > have {
+            if !self.nodes[node].ssd.alloc(cold - have) {
+                self.tiering.stats.eviction_stalls += 1;
+            }
+        } else if have > cold && !self.nodes[node].ssd.free(have - cold) {
+            self.tiering.stats.free_underflows += 1;
+        }
+        let have = self.nodes[node].cap.used();
+        if cap > have {
+            if !self.nodes[node].cap.alloc(cap - have) {
+                self.tiering.stats.eviction_stalls += 1;
+            }
+        } else if have > cap && !self.nodes[node].cap.free(have - cap) {
+            self.tiering.stats.free_underflows += 1;
+        }
+    }
+
+    /// Per-victim demotion bookkeeping: hysteresis stamp + sanitizer
+    /// emission. `demote_eligible` only surfaces clean inodes, so
+    /// `dirty = false` by construction on this path — the crash checker
+    /// independently validates the retired-member and sole-durable-copy
+    /// rules against its own shadow state.
+    fn note_demotion(
+        &mut self,
+        node: NodeId,
+        sock: SocketId,
+        ino: crate::fs::Ino,
+        to_capacity: bool,
+        now: Nanos,
+    ) {
+        self.tiering.note_demoted(node, sock, ino, now);
+        if self.san.is_off() {
+            return;
+        }
+        let Some(path) = self.nodes[node].sockets[sock]
+            .sharedfs
+            .store
+            .path_of(ino)
+            .map(str::to_string)
+        else {
+            return;
+        };
+        let key = self.mgr.chain_id_for(&path);
+        self.san.extent_demote(node, key, false, to_capacity);
+    }
+
+    /// One watermark sweep of (`node`, `sock`) at `now` — the background
+    /// migration daemon's unit of work, driven from the simulator clock
+    /// (digest completions, plus the [`TieringDaemon::due`] cadence on
+    /// the append path; no OS threads exist). Cold→Capacity runs first
+    /// so the Hot→Cold pass behind it finds SSD room. Only
+    /// clean+replicated inodes move ([`SharedFs::demote_eligible`]
+    /// consults the version table; dirty bytes are pinned); each victim
+    /// is charged on the receiving device, stamped for the promotion
+    /// hysteresis, and emitted through the sanitizer funnel. Returns the
+    /// virtual time the local device writes complete (`now` when nothing
+    /// moved) so the digest path can extend its completion with local
+    /// eviction backpressure.
+    pub fn tier_sweep(&mut self, node: NodeId, sock: SocketId, now: Nanos) -> Nanos {
+        if self.tiering.inert() {
+            return now;
+        }
+        let p = self.p();
+        let knobs = self.tiering.knobs;
+        self.reconcile_tier_devices(node);
+        let mut end = now;
+
+        // ---- Cold → Capacity (SSD pressure)
+        let ssd_used = self.nodes[node].ssd.used();
+        if let Some(want) = demote_target(ssd_used, knobs.ssd_high, knobs.ssd_low) {
+            let room =
+                self.nodes[node].cap.capacity().saturating_sub(self.nodes[node].cap.used());
+            let target = want.min(room);
+            if target < want {
+                self.tiering.stats.eviction_stalls += 1;
+            }
+            if target > 0 {
+                let (moved, victims, pinned) = self.nodes[node].sockets[sock]
+                    .sharedfs
+                    .demote_eligible(Tier::Cold, Tier::Capacity, target, now);
+                self.tiering.stats.pinned_skips += pinned;
+                if moved > 0 {
+                    // the capacity tier sits across the fabric: the
+                    // transfer rides the fault funnel (src == dst books
+                    // the local NIC, so stragglers/partitions apply) and
+                    // the store's own write path
+                    if let Ok(t) =
+                        self.fault_rpc(now, node, node, 64, moved.max(64), p.rpc_overhead)
+                    {
+                        end = end.max(t);
+                    }
+                    end = end.max(self.nodes[node].cap.write(now, moved, &p));
+                    self.tiering.stats.demotions += victims.len() as u64;
+                    self.tiering.stats.demotions_to_capacity += victims.len() as u64;
+                    self.tiering.stats.demoted_bytes += moved;
+                    for &(ino, _) in &victims {
+                        self.note_demotion(node, sock, ino, true, now);
+                    }
+                    self.reconcile_tier_devices(node);
+                }
+            }
+        }
+
+        // ---- Hot → Cold (NVM pressure: the digest-headroom guarantee)
+        let hot = self.nodes[node].sockets[sock].sharedfs.store.bytes_in_tier(Tier::Hot);
+        if let Some(want) = demote_target(hot, knobs.nvm_high, knobs.nvm_low) {
+            let room =
+                self.nodes[node].ssd.capacity().saturating_sub(self.nodes[node].ssd.used());
+            let target = want.min(room);
+            if target < want {
+                self.tiering.stats.eviction_stalls += 1;
+            }
+            if target > 0 {
+                let (moved, victims, pinned) = self.nodes[node].sockets[sock]
+                    .sharedfs
+                    .demote_eligible(Tier::Hot, Tier::Cold, target, now);
+                self.tiering.stats.pinned_skips += pinned;
+                if moved > 0 {
+                    end = end.max(self.nodes[node].ssd.write(now, moved, &p));
+                    self.tiering.stats.demotions += victims.len() as u64;
+                    self.tiering.stats.demoted_bytes += moved;
+                    for &(ino, _) in &victims {
+                        self.note_demotion(node, sock, ino, false, now);
+                    }
+                    self.reconcile_tier_devices(node);
+                }
+            }
+        }
+
+        // occupancy time series (the bench pressure plots)
+        let hot_now = self.nodes[node].sockets[sock].sharedfs.store.bytes_in_tier(Tier::Hot);
+        self.tiering.stats.nvm_bytes.record(now, hot_now);
+        self.tiering.stats.ssd_bytes.record(now, self.nodes[node].ssd.used());
+        self.tiering.stats.cap_bytes.record(now, self.nodes[node].cap.used());
+        end
+    }
+
     // ======================================================== read path
 
     /// Gather a read for `pid` from the layered caches, charging each
@@ -1577,6 +1763,7 @@ impl Cluster {
         let mut t_done = now;
         let mut any_cold = false;
         let mut any_reserve = false;
+        let mut any_cap = false;
         for &(_, seg_len, tier) in &tiers {
             match tier {
                 Tier::Hot => {
@@ -1603,12 +1790,66 @@ impl Cluster {
                         any_cold = true;
                     }
                 }
+                Tier::Capacity => {
+                    // disaggregated capacity tier: the request crosses
+                    // the fabric (src == dst books the local NIC, so
+                    // straggler and partition effects apply) and then
+                    // pays the store's own read path
+                    let d = self.fault_rpc(t_done, pnode, pnode, 64, seg_len.max(64), p.rpc_overhead)?;
+                    t_done = self.nodes[pnode].cap.read(d, seg_len, &p);
+                    any_cap = true;
+                }
             }
         }
         self.procs[pid].clock.advance_to(t_done + p.extent_lookup_lat * extents as Nanos);
 
+        // keep the hot-LRU recency fresh: a read protects the inode from
+        // the next demotion drain
+        self.nodes[pnode].sockets[sock].sharedfs.touch_hot(ino);
+
+        // promotion-on-read: demoted bytes return to NVM once the
+        // anti-thrash hysteresis has elapsed since their demotion, and
+        // only while the hot tier has admission room under its
+        // high-watermark (a promotion must never re-create the pressure
+        // the sweep just relieved)
+        if (any_cold || any_cap) && !self.tiering.inert() {
+            let t_read = self.procs[pid].clock.now;
+            if self.tiering.may_promote(pnode, sock, ino, t_read) {
+                let hot =
+                    self.nodes[pnode].sockets[sock].sharedfs.store.bytes_in_tier(Tier::Hot);
+                if hot + len <= self.tiering.knobs.nvm_high {
+                    let (cold_b, cap_b) = self.nodes[pnode].sockets[sock]
+                        .sharedfs
+                        .promote_range(ino, off, len, t_read);
+                    if cold_b + cap_b > 0 {
+                        // NVM landing cost for the promoted bytes
+                        let d = self.nodes[pnode].sockets[sock]
+                            .nvm
+                            .write(t_read, cold_b + cap_b, &p);
+                        self.procs[pid].clock.advance_to(d);
+                        self.tiering.stats.promotions += 1;
+                        self.tiering.stats.promoted_bytes += cold_b + cap_b;
+                        self.tiering.note_promoted(pnode, sock, ino);
+                        self.reconcile_tier_devices(pnode);
+                    }
+                } else {
+                    self.tiering.stats.promotion_suppressed += 1;
+                }
+            } else {
+                self.tiering.stats.promotion_suppressed += 1;
+            }
+        }
+        if any_cap && !self.san.is_off() {
+            // serving bytes evicted to the capacity tier: this read went
+            // through the funnel + promotion path above — the clean
+            // protocol (`refetched = true`); the planted-bug fixtures
+            // exercise the violating shape
+            let key = self.mgr.chain_id_for(path);
+            self.san.evicted_serve(pnode, key, true);
+        }
+
         // cache non-local-NVM reads in DRAM (§A.2)
-        if any_cold || any_reserve {
+        if any_cold || any_reserve || any_cap {
             self.install_read_cache(pid, cache_key, off, len, &data);
         }
         Ok(data)

@@ -254,8 +254,12 @@ impl Cluster {
         }
         self.nodes[node].dram.crash();
         self.nodes[node].ssd.reboot();
+        self.nodes[node].cap.reboot();
         self.nodes[node].interconnect.reboot();
         self.fabric.nics[node].reboot();
+        // the daemon's per-node memory is volatile: sweep schedule and
+        // hysteresis stamps must not gate the rebuilt state copy
+        self.tiering.forget_node(node);
 
         let since = self.mgr.node_recovered(node, at);
         let written = self.mgr.epochs.written_since(since);
@@ -301,6 +305,12 @@ impl Cluster {
             // (holders re-acquire lazily; stale grants died with the OS)
             sfs.leases = crate::coherence::LeaseTable::new();
             sfs.lease_busy_until = 0;
+        }
+        // the installed peer copy carries its own tier layout: re-derive
+        // this node's SSD/capacity accounting from it (a retired member's
+        // copy must not resurrect evicted bytes into stale device gauges)
+        if !self.tiering.inert() {
+            self.reconcile_tier_devices(node);
         }
         Ok(done)
     }

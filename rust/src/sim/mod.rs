@@ -10,6 +10,7 @@ pub mod failure;
 pub mod fault;
 pub mod migrate;
 pub mod san;
+pub mod tiering;
 
 pub use adaptive::WindowController;
 pub use api::{DistFs, FsCompletion, FsOp, FsOut};
@@ -18,6 +19,7 @@ pub use cores::{CoreInterleaver, CoreSlots};
 pub use fault::FaultPlan;
 pub use migrate::MigrationReport;
 pub use san::{SanMode, SanReport};
+pub use tiering::{TierKnobs, TieringDaemon};
 
 use crate::coherence::ManagerPolicy;
 use crate::hw::params::HwParams;
@@ -85,6 +87,22 @@ pub struct ClusterConfig {
     /// verify digest batches with the AOT checksum kernel (costs real
     /// wall-clock; enabled in examples/tests, off in big sweeps).
     pub verify_digests: bool,
+    /// modeled disaggregated capacity tier per node (beyond the local
+    /// SSD; [`crate::hw::ssd::CapacityDevice`]).
+    pub capacity_per_node: u64,
+    /// demote Hot→Cold once the hot area exceeds this fraction of
+    /// `hot_capacity` (no-op while `hot_capacity == u64::MAX`). The
+    /// sweep drains down to `nvm_high_watermark - digest_headroom`.
+    pub nvm_high_watermark: f64,
+    /// fraction of `hot_capacity` kept free below the high-watermark so
+    /// log digestion always has NVM to land in (deadlock headroom).
+    pub digest_headroom: f64,
+    /// demote Cold→Capacity once SSD occupancy exceeds this fraction of
+    /// `ssd_per_node`.
+    pub ssd_high_watermark: f64,
+    /// a demoted extent is not promoted back to NVM until this much
+    /// virtual time has passed since its demotion (anti-thrash).
+    pub promote_hysteresis: crate::Nanos,
     /// arm the assise-san shadow sanitizer ([`san::SanState`]).
     /// `SanMode::Off` emits nothing, allocates nothing, and leaves
     /// every virtual-time trace byte-identical (the `FaultPlan::is_noop`
@@ -117,6 +135,11 @@ impl Default for ClusterConfig {
             heartbeat_interval: 500_000_000,
             suspect_timeout: 500_000_000,
             verify_digests: false,
+            capacity_per_node: 4 << 40,
+            nvm_high_watermark: 0.85,
+            digest_headroom: 0.10,
+            ssd_high_watermark: 0.85,
+            promote_hysteresis: 50_000_000,
             sanitize: san::SanMode::from_env(),
             params: HwParams::default(),
         }
@@ -202,6 +225,28 @@ impl ClusterConfig {
 
     pub fn sanitize(mut self, mode: san::SanMode) -> Self {
         self.sanitize = mode;
+        self
+    }
+
+    pub fn capacity_tier(mut self, bytes: u64) -> Self {
+        self.capacity_per_node = bytes;
+        self
+    }
+
+    pub fn ssd(mut self, bytes: u64) -> Self {
+        self.ssd_per_node = bytes;
+        self
+    }
+
+    pub fn watermarks(mut self, nvm_high: f64, headroom: f64, ssd_high: f64) -> Self {
+        self.nvm_high_watermark = nvm_high.clamp(0.0, 1.0);
+        self.digest_headroom = headroom.clamp(0.0, nvm_high);
+        self.ssd_high_watermark = ssd_high.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn promote_hysteresis(mut self, ns: crate::Nanos) -> Self {
+        self.promote_hysteresis = ns;
         self
     }
 }

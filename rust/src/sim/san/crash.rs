@@ -41,6 +41,12 @@ pub enum CrashFault {
     /// after the crash point at `node`, no live holder covers the
     /// acked prefix
     PointLoss { pid: ProcId, chain: ChainId, seq: u64, node: NodeId },
+    /// a dirty, sole-durable-copy, or retired-member extent was demoted
+    /// out of NVM (eviction of unreplicated or disqualified state)
+    EvictUnreplicated { node: NodeId, chain: ChainId },
+    /// a retired member served bytes of a chain that has since evicted
+    /// without refetching (pre-eviction state resurrected)
+    EvictedByteServed { node: NodeId, chain: ChainId },
 }
 
 #[derive(Debug, Default)]
@@ -58,6 +64,9 @@ pub struct CrashState {
     retired: HashSet<(NodeId, ChainId)>,
     /// nodes currently killed
     down: HashSet<NodeId>,
+    /// chains that have had clean-extent evictions on any member: a
+    /// retired member's pre-eviction state copy must not serve them
+    evicted_chains: HashSet<ChainId>,
 }
 
 impl CrashState {
@@ -178,6 +187,53 @@ impl CrashState {
         faults
     }
 
+    /// An extent of `key` was demoted out of NVM on `node`. Violations:
+    /// demoting dirty (unreplicated) bytes, demoting from a retired or
+    /// down member, or — for off-node (capacity-tier) demotion — moving
+    /// the *sole durable copy* off NVM. Liveness is deliberately NOT
+    /// consulted for the sole-copy rule: a killed node's NVM persists in
+    /// Assise's model, so a legit kill/failover does not strip the
+    /// remaining copy of its eligibility.
+    pub fn extent_demote(
+        &mut self,
+        node: NodeId,
+        key: ChainId,
+        dirty: bool,
+        to_capacity: bool,
+    ) -> Vec<CrashFault> {
+        let mut faults = Vec::new();
+        if dirty {
+            faults.push(CrashFault::EvictUnreplicated { node, chain: key });
+        }
+        if self.retired.contains(&(node, key)) || self.down.contains(&node) {
+            faults.push(CrashFault::EvictUnreplicated { node, chain: key });
+        }
+        if to_capacity {
+            let has_any = self.durable.keys().any(|&(_, _, c)| c == key);
+            let has_remote = self.durable.keys().any(|&(m, _, c)| c == key && m != node);
+            if has_any && !has_remote {
+                faults.push(CrashFault::EvictUnreplicated { node, chain: key });
+            }
+        }
+        self.evicted_chains.insert(key);
+        faults
+    }
+
+    /// A read of chain `key` was served from `node`'s state copy. If the
+    /// member is retired and the chain has evicted since, the copy may
+    /// predate the eviction — serving it without a refetch resurrects
+    /// evicted bytes.
+    pub fn evicted_serve(&self, node: NodeId, key: ChainId, refetched: bool) -> Vec<CrashFault> {
+        if !refetched
+            && self.retired.contains(&(node, key))
+            && self.evicted_chains.contains(&key)
+        {
+            vec![CrashFault::EvictedByteServed { node, chain: key }]
+        } else {
+            Vec::new()
+        }
+    }
+
     /// Crash points examined by one [`sweep`](Self::sweep) pass.
     pub fn sweep_points(&self) -> u64 {
         self.acked
@@ -251,6 +307,62 @@ mod tests {
         // NVM is persistent: recovery restores the copy
         s.node_up(1);
         assert!(s.sweep(0).is_empty());
+    }
+
+    #[test]
+    fn dirty_or_retired_demotion_fires() {
+        let mut s = CrashState::default();
+        s.register_proc(0, 0);
+        // clean demotion on a healthy member: no fault
+        s.replica_durable(0, 0, C, 2);
+        s.replica_durable(1, 0, C, 2);
+        assert!(s.extent_demote(0, C, false, false).is_empty());
+        // dirty demotion is always a violation
+        let f = s.extent_demote(0, C, true, false);
+        assert!(f.iter().any(|x| matches!(x, CrashFault::EvictUnreplicated { node: 0, .. })));
+        // a retired member must not demote its state copy
+        s.replica_retired(1, C);
+        assert!(!s.extent_demote(1, C, false, false).is_empty());
+    }
+
+    #[test]
+    fn sole_durable_copy_must_not_leave_nvm() {
+        let mut s = CrashState::default();
+        s.register_proc(0, 0);
+        s.replica_durable(0, 0, C, 3);
+        // node 0 holds the only durable copy: local Hot→Cold is fine
+        // (same node, NVM→SSD), but off-node capacity demotion is not
+        assert!(s.extent_demote(0, C, false, false).is_empty());
+        let f = s.extent_demote(0, C, false, true);
+        assert!(
+            f.iter().any(|x| matches!(x, CrashFault::EvictUnreplicated { node: 0, .. })),
+            "sole durable copy moved off NVM: {f:?}"
+        );
+        // with a second durable member the capacity demotion is legal,
+        // even while that member is down (dead NVM persists)
+        s.replica_durable(1, 0, C, 3);
+        s.node_down(1);
+        assert!(s.extent_demote(0, C, false, true).is_empty());
+    }
+
+    #[test]
+    fn retired_member_serving_evicted_chain_fires() {
+        let mut s = CrashState::default();
+        s.register_proc(0, 0);
+        s.replica_durable(0, 0, C, 2);
+        s.replica_durable(1, 0, C, 2);
+        // live member serving a never-evicted chain: fine
+        assert!(s.evicted_serve(1, C, false).is_empty());
+        let _ = s.extent_demote(0, C, false, false); // chain evicts on node 0
+        assert!(s.evicted_serve(1, C, false).is_empty(), "live member still fine");
+        s.replica_retired(1, C);
+        let f = s.evicted_serve(1, C, false);
+        assert!(
+            f.iter().any(|x| matches!(x, CrashFault::EvictedByteServed { node: 1, .. })),
+            "{f:?}"
+        );
+        // a refetch-before-serve launders the copy
+        assert!(s.evicted_serve(1, C, true).is_empty());
     }
 
     #[test]

@@ -107,6 +107,8 @@ pub enum SanEventKind {
     NodeUp,
     ProcCrash,
     Rpc,
+    ExtentDemote,
+    EvictServe,
 }
 
 /// One shadow event in the bounded ring.
@@ -131,6 +133,10 @@ pub enum SanViolationKind {
     CrashPointLoss,
     StaleServe,
     TornRead,
+    // appended last: the derived Ord drives report ordering, and the
+    // relative rank of the pre-existing kinds must not shift
+    EvictUnreplicated,
+    EvictedByteServed,
 }
 
 #[derive(Debug, Clone)]
@@ -254,6 +260,8 @@ impl SanState {
             }
             SanViolationKind::StaleServe => self.stats.stale_serve_reports += 1,
             SanViolationKind::TornRead => self.stats.torn_reports += 1,
+            SanViolationKind::EvictUnreplicated => self.stats.evict_unreplicated_reports += 1,
+            SanViolationKind::EvictedByteServed => self.stats.evicted_byte_served_reports += 1,
         }
         // strict mode (armed via ASSISE_SAN): fail the run on the spot,
         // with the violation in the panic message
@@ -301,6 +309,27 @@ impl SanState {
                         detail: format!(
                             "crash point at node{node}: no live replica covers the acked prefix"
                         ),
+                    });
+                }
+                crash::CrashFault::EvictUnreplicated { node, chain } => {
+                    self.violate(SanViolation {
+                        kind: SanViolationKind::EvictUnreplicated,
+                        object: format!("node{node}/chain{}", chain.0),
+                        first_op: node as u64,
+                        second_op: 0,
+                        detail: "demotion would evict a dirty, retired, or sole-durable \
+                                 copy off NVM"
+                            .to_string(),
+                    });
+                }
+                crash::CrashFault::EvictedByteServed { node, chain } => {
+                    self.violate(SanViolation {
+                        kind: SanViolationKind::EvictedByteServed,
+                        object: format!("node{node}/chain{}", chain.0),
+                        first_op: node as u64,
+                        second_op: 0,
+                        detail: "retired member served pre-eviction bytes without refetch"
+                            .to_string(),
                     });
                 }
             }
@@ -636,6 +665,58 @@ impl SanState {
         );
     }
 
+    // ------------------------------------------------ eviction emission
+
+    /// The tiering daemon demoted `chain`-attributed extents off
+    /// `node`'s NVM (`to_capacity` = the bytes leave the node entirely
+    /// for the disaggregated tier). `dirty` = the version table still
+    /// reported them unreplicated at demotion time — always a
+    /// violation; so is demoting a retired or down member's copy, or
+    /// pushing a chain's sole durable copy off-node.
+    pub fn extent_demote(&mut self, node: NodeId, chain: ChainId, dirty: bool, to_capacity: bool) {
+        if self.is_off() {
+            return;
+        }
+        self.stats.evictions_checked += 1;
+        let s = self.clocks.idx(SanActor::Sfs(node, 0));
+        let epoch = self.clocks.tick(s);
+        self.record(
+            SanEventKind::ExtentDemote,
+            SanActor::Sfs(node, 0),
+            epoch,
+            &format!("chain{}", chain.0),
+            to_capacity as u64,
+        );
+        if self.mode.crashes() {
+            let faults = self.crash.extent_demote(node, chain, dirty, to_capacity);
+            self.crash_faults(faults);
+        }
+    }
+
+    /// `node` served a read for a chain that has evicted bytes. Real
+    /// paths route demoted extents through the fault funnel and promote
+    /// through the version table first (`refetched = true`, clean); a
+    /// retired member answering from its pre-eviction copy is a
+    /// violation.
+    pub fn evicted_serve(&mut self, node: NodeId, chain: ChainId, refetched: bool) {
+        if self.is_off() {
+            return;
+        }
+        let s = self.clocks.idx(SanActor::Sfs(node, 0));
+        let epoch = self.clocks.tick(s);
+        self.record(
+            SanEventKind::EvictServe,
+            SanActor::Sfs(node, 0),
+            epoch,
+            &format!("chain{}", chain.0),
+            refetched as u64,
+        );
+        if self.mode.crashes() {
+            let faults = self.crash.evicted_serve(node, chain, refetched);
+            self.crash_faults(faults);
+        }
+    }
+
     // ------------------------------------------------- failure emission
 
     /// `node` was killed: run the crash-point sweep over every tracked
@@ -731,6 +812,26 @@ mod tests {
         assert_eq!(r1.violations.len(), 2);
         assert_eq!(r1.render(), r2.render());
         assert_eq!(r1.violations.first().map(|v| v.kind), Some(SanViolationKind::Race));
+    }
+
+    #[test]
+    fn eviction_funnels_count_and_fire() {
+        let mut s = SanState::new(SanMode::Crash);
+        s.register_proc(0, 0);
+        s.extent_demote(0, ChainId(1), false, false);
+        assert_eq!(s.stats.evictions_checked, 1);
+        assert!(s.report().is_clean(), "clean local demotion is legal");
+        s.extent_demote(0, ChainId(1), true, false);
+        assert_eq!(s.report().count(SanViolationKind::EvictUnreplicated), 1);
+        assert_eq!(s.stats.evict_unreplicated_reports, 1);
+        // a retired member answering from its pre-eviction copy fires;
+        // a refetched serve is clean
+        s.replica_retired(0, ChainId(1));
+        s.evicted_serve(0, ChainId(1), true);
+        assert_eq!(s.report().count(SanViolationKind::EvictedByteServed), 0);
+        s.evicted_serve(0, ChainId(1), false);
+        assert_eq!(s.report().count(SanViolationKind::EvictedByteServed), 1);
+        assert_eq!(s.stats.evicted_byte_served_reports, 1);
     }
 
     #[test]

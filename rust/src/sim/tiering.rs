@@ -1,0 +1,218 @@
+//! Capacity-pressure tiering: the background migration daemon's policy
+//! state (watermark resolution, anti-thrash hysteresis memory, sweep
+//! scheduling) and its counters ([`crate::metrics::TierStats`]).
+//!
+//! The daemon is *driven from the deterministic simulator clock* — no OS
+//! threads exist. `Cluster` calls [`TieringDaemon::due`] from its append
+//! and digest paths; when a node's sweep interval has elapsed (or a
+//! digest just landed new hot bytes) the cluster runs one watermark
+//! sweep at the current virtual time. Policy:
+//!
+//! - **Demotion** Hot→Cold when the hot area exceeds
+//!   `nvm_high_watermark × hot_capacity`, draining coldest-first down to
+//!   the low-watermark (`high − digest_headroom`), so log digestion
+//!   always finds NVM headroom and can never deadlock on a full tier.
+//!   Cold→Capacity analogously when SSD occupancy crosses
+//!   `ssd_high_watermark × ssd_per_node`.
+//! - **Eligibility** only clean+replicated extents move
+//!   (`VersionTable::query == Clean`); dirty/unreplicated bytes are
+//!   pinned to NVM and counted in [`crate::metrics::TierStats::pinned_skips`].
+//! - **Promotion** back to NVM on read, suppressed until
+//!   `promote_hysteresis` virtual ns have passed since the extent's
+//!   demotion (anti-thrash) and only while the hot tier has admission
+//!   room below its high-watermark.
+
+use std::collections::HashMap;
+
+use crate::fs::{Ino, NodeId, SocketId};
+use crate::metrics::TierStats;
+use crate::Nanos;
+
+use super::ClusterConfig;
+
+/// Watermark fractions resolved against the configured budgets into
+/// absolute byte thresholds (u64::MAX budgets stay uncapped).
+#[derive(Debug, Clone, Copy)]
+pub struct TierKnobs {
+    /// demote Hot→Cold above this many hot bytes
+    pub nvm_high: u64,
+    /// drain down to this (high minus digest headroom)
+    pub nvm_low: u64,
+    /// demote Cold→Capacity above this many SSD bytes
+    pub ssd_high: u64,
+    /// drain the SSD down to this
+    pub ssd_low: u64,
+    /// minimum virtual ns between a demotion and re-promotion
+    pub hysteresis: Nanos,
+    /// minimum virtual ns between two sweeps of the same node
+    pub sweep_interval: Nanos,
+}
+
+/// `fraction × budget`, saturating; uncapped (`u64::MAX`) budgets stay
+/// uncapped so the daemon is provably inert without pressure.
+fn mark(budget: u64, fraction: f64) -> u64 {
+    if budget == u64::MAX {
+        return u64::MAX;
+    }
+    (budget as f64 * fraction) as u64
+}
+
+impl TierKnobs {
+    pub fn from_config(cfg: &ClusterConfig) -> Self {
+        let low_frac = (cfg.nvm_high_watermark - cfg.digest_headroom).max(0.0);
+        let ssd_low_frac = (cfg.ssd_high_watermark - cfg.digest_headroom).max(0.0);
+        Self {
+            nvm_high: mark(cfg.hot_capacity, cfg.nvm_high_watermark),
+            nvm_low: mark(cfg.hot_capacity, low_frac),
+            ssd_high: mark(cfg.ssd_per_node, cfg.ssd_high_watermark),
+            ssd_low: mark(cfg.ssd_per_node, ssd_low_frac),
+            hysteresis: cfg.promote_hysteresis,
+            // sweep at the heartbeat cadence: the daemon rides the same
+            // background clock the cluster manager already owns
+            sweep_interval: cfg.heartbeat_interval,
+        }
+    }
+}
+
+/// How many bytes a sweep must move to get `occupancy` from above the
+/// high-watermark down to the low one (`None` = under the mark, no-op).
+pub fn demote_target(occupancy: u64, high: u64, low: u64) -> Option<u64> {
+    if occupancy <= high {
+        return None;
+    }
+    Some(occupancy.saturating_sub(low))
+}
+
+/// Background migration daemon state: per-extent demotion stamps (the
+/// hysteresis memory), per-node sweep schedule, and the stats sink.
+#[derive(Debug, Clone)]
+pub struct TieringDaemon {
+    pub knobs: TierKnobs,
+    /// virtual time each inode's bytes last left NVM on this socket
+    demoted_at: HashMap<(NodeId, SocketId, Ino), Nanos>,
+    /// next virtual time each node's sweep is due
+    next_sweep: HashMap<NodeId, Nanos>,
+    pub stats: TierStats,
+}
+
+impl TieringDaemon {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Self {
+            knobs: TierKnobs::from_config(cfg),
+            demoted_at: HashMap::new(),
+            next_sweep: HashMap::new(),
+            stats: TierStats::default(),
+        }
+    }
+
+    /// True when the daemon is inert by construction: an uncapped hot
+    /// tier can never cross a watermark, so callers skip the sweep
+    /// entirely (the no-pressure control row's "free" guarantee).
+    pub fn inert(&self) -> bool {
+        self.knobs.nvm_high == u64::MAX
+    }
+
+    /// Whether `node`'s background sweep is due at `now`; claims the
+    /// slot (schedules the next one) when it is.
+    pub fn due(&mut self, node: NodeId, now: Nanos) -> bool {
+        if self.inert() {
+            return false;
+        }
+        let next = self.next_sweep.entry(node).or_insert(0);
+        if now < *next {
+            return false;
+        }
+        *next = now + self.knobs.sweep_interval;
+        true
+    }
+
+    /// Record a demotion (starts the hysteresis window for `ino`).
+    pub fn note_demoted(&mut self, node: NodeId, sock: SocketId, ino: Ino, now: Nanos) {
+        self.demoted_at.insert((node, sock, ino), now);
+    }
+
+    /// Anti-thrash gate: a demoted inode may return to NVM only after
+    /// the hysteresis window; inodes never demoted promote freely.
+    pub fn may_promote(&self, node: NodeId, sock: SocketId, ino: Ino, now: Nanos) -> bool {
+        match self.demoted_at.get(&(node, sock, ino)) {
+            Some(&t) => now.saturating_sub(t) >= self.knobs.hysteresis,
+            None => true,
+        }
+    }
+
+    /// Clear the hysteresis stamp once the inode is hot again.
+    pub fn note_promoted(&mut self, node: NodeId, sock: SocketId, ino: Ino) {
+        self.demoted_at.remove(&(node, sock, ino));
+    }
+
+    /// Drop all per-node memory (node recovery rebuilds its tiers from a
+    /// peer; stale stamps must not gate the rebuilt copy).
+    pub fn forget_node(&mut self, node: NodeId) {
+        self.demoted_at.retain(|&(n, _, _), _| n != node);
+        self.next_sweep.remove(&node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig::default()
+            .hot_capacity(1000)
+            .ssd(2000)
+            .watermarks(0.85, 0.10, 0.85)
+            .promote_hysteresis(500)
+    }
+
+    #[test]
+    fn knobs_resolve_fractions() {
+        let k = TierKnobs::from_config(&cfg());
+        assert_eq!(k.nvm_high, 850);
+        assert_eq!(k.nvm_low, 750);
+        assert_eq!(k.ssd_high, 1700);
+        assert_eq!(k.ssd_low, 1500);
+        assert_eq!(k.hysteresis, 500);
+    }
+
+    #[test]
+    fn uncapped_budget_is_inert() {
+        let d = TieringDaemon::new(&ClusterConfig::default());
+        assert!(d.inert(), "default hot_capacity = u64::MAX must be inert");
+        let mut d = d;
+        assert!(!d.due(0, 1_000_000_000_000), "inert daemon never sweeps");
+        assert!(d.stats.is_quiescent());
+    }
+
+    #[test]
+    fn demote_target_drains_to_low_watermark() {
+        assert_eq!(demote_target(800, 850, 750), None, "under the mark");
+        assert_eq!(demote_target(850, 850, 750), None, "at the mark");
+        assert_eq!(demote_target(900, 850, 750), Some(150), "down to low");
+        assert_eq!(demote_target(100, u64::MAX, u64::MAX), None, "uncapped");
+    }
+
+    #[test]
+    fn sweeps_are_rate_limited_per_node() {
+        let mut d = TieringDaemon::new(&cfg());
+        let iv = d.knobs.sweep_interval;
+        assert!(d.due(0, 0));
+        assert!(!d.due(0, iv - 1), "within the interval");
+        assert!(d.due(1, iv - 1), "other nodes have their own schedule");
+        assert!(d.due(0, iv));
+    }
+
+    #[test]
+    fn hysteresis_gates_promotion() {
+        let mut d = TieringDaemon::new(&cfg());
+        assert!(d.may_promote(0, 0, 7, 0), "never demoted promotes freely");
+        d.note_demoted(0, 0, 7, 1000);
+        assert!(!d.may_promote(0, 0, 7, 1400), "inside the window");
+        assert!(d.may_promote(0, 0, 7, 1500), "window elapsed");
+        d.note_promoted(0, 0, 7);
+        assert!(d.may_promote(0, 0, 7, 1501), "stamp cleared");
+        d.note_demoted(1, 0, 9, 2000);
+        d.forget_node(1);
+        assert!(d.may_promote(1, 0, 9, 2001), "forget_node clears stamps");
+    }
+}

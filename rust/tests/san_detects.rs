@@ -200,6 +200,68 @@ fn torn_mid_epoch_snapshot_read_is_caught() {
     assert_eq!(s.report().count(SanViolationKind::TornRead), 1);
 }
 
+// ============================================= eviction planted bugs
+
+#[test]
+fn dirty_demotion_is_caught() {
+    if strict_env() {
+        return;
+    }
+    let mut s = SanState::new(SanMode::Full);
+    // clean + replicated: demotion is the daemon working as designed
+    s.replica_durable(0, 0, ChainId(3), 5);
+    s.replica_durable(1, 0, ChainId(3), 5);
+    s.extent_demote(0, ChainId(3), false, false);
+    assert!(s.report().is_clean(), "{}", s.report().render());
+    // planted bug: the sweep evicts an extent the version table still
+    // calls dirty — its only fresh bytes are unreplicated NVM
+    s.extent_demote(0, ChainId(3), true, false);
+    let report = s.report();
+    assert_eq!(report.count(SanViolationKind::EvictUnreplicated), 1, "{}", report.render());
+    assert!(s.stats.evictions_checked >= 2, "both demotions flow through the funnel");
+}
+
+#[test]
+fn sole_durable_copy_never_demotes_to_capacity() {
+    if strict_env() {
+        return;
+    }
+    let mut s = SanState::new(SanMode::Full);
+    // node 0 holds the only durable copy: pushing it off NVM into the
+    // disaggregated capacity tier moves the last copy out of the local
+    // persistence domain
+    s.replica_durable(0, 0, ChainId(4), 5);
+    s.extent_demote(0, ChainId(4), false, true);
+    assert_eq!(s.report().count(SanViolationKind::EvictUnreplicated), 1, "{}", s.report().render());
+    // with a second durable holder the same demotion is clean
+    let mut s2 = SanState::new(SanMode::Full);
+    s2.replica_durable(0, 0, ChainId(4), 5);
+    s2.replica_durable(1, 0, ChainId(4), 5);
+    s2.extent_demote(0, ChainId(4), false, true);
+    assert!(s2.report().is_clean(), "{}", s2.report().render());
+}
+
+#[test]
+fn retired_member_serving_evicted_bytes_is_caught() {
+    if strict_env() {
+        return;
+    }
+    let mut s = SanState::new(SanMode::Full);
+    s.replica_durable(1, 0, ChainId(5), 5);
+    s.replica_durable(2, 0, ChainId(5), 5);
+    // node 1 retires from the chain, then the chain evicts elsewhere:
+    // node 1's state copy predates the eviction
+    s.replica_retired(1, ChainId(5));
+    s.extent_demote(2, ChainId(5), false, false);
+    // the real read path refetches the extent first: clean
+    s.evicted_serve(1, ChainId(5), true);
+    assert!(s.report().is_clean(), "{}", s.report().render());
+    // planted bug: serving the pre-eviction bytes without a refetch
+    s.evicted_serve(1, ChainId(5), false);
+    let report = s.report();
+    assert_eq!(report.count(SanViolationKind::EvictedByteServed), 1, "{}", report.render());
+}
+
 // ================================================== off-mode contract
 
 /// One fixed mixed workload: batch submit, fsync (replication acks),

@@ -1,0 +1,242 @@
+//! Capacity-pressure tiering integration tests: the background
+//! NVM→SSD→capacity eviction daemon, promotion-on-read, and the
+//! composition guarantees the tentpole makes:
+//!
+//! - NVM occupancy stays bounded under a fileset 10× the hot tier;
+//! - log digestion NEVER deadlocks on a full NVM tier (the watermark
+//!   sweep runs first, and the hard-budget fallback reclaims even when
+//!   every sweep candidate is pinned);
+//! - promotion-on-read pulls demoted bytes back into NVM, gated by the
+//!   anti-thrash hysteresis window;
+//! - with tiers uncapped the daemon is provably free (inert by
+//!   construction, zero migrations, zero device accounting);
+//! - eviction composes with replication and failure: `SanMode::Full`
+//!   reports zero violations across eviction + kill/failover, and node
+//!   recovery re-derives device accounting from the installed copy.
+
+use assise::fs::{Payload, Tier};
+use assise::sim::{Cluster, ClusterConfig, DistFs, SanMode};
+use assise::util::SplitMix64;
+
+const KB256: u64 = 256 << 10;
+
+/// 1 MiB NVM hot tier over a 4 MiB SSD and a roomy capacity tier — the
+/// pressure shape every test here leans on.
+fn pressure_cfg(nodes: usize) -> ClusterConfig {
+    ClusterConfig::default()
+        .nodes(nodes)
+        .hot_capacity(1 << 20)
+        .ssd(4 << 20)
+        .capacity_tier(64 << 20)
+        .promote_hysteresis(1_000_000)
+        .read_cache(4096)
+}
+
+#[test]
+fn nvm_stays_bounded_under_10x_fileset() {
+    let mut c = Cluster::new(pressure_cfg(2));
+    let pid = c.spawn_process(0, 0);
+    // 40 × 256 KiB = 10 MiB, ten times the 1 MiB hot tier
+    for f in 0..40u64 {
+        let fd = c.create(pid, &format!("/z{f}")).unwrap();
+        c.pwrite(pid, fd, 0, Payload::zero(KB256)).unwrap();
+        if f % 8 == 7 {
+            c.fsync(pid, fd).unwrap();
+            c.digest_log(pid).unwrap();
+        }
+    }
+    let sfs = &c.nodes[0].sockets[0].sharedfs;
+    assert_eq!(sfs.hot_overflow(), 0, "NVM occupancy exceeded the configured budget");
+    let hot = sfs.store.bytes_in_tier(Tier::Hot);
+    assert!(hot <= 1 << 20, "hot tier holds {hot} bytes, budget is 1 MiB");
+    assert!(c.tiering.stats.demotions > 0, "a 10x fileset never crossed the watermark");
+    assert!(
+        c.tiering.stats.demotions_to_capacity > 0,
+        "a 4 MiB SSD cannot hold a 10 MiB fileset: bytes must spill to the capacity tier"
+    );
+    assert!(c.nodes[0].cap.used() > 0, "capacity device never charged for the spill");
+    assert_eq!(c.tiering.stats.free_underflows, 0, "device accounting went negative");
+}
+
+#[test]
+fn digest_never_deadlocks_on_a_full_nvm_tier() {
+    // every file is as large as the ENTIRE hot tier: each digest must
+    // reclaim the full budget before its bytes fit, through the sweep
+    // or — when the version table pins every candidate — the
+    // hard-budget fallback; a wedged digest fails the unwrap below
+    let mut c = Cluster::new(
+        ClusterConfig::default()
+            .nodes(2)
+            .hot_capacity(256 << 10)
+            .ssd(1 << 20)
+            .capacity_tier(64 << 20),
+    );
+    let pid = c.spawn_process(0, 0);
+    for f in 0..16u64 {
+        let fd = c.create(pid, &format!("/d{f}")).unwrap();
+        c.pwrite(pid, fd, 0, Payload::zero(KB256)).unwrap();
+        c.fsync(pid, fd).unwrap();
+        c.digest_log(pid).unwrap();
+        assert_eq!(
+            c.nodes[0].sockets[0].sharedfs.hot_overflow(),
+            0,
+            "digest {f} left NVM over budget"
+        );
+    }
+    assert!(c.tiering.stats.demotions > 0);
+    assert!(
+        c.tiering.stats.demotions_to_capacity > 0,
+        "16 files x 256 KiB must overflow the 1 MiB SSD into the capacity tier"
+    );
+}
+
+#[test]
+fn promotion_on_read_pulls_demoted_bytes_back() {
+    // hysteresis 0: a demoted extent may promote on the very next read
+    let mut c = Cluster::new(pressure_cfg(2).promote_hysteresis(0));
+    let pid = c.spawn_process(0, 0);
+    let mut fds = Vec::new();
+    for f in 0..8u64 {
+        let fd = c.create(pid, &format!("/p{f}")).unwrap();
+        c.pwrite(pid, fd, 0, Payload::zero(KB256)).unwrap();
+        fds.push(fd);
+        if f % 4 == 3 {
+            c.fsync(pid, fd).unwrap();
+            c.digest_log(pid).unwrap();
+        }
+    }
+    assert!(c.tiering.stats.demotions > 0, "2 MiB into a 1 MiB tier must demote");
+    // read every file: the demoted ones route through SSD/capacity and
+    // promote back into NVM (admission room exists below the watermark)
+    for &fd in &fds {
+        let out = c.pread(pid, fd, 0, 64 << 10).unwrap();
+        assert_eq!(out.len(), 64 << 10);
+    }
+    assert!(c.tiering.stats.promotions > 0, "no demoted read promoted");
+    assert!(c.tiering.stats.promoted_bytes > 0);
+    assert_eq!(c.nodes[0].sockets[0].sharedfs.hot_overflow(), 0, "promotion overfilled NVM");
+}
+
+#[test]
+fn hysteresis_suppresses_promotion_thrash() {
+    // an (effectively) infinite anti-thrash window: demoted bytes must
+    // serve from their demoted tier, never bounce straight back
+    let mut c = Cluster::new(pressure_cfg(2).promote_hysteresis(u64::MAX >> 1));
+    let pid = c.spawn_process(0, 0);
+    let mut fds = Vec::new();
+    for f in 0..8u64 {
+        let fd = c.create(pid, &format!("/h{f}")).unwrap();
+        c.pwrite(pid, fd, 0, Payload::zero(KB256)).unwrap();
+        fds.push(fd);
+        if f % 4 == 3 {
+            c.fsync(pid, fd).unwrap();
+            c.digest_log(pid).unwrap();
+        }
+    }
+    assert!(c.tiering.stats.demotions > 0);
+    for &fd in &fds {
+        let out = c.pread(pid, fd, 0, 64 << 10).unwrap();
+        assert_eq!(out.len(), 64 << 10, "suppressed promotion must not break the read");
+    }
+    assert_eq!(c.tiering.stats.promotions, 0, "promotion thrashed through the window");
+    assert!(c.tiering.stats.promotion_suppressed > 0, "the gate never even engaged");
+}
+
+#[test]
+fn uncapped_tiers_leave_the_daemon_free() {
+    let mut c = Cluster::new(ClusterConfig::default().nodes(2));
+    assert!(c.tiering.inert(), "default config must be inert by construction");
+    let pid = c.spawn_process(0, 0);
+    let fd = c.create(pid, "/f").unwrap();
+    for k in 0..64u64 {
+        c.pwrite(pid, fd, k * 4096, Payload::zero(4096)).unwrap();
+    }
+    c.fsync(pid, fd).unwrap();
+    c.digest_log(pid).unwrap();
+    let out = c.pread(pid, fd, 0, 4096).unwrap();
+    assert_eq!(out.len(), 4096);
+    assert!(c.tiering.stats.is_quiescent(), "inert daemon did tiering work");
+    assert_eq!(c.nodes[0].ssd.used(), 0, "no eviction, no SSD accounting");
+    assert_eq!(c.nodes[0].cap.used(), 0, "no eviction, no capacity accounting");
+}
+
+#[test]
+fn san_full_is_clean_across_eviction_and_failover() {
+    // the ISSUE's sanitizer acceptance: a pressured workload that
+    // evicts, reads demoted bytes, then loses its node — under
+    // SanMode::Full the whole run must report zero violations
+    let mut c = Cluster::new(pressure_cfg(3).replication(3).sanitize(SanMode::Full));
+    let pid = c.spawn_process(0, 0);
+    let fd = c.create(pid, "/f").unwrap();
+    const CHUNK: u64 = 32 << 10;
+    const OPS: u64 = 96; // 3 MiB through a 1 MiB hot tier
+    for k in 0..OPS {
+        c.pwrite(pid, fd, k * CHUNK, Payload::zero(CHUNK)).unwrap();
+        c.fsync(pid, fd).unwrap();
+        if k % 16 == 15 {
+            c.digest_log(pid).unwrap();
+        }
+    }
+    // demoted reads route through the funnel (refetch, never stale)
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..8 {
+        let off = rng.below(OPS) * CHUNK;
+        let out = c.pread(pid, fd, off, CHUNK).unwrap();
+        assert_eq!(out.len() as u64, CHUNK);
+    }
+    assert!(c.tiering.stats.demotions > 0, "no eviction pressure generated");
+    assert!(c.san.stats.evictions_checked > 0, "demotions bypassed the sanitizer funnel");
+    let t = c.now(pid);
+    c.kill_node(0, t).unwrap();
+    let (np, report) = c.failover_process(pid, 1, 0, t).unwrap();
+    assert_eq!(report.lost_entries, 0, "acked write lost under eviction pressure");
+    assert_eq!(c.stat(np, "/f").unwrap().size, OPS * CHUNK);
+    let fd2 = c.open(np, "/f").unwrap();
+    let out = c.pread(np, fd2, 0, CHUNK).unwrap();
+    assert_eq!(out.len() as u64, CHUNK);
+    let rep = c.san.report();
+    assert!(rep.is_clean(), "{}", rep.render());
+}
+
+#[test]
+fn recovery_rebuilds_demoted_tier_accounting() {
+    // node 1 (the replica) dies after its daemon demoted digested bytes;
+    // recovery installs a peer copy whose tier layout differs from the
+    // dead copy's — device accounting must be re-derived from the
+    // installed state, not left at stale pre-crash gauges
+    let mut c = Cluster::new(pressure_cfg(2));
+    let pid = c.spawn_process(0, 0);
+    for f in 0..10u64 {
+        let fd = c.create(pid, &format!("/r{f}")).unwrap();
+        c.pwrite(pid, fd, 0, Payload::zero(KB256)).unwrap();
+        c.fsync(pid, fd).unwrap();
+        if f % 2 == 1 {
+            c.digest_log(pid).unwrap();
+        }
+    }
+    assert!(c.tiering.stats.demotions > 0);
+    let t = c.now(pid);
+    c.kill_node(1, t).unwrap();
+    let t2 = c.now(pid);
+    c.recover_node(1, t2).unwrap();
+    let cold: u64 =
+        c.nodes[1].sockets.iter().map(|s| s.sharedfs.store.bytes_in_tier(Tier::Cold)).sum();
+    let cap: u64 =
+        c.nodes[1].sockets.iter().map(|s| s.sharedfs.store.bytes_in_tier(Tier::Capacity)).sum();
+    assert_eq!(
+        c.nodes[1].ssd.used(),
+        cold,
+        "recovery must re-derive SSD accounting from the installed copy"
+    );
+    assert_eq!(
+        c.nodes[1].cap.used(),
+        cap,
+        "recovery must re-derive capacity accounting from the installed copy"
+    );
+    assert_eq!(c.tiering.stats.free_underflows, 0);
+    // the cluster keeps working after recovery
+    let fd = c.create(pid, "/after").unwrap();
+    c.pwrite(pid, fd, 0, Payload::zero(4096)).unwrap();
+    c.fsync(pid, fd).unwrap();
+    c.digest_log(pid).unwrap();
+}

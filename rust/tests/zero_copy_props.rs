@@ -120,10 +120,11 @@ fn prop_extent_overlay_fuzz_no_overlap_and_content() {
                 // random overlay write
                 let off = rng.below(FILE - 1);
                 let len = 1 + rng.below((FILE - off).min(4096));
-                let tier = match rng.below(3) {
+                let tier = match rng.below(4) {
                     0 => Tier::Hot,
                     1 => Tier::Reserve,
-                    _ => Tier::Cold,
+                    2 => Tier::Cold,
+                    _ => Tier::Capacity,
                 };
                 let fill = (step as u8).wrapping_mul(31).wrapping_add(seed as u8);
                 m.write(off, Payload::bytes(vec![fill; len as usize]), tier, step);
@@ -242,7 +243,7 @@ fn prop_indexed_resolve_agrees_with_walk() {
         }
         // tier counters still exact after namespace churn
         let recount = s.recount_tier_bytes();
-        for t in [Tier::Hot, Tier::Reserve, Tier::Cold] {
+        for t in [Tier::Hot, Tier::Reserve, Tier::Cold, Tier::Capacity] {
             assert_eq!(s.bytes_in_tier(t), recount[t.idx()], "seed {seed}: tier {t:?}");
         }
     }
